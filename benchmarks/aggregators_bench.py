@@ -1,0 +1,39 @@
+"""Aggregator micro-benchmark: us/call for the paper's gradient-consensus
+strategies at increasing gradient sizes (single host device; the multi-
+device schedule cost is covered by the dry-run roofline numbers)."""
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.trimmed_mean.ops import trimmed_mean
+from repro.kernels.trimmed_mean.ref import trimmed_mean_ref
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def rows():
+    out = []
+    rng = np.random.default_rng(0)
+    # modest D: the kernel runs in interpret mode on CPU (python per block);
+    # on-TPU block counts scale to full gradient sizes
+    for W, D in ((16, 1 << 14), (16, 1 << 16), (32, 1 << 16)):
+        x = jnp.asarray(rng.normal(size=(W, D)).astype(np.float32))
+        ref = jax.jit(lambda a: trimmed_mean_ref(a, 3))
+        ker = jax.jit(lambda a: trimmed_mean(a, 3))
+        t_ref = _time(ref, x)
+        t_ker = _time(ker, x)
+        out.append((f"trim_sort_ref_W{W}_D{D}", t_ref, "sort-based"))
+        out.append((f"trim_kernel_W{W}_D{D}", t_ker,
+                    f"speedup={t_ref/max(t_ker,1e-9):.2f}x(interpret-mode)"))
+        mean = jax.jit(lambda a: a.mean(0))
+        out.append((f"mean_W{W}_D{D}", _time(mean, x), "baseline"))
+    return out

@@ -1,0 +1,52 @@
+"""Theorem 1 benchmark: HPS consensus-error decay vs B, Gamma, M.
+
+Paper claims validated:
+ * error decays exponentially (gamma^(t/2Gamma));
+ * smaller B (more reliable links) => faster;
+ * more sub-networks (smaller D*) => faster than one gigantic network
+   (Remark 2).
+Emits name,us_per_call,derived rows; derived = final consensus error.
+"""
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.graphs import make_hierarchy
+from repro.core.hps import HPSConfig, run_hps
+
+
+def _run(sizes, gamma, B, drop, T=600, seed=0, topology="complete"):
+    topo = make_hierarchy(sizes, topology=topology, seed=seed)
+    w = np.random.default_rng(seed).normal(size=(topo.N, 4)).astype(np.float32)
+    cfg = HPSConfig(topo=topo, gamma_period=gamma, B=B, drop_prob=drop)
+    t0 = time.perf_counter()
+    _, traj = run_hps(jnp.asarray(w), cfg, T, seed=seed)
+    traj = np.asarray(traj)
+    wall = (time.perf_counter() - t0) / T * 1e6
+    err = np.abs(traj - w.mean(0)).max(axis=(1, 2))
+    return wall, err
+
+
+def rows():
+    out = []
+    # B sweep (drop forced-delivery window) under heavy loss
+    for B in (1, 2, 8):
+        wall, err = _run([6, 6, 6], gamma=8, B=B, drop=0.7)
+        out.append((f"thm1_consensus_B{B}", wall,
+                    f"err_t300={err[300]:.2e}"))
+    # M sweep at fixed N=24 on RINGS: hierarchy shrinks the diameter D*
+    # (Remark 2) — one 24-ring (D=23) vs four 6-rings (D=5) + PS fusion
+    for sizes in ([24], [12, 12], [6, 6, 6, 6]):
+        wall, err = _run(sizes, gamma=4, B=2, drop=0.2, topology="ring",
+                         T=900)
+        out.append(
+            (f"thm1_consensus_ringM{len(sizes)}", wall,
+             f"err_t600={err[600]:.2e}")
+        )
+    # exponential decay checkpoints
+    wall, err = _run([6, 6, 6], gamma=4, B=1, drop=0.1)
+    halves = [float(err[t]) for t in (100, 200, 400)]
+    out.append(("thm1_decay_checkpoints", wall,
+                "err(100;200;400)=" + ";".join(f"{h:.1e}" for h in halves)))
+    return out

@@ -1,0 +1,49 @@
+"""Benchmark harness — one module per paper claim (the paper has no
+numbered tables; each Theorem/Remark gets a benchmark).
+
+Prints ``name,us_per_call,derived`` CSV rows, plus a §Roofline summary from
+the latest dry-run results JSON if present (results/dryrun_single.json).
+"""
+import json
+import os
+import sys
+
+from . import consensus_rate, social_learning, byzantine_bench, gamma_sweep
+from . import aggregators_bench
+
+MODULES = [
+    ("thm1", consensus_rate),
+    ("thm2", social_learning),
+    ("thm3", byzantine_bench),
+    ("remark3", gamma_sweep),
+    ("aggregators", aggregators_bench),
+]
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for tag, mod in MODULES:
+        if only and tag != only:
+            continue
+        for name, us, derived in mod.rows():
+            print(f"{name},{us:.1f},{derived}", flush=True)
+
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        "results", "dryrun_single.json")
+    if os.path.exists(path) and not only:
+        with open(path) as f:
+            recs = json.load(f)
+        ok = [r for r in recs if r.get("ok")]
+        print(f"# dry-run roofline summary ({len(ok)} combos):")
+        for r in ok:
+            t = r["roofline"]
+            print(
+                f"roofline_{r['arch']}_{r['shape']},"
+                f"{t['bound_step_time_s']*1e6:.1f},"
+                f"dom={t['dominant']};useful={t['useful_flop_ratio']:.2f}"
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""End-to-end driver: decentralized training of the ~100M paper_sim model
+with the paper's robust aggregation, a few hundred steps, with a live
+Byzantine worker — the "train a ~100M model for a few hundred steps"
+deliverable.
+
+Each data worker holds its own model copy (the paper's per-agent belief);
+gradients are fused by coordinate-wise trimmed mean (Algorithm 2's filter),
+so the sign-flipping Byzantine worker cannot poison training. The consensus
+spread across worker copies is the training-side analogue of Theorem 1's
+consensus error.
+
+Run (CPU, 8 fake devices, ~10 min):
+  PYTHONPATH=src python examples/robust_training.py --steps 200
+Quick check:
+  PYTHONPATH=src python examples/robust_training.py --steps 20 --tiny
+"""
+import argparse
+import os
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--tiny", action="store_true")
+ap.add_argument("--devices", type=int, default=8)
+ap.add_argument("--agg", default="trimmed_mean",
+                choices=["mean", "trimmed_mean", "pushsum",
+                         "hierarchical_trim"])
+args = ap.parse_args()
+
+os.environ.setdefault(
+    "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.devices}"
+)
+
+import dataclasses
+import jax
+
+from repro.configs import get_config, reduced
+from repro.data import SyntheticLMData
+from repro.distributed.aggregation import AggregatorConfig
+from repro.distributed.trainer import (
+    TrainConfig, make_train_step, param_spread,
+    replicate_for_workers, worker_opt_init,
+)
+from repro.models import model as M
+from repro.optim import AdamWConfig
+
+mesh = jax.make_mesh(
+    (2, args.devices // 4, 2), ("pod", "data", "model"),
+    axis_types=(jax.sharding.AxisType.Auto,) * 3,
+)
+n_workers = 2 * (args.devices // 4)
+
+cfg = get_config("paper_sim")            # ~100M params
+if args.tiny:
+    cfg = reduced(cfg)
+cfg = dataclasses.replace(cfg, attn_impl="naive", dtype="float32")
+
+tc = TrainConfig(
+    arch=cfg,
+    agg=AggregatorConfig(kind=args.agg, F=1, gossip_rounds=16,
+                         gamma_period=4, drop_prob=0.1),
+    opt=AdamWConfig(lr=3e-4, warmup_steps=max(args.steps // 20, 1),
+                    total_steps=args.steps),
+    byzantine_workers=(1,),              # worker 1 sign-flips its gradients
+    byzantine_scale=10.0,
+)
+print(f"arch={cfg.name} ({cfg.param_count()/1e6:.0f}M params) "
+      f"agg={args.agg} workers={n_workers} byzantine={tc.byzantine_workers}")
+
+data = SyntheticLMData(cfg.vocab, 128 if not args.tiny else 32, 8,
+                       flavour="markov", n_agents=n_workers, seed=0)
+params = M.init_params(jax.random.PRNGKey(0), cfg)
+factory, _ = make_train_step(tc, mesh)
+pw = replicate_for_workers(params, n_workers)
+ow = worker_opt_init(pw)
+
+with jax.set_mesh(mesh):
+    step = jax.jit(factory(pw))
+    spread_fn = jax.jit(param_spread)  # one executable, ordered collectives
+    for s in range(args.steps):
+        pw, ow, loss = step(pw, ow, data.batch(s), jax.random.PRNGKey(s))
+        # serialize dispatch: overlapping executables can starve the
+        # in-process CPU collective rendezvous on small hosts
+        jax.block_until_ready(pw)
+        if s % max(args.steps // 10, 1) == 0 or s == args.steps - 1:
+            print(f"step {s:4d}  loss {float(loss):.4f}  "
+                  f"consensus_spread {float(spread_fn(pw)):.3e}",
+                  flush=True)
+print("robust_training OK")

@@ -1,0 +1,10 @@
+"""repro — fault-tolerant & Byzantine-resilient hierarchical non-Bayesian
+learning (Mclaughlin/Ding/Edogmus/Su 2023) as a multi-pod JAX framework.
+
+Subpackages: ``core`` (the paper), ``models``/``configs`` (assigned
+architectures), ``distributed`` (robust aggregation + trainer/server),
+``kernels`` (Pallas TPU), ``optim``/``data``/``checkpoint`` (substrate),
+``launch`` (mesh/dryrun/train/serve), ``analysis`` (roofline/memory).
+"""
+
+__version__ = "1.0.0"

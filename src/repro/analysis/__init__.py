@@ -1,0 +1,8 @@
+from .roofline import (
+    parse_collectives,
+    roofline_terms,
+    HW,
+    model_flops,
+)
+
+__all__ = ["parse_collectives", "roofline_terms", "HW", "model_flops"]

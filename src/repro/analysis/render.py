@@ -1,0 +1,39 @@
+"""Render EXPERIMENTS.md tables from the dry-run result JSONs.
+
+    PYTHONPATH=src python -m repro.analysis.render results/dryrun_single.json
+"""
+import json
+import sys
+
+
+def fmt_row(r):
+    t = r["roofline"]
+    m = r["analytic_memory"]
+    coll = r["collectives"]["bytes_by_kind"]
+    top_coll = max(coll, key=coll.get) if any(coll.values()) else "-"
+    return (
+        f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3f} | "
+        f"{t['memory_s']:.3f} | {t['collective_s']:.3f} | "
+        f"**{t['dominant']}** | {t['useful_flop_ratio']:.2f} | "
+        f"{m['total_gb']:.1f} | {'yes' if m['fits_16gb'] else 'NO'} | "
+        f"{top_coll} |"
+    )
+
+
+def main():
+    path = sys.argv[1]
+    with open(path) as f:
+        recs = json.load(f)
+    print("| arch | shape | compute s | memory s | collective s | dominant |"
+          " useful | mem GB/dev | fits | top collective |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r.get("ok"):
+            print(fmt_row(r))
+        else:
+            print(f"| {r['arch']} | {r['shape']} | FAIL: {r['error'][:60]} |"
+                  + " |" * 7)
+
+
+if __name__ == "__main__":
+    main()

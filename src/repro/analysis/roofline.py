@@ -1,0 +1,183 @@
+"""Roofline analysis from compiled HLO (no hardware required).
+
+Per (arch x shape x mesh) we derive three time-lower-bound terms from the
+dry-run's compiled artifact:
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs          (197 TFLOP/s bf16)
+    memory     = HLO_bytes_per_device / HBM_bw              (819 GB/s)
+    collective = wire_bytes_per_device / link_bw            (~50 GB/s ICI)
+
+``cost_analysis()`` supplies per-device FLOPs/bytes. Collective bytes are
+NOT in cost_analysis: we parse the optimized HLO text and, for every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute,
+estimate bytes-on-the-wire per device with the standard ring-algorithm
+factors:
+
+    all-reduce      2 (n-1)/n * operand bytes
+    all-gather        (n-1)/n * result  bytes
+    reduce-scatter    (n-1)/n * operand bytes
+    all-to-all        (n-1)/n * operand bytes
+    collective-permute          operand bytes
+
+where n is the replica-group size parsed from the op's ``replica_groups``.
+
+The dominant term is the bottleneck the perf loop iterates on. We also report
+MODEL_FLOPS / (HLO_FLOPs * chips): the fraction of compiled compute that is
+"useful" model math (catches remat/redundancy waste).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+__all__ = ["HW", "parse_collectives", "roofline_terms", "model_flops"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    """TPU v5e per-chip constants (the assignment's hardware target)."""
+
+    peak_flops: float = 197e12     # bf16
+    hbm_bw: float = 819e9          # bytes/s
+    link_bw: float = 50e9          # bytes/s per ICI link
+    hbm_bytes: float = 16e9
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string: 'bf16[2,3]' or '(f32[4], u32[])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_GROUPS_ARR_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{")
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = _GROUPS_ARR_RE.search(line)
+    if m:
+        return int(m.group(2))          # [num_groups, group_size]<=[N]
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        first = m.group(1).strip()
+        return len(first.split(",")) if first else total_devices
+    return total_devices
+
+
+def parse_collectives(hlo_text: str, total_devices: int) -> dict[str, Any]:
+    """Scan optimized HLO for collectives; returns per-kind wire bytes
+    (per device) and op counts."""
+    bytes_by_kind: dict[str, float] = {k: 0.0 for k in _COLL_KINDS}
+    count_by_kind: dict[str, int] = {k: 0 for k in _COLL_KINDS}
+
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)",
+                     line)
+        if not m:
+            continue
+        result_type, op = m.group(1), m.group(2)
+        kind = None
+        for k in _COLL_KINDS:
+            if op == k or op == k + "-start":
+                kind = k
+                break
+        if kind is None:
+            continue
+        n = _group_size(line, total_devices)
+        result_bytes = _shape_bytes(result_type)
+        # operand types appear inside the call parens; for these ops operand
+        # and result bytes relate simply:
+        if kind == "all-gather":
+            wire = (n - 1) / max(n, 1) * result_bytes
+        elif kind == "all-reduce":
+            wire = 2 * (n - 1) / max(n, 1) * result_bytes
+        elif kind == "reduce-scatter":
+            wire = (n - 1) / max(n, 1) * result_bytes * n  # operand = result*n
+        elif kind == "all-to-all":
+            wire = (n - 1) / max(n, 1) * result_bytes
+        else:  # collective-permute
+            wire = result_bytes
+        bytes_by_kind[kind] += wire
+        count_by_kind[kind] += 1
+
+    total = sum(bytes_by_kind.values())
+    return {
+        "wire_bytes_per_device": total,
+        "bytes_by_kind": bytes_by_kind,
+        "count_by_kind": count_by_kind,
+    }
+
+
+def model_flops(arch, shape) -> float:
+    """Useful model FLOPs for the step (global, all chips).
+
+    train:   6 * N_active * tokens  (fwd 2ND + bwd 4ND)
+    prefill: 2 * N_active * tokens
+    decode:  2 * N_active * batch   (one token per sequence)
+    """
+    n = arch.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch
+
+
+def roofline_terms(
+    cost: dict[str, float],
+    coll: dict[str, Any],
+    n_devices: int,
+    mf: float,
+    hw: HW = HW(),
+) -> dict[str, Any]:
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    wire_dev = float(coll["wire_bytes_per_device"])
+
+    t_compute = flops_dev / hw.peak_flops
+    t_memory = bytes_dev / hw.hbm_bw
+    t_collective = wire_dev / hw.link_bw
+    terms = {
+        "compute_s": t_compute,
+        "memory_s": t_memory,
+        "collective_s": t_collective,
+    }
+    dominant = max(terms, key=terms.get)
+    useful = mf / max(flops_dev * n_devices, 1.0)
+    return {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "hlo_flops_per_device": flops_dev,
+        "hlo_bytes_per_device": bytes_dev,
+        "wire_bytes_per_device": wire_dev,
+        "model_flops_total": mf,
+        "useful_flop_ratio": useful,
+        "bound_step_time_s": max(terms.values()),
+    }

@@ -1,0 +1,56 @@
+"""Assigned-architecture registry: ``get_config(name)`` / ``--arch <id>``.
+
+Each module defines ``CONFIG`` with the exact public-literature dimensions
+(citation in ``source``). ``repro.configs.base.reduced`` derives the CPU
+smoke variant.
+"""
+from __future__ import annotations
+
+import importlib
+
+from .base import ArchConfig, InputShape, INPUT_SHAPES, reduced
+
+ARCH_IDS = [
+    "internvl2_26b",
+    "rwkv6_1b6",
+    "command_r_35b",
+    "recurrentgemma_2b",
+    "qwen3_8b",
+    "whisper_small",
+    "olmoe_1b_7b",
+    "qwen3_moe_235b_a22b",
+    "llama3_405b",
+    "minitron_4b",
+    "paper_sim",
+]
+
+_ALIASES = {
+    "internvl2-26b": "internvl2_26b",
+    "rwkv6-1.6b": "rwkv6_1b6",
+    "command-r-35b": "command_r_35b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "qwen3-8b": "qwen3_8b",
+    "whisper-small": "whisper_small",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "llama3-405b": "llama3_405b",
+    "minitron-4b": "minitron_4b",
+}
+
+
+def get_config(name: str) -> ArchConfig:
+    key = _ALIASES.get(name, name).replace("-", "_").replace(".", "_")
+    if key not in ARCH_IDS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ALIASES)}")
+    mod = importlib.import_module(f"repro.configs.{key}")
+    return mod.CONFIG
+
+
+def all_configs() -> dict[str, ArchConfig]:
+    return {a: get_config(a) for a in ARCH_IDS if a != "paper_sim"}
+
+
+__all__ = [
+    "ArchConfig", "InputShape", "INPUT_SHAPES", "reduced", "get_config",
+    "all_configs", "ARCH_IDS",
+]

@@ -1,0 +1,39 @@
+"""The paper's primary contribution, in pure JAX.
+
+- :mod:`repro.core.graphs`    — topologies, reduced graphs, B-connectivity
+- :mod:`repro.core.signals`   — likelihood models (Assumption 2 machinery)
+- :mod:`repro.core.pushsum`   — fast robust push-sum over dropping links
+- :mod:`repro.core.hps`       — Algorithm 1: Hierarchical Push-Sum
+- :mod:`repro.core.social`    — Algorithm 3: fault-tolerant non-Bayesian learning
+- :mod:`repro.core.byzantine` — Algorithm 2: Byzantine-resilient learning
+- :mod:`repro.core.attacks`   — adversary strategies
+"""
+from .graphs import (
+    HierTopology,
+    make_hierarchy,
+    link_schedule,
+    check_assumption3,
+    is_strongly_connected,
+)
+from .signals import SignalModel, make_confused_model, check_global_observability
+from .pushsum import PushSumState, pushsum_step, run_pushsum, mass_invariant, ratios
+from .hps import HPSConfig, hps_fusion, hps_step, run_hps, theorem1_bound
+from .social import run_social_learning, kl_dual_averaging_update
+from .byzantine import (
+    ByzantineConfig,
+    run_byzantine_learning,
+    trimmed_neighbor_mean,
+    healthy_networks,
+    decide,
+)
+from . import attacks
+
+__all__ = [
+    "HierTopology", "make_hierarchy", "link_schedule", "check_assumption3",
+    "is_strongly_connected", "SignalModel", "make_confused_model",
+    "check_global_observability", "PushSumState", "pushsum_step", "run_pushsum",
+    "mass_invariant", "ratios", "HPSConfig", "hps_fusion", "hps_step", "run_hps",
+    "theorem1_bound", "run_social_learning", "kl_dual_averaging_update",
+    "ByzantineConfig", "run_byzantine_learning", "trimmed_neighbor_mean",
+    "healthy_networks", "decide", "attacks",
+]

@@ -1,0 +1,122 @@
+"""Byzantine attack strategies.
+
+The system adversary (Section II-B) has full knowledge of the system state,
+may collude, and uses *point-to-point* communication: a Byzantine sender may
+transmit different values to different receivers. An attack therefore
+produces a full ``(N_senders, N_receivers, m, m)`` message tensor for the
+compromised rows, plus a per-agent parameter-server reply.
+
+All attacks are pure functions of (key, t, r_normal) so they stay inside
+``jax.lax.scan``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Attack", "sign_flip", "large_value", "random_noise", "extreme_pull",
+           "truth_suppression", "ATTACKS"]
+
+# messages(key, t, r) -> (N, N, m, m); ps_reply(key, t, r) -> (N, m, m)
+MsgFn = Callable[[jax.Array, jnp.ndarray, jnp.ndarray], jnp.ndarray]
+ReplyFn = Callable[[jax.Array, jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class Attack:
+    """A Byzantine strategy. ``name`` is used by benchmarks/tests."""
+
+    name: str
+    messages: MsgFn
+    ps_reply: ReplyFn
+
+
+def _broadcast_reply(msg_fn: MsgFn) -> ReplyFn:
+    """Default PS reply: what the agent would send on a self-link."""
+
+    def reply(key, t, r):
+        full = msg_fn(key, t, r)  # (N, N, m, m)
+        n = full.shape[0]
+        return full[jnp.arange(n), jnp.arange(n)]
+
+    return reply
+
+
+def sign_flip(scale: float = 2.0) -> Attack:
+    """Send the negated (scaled) average of the normal agents' states.
+
+    A colluding attack: all Byzantine agents push the consensus toward the
+    mirror image of the honest average.
+    """
+
+    def messages(key, t, r):
+        n = r.shape[0]
+        avg = r.mean(axis=0)  # (m, m)
+        val = -scale * avg
+        return jnp.broadcast_to(val, (n, n) + val.shape)
+
+    return Attack("sign_flip", messages, _broadcast_reply(messages))
+
+
+def large_value(magnitude: float = 1e3) -> Attack:
+    """Send a huge constant — the classic outlier attack trimming must stop."""
+
+    def messages(key, t, r):
+        n, m = r.shape[0], r.shape[-1]
+        val = jnp.full((m, m), magnitude, r.dtype)
+        return jnp.broadcast_to(val, (n, n, m, m))
+
+    return Attack("large_value", messages, _broadcast_reply(messages))
+
+
+def random_noise(scale: float = 50.0) -> Attack:
+    """Point-to-point i.i.d. Gaussian lies — different value per receiver."""
+
+    def messages(key, t, r):
+        n, m = r.shape[0], r.shape[-1]
+        k = jax.random.fold_in(key, t)
+        return scale * jax.random.normal(k, (n, n, m, m), r.dtype)
+
+    return Attack("random_noise", messages, _broadcast_reply(messages))
+
+
+def extreme_pull(offset: float = 10.0) -> Attack:
+    """Sit just past the honest extremes to bias the post-trim window."""
+
+    def messages(key, t, r):
+        n = r.shape[0]
+        hi = r.max(axis=0) + offset  # (m, m)
+        return jnp.broadcast_to(hi, (n, n) + hi.shape)
+
+    return Attack("extreme_pull", messages, _broadcast_reply(messages))
+
+
+def truth_suppression(truth: int, magnitude: float = 1e3) -> Attack:
+    """Targeted attack: claim overwhelming evidence *against* theta*.
+
+    For every pair (theta*, theta) send -magnitude, for (theta, theta*) send
+    +magnitude — i.e. pretend every other hypothesis dominates the truth.
+    The adversary knows theta* (full-knowledge threat model).
+    """
+
+    def messages(key, t, r):
+        n, m = r.shape[0], r.shape[-1]
+        val = jnp.zeros((m, m), r.dtype)
+        val = val.at[truth, :].set(-magnitude)
+        val = val.at[:, truth].set(magnitude)
+        val = val.at[truth, truth].set(0.0)
+        return jnp.broadcast_to(val, (n, n, m, m))
+
+    return Attack("truth_suppression", messages, _broadcast_reply(messages))
+
+
+ATTACKS = {
+    "sign_flip": sign_flip,
+    "large_value": large_value,
+    "random_noise": random_noise,
+    "extreme_pull": extreme_pull,
+    "truth_suppression": truth_suppression,
+}

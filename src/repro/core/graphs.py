@@ -1,0 +1,392 @@
+"""Directed-graph machinery for the hierarchical multi-agent system.
+
+Everything in this module is *host-side* (numpy) setup code: topologies are
+built once, converted to jnp masks, and then consumed by the jax-traced
+dynamics in :mod:`repro.core.pushsum` / :mod:`repro.core.byzantine`.
+
+Conventions
+-----------
+* ``adj[i, j] = True`` means a directed edge ``i -> j`` (i sends to j).
+* Self-loops are never stored in ``adj``; every algorithm in the paper adds
+  the implicit self-contribution separately (the ``+1`` in ``d_j + 1``).
+* A *hierarchical system* is a block-diagonal adjacency over ``M``
+  sub-networks; no direct edges cross blocks (the parameter server is the
+  only cross-network channel, modelled in :mod:`repro.core.hps`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Iterator, Sequence
+
+import numpy as np
+
+__all__ = [
+    "ring",
+    "complete",
+    "random_strongly_connected",
+    "is_strongly_connected",
+    "diameter",
+    "strongly_connected_components",
+    "source_components",
+    "has_single_source_component",
+    "reduced_graphs",
+    "check_assumption3",
+    "beta_i",
+    "HierTopology",
+    "make_hierarchy",
+    "link_schedule",
+]
+
+
+# ---------------------------------------------------------------------------
+# Basic topologies
+# ---------------------------------------------------------------------------
+
+def ring(n: int, bidirectional: bool = False) -> np.ndarray:
+    """Directed ring ``0 -> 1 -> ... -> n-1 -> 0``."""
+    adj = np.zeros((n, n), dtype=bool)
+    for i in range(n):
+        adj[i, (i + 1) % n] = True
+        if bidirectional:
+            adj[(i + 1) % n, i] = True
+    return adj
+
+
+def complete(n: int) -> np.ndarray:
+    adj = np.ones((n, n), dtype=bool)
+    np.fill_diagonal(adj, False)
+    return adj
+
+
+def random_strongly_connected(
+    n: int, extra_edge_prob: float, rng: np.random.Generator
+) -> np.ndarray:
+    """A random digraph guaranteed strongly connected.
+
+    Built as a random Hamiltonian cycle (strong-connectivity backbone) plus
+    Bernoulli extra edges — the standard construction for consensus
+    simulations.
+    """
+    perm = rng.permutation(n)
+    adj = np.zeros((n, n), dtype=bool)
+    for k in range(n):
+        adj[perm[k], perm[(k + 1) % n]] = True
+    extra = rng.random((n, n)) < extra_edge_prob
+    np.fill_diagonal(extra, False)
+    adj |= extra
+    return adj
+
+
+# ---------------------------------------------------------------------------
+# Connectivity analysis
+# ---------------------------------------------------------------------------
+
+def _reach(adj: np.ndarray, start: int) -> np.ndarray:
+    """Boolean reachability vector from ``start`` (BFS)."""
+    n = adj.shape[0]
+    seen = np.zeros(n, dtype=bool)
+    seen[start] = True
+    frontier = [start]
+    while frontier:
+        nxt = []
+        for u in frontier:
+            for v in np.nonzero(adj[u])[0]:
+                if not seen[v]:
+                    seen[v] = True
+                    nxt.append(int(v))
+        frontier = nxt
+    return seen
+
+
+def is_strongly_connected(adj: np.ndarray) -> bool:
+    n = adj.shape[0]
+    if n == 0:
+        return False
+    return bool(_reach(adj, 0).all() and _reach(adj.T, 0).all())
+
+
+def diameter(adj: np.ndarray) -> int:
+    """Diameter of a strongly connected digraph (max shortest-path length)."""
+    n = adj.shape[0]
+    dist = np.where(adj, 1, np.inf)
+    np.fill_diagonal(dist, 0)
+    for k in range(n):  # Floyd–Warshall; n is small in all our sims
+        dist = np.minimum(dist, dist[:, k : k + 1] + dist[k : k + 1, :])
+    if np.isinf(dist).any():
+        raise ValueError("graph is not strongly connected")
+    return int(dist.max())
+
+
+def strongly_connected_components(adj: np.ndarray) -> list[list[int]]:
+    """Tarjan's SCC algorithm, iterative (host-side, small graphs)."""
+    n = adj.shape[0]
+    index = [-1] * n
+    low = [0] * n
+    on_stack = [False] * n
+    stack: list[int] = []
+    comps: list[list[int]] = []
+    counter = 0
+    succ = [list(np.nonzero(adj[u])[0]) for u in range(n)]
+
+    for root in range(n):
+        if index[root] != -1:
+            continue
+        work = [(root, 0)]
+        while work:
+            u, pi = work[-1]
+            if pi == 0:
+                index[u] = low[u] = counter
+                counter += 1
+                stack.append(u)
+                on_stack[u] = True
+            advanced = False
+            for i in range(pi, len(succ[u])):
+                v = int(succ[u][i])
+                if index[v] == -1:
+                    work[-1] = (u, i + 1)
+                    work.append((v, 0))
+                    advanced = True
+                    break
+                elif on_stack[v]:
+                    low[u] = min(low[u], index[v])
+            if advanced:
+                continue
+            work.pop()
+            if work:
+                low[work[-1][0]] = min(low[work[-1][0]], low[u])
+            if low[u] == index[u]:
+                comp = []
+                while True:
+                    w = stack.pop()
+                    on_stack[w] = False
+                    comp.append(w)
+                    if w == u:
+                        break
+                comps.append(sorted(comp))
+    return comps
+
+
+def source_components(adj: np.ndarray) -> list[list[int]]:
+    """SCCs with no incoming edges from outside (sources of the condensation)."""
+    comps = strongly_connected_components(adj)
+    comp_of = {}
+    for ci, comp in enumerate(comps):
+        for v in comp:
+            comp_of[v] = ci
+    has_in = [False] * len(comps)
+    rows, cols = np.nonzero(adj)
+    for u, v in zip(rows, cols):
+        cu, cv = comp_of[int(u)], comp_of[int(v)]
+        if cu != cv:
+            has_in[cv] = True
+    return [comps[ci] for ci in range(len(comps)) if not has_in[ci]]
+
+
+def has_single_source_component(adj: np.ndarray) -> bool:
+    return len(source_components(adj)) == 1
+
+
+# ---------------------------------------------------------------------------
+# Reduced graphs (Definition 1) and Assumption 3
+# ---------------------------------------------------------------------------
+
+def reduced_graphs(
+    adj: np.ndarray,
+    faulty: Sequence[int],
+    F: int,
+    max_graphs: int | None = None,
+    rng: np.random.Generator | None = None,
+) -> Iterator[tuple[np.ndarray, list[int]]]:
+    """Yield reduced graphs per Definition 1.
+
+    (1) remove faulty nodes and incident links, (2) for each non-faulty node
+    remove F additional incoming links (all combinations; sampled when the
+    enumeration would exceed ``max_graphs``).
+
+    Yields ``(reduced_adj, good_nodes)`` where ``reduced_adj`` is indexed by
+    position in ``good_nodes``.
+    """
+    n = adj.shape[0]
+    faulty_set = set(int(f) for f in faulty)
+    good = [v for v in range(n) if v not in faulty_set]
+    g = len(good)
+    base = adj[np.ix_(good, good)].copy()
+
+    per_node_choices: list[list[tuple[int, ...]]] = []
+    for j in range(g):
+        incoming = list(np.nonzero(base[:, j])[0])
+        if len(incoming) <= F:
+            per_node_choices.append([tuple(incoming)])
+        else:
+            per_node_choices.append(list(itertools.combinations(incoming, F)))
+
+    total = 1
+    for c in per_node_choices:
+        total *= len(c)
+        if max_graphs is not None and total > max_graphs:
+            break
+
+    def build(choice_per_node) -> np.ndarray:
+        red = base.copy()
+        for j, removed in enumerate(choice_per_node):
+            for r in removed:
+                red[r, j] = False
+        return red
+
+    if max_graphs is not None and total > max_graphs:
+        rng = rng or np.random.default_rng(0)
+        for _ in range(max_graphs):
+            choice = [c[rng.integers(len(c))] for c in per_node_choices]
+            yield build(choice), good
+    else:
+        for choice in itertools.product(*per_node_choices):
+            yield build(choice), good
+
+
+def check_assumption3(
+    adj: np.ndarray, F: int, max_fault_sets: int = 64, max_graphs: int = 256
+) -> bool:
+    """Check Assumption 3: every reduced graph has exactly one source component.
+
+    Exhaustive for small graphs, sampled otherwise. A complete graph with
+    ``n >= 3F + 1`` always passes (classical result) — we still verify.
+    """
+    n = adj.shape[0]
+    rng = np.random.default_rng(0)
+    fault_sets = list(itertools.combinations(range(n), F)) if F > 0 else [()]
+    if len(fault_sets) > max_fault_sets:
+        idx = rng.choice(len(fault_sets), size=max_fault_sets, replace=False)
+        fault_sets = [fault_sets[i] for i in idx]
+    for fs in fault_sets:
+        for red, _good in reduced_graphs(adj, fs, F, max_graphs=max_graphs, rng=rng):
+            if len(source_components(red)) != 1:
+                return False
+    return True
+
+
+def beta_i(adj: np.ndarray) -> float:
+    """beta_i = 1 / max_j (d_j + 1)^2 — the per-network contraction constant."""
+    d_out = adj.sum(axis=1)
+    return 1.0 / float((d_out.max() + 1) ** 2)
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical system
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class HierTopology:
+    """M sub-networks glued block-diagonally; reps exchange with the PS.
+
+    Attributes
+    ----------
+    adj: (N, N) bool block-diagonal adjacency.
+    sizes: per-network agent counts ``n_i``.
+    offsets: start index of each network's block.
+    reps: global index of each network's designated agent (first of block
+        by default — the paper allows an arbitrary choice).
+    """
+
+    adj: np.ndarray
+    sizes: tuple[int, ...]
+    offsets: tuple[int, ...]
+    reps: tuple[int, ...]
+
+    @property
+    def N(self) -> int:
+        return int(self.adj.shape[0])
+
+    @property
+    def M(self) -> int:
+        return len(self.sizes)
+
+    def network_of(self) -> np.ndarray:
+        """(N,) network index of every agent."""
+        out = np.zeros(self.N, dtype=np.int32)
+        for i, (off, sz) in enumerate(zip(self.offsets, self.sizes)):
+            out[off : off + sz] = i
+        return out
+
+    def block(self, i: int) -> np.ndarray:
+        off, sz = self.offsets[i], self.sizes[i]
+        return self.adj[off : off + sz, off : off + sz]
+
+    def d_star(self) -> int:
+        return max(diameter(self.block(i)) for i in range(self.M))
+
+    def min_beta(self) -> float:
+        return min(beta_i(self.block(i)) for i in range(self.M))
+
+    def rep_mask(self) -> np.ndarray:
+        mask = np.zeros(self.N, dtype=bool)
+        for r in self.reps:
+            mask[r] = True
+        return mask
+
+
+def make_hierarchy(
+    sizes: Sequence[int],
+    topology: str = "ring+",
+    extra_edge_prob: float = 0.3,
+    seed: int = 0,
+    rep_choice: str = "first",
+) -> HierTopology:
+    """Build an M-network hierarchical system.
+
+    topology: "ring" | "complete" | "ring+" (ring + random extra edges).
+    """
+    rng = np.random.default_rng(seed)
+    blocks = []
+    for n in sizes:
+        if topology == "ring":
+            b = ring(n)
+        elif topology == "complete":
+            b = complete(n)
+        elif topology == "ring+":
+            b = random_strongly_connected(n, extra_edge_prob, rng)
+        else:
+            raise ValueError(f"unknown topology {topology!r}")
+        assert is_strongly_connected(b)
+        blocks.append(b)
+    N = int(sum(sizes))
+    adj = np.zeros((N, N), dtype=bool)
+    offsets = []
+    off = 0
+    for b, n in zip(blocks, sizes):
+        adj[off : off + n, off : off + n] = b
+        offsets.append(off)
+        off += n
+    if rep_choice == "first":
+        reps = tuple(offsets)
+    elif rep_choice == "random":
+        reps = tuple(int(o + rng.integers(n)) for o, n in zip(offsets, sizes))
+    else:
+        raise ValueError(rep_choice)
+    return HierTopology(
+        adj=adj, sizes=tuple(int(s) for s in sizes), offsets=tuple(offsets), reps=reps
+    )
+
+
+# ---------------------------------------------------------------------------
+# Packet-drop schedules
+# ---------------------------------------------------------------------------
+
+def link_schedule(
+    adj: np.ndarray,
+    T: int,
+    drop_prob: float,
+    B: int,
+    seed: int = 0,
+) -> np.ndarray:
+    """(T, N, N) bool operational-link masks with guaranteed B-connectivity.
+
+    Each existing link drops packets i.i.d. with ``drop_prob``, but is forced
+    operational at every ``t`` with ``t % B == B - 1`` so the paper's fault
+    model ("operational at least once every B iterations") holds exactly.
+    """
+    rng = np.random.default_rng(seed)
+    up = rng.random((T, *adj.shape)) >= drop_prob
+    t_idx = np.arange(T) % B == B - 1
+    up[t_idx] = True
+    return up & adj[None, :, :]

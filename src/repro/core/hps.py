@@ -1,0 +1,115 @@
+"""Hierarchical Push-Sum (HPS) — Algorithm 1 of the paper.
+
+M sub-networks each run fast robust push-sum in parallel (block-diagonal
+adjacency); every ``Gamma`` iterations each network's *designated
+representative* pushes half of its (value, mass) to the parameter server,
+which averages and pushes back:
+
+    z_rep <- 1/2 z_rep + 1/(2M) sum_i z_{i0}
+    m_rep <- 1/2 m_rep + 1/(2M) sum_i m_{i0}
+
+i.e. the doubly-stochastic *hierarchical fusion matrix* F with
+``F[j0,j0] = (M+1)/2M`` and ``F[j0,j0'] = 1/2M`` (Eq. (1): M[t] = F Mbar[t]).
+
+Theorem 1: with ``Gamma = B * D*``, the consensus error decays as
+``gamma^(t / 2Gamma)`` with ``gamma = 1 - (1/4M^2)(min_i beta_i)^(2 D* B)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graphs import HierTopology, link_schedule
+from .pushsum import PushSumState, init_state, pushsum_step, ratios
+
+__all__ = ["HPSConfig", "hps_fusion", "hps_step", "run_hps", "theorem1_bound"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HPSConfig:
+    """Static configuration of an HPS run."""
+
+    topo: HierTopology
+    gamma_period: int          # Γ — PS fusion every Γ iterations
+    B: int = 1                 # link-reliability window
+    drop_prob: float = 0.0     # packet-drop probability per link per round
+
+    def rep_mask(self) -> jnp.ndarray:
+        return jnp.asarray(self.topo.rep_mask())
+
+    def adj(self) -> jnp.ndarray:
+        return jnp.asarray(self.topo.adj)
+
+
+def hps_fusion(
+    z: jnp.ndarray, m: jnp.ndarray, rep_mask: jnp.ndarray, M: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Apply the hierarchical fusion matrix F to (z, m) at the reps.
+
+    Non-representative agents are untouched; this is exactly lines 13-21 of
+    Algorithm 1 (each rep sends half, PS averages the halves and pushes back).
+    """
+    repf = rep_mask.astype(z.dtype)
+    pooled_z = (z * repf[:, None]).sum(axis=0) / (2.0 * M)   # (d,)
+    pooled_m = (m * repf).sum() / (2.0 * M)
+    z_new = jnp.where(rep_mask[:, None], 0.5 * z + pooled_z[None, :], z)
+    m_new = jnp.where(rep_mask, 0.5 * m + pooled_m, m)
+    return z_new, m_new
+
+
+def hps_step(
+    state: PushSumState,
+    mask: jnp.ndarray,
+    adj: jnp.ndarray,
+    rep_mask: jnp.ndarray,
+    M: int,
+    do_fusion: jnp.ndarray,  # scalar bool — t % Γ == 0
+) -> PushSumState:
+    """One HPS iteration: robust push-sum + (conditionally) PS fusion."""
+    st = pushsum_step(state, mask, adj)
+    z_f, m_f = hps_fusion(st.z, st.m, rep_mask, M)
+    z = jnp.where(do_fusion, z_f, st.z)
+    m = jnp.where(do_fusion, m_f, st.m)
+    return st._replace(z=z, m=m)
+
+
+def run_hps(
+    w: jnp.ndarray,
+    cfg: HPSConfig,
+    T: int,
+    seed: int = 0,
+) -> tuple[PushSumState, jnp.ndarray]:
+    """Run HPS for T iterations. Returns final state + per-step ratios (T, N, d)."""
+    adj = cfg.adj()
+    rep_mask = cfg.rep_mask()
+    masks = jnp.asarray(
+        link_schedule(cfg.topo.adj, T, cfg.drop_prob, cfg.B, seed=seed)
+    )
+    fuse = jnp.arange(1, T + 1) % cfg.gamma_period == 0
+    state0 = init_state(jnp.asarray(w))
+
+    def body(state, xs):
+        mask, do_fusion = xs
+        new = hps_step(state, mask, adj, rep_mask, cfg.topo.M, do_fusion)
+        return new, ratios(new)
+
+    final, traj = jax.lax.scan(body, state0, (masks, fuse))
+    return final, traj
+
+
+def theorem1_bound(cfg: HPSConfig, w: np.ndarray, t: int) -> float:
+    """The RHS of Theorem 1 at iteration t (loose by the paper's own Remark 3)."""
+    topo = cfg.topo
+    M = topo.M
+    d_star = topo.d_star()
+    beta_min = topo.min_beta()
+    contraction = beta_min ** (2 * d_star * cfg.B)
+    gamma = 1.0 - contraction / (4.0 * M * M)
+    two_gamma = 2 * cfg.gamma_period
+    norm_sum = float(np.linalg.norm(np.asarray(w), axis=1).sum())
+    lead = 4.0 * M * M * norm_sum / (contraction * topo.N)
+    return lead * gamma ** max(t // two_gamma - 1, 0)

@@ -1,0 +1,123 @@
+"""Fast robust push-sum over packet-dropping links (Su '18, Alg. 1 lines 3-12).
+
+The algorithm tolerates packet-dropping links *without* delivery
+acknowledgements by transmitting cumulative sums:
+
+* ``sigma_j``  — cumulative value agent j has made available to each of its
+  outgoing neighbors up to now (broadcast: identical per neighbor),
+* ``rho_{j'j}`` — the latest cumulative value receiver j has actually heard
+  from sender j'.
+
+A successful delivery at time t lets the receiver integrate
+``rho_new - rho_old`` — which automatically includes every previously dropped
+increment. Mass bookkeeping (``m``, ``sigma_m``, ``rho_m``) runs the identical
+recursion so the ratio ``z/m`` debiases the graph and the losses.
+
+State shapes for an N-agent network with d-dimensional values:
+    z (N, d) | m (N,) | sigma (N, d) | sigma_m (N,) | rho (N, N, d) |
+    rho_m (N, N)    (rho[j', j] = last heard on link j' -> j)
+
+Everything is jax-traceable; the per-iteration link mask is data.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["PushSumState", "init_state", "pushsum_step", "run_pushsum", "ratios"]
+
+
+class PushSumState(NamedTuple):
+    z: jnp.ndarray        # (N, d) value
+    m: jnp.ndarray        # (N,)   mass
+    sigma: jnp.ndarray    # (N, d) cumulative value offered per out-link
+    sigma_m: jnp.ndarray  # (N,)
+    rho: jnp.ndarray      # (N, N, d) cumulative value heard per in-link
+    rho_m: jnp.ndarray    # (N, N)
+
+
+def init_state(w: jnp.ndarray) -> PushSumState:
+    """w: (N, d) initial values; push-sum drives z/m -> mean(w)."""
+    n, d = w.shape
+    return PushSumState(
+        z=w,
+        m=jnp.ones((n,), w.dtype),
+        sigma=jnp.zeros((n, d), w.dtype),
+        sigma_m=jnp.zeros((n,), w.dtype),
+        rho=jnp.zeros((n, n, d), w.dtype),
+        rho_m=jnp.zeros((n, n), w.dtype),
+    )
+
+
+def pushsum_step(
+    state: PushSumState,
+    mask: jnp.ndarray,   # (N, N) bool — operational links this round (subset of adj)
+    adj: jnp.ndarray,    # (N, N) bool — underlying topology (defines d_out)
+) -> PushSumState:
+    """One iteration of fast robust push-sum (Alg. 1 / Alg. 3 lines 4-12)."""
+    z, m, sigma, sigma_m, rho, rho_m = state
+    d_out = adj.sum(axis=1).astype(z.dtype)  # (N,) out-degree of underlying graph
+    share = 1.0 / (d_out + 1.0)              # (N,)
+
+    # --- first half: stage cumulative send (lines 4-5) ---
+    sigma_p = sigma + z * share[:, None]
+    sigma_m_p = sigma_m + m * share
+
+    # --- delivery (lines 6-10): successful links latch the new cumulative ---
+    mask_f = mask.astype(z.dtype)
+    rho_new = jnp.where(mask[:, :, None], sigma_p[:, None, :], rho)
+    rho_m_new = jnp.where(mask, sigma_m_p[:, None], rho_m)
+    # only links that exist in the topology can ever carry anything
+    adj_f = adj.astype(z.dtype)
+    recv = ((rho_new - rho) * adj_f[:, :, None]).sum(axis=0)      # (N, d)
+    recv_m = ((rho_m_new - rho_m) * adj_f).sum(axis=0)            # (N,)
+    del mask_f
+
+    # --- integrate (line 11) ---
+    z_p = z * share[:, None] + recv
+    m_p = m * share + recv_m
+
+    # --- second half: immediately re-stage (line 12) ---
+    sigma_n = sigma_p + z_p * share[:, None]
+    sigma_m_n = sigma_m_p + m_p * share
+    z_n = z_p * share[:, None]
+    m_n = m_p * share
+
+    return PushSumState(z_n, m_n, sigma_n, sigma_m_n, rho_new, rho_m_new)
+
+
+def ratios(state: PushSumState) -> jnp.ndarray:
+    """The push-sum estimate z/m per agent, (N, d)."""
+    return state.z / jnp.maximum(state.m, 1e-30)[:, None]
+
+
+def run_pushsum(
+    w: jnp.ndarray,       # (N, d) inputs
+    adj: jnp.ndarray,     # (N, N) bool topology
+    masks: jnp.ndarray,   # (T, N, N) bool operational-link schedule
+    record_every: int = 1,
+) -> tuple[PushSumState, jnp.ndarray]:
+    """Run T iterations; returns final state and (T//record_every, N, d) ratios."""
+    adj = jnp.asarray(adj)
+    state0 = init_state(jnp.asarray(w))
+
+    def body(state, mask):
+        new = pushsum_step(state, mask, adj)
+        return new, ratios(new)
+
+    final, traj = jax.lax.scan(body, state0, jnp.asarray(masks))
+    return final, traj[::record_every]
+
+
+def mass_invariant(state: PushSumState, adj: jnp.ndarray) -> jnp.ndarray:
+    """Total conserved value: held + in-flight on every link. (d,) vector.
+
+    sum_j z_j + sum_{(j',j) in E} (sigma_{j'} - rho_{j'j})  ==  sum_j w_j
+    — the augmented-graph mass-preservation property Theorem 1 relies on.
+    Exposed for tests/benchmarks.
+    """
+    adj_f = jnp.asarray(adj, state.z.dtype)
+    in_flight = ((state.sigma[:, None, :] - state.rho) * adj_f[:, :, None]).sum((0, 1))
+    return state.z.sum(axis=0) + in_flight

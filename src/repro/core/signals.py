@@ -1,0 +1,157 @@
+"""Private-signal likelihood models for non-Bayesian social learning.
+
+The paper's observation model (Section III): each agent ``i_j`` observes a
+private signal ``s_t`` from a finite alphabet whose distribution depends on
+the unknown environment state ``theta* in Theta``; marginals may be identical
+across hypotheses at a single agent ("local confusion"), but the *joint*
+distribution must be globally observable (Assumption 2).
+
+We use finite-alphabet likelihood tables, the standard instantiation in the
+non-Bayesian learning literature (Jadbabaie et al., Nedic et al.), which also
+makes the boundedness constant ``L = sup log l(s|theta)/l(s|theta')`` exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "SignalModel",
+    "make_confused_model",
+    "check_global_observability",
+    "pairwise_kl",
+    "log_ratio_bound",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class SignalModel:
+    """Finite-alphabet signal structure for N agents, m hypotheses.
+
+    tables: (N, m, S) — ``tables[j, k, s] = l_j(s | theta_k)``; rows sum to 1.
+    truth: index of theta* in [0, m).
+    """
+
+    tables: jnp.ndarray
+    truth: int
+
+    @property
+    def N(self) -> int:
+        return int(self.tables.shape[0])
+
+    @property
+    def m(self) -> int:
+        return int(self.tables.shape[1])
+
+    @property
+    def S(self) -> int:
+        return int(self.tables.shape[2])
+
+    def log_tables(self) -> jnp.ndarray:
+        return jnp.log(self.tables)
+
+    def sample(self, key: jax.Array, t_steps: int = 1) -> jnp.ndarray:
+        """(t_steps, N) int signals drawn from l_j(. | theta*)."""
+        probs = self.tables[:, self.truth, :]  # (N, S)
+        keys = jax.random.split(key, self.N)
+        draw = lambda k, p: jax.random.choice(
+            k, self.S, shape=(t_steps,), p=p
+        )
+        out = jax.vmap(draw)(keys, probs)  # (N, t_steps)
+        return out.T
+
+    def log_lik(self, signals: jnp.ndarray) -> jnp.ndarray:
+        """signals: (N,) ints -> (N, m) log l_j(s_j | theta_k)."""
+        logt = self.log_tables()  # (N, m, S)
+        return jnp.take_along_axis(
+            logt, signals[:, None, None].astype(jnp.int32), axis=2
+        )[:, :, 0]
+
+
+def pairwise_kl(tables: np.ndarray) -> np.ndarray:
+    """(N, m, m) per-agent KL(l_j(.|theta_a) || l_j(.|theta_b))."""
+    t = np.asarray(tables, dtype=np.float64)
+    logt = np.log(t)
+    # KL[n,a,b] = sum_s t[n,a,s] (log t[n,a,s] - log t[n,b,s])
+    self_term = np.einsum("nas,nas->na", t, logt)  # (N, m)
+    cross_term = np.einsum("nas,nbs->nab", t, logt)  # (N, m, m)
+    return self_term[:, :, None] - cross_term
+
+
+def check_global_observability(tables: np.ndarray, tol: float = 1e-9) -> bool:
+    """Assumption 2: for every pair theta != theta', sum_j KL_j > 0."""
+    kl = pairwise_kl(np.asarray(tables))
+    total = kl.sum(axis=0)  # (m, m)
+    m = total.shape[0]
+    off = total[~np.eye(m, dtype=bool)]
+    return bool((off > tol).all())
+
+
+def log_ratio_bound(tables: np.ndarray) -> float:
+    """The paper's constant L = sup_{s, theta, theta'} log l(s|t)/l(s|t')."""
+    logt = np.log(np.asarray(tables, dtype=np.float64))
+    # max over (theta, theta') pairs and s of logt[:, a, s] - logt[:, b, s]
+    diff = logt[:, :, None, :] - logt[:, None, :, :]
+    return float(diff.max())
+
+
+def make_confused_model(
+    N: int,
+    m: int,
+    S: int = 4,
+    truth: int = 0,
+    confusion: float = 0.75,
+    sharpness: float = 2.0,
+    seed: int = 0,
+) -> SignalModel:
+    """Build a locally-confused but globally-observable signal model.
+
+    Each agent j is *informative* only about hypothesis pairs containing
+    ``k_j = j % m``: its likelihood rows for all other hypotheses are
+    identical (full local confusion), mirroring the paper's setup where no
+    single agent can learn theta* alone. A ``confusion`` fraction of
+    additional agents are made completely uninformative (all rows equal) to
+    stress the collaboration requirement.
+
+    Guarantees Assumption 2 as long as every hypothesis index is covered by
+    at least one informative agent, which holds when N >= m.
+    """
+    if N < m:
+        raise ValueError("need N >= m for global observability by construction")
+    rng = np.random.default_rng(seed)
+    base = rng.dirichlet(np.ones(S) * sharpness, size=(N,))  # shared confused row
+    tables = np.repeat(base[:, None, :], m, axis=1)  # (N, m, S): all rows equal
+
+    n_uninformative = int(confusion * N)
+    informative = np.ones(N, dtype=bool)
+    # Keep one informative agent per hypothesis, then disable a random subset.
+    disable = rng.permutation(N)[:n_uninformative]
+    informative[disable] = False
+    for k in range(m):
+        covered = any(informative[j] and (j % m) == k for j in range(N))
+        if not covered:
+            for j in range(N):
+                if (j % m) == k:
+                    informative[j] = True
+                    break
+
+    for j in range(N):
+        if not informative[j]:
+            continue
+        k = j % m
+        # A distinct row for hypothesis k makes agent j distinguish k vs rest.
+        distinct = rng.dirichlet(np.ones(S) * sharpness)
+        # re-draw until meaningfully different from the confused row
+        while np.abs(distinct - base[j]).sum() < 0.2:
+            distinct = rng.dirichlet(np.ones(S) * sharpness)
+        tables[j, k, :] = distinct
+
+    # Floor probabilities so L is finite, renormalize.
+    tables = np.maximum(tables, 0.02)
+    tables = tables / tables.sum(axis=-1, keepdims=True)
+
+    assert check_global_observability(tables), "construction must satisfy A2"
+    return SignalModel(tables=jnp.asarray(tables, dtype=jnp.float32), truth=truth)

@@ -1,0 +1,102 @@
+"""Non-Bayesian learning over packet-dropping links — Algorithm 3 / Theorem 2.
+
+"Consensus + innovation": interleave one HPS step (on the per-hypothesis
+log-likelihood accumulator ``z in R^m`` and the mass ``m``) with the local
+innovation ``z(theta) += log l(s_t | theta)`` and the dual-averaging belief
+update with KL-divergence proximal, whose closed form is
+
+    mu_j(theta, t)  =  softmax( z_j(., t) / m_j(t) )        (uniform prior)
+
+Per Algorithm 3 ordering: consensus (lines 4-12) -> innovation (13-15) ->
+belief (16) -> PS fusion every Gamma (17-22).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graphs import link_schedule
+from .hps import HPSConfig, hps_fusion
+from .pushsum import PushSumState, init_state, pushsum_step
+from .signals import SignalModel
+
+__all__ = ["SocialLearningResult", "kl_dual_averaging_update", "run_social_learning"]
+
+
+class SocialLearningResult(NamedTuple):
+    beliefs: jnp.ndarray        # (T, N, m) belief trajectories
+    final_state: PushSumState   # consensus state at T
+    log_ratio: jnp.ndarray      # (T, N, m) log mu(theta)/mu(theta*) — Thm 2 LHS
+
+
+def kl_dual_averaging_update(z: jnp.ndarray, m: jnp.ndarray) -> jnp.ndarray:
+    """The KL-proximal dual-averaging projection, closed form.
+
+    argmin_{mu in simplex} { -<z/m, mu> + D_KL(mu || mu_0) }  =  softmax(z/m)
+    for the uniform prior mu_0. z: (N, m_hyp), m: (N,).
+    """
+    return jax.nn.softmax(z / jnp.maximum(m, 1e-30)[:, None], axis=-1)
+
+
+def run_social_learning(
+    model: SignalModel,
+    cfg: HPSConfig,
+    T: int,
+    seed: int = 0,
+    signal_seed: int = 100,
+) -> SocialLearningResult:
+    """Run Algorithm 3 for T iterations (jax.lax.scan over time)."""
+    topo = cfg.topo
+    adj = cfg.adj()
+    rep_mask = cfg.rep_mask()
+    masks = jnp.asarray(link_schedule(topo.adj, T, cfg.drop_prob, cfg.B, seed=seed))
+    fuse = jnp.arange(1, T + 1) % cfg.gamma_period == 0
+
+    # z accumulates per-hypothesis log-likelihood sums; init 0 (Alg. 3 line 1)
+    state0 = init_state(jnp.zeros((topo.N, model.m), jnp.float32))
+    log_tables = model.log_tables().astype(jnp.float32)  # (N, m, S)
+    truth_probs = model.tables[:, model.truth, :].astype(jnp.float32)  # (N, S)
+    base_key = jax.random.PRNGKey(signal_seed)
+
+    def body(state, xs):
+        mask, do_fusion, t = xs
+        # --- consensus (lines 4-12) ---
+        st = pushsum_step(state, mask, adj)
+        # --- innovation (lines 13-15): one fresh private signal per agent ---
+        key = jax.random.fold_in(base_key, t)
+        keys = jax.random.split(key, topo.N)
+        u = jax.vmap(lambda k: jax.random.uniform(k))(keys)  # (N,)
+        cdf = jnp.cumsum(truth_probs, axis=-1)               # (N, S)
+        sig = (u[:, None] > cdf).sum(axis=-1)                # inverse-CDF sample
+        loglik = jnp.take_along_axis(
+            log_tables, sig[:, None, None].astype(jnp.int32), axis=2
+        )[:, :, 0]                                           # (N, m)
+        z = st.z + loglik
+        # --- belief update (line 16) ---
+        mu = kl_dual_averaging_update(z, st.m)
+        # --- PS fusion (lines 17-22), applied post-innovation ---
+        z_f, m_f = hps_fusion(z, st.m, rep_mask, topo.M)
+        z = jnp.where(do_fusion, z_f, z)
+        m = jnp.where(do_fusion, m_f, st.m)
+        new = st._replace(z=z, m=m)
+        return new, mu
+
+    final, mus = jax.lax.scan(
+        body, state0, (masks, fuse, jnp.arange(T, dtype=jnp.uint32))
+    )
+    log_mu = jnp.log(jnp.maximum(mus, 1e-38))
+    log_ratio = log_mu - log_mu[:, :, model.truth : model.truth + 1]
+    return SocialLearningResult(beliefs=mus, final_state=final, log_ratio=log_ratio)
+
+
+def theorem2_rate(model: SignalModel, topo_N: int) -> np.ndarray:
+    """The linear decay slopes -D_KL(theta*||theta)/N of Theorem 2, (m,)."""
+    from .signals import pairwise_kl
+
+    kl = pairwise_kl(np.asarray(model.tables))  # (N, m, m) per-agent
+    total = kl.sum(axis=0)  # (m, m): joint KL because signals are independent
+    return -total[model.truth] / topo_N

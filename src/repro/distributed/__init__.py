@@ -1,0 +1,16 @@
+from .sharding import (
+    param_specs,
+    opt_state_specs,
+    batch_specs,
+    batch_axes,
+    cache_specs,
+)
+from .aggregation import AGGREGATORS
+from .trainer import make_train_step, TrainConfig
+from .server import make_prefill_step, make_decode_step
+
+__all__ = [
+    "param_specs", "opt_state_specs", "batch_specs", "batch_axes",
+    "cache_specs", "AGGREGATORS", "make_train_step", "TrainConfig",
+    "make_prefill_step", "make_decode_step",
+]

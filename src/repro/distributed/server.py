@@ -1,0 +1,47 @@
+"""Serve-step builders: batched prefill and decode under the production mesh.
+
+Serving has no gradient aggregation, but inherits the paper's fault story at
+the *request* level: the launcher (``repro.launch.serve``) runs the
+decode loop; multi-pod meshes shard the request batch over (pod, data) and
+heads/experts over model.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import model as M
+from .sharding import batch_axes, cache_specs, param_specs
+
+Params = Any
+
+
+def make_prefill_step(cfg: ArchConfig, mesh: Mesh, cache_len: int | None = None):
+    def prefill_step(params, batch):
+        return M.prefill(
+            params, cfg, batch["tokens"],
+            patch_embeds=batch.get("patch_embeds"),
+            frames=batch.get("frames"),
+            cache_len=cache_len,
+        )
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, mesh: Mesh):
+    def decode_step(params, cache, token):
+        return M.decode_step(params, cfg, cache, token)
+
+    return decode_step
+
+
+def serve_shardings(cfg: ArchConfig, mesh: Mesh, params_like, cache_like):
+    baxes = batch_axes(mesh)
+    pspecs = param_specs(params_like, cfg, mesh, fsdp=False)
+    cspecs = cache_specs(cache_like, cfg, mesh)
+    token_spec = P(baxes, None)
+    return pspecs, cspecs, token_spec

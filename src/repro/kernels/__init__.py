@@ -1,0 +1,27 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+- ``trimmed_mean`` — the Byzantine filter of Algorithm 2 applied
+  coordinate-wise over the worker axis (the paper's scalar-dynamics trick
+  vectorized over every gradient coordinate).
+- ``wkv6`` — chunked RWKV6 linear recurrence with data-dependent decay
+  (rwkv6-1.6b's training/prefill hot-spot).
+- ``swa`` — flash-decode attention over a sliding-window KV cache
+  (decode_32k / long_500k serve hot-spot for the dense GQA archs).
+
+All kernels use ``pl.pallas_call`` with explicit BlockSpec VMEM tiling and
+are validated against their pure-jnp ``ref.py`` oracles via
+``interpret=True`` on CPU (see tests/test_kernels.py).
+"""
+from .trimmed_mean.ops import trimmed_mean, trimmed_mean_pytree
+from .wkv6.ops import wkv6, wkv6_decode_step
+from .swa.ops import attn_decode
+from .swa.prefill import swa_prefill_pallas
+
+__all__ = [
+    "trimmed_mean",
+    "trimmed_mean_pytree",
+    "wkv6",
+    "wkv6_decode_step",
+    "attn_decode",
+    "swa_prefill_pallas",
+]

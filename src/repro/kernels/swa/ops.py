@@ -1,0 +1,24 @@
+"""Public entry point for windowed flash-decode attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .ref import attn_decode_ref
+from .swa import attn_decode_pallas
+
+__all__ = ["attn_decode", "attn_decode_ref"]
+
+
+def attn_decode(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    lengths: jnp.ndarray,
+    block_w: int = 512,
+    use_kernel: bool = True,
+) -> jnp.ndarray:
+    """Single-token GQA attention over a KV cache. (B,H,dh) out."""
+    Wc = k.shape[2]
+    if use_kernel and Wc % block_w == 0 and Wc >= block_w:
+        return attn_decode_pallas(q, k, v, lengths, block_w=block_w)
+    return attn_decode_ref(q, k, v, lengths)

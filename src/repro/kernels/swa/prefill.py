@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: flash attention forward for causal/sliding-window
+prefill (GQA).
+
+Grid ``(B*H, S/bq, S/bk)`` with the kv axis innermost (sequential on TPU):
+a (m, l, acc) online-softmax triple lives in VMEM scratch per q block.
+Blocks entirely outside the causal/window band are skipped with ``pl.when``
+— for a window w the work per q block is O(w + bq) instead of O(S), which
+is what makes the long_500k serve variant of the dense archs sub-quadratic
+in practice (the jnp fallback computes the same masked math).
+
+Forward-only (serving/prefill); training attention uses the XLA flash path
+in ``models/layers.py:_chunked_attention``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["swa_prefill_pallas"]
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            bq: int, bk: int, window: int, scale: float):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    n_k = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_lo = i * bq
+    q_hi = q_lo + bq - 1
+    k_lo = j * bk
+    # band check: this kv block intersects [q_pos - window + 1, q_pos]
+    relevant = (k_lo <= q_hi)
+    if window:
+        relevant &= (k_lo + bk - 1) > (q_lo - window)
+
+    @pl.when(relevant)
+    def _process():
+        q = q_ref[0].astype(jnp.float32) * scale      # (bq, dh)
+        k = k_ref[0].astype(jnp.float32)              # (bk, dh)
+        v = v_ref[0].astype(jnp.float32)              # (bk, dh)
+        s = q @ k.T                                   # (bq, bk)
+        qpos = jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + q_lo
+        kpos = jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1) + k_lo
+        mask = kpos <= qpos
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, _NEG)
+
+        m_prev = m_scr[...]                           # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + p @ v
+        m_scr[...] = m_new
+
+    @pl.when(j == n_k - 1)
+    def _emit():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "bq", "bk", "scale", "interpret")
+)
+def swa_prefill_pallas(
+    q: jnp.ndarray,   # (B, H, S, dh)
+    k: jnp.ndarray,   # (B, Hkv, S, dh)
+    v: jnp.ndarray,   # (B, Hkv, S, dh)
+    window: int = 0,  # 0 = full causal
+    bq: int = 128,
+    bk: int = 128,
+    scale: float | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Causal (optionally sliding-window) flash attention forward."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, H, S, dh = q.shape
+    Hkv = k.shape[1]
+    G = H // Hkv
+    if S % bq or S % bk:
+        raise ValueError(f"S={S} must divide bq={bq}, bk={bk}")
+    scale_f = float(scale if scale is not None else dh**-0.5)
+
+    qf = q.reshape(B * H, S, dh)
+    kf = k.reshape(B * Hkv, S, dh)
+    vf = v.reshape(B * Hkv, S, dh)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bk=bk, window=window,
+                          scale=scale_f),
+        grid=(B * H, S // bq, S // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda bh, i, j: (bh, i, 0)),
+            # GQA: query-flat index bh = b*H + h maps to kv-flat
+            # bh // G = b*Hkv + h//G (exact because G divides H)
+            pl.BlockSpec((1, bk, dh), lambda bh, i, j, G=G: (bh // G, j, 0)),
+            pl.BlockSpec((1, bk, dh), lambda bh, i, j, G=G: (bh // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, S, dh)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for single-token GQA attention over a (windowed) KV cache.
+
+This is the whole per-layer attention cost of the decode_32k / long_500k
+serve shapes: one query token attending to a cache of ``Wc`` entries, with
+grouped KV heads and a per-batch valid length (ring-buffer caches may be
+partially filled).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["attn_decode_ref"]
+
+
+def attn_decode_ref(
+    q: jnp.ndarray,        # (B, H, dh)
+    k: jnp.ndarray,        # (B, Hkv, Wc, dh)
+    v: jnp.ndarray,        # (B, Hkv, Wc, dh)
+    lengths: jnp.ndarray,  # (B,) int32 — number of valid cache entries
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Returns (B, H, dh). Softmax in float32."""
+    B, H, dh = q.shape
+    Hkv, Wc = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qf = q.astype(jnp.float32) * (scale if scale is not None else dh**-0.5)
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    qg = qf.reshape(B, Hkv, G, dh)
+    scores = jnp.einsum("bhgd,bhwd->bhgw", qg, kf)          # (B, Hkv, G, Wc)
+    valid = jnp.arange(Wc)[None, :] < lengths[:, None]      # (B, Wc)
+    scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhgw,bhwd->bhgd", p, vf)
+    return out.reshape(B, H, dh).astype(q.dtype)

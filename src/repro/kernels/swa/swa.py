@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: flash-decode over a sliding-window KV cache (GQA).
+
+One new token attends to a ``Wc``-entry cache. The cache axis is tiled into
+``block_w`` slabs streamed HBM -> VMEM; a running (max, denominator,
+accumulator) triple lives in VMEM scratch across the sequential grid steps
+(online softmax — never materializes the (Wc,) score row in HBM).
+
+GQA is handled in the index map: query head ``h`` reads KV head ``h // G``,
+so KV slabs are fetched once per query-head group position — the compiler's
+double-buffering pipelines the next slab during the current slab's FLOPs.
+
+The per-batch valid length arrives via scalar prefetch (SMEM), masking
+ring-buffer caches that are not yet full.
+
+Roofline: decode attention is memory-bound (intensity ~ 1 MAC/byte); the
+kernel's job is to keep the cache stream dense and skip fully-invalid slabs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["attn_decode_pallas"]
+
+_NEG = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+             block_w: int, scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    n_blk = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[b]
+    base = j * block_w
+
+    @pl.when(base < length)
+    def _process():
+        q = q_ref[...].reshape(1, -1).astype(jnp.float32) * scale  # (1, dh)
+        k = k_ref[0, 0].astype(jnp.float32)                # (block_w, dh)
+        v = v_ref[0, 0].astype(jnp.float32)                # (block_w, dh)
+        s = k @ q.T                                        # (block_w, 1)
+        idx = jax.lax.broadcasted_iota(jnp.int32, (block_w, 1), 0) + base
+        s = jnp.where(idx < length, s, _NEG)
+
+        m_prev = m_scr[0, 0]
+        m_new = jnp.maximum(m_prev, s.max())
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                             # (block_w, 1)
+        l_scr[0, 0] = l_scr[0, 0] * alpha + p.sum()
+        acc_scr[...] = acc_scr[...] * alpha + p.T @ v      # (1, dh)
+        m_scr[0, 0] = m_new
+
+    @pl.when(j == n_blk - 1)
+    def _emit():
+        o_ref[...] = (acc_scr[...] / l_scr[0, 0]).reshape(o_ref.shape).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("block_w", "interpret", "scale"))
+def attn_decode_pallas(
+    q: jnp.ndarray,        # (B, H, dh)
+    k: jnp.ndarray,        # (B, Hkv, Wc, dh)
+    v: jnp.ndarray,        # (B, Hkv, Wc, dh)
+    lengths: jnp.ndarray,  # (B,) int32
+    block_w: int = 512,
+    scale: float | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Flash-decode GQA attention. Returns (B, H, dh)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, H, dh = q.shape
+    Hkv, Wc = k.shape[1], k.shape[2]
+    G = H // Hkv
+    if Wc % block_w != 0:
+        raise ValueError(f"cache length {Wc} must be a multiple of {block_w}")
+    scale_f = float(scale if scale is not None else dh**-0.5)
+
+    grid = (B, H, Wc // block_w)
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_w=block_w, scale=scale_f),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, dh), lambda b, h, j, lens: (b, h, 0)),
+                pl.BlockSpec(
+                    (1, 1, block_w, dh), lambda b, h, j, lens: (b, h // G, j, 0)
+                ),
+                pl.BlockSpec(
+                    (1, 1, block_w, dh), lambda b, h, j, lens: (b, h // G, j, 0)
+                ),
+            ],
+            out_specs=pl.BlockSpec((1, 1, dh), lambda b, h, j, lens: (b, h, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1, 1), jnp.float32),
+                pltpu.VMEM((1, 1), jnp.float32),
+                pltpu.VMEM((1, dh), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, dh), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), q, k, v)
+    return out

@@ -1,0 +1,45 @@
+"""Public entry points for the trimmed-mean Byzantine filter.
+
+``trimmed_mean``        — (W, D) array -> (D,)
+``trimmed_mean_pytree`` — apply over a pytree of per-worker stacked leaves,
+                          the form the gradient aggregator consumes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .ref import trimmed_mean_ref
+from .trimmed_mean import trimmed_mean_pallas
+
+__all__ = ["trimmed_mean", "trimmed_mean_pytree", "trimmed_mean_ref"]
+
+
+def trimmed_mean(
+    x: jnp.ndarray, F: int, use_kernel: bool = True, block_d: int = 2048
+) -> jnp.ndarray:
+    """Coordinate-wise trimmed mean over the leading worker axis."""
+    if not use_kernel:
+        return trimmed_mean_ref(x, F)
+    return trimmed_mean_pallas(x, F, block_d=block_d)
+
+
+def trimmed_mean_pytree(stacked, F: int, use_kernel: bool = True):
+    """stacked: pytree whose leaves are (W, ...) per-worker values.
+
+    Flattens every leaf to (W, -1), trims coordinate-wise, restores shapes.
+    Leaves are concatenated into a single (W, D_total) matrix first so the
+    kernel launches once (one HBM stream) instead of per-leaf.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(stacked)
+    W = leaves[0].shape[0]
+    flat = [l.reshape(W, -1).astype(jnp.float32) for l in leaves]
+    sizes = [f.shape[1] for f in flat]
+    big = jnp.concatenate(flat, axis=1)
+    out = trimmed_mean(big, F, use_kernel=use_kernel)
+    outs = []
+    off = 0
+    for leaf, size in zip(leaves, sizes):
+        outs.append(out[off : off + size].reshape(leaf.shape[1:]).astype(leaf.dtype))
+        off += size
+    return jax.tree_util.tree_unflatten(treedef, outs)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the coordinate-wise trimmed mean.
+
+This is the Byzantine filter of Algorithm 2 (lines 9 and 18) applied
+per-coordinate — the paper's "collection of scalar dynamics" trick — over a
+worker axis: for every coordinate independently, drop the F largest and F
+smallest of the W worker values and average the survivors.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["trimmed_mean_ref"]
+
+
+def trimmed_mean_ref(x: jnp.ndarray, F: int) -> jnp.ndarray:
+    """x: (W, D) worker values; returns (D,) trimmed mean with 2F dropped.
+
+    Requires W > 2F. Ties are handled like a sort (duplicates count once per
+    occurrence), which the kernel's iterative argmax extraction matches.
+    """
+    W = x.shape[0]
+    if W <= 2 * F:
+        raise ValueError(f"need W > 2F, got W={W}, F={F}")
+    if F == 0:
+        return x.mean(axis=0)
+    s = jnp.sort(x, axis=0)
+    return s[F : W - F].mean(axis=0)

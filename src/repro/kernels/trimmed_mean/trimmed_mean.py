@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: coordinate-wise trimmed mean over a worker axis.
+
+Workload shape: ``x (W, D)`` with a small worker axis (W = 8..64 data-parallel
+workers) and a huge coordinate axis (D = every parameter of the model). The
+paper's per-scalar Byzantine consensus trim (Alg. 2) becomes, per coordinate,
+"drop F largest + F smallest, average the rest".
+
+TPU design notes
+----------------
+* The coordinate axis is tiled into lane-aligned blocks (multiples of 128)
+  that stream HBM -> VMEM; the worker axis stays resident (it is tiny).
+* A full per-coordinate sort would waste the VPU: F <= (W-1)/2 is small, so
+  we run F rounds of argmax/argmin *extraction* — each round is a (W, BD)
+  max + compare + select, all rank-2 vregs, no cross-lane shuffles.
+* Ties are broken by first occurrence (same as a stable sort slice, which is
+  what the ref oracle computes).
+* The trim count F is a Python static => the extraction loop fully unrolls.
+
+Arithmetic intensity is O(F) per element, bytes are O(W) per output — this
+kernel is memory-bound by design; the win over the naive sort-based lowering
+is the removal of the O(W log W) sorting network XLA would emit.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["trimmed_mean_pallas"]
+
+
+def _kernel(x_ref, o_ref, *, F: int):
+    x = x_ref[...].astype(jnp.float32)          # (W, BD) block in VMEM
+    W = x.shape[0]
+
+    if F == 0:
+        o_ref[...] = (x.sum(axis=0) / W).astype(o_ref.dtype)
+        return
+
+    # Keep-mask formulation: flip one extremum per round, then sum the
+    # survivors directly. (A total - top - bottom formulation catastrophically
+    # cancels when Byzantine values are ~1e6x the honest scale — found by the
+    # hypothesis resistance property test.)
+    ranks = jax.lax.broadcasted_iota(jnp.int32, x.shape, 0)
+    neg = jnp.float32(jnp.finfo(jnp.float32).min)
+    pos = jnp.float32(jnp.finfo(jnp.float32).max)
+    keep = jnp.ones(x.shape, jnp.bool_)
+
+    cur = x
+    for _ in range(F):                           # static unroll: drop maxima
+        idx = jnp.argmax(cur, axis=0)
+        onehot = ranks == idx[None, :]
+        keep = keep & ~onehot
+        cur = jnp.where(onehot, neg, cur)
+    cur = jnp.where(keep, x, pos)
+    for _ in range(F):                           # drop minima among survivors
+        idx = jnp.argmin(cur, axis=0)
+        onehot = ranks == idx[None, :]
+        keep = keep & ~onehot
+        cur = jnp.where(onehot, pos, cur)
+
+    kept_sum = jnp.where(keep, x, 0.0).sum(axis=0)
+    o_ref[...] = (kept_sum / (W - 2 * F)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("F", "block_d", "interpret"))
+def trimmed_mean_pallas(
+    x: jnp.ndarray,
+    F: int,
+    block_d: int = 2048,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Coordinate-wise trimmed mean. x: (W, D) -> (D,).
+
+    D is padded to a multiple of ``block_d`` (lane-aligned); the pad region
+    is sliced off the output. ``interpret=None`` auto-selects interpret mode
+    off-TPU so the same call site works in CI and on hardware.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    W, D = x.shape
+    if W <= 2 * F:
+        raise ValueError(f"need W > 2F, got W={W}, F={F}")
+    pad = (-D) % block_d
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    Dp = D + pad
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, F=F),
+        grid=(Dp // block_d,),
+        in_specs=[pl.BlockSpec((W, block_d), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((block_d,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Dp,), x.dtype),
+        interpret=interpret,
+    )(x)
+    return out[:D]

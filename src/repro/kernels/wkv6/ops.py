@@ -1,0 +1,71 @@
+"""Public WKV6 entry points: kernel for training/prefill, jnp step for decode.
+
+``wkv6`` dispatches between the chunked Pallas kernel (T multiple of chunk,
+perf path) and the sequential oracle (fallback for ragged shapes / debugging).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+import functools
+
+from .ref import wkv6_ref, wkv6_decode_step, wkv6_chunked_jnp
+from .wkv6 import wkv6_chunked_pallas
+
+__all__ = ["wkv6", "wkv6_decode_step", "wkv6_ref", "wkv6_chunked_jnp"]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _wkv6_kernel_ad(r, k, v, lw, u, chunk):
+    """Pallas forward with a jnp-chunked backward: pallas_call has no
+    built-in transpose, so the VJP re-runs the mathematically identical
+    chunked-jnp path under jax.vjp (one extra forward in the backward pass,
+    same as remat)."""
+    return wkv6_chunked_pallas(r, k, v, lw, u, chunk=chunk)
+
+
+def _wkv6_fwd(r, k, v, lw, u, chunk):
+    out = wkv6_chunked_pallas(r, k, v, lw, u, chunk=chunk)
+    return out, (r, k, v, lw, u)
+
+
+def _wkv6_bwd(chunk, res, cot):
+    r, k, v, lw, u = res
+    _, vjp = jax.vjp(
+        lambda *a: wkv6_chunked_jnp(*a, chunk=chunk), r, k, v, lw, u
+    )
+    return vjp(cot)
+
+
+_wkv6_kernel_ad.defvjp(_wkv6_fwd, _wkv6_bwd)
+
+
+def wkv6(
+    r: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    lw: jnp.ndarray,
+    u: jnp.ndarray,
+    chunk: int | None = None,
+    use_kernel: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(BH, T, K/V) chunked WKV6 -> (y, final_state).
+
+    Dispatch: Pallas kernel on TPU (chunk 64, MXU-sized); chunked-jnp
+    off-TPU (same math, python chunk loop so dry-run cost analysis sees
+    every chunk — capped at 32 unrolled chunks since WKV FLOPs are dwarfed
+    by the r/k/v/g projections); sequential scan oracle for ragged shapes.
+    """
+    T = r.shape[1]
+    if use_kernel:
+        c = chunk or 64
+        if T % c == 0 and T >= c:
+            return _wkv6_kernel_ad(r, k, v, lw, u, c)
+        return wkv6_ref(r, k, v, lw, u)
+    c = chunk or max(64, T // 32)
+    while T % c:
+        c //= 2
+    if c >= 16:
+        return wkv6_chunked_jnp(r, k, v, lw, u, chunk=c)
+    return wkv6_ref(r, k, v, lw, u)

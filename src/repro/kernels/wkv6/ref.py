@@ -1,0 +1,119 @@
+"""Pure-jnp oracle for the RWKV6 (Finch) WKV recurrence.
+
+Per head with key-dim K, value-dim V, the data-dependent-decay recurrence is
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T                 (S in R^{K x V})
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+
+where ``w_t = exp(lw_t)`` with per-channel log-decay ``lw_t <= 0`` and ``u``
+is the current-token bonus. This sequential scan is the ground truth the
+chunked Pallas kernel must match.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["wkv6_ref", "wkv6_decode_step"]
+
+
+def wkv6_ref(
+    r: jnp.ndarray,   # (BH, T, K) receptance
+    k: jnp.ndarray,   # (BH, T, K)
+    v: jnp.ndarray,   # (BH, T, V)
+    lw: jnp.ndarray,  # (BH, T, K) log-decay (<= 0)
+    u: jnp.ndarray,   # (BH, K) bonus
+    s0: jnp.ndarray | None = None,  # (BH, K, V) initial state
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (BH, T, V), s_final (BH, K, V)). float32 internals."""
+    BH, T, K = r.shape
+    V = v.shape[-1]
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    wf = jnp.exp(lw.astype(jnp.float32))
+    uf = u.astype(jnp.float32)
+    if s0 is None:
+        s0 = jnp.zeros((BH, K, V), jnp.float32)
+
+    def step(s, xs):
+        rt, kt, vt, wt = xs  # (BH,K),(BH,K),(BH,V),(BH,K)
+        kv = kt[:, :, None] * vt[:, None, :]          # (BH, K, V)
+        y = jnp.einsum("bk,bkv->bv", rt, s + uf[:, :, None] * kv)
+        s_new = wt[:, :, None] * s + kv
+        return s_new, y
+
+    xs = (
+        jnp.moveaxis(rf, 1, 0),
+        jnp.moveaxis(kf, 1, 0),
+        jnp.moveaxis(vf, 1, 0),
+        jnp.moveaxis(wf, 1, 0),
+    )
+    s_final, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), s_final
+
+
+def wkv6_chunked_jnp(
+    r: jnp.ndarray,   # (BH, T, K)
+    k: jnp.ndarray,
+    v: jnp.ndarray,   # (BH, T, V)
+    lw: jnp.ndarray,  # (BH, T, K) log-decay <= 0
+    u: jnp.ndarray,   # (BH, K)
+    chunk: int = 64,
+    s0: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked WKV6 in plain jnp — the same math as the Pallas kernel
+    (see wkv6.py), with a *python* loop over chunks so XLA cost analysis
+    sees every chunk's FLOPs (a lax.scan body is only counted once).
+    Used off-TPU for training/prefill and as a second oracle."""
+    BH, T, K = r.shape
+    V = v.shape[-1]
+    C = chunk
+    assert T % C == 0
+    rf = r.astype(jnp.float32).reshape(BH, T // C, C, K)
+    kf = k.astype(jnp.float32).reshape(BH, T // C, C, K)
+    vf = v.astype(jnp.float32).reshape(BH, T // C, C, V)
+    lwf = lw.astype(jnp.float32).reshape(BH, T // C, C, K)
+    uf = u.astype(jnp.float32)
+    s = (s0 if s0 is not None else jnp.zeros((BH, K, V))).astype(jnp.float32)
+
+    i_idx = jnp.arange(C)[:, None]
+    j_idx = jnp.arange(C)[None, :]
+    causal = (j_idx < i_idx)[None, :, :, None]  # (1, C, C, 1)
+
+    ys = []
+    for c in range(T // C):
+        rc, kc, vc, lwc = rf[:, c], kf[:, c], vf[:, c], lwf[:, c]
+        P = jnp.cumsum(lwc, axis=1)          # (BH, C, K) inclusive
+        E = P - lwc                          # exclusive
+        q_dec = rc * jnp.exp(E)
+        y = jnp.einsum("bik,bkv->biv", q_dec, s)
+        D = E[:, :, None, :] - P[:, None, :, :]          # (BH, C, C, K)
+        A = jnp.where(causal, jnp.exp(jnp.where(causal, D, 0.0)), 0.0)
+        scores = jnp.einsum("bik,bjk,bijk->bij", rc, kc, A)
+        y = y + jnp.einsum("bij,bjv->biv", scores, vc)
+        y = y + jnp.sum(rc * uf[:, None, :] * kc, axis=2, keepdims=True) * vc
+        p_last = P[:, -1]
+        k_dec = kc * jnp.exp(p_last[:, None, :] - P)
+        s = jnp.exp(p_last)[:, :, None] * s + jnp.einsum(
+            "bjk,bjv->bkv", k_dec, vc
+        )
+        ys.append(y)
+    out = jnp.concatenate(ys, axis=1).astype(r.dtype)
+    return out, s
+
+
+def wkv6_decode_step(
+    r: jnp.ndarray,   # (BH, K)
+    k: jnp.ndarray,   # (BH, K)
+    v: jnp.ndarray,   # (BH, V)
+    lw: jnp.ndarray,  # (BH, K)
+    u: jnp.ndarray,   # (BH, K)
+    s: jnp.ndarray,   # (BH, K, V)
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-token decode: returns (y (BH, V), s_new). O(K*V) — no kernel
+    needed; this is the long_500k serve path's whole attention cost."""
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    wf = jnp.exp(lw.astype(jnp.float32))
+    kv = kf[:, :, None] * vf[:, None, :]
+    y = jnp.einsum("bk,bkv->bv", rf, s + u.astype(jnp.float32)[:, :, None] * kv)
+    s_new = wf[:, :, None] * s + kv
+    return y.astype(r.dtype), s_new

@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: chunked RWKV6 WKV with data-dependent decay.
+
+The sequential recurrence (see ref.py) has O(T) depth; the chunked form
+recovers MXU-friendly matmuls by splitting T into chunks of C tokens and
+carrying the (K, V) state across chunks in a VMEM scratch buffer — the TPU
+grid iterates the time axis sequentially, so the carry is race-free.
+
+Within a chunk (local indices i, j; P = inclusive cumsum of log-decay,
+E_i = P_i - lw_i = exclusive cumsum):
+
+    y_i  = (r_i . exp(E_i)) @ S_start                      inter-chunk
+         + sum_{j<i} [sum_kdim r_i k_j exp(E_i - P_j)] v_j  intra-chunk
+         + (r_i . u . k_i) @ v_i                            bonus diagonal
+    S_end = diag(exp(P_last)) S_start
+          + sum_j (k_j . exp(P_last - P_j))^T v_j
+
+Numerical safety: every exponent above is <= 0 by construction (log-decays
+are <= 0 and j <= i), so the kernel never forms exp of a positive number —
+this is why the pairwise (C, C, K) tensor is built *jointly* instead of
+factoring exp(E_i) * exp(-P_j) into a separable (and overflowing) matmul.
+VMEM cost of the pairwise tensor: C^2 * K * 4B = 1 MiB at C=64, K=64.
+
+Grid: (BH, T // C). Block shapes are (1, C, K) / (1, C, V) slabs; K and V
+are the lane dimension (multiples of 128 after padding in ops.py, 64 on the
+smoke path — still a legal, if half-utilized, vreg layout).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["wkv6_chunked_pallas"]
+
+
+def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, y_ref, sfin_ref, s_scr, *, C: int):
+    c = pl.program_id(1)
+    n_chunks = pl.num_programs(1)
+
+    @pl.when(c == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = r_ref[0].astype(jnp.float32)    # (C, K)
+    k = k_ref[0].astype(jnp.float32)    # (C, K)
+    v = v_ref[0].astype(jnp.float32)    # (C, V)
+    lw = lw_ref[0].astype(jnp.float32)  # (C, K) log-decay <= 0
+    u = u_ref[0].astype(jnp.float32)    # (1, K)
+    s = s_scr[...]                      # (K, V) carried state
+
+    P = jnp.cumsum(lw, axis=0)          # inclusive (C, K)
+    E = P - lw                          # exclusive (C, K)
+
+    # --- inter-chunk: contribution of the carried state ---
+    q_dec = r * jnp.exp(E)              # (C, K), exponents <= 0
+    y = q_dec @ s                       # (C, V) MXU
+
+    # --- intra-chunk: pairwise decayed attention, strictly causal ---
+    # D[i, j, k] = E[i, k] - P[j, k]  (<= 0 for j < i)
+    D = E[:, None, :] - P[None, :, :]                       # (C, C, K)
+    i_idx = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    j_idx = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    causal = (j_idx < i_idx)[:, :, None]
+    A = jnp.where(causal, jnp.exp(jnp.where(causal, D, 0.0)), 0.0)
+    scores = jnp.einsum("ik,jk,ijk->ij", r, k, A)           # (C, C)
+    y = y + scores @ v                                      # MXU
+
+    # --- bonus diagonal (current token): y_i += (sum_k r_ik u_k k_ik) v_i ---
+    y = y + jnp.sum(r * u * k, axis=1, keepdims=True) * v
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # --- state carry to next chunk ---
+    p_last = P[-1]                                          # (K,)
+    k_dec = k * jnp.exp(p_last[None, :] - P)                # (C, K), <= 0 exp
+    s_new = jnp.exp(p_last)[:, None] * s + k_dec.T @ v      # (K, V)
+    s_scr[...] = s_new
+
+    @pl.when(c == n_chunks - 1)
+    def _emit_final():
+        sfin_ref[0] = s_new.astype(sfin_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "interpret")
+)
+def wkv6_chunked_pallas(
+    r: jnp.ndarray,   # (BH, T, K)
+    k: jnp.ndarray,   # (BH, T, K)
+    v: jnp.ndarray,   # (BH, T, V)
+    lw: jnp.ndarray,  # (BH, T, K) log-decay (<= 0)
+    u: jnp.ndarray,   # (BH, K)
+    chunk: int = 64,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked WKV6. Returns (y (BH, T, V), s_final (BH, K, V))."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    BH, T, K = r.shape
+    V = v.shape[-1]
+    if T % chunk != 0:
+        raise ValueError(f"T={T} must be a multiple of chunk={chunk}")
+    n_chunks = T // chunk
+
+    y, s_fin = pl.pallas_call(
+        functools.partial(_kernel, C=chunk),
+        grid=(BH, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, K), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, K), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, V), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, K), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, K), lambda b, c: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, V), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, K, V), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, T, V), r.dtype),
+            jax.ShapeDtypeStruct((BH, K, V), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, lw, u)
+    return y, s_fin

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+IMPORTANT: functions, not module-level constants — importing this module must
+never touch jax device state (the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first init;
+everything else must see the real device count).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """v5e production mesh: 16x16 single pod, or 2 pods x 16 x 16."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(model_parallel: int | None = None) -> Mesh:
+    """A mesh over whatever devices actually exist (tests / examples)."""
+    n = jax.device_count()
+    mp = model_parallel or 1
+    assert n % mp == 0
+    return jax.make_mesh(
+        (n // mp, mp), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

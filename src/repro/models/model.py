@@ -1,0 +1,716 @@
+"""Model assembly: decoder-only / enc-dec / hybrid stacks with scan-over-layers.
+
+Param layout
+------------
+Homogeneous stacks (``cfg.scan_layers`` and a length-1 ``block_pattern``)
+store one pytree of *stacked* leaves ``(L, ...)`` under ``params["blocks"]``
+and run ``jax.lax.scan`` over the layer axis (one HLO block body regardless
+of depth — required to compile 126-layer llama3-405b on the CPU dry-run).
+
+Patterned stacks (e.g. recurrentgemma's (rglru, rglru, attn)) store one
+stacked pytree per pattern position under ``params["groups"]`` (each
+``(R, ...)`` with R = n_layers // P repeats) plus unrolled ``params["tail"]``
+layers for the remainder.
+
+Enc-dec (whisper) keeps explicit unrolled lists (12+12 layers).
+
+Three entry points, matching the assigned input shapes:
+  ``forward_train``  — full-sequence logits (train_4k)
+  ``prefill``        — logits for the last position + KV/state caches
+  ``decode_step``    — one token, cache-to-cache     (decode_32k, long_500k)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / apply
+# ---------------------------------------------------------------------------
+
+_MIXER_INIT = {
+    "attn": L.init_attention,
+    "swa": L.init_attention,
+    "wkv6": L.init_wkv6,
+    "rglru": L.init_rglru,
+}
+
+
+def _init_block(key, cfg: ArchConfig, kind: str, with_xattn: bool = False) -> Params:
+    ks = jax.random.split(key, 5)
+    p: Params = {
+        "norm1": L.init_norm(ks[0], cfg),
+        "mixer": _MIXER_INIT[kind](ks[1], cfg),
+    }
+    if not cfg.parallel_block:
+        p["norm2"] = L.init_norm(ks[2], cfg)
+    if with_xattn:
+        p["xattn"] = L.init_cross_attention(ks[3], cfg)
+        p["norm_x"] = L.init_norm(ks[3], cfg)
+    if cfg.ffn_kind == "moe":
+        p["ffn"] = L.init_moe(ks[4], cfg)
+    elif cfg.ffn_kind == "mlp":
+        p["ffn"] = L.init_mlp(ks[4], cfg)
+    else:
+        p["ffn"] = L.init_rwkv_cm(ks[4], cfg)
+    return p
+
+
+def _apply_ffn(p: Params, x: jnp.ndarray, cfg: ArchConfig) -> tuple[jnp.ndarray, jnp.ndarray]:
+    if cfg.ffn_kind == "moe":
+        y, aux = L.moe_block(p, x, cfg)
+        return y, aux
+    if cfg.ffn_kind == "mlp":
+        return L.mlp_block(p, x, cfg), jnp.float32(0.0)
+    return L.rwkv_cm_block(p, x, cfg), jnp.float32(0.0)
+
+
+def _apply_mixer_train(p, x, cfg: ArchConfig, kind: str, positions):
+    if kind == "attn":
+        return L.attention_block(p, x, cfg, positions, window=0)
+    if kind == "swa":
+        return L.attention_block(p, x, cfg, positions, window=cfg.window)
+    if kind == "wkv6":
+        return L.wkv6_block(p, x, cfg)
+    if kind == "rglru":
+        return L.rglru_block(p, x, cfg)
+    raise ValueError(kind)
+
+
+def block_train(
+    p: Params, x: jnp.ndarray, cfg: ArchConfig, kind: str, positions,
+    enc: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Pre-norm residual block; returns (x, aux_loss)."""
+    h = L.apply_norm(p["norm1"], x, cfg)
+    mix = _apply_mixer_train(p["mixer"], h, cfg, kind, positions)
+    if cfg.parallel_block:
+        ffn_out, aux = _apply_ffn(p["ffn"], h, cfg)
+        return x + mix + ffn_out, aux
+    x = x + mix
+    if "xattn" in p:
+        hx = L.apply_norm(p["norm_x"], x, cfg)
+        x = x + L.cross_attention_block(p["xattn"], hx, enc, cfg)
+    h2 = L.apply_norm(p["norm2"], x, cfg)
+    ffn_out, aux = _apply_ffn(p["ffn"], h2, cfg)
+    return x + ffn_out, aux
+
+
+# ---------------------------------------------------------------------------
+# stack structure helpers
+# ---------------------------------------------------------------------------
+
+def _stack_plan(cfg: ArchConfig) -> tuple[int, int]:
+    """(repeats, tail): n_layers = repeats * len(pattern) + tail."""
+    P = len(cfg.block_pattern)
+    return cfg.n_layers // P, cfg.n_layers % P
+
+
+def init_params(key, cfg: ArchConfig) -> Params:
+    ks = iter(jax.random.split(key, 1024))
+    d, V = cfg.d_model, cfg.vocab
+    params: Params = {
+        "embed": L._dense_init(next(ks), (V, d), L._dt(cfg), scale=0.02),
+        "final_norm": L.init_norm(next(ks), cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L._dense_init(next(ks), (d, V), L._dt(cfg))
+    if cfg.family == "vlm":
+        d_vis = 1024  # InternViT feature dim (stub frontend)
+        params["vis_proj"] = {
+            "w1": L._dense_init(next(ks), (d_vis, d), L._dt(cfg)),
+            "w2": L._dense_init(next(ks), (d, d), L._dt(cfg)),
+        }
+    if cfg.encoder_layers:
+        params["encoder"] = [
+            _init_block(next(ks), cfg, "attn") for _ in range(cfg.encoder_layers)
+        ]
+        params["enc_norm"] = L.init_norm(next(ks), cfg)
+
+    with_x = cfg.encoder_layers > 0
+    P = len(cfg.block_pattern)
+    R, tail = _stack_plan(cfg)
+    if cfg.scan_layers and R > 1:
+        groups = []
+        for pos in range(P):
+            kind = cfg.block_pattern[pos]
+            stacked = [
+                _init_block(next(ks), cfg, kind, with_x) for _ in range(R)
+            ]
+            groups.append(
+                jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *stacked)
+            )
+        params["groups"] = groups
+        params["tail"] = [
+            _init_block(next(ks), cfg, cfg.block_pattern[i % P], with_x)
+            for i in range(tail)
+        ]
+    else:
+        params["layers"] = [
+            _init_block(next(ks), cfg, cfg.mixer_of(i), with_x)
+            for i in range(cfg.n_layers)
+        ]
+    return params
+
+
+# ---------------------------------------------------------------------------
+# encoder (whisper stub frontend -> transformer encoder)
+# ---------------------------------------------------------------------------
+
+def encode(params: Params, frames: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """frames: (B, T_enc, d) precomputed conv-frontend output (stub)."""
+    T = frames.shape[1]
+    pos = jnp.arange(T)
+    x = frames
+    for blk in params["encoder"]:
+        h = L.apply_norm(blk["norm1"], x, cfg)
+        x = x + L.attention_block(blk["mixer"], h, cfg, pos, causal=False)
+        h2 = L.apply_norm(blk["norm2"], x, cfg)
+        y, _ = _apply_ffn(blk["ffn"], h2, cfg)
+        x = x + y
+    return L.apply_norm(params["enc_norm"], x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_inputs(
+    params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
+    patch_embeds: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    x = params["embed"][tokens]  # (B, S, d) gather
+    if cfg.family == "vlm" and patch_embeds is not None:
+        p = params["vis_proj"]
+        vis = jax.nn.gelu((patch_embeds @ p["w1"]).astype(jnp.float32)).astype(
+            x.dtype
+        ) @ p["w2"]
+        x = jnp.concatenate([vis, x], axis=1)  # patches prepended
+    return x
+
+
+def lm_logits(params: Params, cfg: ArchConfig, x: jnp.ndarray) -> jnp.ndarray:
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["lm_head"]
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits.astype(jnp.float32) / c).astype(logits.dtype)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# train forward
+# ---------------------------------------------------------------------------
+
+def forward_train(
+    params: Params,
+    cfg: ArchConfig,
+    tokens: jnp.ndarray,                       # (B, S)
+    patch_embeds: jnp.ndarray | None = None,   # vlm stub
+    frames: jnp.ndarray | None = None,         # audio stub
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (logits (B, S_total, V), aux_loss)."""
+    x = embed_inputs(params, cfg, tokens, patch_embeds)
+    positions = jnp.arange(x.shape[1])
+    enc = encode(params, frames, cfg) if cfg.encoder_layers else None
+    aux_total = jnp.float32(0.0)
+
+    P = len(cfg.block_pattern)
+
+    if "groups" in params:
+        def segment(x_aux, group_params, kind):
+            R = jax.tree_util.tree_leaves(group_params)[0].shape[0]
+            G = cfg.remat_group if cfg.remat and R % max(cfg.remat_group, 1) == 0 \
+                else 1
+            if G > 1:
+                # grouped remat: save the residual stream every G layers only
+                grouped = jax.tree_util.tree_map(
+                    lambda a: a.reshape((R // G, G) + a.shape[1:]), group_params
+                )
+
+                def inner(carry, blk):
+                    xc, auxc = carry
+                    xo, aux = block_train(blk, xc, cfg, kind, positions, enc)
+                    return (xo, auxc + aux), None
+
+                run_group = jax.checkpoint(
+                    lambda c, g: jax.lax.scan(inner, c, g)[0]
+                )
+
+                def outer(carry, grp):
+                    return run_group(carry, grp), None
+
+                return jax.lax.scan(outer, x_aux, grouped)[0]
+
+            def body(carry, blk):
+                xc, auxc = carry
+                if cfg.remat:
+                    xo, aux = jax.checkpoint(
+                        lambda b, xx: block_train(b, xx, cfg, kind, positions, enc)
+                    )(blk, xc)
+                else:
+                    xo, aux = block_train(blk, xc, cfg, kind, positions, enc)
+                return (xo, auxc + aux), None
+
+            return jax.lax.scan(body, x_aux, group_params)[0]
+
+        if P == 1:
+            (x, aux_total) = segment((x, aux_total), params["groups"][0],
+                                     cfg.block_pattern[0])
+        else:
+            # scan over repeats; each step applies the whole pattern
+            def rep_body(carry, blks):
+                xc, auxc = carry
+                for pos in range(P):
+                    fn = lambda b, xx, _pos=pos: block_train(
+                        b, xx, cfg, cfg.block_pattern[_pos], positions, enc
+                    )
+                    if cfg.remat:
+                        fn = jax.checkpoint(fn)
+                    xc, aux = fn(blks[pos], xc)
+                    auxc = auxc + aux
+                return (xc, auxc), None
+
+            (x, aux_total), _ = jax.lax.scan(
+                rep_body, (x, aux_total), tuple(params["groups"])
+            )
+        for i, blk in enumerate(params["tail"]):
+            kind = cfg.block_pattern[i % P]
+            x, aux = block_train(blk, x, cfg, kind, positions, enc)
+            aux_total = aux_total + aux
+    else:
+        for i, blk in enumerate(params["layers"]):
+            fn = lambda b, xx, _i=i: block_train(
+                b, xx, cfg, cfg.mixer_of(_i), positions, enc
+            )
+            if cfg.remat:
+                fn = jax.checkpoint(fn)
+            x, aux = fn(blk, x)
+            aux_total = aux_total + aux
+
+    return lm_logits(params, cfg, x), aux_total
+
+
+def _ce_from_logits(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels[..., None], axis=-1
+    )[..., 0]
+    return (lse - gold).sum()
+
+
+def loss_fn(
+    params: Params,
+    cfg: ArchConfig,
+    tokens: jnp.ndarray,
+    labels: jnp.ndarray,
+    patch_embeds=None,
+    frames=None,
+) -> jnp.ndarray:
+    if cfg.ce_chunk <= 0:
+        logits, aux = forward_train(params, cfg, tokens, patch_embeds, frames)
+        if cfg.family == "vlm" and patch_embeds is not None:
+            logits = logits[:, patch_embeds.shape[1]:]
+        n_tok = logits.shape[0] * logits.shape[1]
+        return _ce_from_logits(logits, labels) / n_tok + aux
+
+    # --- streamed CE (EXPERIMENTS.md §Perf): compute the trunk once, then
+    # per position-chunk project to vocab + CE under jax.checkpoint, so the
+    # (T, vocab) logits never exist at once (backward recomputes per chunk).
+    hidden, aux = forward_hidden(params, cfg, tokens, patch_embeds, frames)
+    if cfg.family == "vlm" and patch_embeds is not None:
+        hidden = hidden[:, patch_embeds.shape[1]:]
+    B, S, _ = hidden.shape
+    C = cfg.ce_chunk
+    pad = (-S) % C
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+    nc = hidden.shape[1] // C
+    hc = hidden.reshape(B, nc, C, -1).swapaxes(0, 1)     # (nc, B, C, d)
+    lc = labels.reshape(B, nc, C).swapaxes(0, 1)
+    valid = (jnp.arange(hidden.shape[1]) < S).reshape(nc, 1, C)
+
+    @jax.checkpoint
+    def chunk_ce(h, l, v):
+        logits = lm_logits(params, cfg, h)
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        gold = jnp.take_along_axis(
+            logits.astype(jnp.float32), l[..., None], axis=-1
+        )[..., 0]
+        return ((lse - gold) * v).sum()
+
+    def body(acc, xs):
+        h, l, v = xs
+        return acc + chunk_ce(h, l, v), None
+
+    total, _ = jax.lax.scan(
+        body, jnp.float32(0.0), (hc, lc, valid.astype(jnp.float32))
+    )
+    return total / (B * S) + aux
+
+
+def forward_hidden(
+    params: Params,
+    cfg: ArchConfig,
+    tokens: jnp.ndarray,
+    patch_embeds: jnp.ndarray | None = None,
+    frames: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """The decoder trunk without the LM head: (pre-head hidden, aux)."""
+    import dataclasses as _dc
+
+    # run forward_train with an identity head by slicing it out is wasteful;
+    # instead replicate its body up to (but excluding) lm_logits.
+    x = embed_inputs(params, cfg, tokens, patch_embeds)
+    positions = jnp.arange(x.shape[1])
+    enc = encode(params, frames, cfg) if cfg.encoder_layers else None
+    aux_total = jnp.float32(0.0)
+    P = len(cfg.block_pattern)
+
+    if "groups" in params:
+        # identical control flow to forward_train (kept in sync)
+        def segment(x_aux, group_params, kind):
+            R = jax.tree_util.tree_leaves(group_params)[0].shape[0]
+            G = cfg.remat_group if cfg.remat and R % max(cfg.remat_group, 1) == 0 \
+                else 1
+            if G > 1:
+                grouped = jax.tree_util.tree_map(
+                    lambda a: a.reshape((R // G, G) + a.shape[1:]), group_params
+                )
+
+                def inner(carry, blk):
+                    xc, auxc = carry
+                    xo, aux = block_train(blk, xc, cfg, kind, positions, enc)
+                    return (xo, auxc + aux), None
+
+                run_group = jax.checkpoint(
+                    lambda c, g: jax.lax.scan(inner, c, g)[0]
+                )
+                return jax.lax.scan(
+                    lambda c, grp: (run_group(c, grp), None), x_aux, grouped
+                )[0]
+
+            def body(carry, blk):
+                xc, auxc = carry
+                if cfg.remat:
+                    xo, aux = jax.checkpoint(
+                        lambda b, xx: block_train(b, xx, cfg, kind, positions,
+                                                  enc)
+                    )(blk, xc)
+                else:
+                    xo, aux = block_train(blk, xc, cfg, kind, positions, enc)
+                return (xo, auxc + aux), None
+
+            return jax.lax.scan(body, x_aux, group_params)[0]
+
+        if P == 1:
+            (x, aux_total) = segment((x, aux_total), params["groups"][0],
+                                     cfg.block_pattern[0])
+        else:
+            def rep_body(carry, blks):
+                xc, auxc = carry
+                for pos in range(P):
+                    fn = lambda b, xx, _pos=pos: block_train(
+                        b, xx, cfg, cfg.block_pattern[_pos], positions, enc
+                    )
+                    if cfg.remat:
+                        fn = jax.checkpoint(fn)
+                    xc, aux = fn(blks[pos], xc)
+                    auxc = auxc + aux
+                return (xc, auxc), None
+
+            (x, aux_total), _ = jax.lax.scan(
+                rep_body, (x, aux_total), tuple(params["groups"])
+            )
+        for i, blk in enumerate(params["tail"]):
+            kind = cfg.block_pattern[i % P]
+            x, aux = block_train(blk, x, cfg, kind, positions, enc)
+            aux_total = aux_total + aux
+    else:
+        for i, blk in enumerate(params["layers"]):
+            fn = lambda b, xx, _i=i: block_train(
+                b, xx, cfg, cfg.mixer_of(_i), positions, enc
+            )
+            if cfg.remat:
+                fn = jax.checkpoint(fn)
+            x, aux = fn(blk, x)
+            aux_total = aux_total + aux
+    return x, aux_total
+
+
+# ---------------------------------------------------------------------------
+# serve: prefill + decode
+# ---------------------------------------------------------------------------
+
+def _cache_spec(cfg: ArchConfig, kind: str, B: int, cache_len: int) -> Params:
+    if kind in ("attn", "swa"):
+        wlen = min(cache_len, cfg.window) if (kind == "swa" and cfg.window) else cache_len
+        mixer = L.init_attn_cache(cfg, B, wlen)
+    elif kind == "wkv6":
+        mixer = L.init_wkv6_cache(cfg, B)
+    elif kind == "rglru":
+        mixer = L.init_rglru_cache(cfg, B)
+    else:
+        raise ValueError(kind)
+    c: Params = {"mixer": mixer}
+    if cfg.ffn_kind == "rwkv_cm":
+        # channel-mix token-shift state (previous post-norm2 activation)
+        c["cm_prev"] = jnp.zeros((B, cfg.d_model), L._dt(cfg))
+    return c
+
+
+def init_cache(
+    params: Params, cfg: ArchConfig, B: int, cache_len: int,
+    enc: jnp.ndarray | None = None,
+) -> Params:
+    """Build an all-zeros cache pytree (pos=cache_len-ready for decode tests,
+    callers set pos explicitly)."""
+    P = len(cfg.block_pattern)
+    cache: Params = {}
+    if "groups" in params:
+        R, tail = _stack_plan(cfg)
+        cache["groups"] = [
+            jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x, (R,) + x.shape),
+                _cache_spec(cfg, cfg.block_pattern[pos], B, cache_len),
+            )
+            for pos in range(P)
+        ]
+        cache["tail"] = [
+            _cache_spec(cfg, cfg.block_pattern[i % P], B, cache_len)
+            for i in range(tail)
+        ]
+    else:
+        cache["layers"] = [
+            _cache_spec(cfg, cfg.mixer_of(i), B, cache_len)
+            for i in range(cfg.n_layers)
+        ]
+    if enc is not None:
+        cache["enc"] = enc
+    return cache
+
+
+def _mixer_decode(p, x, cfg: ArchConfig, kind: str, cache):
+    if kind == "attn":
+        return L.attention_decode(p, x, cfg, cache, window=0)
+    if kind == "swa":
+        return L.attention_decode(p, x, cfg, cache, window=cfg.window)
+    if kind == "wkv6":
+        return L.wkv6_decode(p, x, cfg, cache)
+    if kind == "rglru":
+        return L.rglru_decode(p, x, cfg, cache)
+    raise ValueError(kind)
+
+
+def block_decode(
+    p: Params, x: jnp.ndarray, cfg: ArchConfig, kind: str, cache: Params,
+    enc: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, Params]:
+    h = L.apply_norm(p["norm1"], x, cfg)
+    mix, mixer_cache = _mixer_decode(p["mixer"], h, cfg, kind, cache["mixer"])
+    new_cache = dict(cache)
+    new_cache["mixer"] = mixer_cache
+    if cfg.parallel_block:
+        ffn_out, _ = _apply_ffn(p["ffn"], h, cfg)
+        return x + mix + ffn_out, new_cache
+    x = x + mix
+    if "xattn" in p and enc is not None:
+        hx = L.apply_norm(p["norm_x"], x, cfg)
+        x = x + L.cross_attention_block(p["xattn"], hx, enc, cfg)
+    h2 = L.apply_norm(p["norm2"], x, cfg)
+    if cfg.ffn_kind == "rwkv_cm":
+        ffn_out = L.rwkv_cm_block(
+            p["ffn"], h2, cfg, x_prev=cache["cm_prev"][:, None]
+        )
+        new_cache["cm_prev"] = h2[:, 0]
+    else:
+        ffn_out, _ = _apply_ffn(p["ffn"], h2, cfg)
+    return x + ffn_out, new_cache
+
+
+def decode_step(
+    params: Params, cfg: ArchConfig, cache: Params, token: jnp.ndarray,
+) -> tuple[jnp.ndarray, Params]:
+    """token: (B, 1) int32 -> (logits (B, 1, V), new cache)."""
+    x = params["embed"][token]
+    enc = cache.get("enc")
+    P = len(cfg.block_pattern)
+
+    if "groups" in params:
+        # repeat-major: each scan step applies one full pattern repeat, so
+        # layer order matches forward_train exactly.
+        def rep_body(xc, blks_caches):
+            blks, caches = blks_caches
+            new_caches = []
+            for pos in range(P):
+                xc, c_new = block_decode(
+                    blks[pos], xc, cfg, cfg.block_pattern[pos], caches[pos], enc
+                )
+                new_caches.append(c_new)
+            return xc, tuple(new_caches)
+
+        x, new_group_caches = jax.lax.scan(
+            rep_body, x, (tuple(params["groups"]), tuple(cache["groups"]))
+        )
+        cache["groups"] = list(new_group_caches)
+        for i, blk in enumerate(params["tail"]):
+            kind = cfg.block_pattern[i % P]
+            x, cache["tail"][i] = block_decode(
+                blk, x, cfg, kind, cache["tail"][i], enc
+            )
+    else:
+        for i, blk in enumerate(params["layers"]):
+            x, cache["layers"][i] = block_decode(
+                blk, x, cfg, cfg.mixer_of(i), cache["layers"][i], enc
+            )
+    return lm_logits(params, cfg, x), cache
+
+
+def prefill(
+    params: Params,
+    cfg: ArchConfig,
+    tokens: jnp.ndarray,                      # (B, S)
+    patch_embeds: jnp.ndarray | None = None,
+    frames: jnp.ndarray | None = None,
+    cache_len: int | None = None,             # KV capacity; default = S (ring)
+) -> tuple[jnp.ndarray, Params]:
+    """Full-sequence prefill; returns (last-position logits, primed cache).
+
+    Implementation: run the train forward for the hidden states (the flash
+    path keeps memory bounded) and prime caches by projecting K/V per layer.
+    Recurrent mixers (wkv6 / rglru) recompute their final state with the
+    chunked scan. This trades a second mixer projection pass for a much
+    simpler cache plumbing — acceptable because prefill is compute-bound.
+    """
+    x = embed_inputs(params, cfg, tokens, patch_embeds)
+    B, S, d = x.shape
+    enc = encode(params, frames, cfg) if cfg.encoder_layers else None
+    positions = jnp.arange(S)
+    cache = init_cache(params, cfg, B, cache_len or S, enc)
+
+    P = len(cfg.block_pattern)
+
+    def prime_and_apply(blk, xc, kind, c):
+        """One block forward that also fills this block's cache."""
+        h = L.apply_norm(blk["norm1"], xc, cfg)
+        if kind in ("attn", "swa"):
+            q, k, v = L._qk_project(blk["mixer"], h, cfg, positions)
+            wlen = c["mixer"]["k"].shape[2]
+            k_c = jnp.swapaxes(k[:, -wlen:], 1, 2).astype(c["mixer"]["k"].dtype)
+            v_c = jnp.swapaxes(v[:, -wlen:], 1, 2).astype(c["mixer"]["v"].dtype)
+            pad = wlen - k_c.shape[2]
+            if pad > 0:
+                k_c = jnp.pad(k_c, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                v_c = jnp.pad(v_c, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            elif S >= wlen and S % wlen:
+                # ring-align: token t lives at slot t % wlen for decode
+                k_c = jnp.roll(k_c, S % wlen, axis=2)
+                v_c = jnp.roll(v_c, S % wlen, axis=2)
+            c_new = {
+                "k": k_c, "v": v_c,
+                "pos": jnp.full((B,), S, jnp.int32),
+            }
+            window = cfg.window if kind == "swa" else 0
+            impl = cfg.attn_impl
+            if impl == "auto":
+                impl = "chunked" if S >= 2048 else "naive"
+            attn_fn = (
+                L._chunked_attention if impl == "chunked" else L._naive_attention
+            )
+            out = attn_fn(q, k, v, causal=True, window=window)
+            mix = out.reshape(B, S, -1) @ blk["mixer"]["wo"]
+        elif kind == "wkv6":
+            mixp = blk["mixer"]
+            x_prev = jnp.pad(h, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+            r, k_, v, g, lw = L._wkv6_inputs(mixp, h, x_prev, cfg)
+            hd = cfg.wkv_head_dim
+            H = d // hd
+            resh = lambda a: a.reshape(B, S, H, hd).transpose(0, 2, 1, 3).reshape(
+                B * H, S, hd
+            )
+            from repro.kernels.wkv6.ops import wkv6 as _wkv
+            u = jnp.broadcast_to(mixp["u"][None], (B, H, hd)).reshape(B * H, hd)
+            y, s_fin = _wkv(resh(r), resh(k_), resh(v), resh(lw), u,
+                            use_kernel=cfg.use_pallas)
+            y = y.reshape(B, H, S, hd).transpose(0, 2, 1, 3).reshape(B, S, d)
+            y = L._wkv_groupnorm(y, mixp["ln_x"], H)
+            y = y * jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype)
+            mix = y @ mixp["wo"]
+            c_new = {
+                "state": s_fin.reshape(B, H, hd, hd),
+                "x_prev": h[:, -1],
+            }
+        elif kind == "rglru":
+            mixp = blk["mixer"]
+            xw = h @ mixp["w_in"]
+            padded = jnp.pad(xw, ((0, 0), (3, 0), (0, 0)))
+            conv = sum(
+                padded[:, 3 - i : padded.shape[1] - i]
+                * mixp["conv_w"][3 - i][None, None]
+                for i in range(4)
+            ) + mixp["conv_b"]
+            hh, _, _ = L._rglru_core(mixp, conv)
+            gate = jax.nn.gelu((h @ mixp["w_gate_branch"]).astype(jnp.float32))
+            mix = (hh * gate).astype(h.dtype) @ mixp["w_out"]
+            c_new = {
+                "h": hh[:, -1],
+                "conv": xw[:, -3:].astype(c["mixer"]["conv"].dtype),
+            }
+        else:
+            raise ValueError(kind)
+
+        out_cache: Params = {"mixer": c_new}
+        if cfg.parallel_block:
+            ffn_out, _ = _apply_ffn(blk["ffn"], h, cfg)
+            return xc + mix + ffn_out, out_cache
+        xc = xc + mix
+        if "xattn" in blk and enc is not None:
+            hx = L.apply_norm(blk["norm_x"], xc, cfg)
+            xc = xc + L.cross_attention_block(blk["xattn"], hx, enc, cfg)
+        h2 = L.apply_norm(blk["norm2"], xc, cfg)
+        ffn_out, _ = _apply_ffn(blk["ffn"], h2, cfg)
+        if cfg.ffn_kind == "rwkv_cm":
+            out_cache["cm_prev"] = h2[:, -1]
+        return xc + ffn_out, out_cache
+
+    if "groups" in params:
+        def rep_body(xc, blks_caches):
+            blks, caches = blks_caches
+            new_caches = []
+            for pos in range(P):
+                xc, c_new = prime_and_apply(
+                    blks[pos], xc, cfg.block_pattern[pos], caches[pos]
+                )
+                new_caches.append(c_new)
+            return xc, tuple(new_caches)
+
+        x, new_group_caches = jax.lax.scan(
+            rep_body, x, (tuple(params["groups"]), tuple(cache["groups"]))
+        )
+        cache["groups"] = list(new_group_caches)
+        for i, blk in enumerate(params["tail"]):
+            kind = cfg.block_pattern[i % P]
+            x, cache["tail"][i] = prime_and_apply(
+                blk, x, kind, cache["tail"][i]
+            )
+    else:
+        for i, blk in enumerate(params["layers"]):
+            x, cache["layers"][i] = prime_and_apply(
+                blk, x, cfg.mixer_of(i), cache["layers"][i]
+            )
+
+    logits = lm_logits(params, cfg, x[:, -1:])
+    return logits, cache

@@ -1,0 +1,98 @@
+"""AdamW + cosine schedule + global-norm clipping, pure JAX.
+
+Moments are stored in float32 regardless of param dtype (bf16 params with
+f32 state is the production norm). State shards identically to its param
+(see ``repro.distributed.sharding.opt_state_specs``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    moment_dtype: str = "float32"   # "bfloat16" halves optimizer residency
+                                    # (±0.1% step noise; §Perf iteration)
+
+
+def cosine_lr(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1.0 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def adamw_init(params: Params, moment_dtype: str = "float32") -> Params:
+    dt = jnp.dtype(moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _global_norm(tree: Params) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def adamw_update(
+    cfg: AdamWConfig, grads: Params, state: Params, params: Params
+) -> tuple[Params, Params]:
+    step = state["step"] + 1
+    lr = cosine_lr(cfg, step)
+
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree_util.tree_map(
+        lambda g: g.astype(jnp.float32) * scale, grads
+    )
+
+    b1, b2 = cfg.beta1, cfg.beta2
+    mdt = jnp.dtype(cfg.moment_dtype)
+    m = jax.tree_util.tree_map(
+        lambda mm, g: (b1 * mm.astype(jnp.float32) + (1 - b1) * g).astype(mdt),
+        state["m"], grads,
+    )
+    v = jax.tree_util.tree_map(
+        lambda vv, g: (b2 * vv.astype(jnp.float32) + (1 - b2) * g * g).astype(
+            mdt
+        ),
+        state["v"], grads,
+    )
+    sf = step.astype(jnp.float32)
+    bc1 = 1.0 - b1**sf
+    bc2 = 1.0 - b2**sf
+
+    def upd(p, mm, vv):
+        mhat = mm.astype(jnp.float32) / bc1
+        vhat = vv.astype(jnp.float32) / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        decay = cfg.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        return (p.astype(jnp.float32) - lr * (delta + decay)).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "step": step}

@@ -1,0 +1,35 @@
+"""Streamed cross-entropy (ce_chunk) must be bit-equal (loss AND grads) to
+the full-logits path — it is a §Perf memory optimization, not a change."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduced
+import repro.models.model as M
+
+
+@pytest.mark.parametrize("arch", ["qwen3_8b", "internvl2_26b", "olmoe_1b_7b"])
+@pytest.mark.parametrize("chunk", [4, 8])  # 20 positions: covers pad + exact
+def test_chunked_ce_matches_full(arch, chunk):
+    cfg = reduced(get_config(arch))
+    cfgc = dataclasses.replace(cfg, ce_chunk=chunk)
+    p = M.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 20), 0, cfg.vocab)
+    kw = {}
+    if cfg.family == "vlm":
+        kw["patch_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(2), (2, cfg.n_patches, 1024),
+            dtype=jnp.float32)
+    l1 = M.loss_fn(p, cfg, toks, toks, **kw)
+    l2 = M.loss_fn(p, cfgc, toks, toks, **kw)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+    g1 = jax.grad(lambda pp: M.loss_fn(pp, cfg, toks, toks, **kw))(p)
+    g2 = jax.grad(lambda pp: M.loss_fn(pp, cfgc, toks, toks, **kw))(p)
+    for a, b in zip(jax.tree_util.tree_leaves(g1),
+                    jax.tree_util.tree_leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-4, atol=2e-5)

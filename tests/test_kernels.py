@@ -1,0 +1,268 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret=True vs the pure-jnp
+oracle, plus hypothesis property tests on the Byzantine filter."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.trimmed_mean.ops import trimmed_mean, trimmed_mean_pytree
+from repro.kernels.trimmed_mean.ref import trimmed_mean_ref
+from repro.kernels.wkv6.ref import wkv6_ref, wkv6_chunked_jnp, wkv6_decode_step
+from repro.kernels.wkv6.wkv6 import wkv6_chunked_pallas
+from repro.kernels.swa.ref import attn_decode_ref
+from repro.kernels.swa.swa import attn_decode_pallas
+from repro.kernels.swa.prefill import swa_prefill_pallas
+from repro.models.layers import _naive_attention
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# trimmed mean (Byzantine filter)
+# ---------------------------------------------------------------------------
+
+class TestTrimmedMean:
+    @pytest.mark.parametrize("W,D,F", [
+        (8, 100, 0), (8, 1000, 3), (16, 5000, 3), (16, 2048, 7),
+        (32, 4096, 7), (5, 333, 2),
+    ])
+    def test_matches_ref(self, W, D, F):
+        x = jnp.asarray(RNG.normal(size=(W, D)).astype(np.float32))
+        np.testing.assert_allclose(
+            np.asarray(trimmed_mean(x, F)),
+            np.asarray(trimmed_mean_ref(x, F)),
+            rtol=1e-5, atol=1e-6,
+        )
+
+    @pytest.mark.parametrize("dtype,tol", [
+        (jnp.float32, 1e-5), (jnp.bfloat16, 3e-2),
+    ])
+    def test_dtypes(self, dtype, tol):
+        x = jnp.asarray(RNG.normal(size=(16, 777)), dtype=dtype)
+        got = np.asarray(trimmed_mean(x, 4), np.float32)
+        want = np.asarray(trimmed_mean_ref(x, 4), np.float32)
+        np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+    def test_duplicates(self):
+        x = jnp.asarray(np.round(RNG.normal(size=(16, 512)) * 2) / 2,
+                        dtype=jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(trimmed_mean(x, 5)),
+            np.asarray(trimmed_mean_ref(x, 5)), rtol=1e-5, atol=1e-6,
+        )
+
+    def test_rejects_overtrim(self):
+        x = jnp.zeros((4, 8))
+        with pytest.raises(ValueError):
+            trimmed_mean(x, 2)
+
+    def test_pytree(self):
+        tree = {
+            "a": jnp.asarray(RNG.normal(size=(16, 3, 5)).astype(np.float32)),
+            "b": jnp.asarray(RNG.normal(size=(16, 7)).astype(np.float32)),
+        }
+        out = trimmed_mean_pytree(tree, 2)
+        want = trimmed_mean_ref(tree["a"].reshape(16, -1), 2).reshape(3, 5)
+        np.testing.assert_allclose(np.asarray(out["a"]), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+        assert out["b"].shape == (7,)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        W=st.integers(3, 20),
+        D=st.integers(1, 64),
+        F=st.integers(0, 4),
+        seed=st.integers(0, 2**16),
+    )
+    def test_property_bounded_and_permutation_invariant(self, W, D, F, seed):
+        if W <= 2 * F:
+            return
+        rng = np.random.default_rng(seed)
+        x = rng.normal(size=(W, D)).astype(np.float32) * 10
+        out = np.asarray(trimmed_mean(jnp.asarray(x), F))
+        s = np.sort(x, axis=0)
+        kept_lo, kept_hi = s[F], s[W - F - 1]
+        assert (out >= kept_lo - 1e-4).all() and (out <= kept_hi + 1e-4).all()
+        perm = rng.permutation(W)
+        out_p = np.asarray(trimmed_mean(jnp.asarray(x[perm]), F))
+        np.testing.assert_allclose(out, out_p, rtol=1e-5, atol=1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        W=st.integers(5, 16),
+        F=st.integers(1, 3),
+        seed=st.integers(0, 2**16),
+    )
+    def test_property_byzantine_resistance(self, W, F, seed):
+        """Corrupting <= F rows with arbitrarily large values keeps the
+        output within the honest rows' range — the paper's Alg.2 filter
+        guarantee, coordinate-wise."""
+        if W <= 2 * F:
+            return
+        rng = np.random.default_rng(seed)
+        D = 32
+        honest = rng.normal(size=(W - F, D)).astype(np.float32)
+        attack = (rng.choice([-1, 1], size=(F, D)) * 1e6).astype(np.float32)
+        x = np.concatenate([honest, attack], axis=0)
+        rng.shuffle(x, axis=0)
+        out = np.asarray(trimmed_mean(jnp.asarray(x), F))
+        assert (out >= honest.min(0) - 1e-3).all()
+        assert (out <= honest.max(0) + 1e-3).all()
+
+
+# ---------------------------------------------------------------------------
+# WKV6 (chunked linear recurrence)
+# ---------------------------------------------------------------------------
+
+class TestWKV6:
+    @pytest.mark.parametrize("BH,T,K,V,C", [
+        (2, 64, 32, 32, 16), (3, 128, 64, 64, 64), (1, 96, 16, 48, 32),
+        (2, 256, 64, 64, 128),
+    ])
+    def test_pallas_matches_ref(self, BH, T, K, V, C):
+        r = jnp.asarray(RNG.normal(size=(BH, T, K)).astype(np.float32))
+        k = jnp.asarray(RNG.normal(size=(BH, T, K)).astype(np.float32))
+        v = jnp.asarray(RNG.normal(size=(BH, T, V)).astype(np.float32))
+        lw = jnp.asarray(-np.exp(RNG.normal(size=(BH, T, K))).astype(np.float32))
+        u = jnp.asarray(RNG.normal(size=(BH, K)).astype(np.float32))
+        y_ref, s_ref = wkv6_ref(r, k, v, lw, u)
+        y, s = wkv6_chunked_pallas(r, k, v, lw, u, chunk=C)
+        # tolerance scales with chunk: C-term f32 sums reorder vs the scan
+        tol = 2e-4 * max(C // 64, 1) * 5
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=tol, atol=tol)
+        np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                                   rtol=tol, atol=tol)
+
+    def test_chunked_jnp_matches_ref(self):
+        BH, T, K, V = 2, 128, 32, 32
+        r = jnp.asarray(RNG.normal(size=(BH, T, K)).astype(np.float32))
+        k = jnp.asarray(RNG.normal(size=(BH, T, K)).astype(np.float32))
+        v = jnp.asarray(RNG.normal(size=(BH, T, V)).astype(np.float32))
+        lw = jnp.asarray(-np.exp(RNG.normal(size=(BH, T, K))).astype(np.float32))
+        u = jnp.asarray(RNG.normal(size=(BH, K)).astype(np.float32))
+        y_ref, s_ref = wkv6_ref(r, k, v, lw, u)
+        for C in (16, 32, 64):
+            y, s = wkv6_chunked_jnp(r, k, v, lw, u, chunk=C)
+            np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                       rtol=2e-4, atol=2e-4)
+
+    def test_decode_step_consistency(self):
+        """T sequential decode steps == full-sequence reference."""
+        BH, T, K, V = 2, 16, 16, 16
+        r = jnp.asarray(RNG.normal(size=(BH, T, K)).astype(np.float32))
+        k = jnp.asarray(RNG.normal(size=(BH, T, K)).astype(np.float32))
+        v = jnp.asarray(RNG.normal(size=(BH, T, V)).astype(np.float32))
+        lw = jnp.asarray(-np.exp(RNG.normal(size=(BH, T, K))).astype(np.float32))
+        u = jnp.asarray(RNG.normal(size=(BH, K)).astype(np.float32))
+        y_ref, s_ref = wkv6_ref(r, k, v, lw, u)
+        s = jnp.zeros((BH, K, V))
+        ys = []
+        for t in range(T):
+            y, s = wkv6_decode_step(r[:, t], k[:, t], v[:, t], lw[:, t], u, s)
+            ys.append(y)
+        y_seq = jnp.stack(ys, axis=1)
+        np.testing.assert_allclose(np.asarray(y_seq), np.asarray(y_ref),
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                                   rtol=2e-4, atol=2e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**16), C=st.sampled_from([16, 32]))
+    def test_property_strong_decay_forgets(self, seed, C):
+        """With log-decay ~ -8 (w ~ 3e-4) the state contribution from >= 2
+        chunks back is negligible — kernel must agree with ref regardless."""
+        rng = np.random.default_rng(seed)
+        BH, T, K = 1, 64, 16
+        r = jnp.asarray(rng.normal(size=(BH, T, K)).astype(np.float32))
+        k = jnp.asarray(rng.normal(size=(BH, T, K)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(BH, T, K)).astype(np.float32))
+        lw = jnp.full((BH, T, K), -8.0, jnp.float32)
+        u = jnp.asarray(rng.normal(size=(BH, K)).astype(np.float32))
+        y_ref, _ = wkv6_ref(r, k, v, lw, u)
+        y, _ = wkv6_chunked_pallas(r, k, v, lw, u, chunk=C)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# sliding-window flash decode
+# ---------------------------------------------------------------------------
+
+class TestSWADecode:
+    @pytest.mark.parametrize("B,H,Hkv,Wc,dh,blk", [
+        (2, 8, 2, 1024, 64, 256), (1, 4, 4, 512, 128, 128),
+        (3, 6, 1, 768, 32, 256), (2, 2, 2, 2048, 64, 512),
+    ])
+    def test_matches_ref(self, B, H, Hkv, Wc, dh, blk):
+        q = jnp.asarray(RNG.normal(size=(B, H, dh)).astype(np.float32))
+        k = jnp.asarray(RNG.normal(size=(B, Hkv, Wc, dh)).astype(np.float32))
+        v = jnp.asarray(RNG.normal(size=(B, Hkv, Wc, dh)).astype(np.float32))
+        lens = jnp.asarray(RNG.integers(1, Wc + 1, size=(B,)), jnp.int32)
+        np.testing.assert_allclose(
+            np.asarray(attn_decode_pallas(q, k, v, lens, block_w=blk)),
+            np.asarray(attn_decode_ref(q, k, v, lens)),
+            rtol=2e-4, atol=2e-4,
+        )
+
+    def test_bf16(self):
+        B, H, Hkv, Wc, dh = 2, 4, 2, 512, 64
+        q = jnp.asarray(RNG.normal(size=(B, H, dh)), dtype=jnp.bfloat16)
+        k = jnp.asarray(RNG.normal(size=(B, Hkv, Wc, dh)), dtype=jnp.bfloat16)
+        v = jnp.asarray(RNG.normal(size=(B, Hkv, Wc, dh)), dtype=jnp.bfloat16)
+        lens = jnp.asarray([100, 512], jnp.int32)
+        got = np.asarray(attn_decode_pallas(q, k, v, lens, block_w=128),
+                         np.float32)
+        want = np.asarray(attn_decode_ref(q, k, v, lens), np.float32)
+        np.testing.assert_allclose(got, want, rtol=5e-2, atol=5e-2)
+
+    def test_partial_cache_masks_tail(self):
+        """Entries beyond `lengths` must not influence the result."""
+        B, H, Hkv, Wc, dh = 1, 2, 1, 256, 32
+        q = jnp.asarray(RNG.normal(size=(B, H, dh)).astype(np.float32))
+        k = jnp.asarray(RNG.normal(size=(B, Hkv, Wc, dh)).astype(np.float32))
+        v = jnp.asarray(RNG.normal(size=(B, Hkv, Wc, dh)).astype(np.float32))
+        lens = jnp.asarray([64], jnp.int32)
+        out1 = attn_decode_pallas(q, k, v, lens, block_w=64)
+        k2 = k.at[:, :, 64:].set(1e3)
+        v2 = v.at[:, :, 64:].set(-1e3)
+        out2 = attn_decode_pallas(q, k2, v2, lens, block_w=64)
+        np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                                   rtol=1e-6, atol=1e-6)
+
+
+class TestSWAPrefill:
+    @pytest.mark.parametrize("B,H,Hkv,S,dh,win,blk", [
+        (2, 4, 2, 256, 64, 0, 64),      # full causal, GQA
+        (1, 8, 2, 512, 32, 128, 128),   # sliding window
+        (2, 2, 1, 256, 64, 64, 64),     # MQA + window
+        (1, 4, 4, 256, 128, 0, 128),    # MHA
+    ])
+    def test_matches_naive(self, B, H, Hkv, S, dh, win, blk):
+        q = jnp.asarray(RNG.normal(size=(B, H, S, dh)).astype(np.float32))
+        k = jnp.asarray(RNG.normal(size=(B, Hkv, S, dh)).astype(np.float32))
+        v = jnp.asarray(RNG.normal(size=(B, Hkv, S, dh)).astype(np.float32))
+        got = swa_prefill_pallas(q, k, v, window=win, bq=blk, bk=blk)
+        want = _naive_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=True, window=win,
+        ).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=3e-4, atol=3e-4)
+
+    def test_window_band_skipping_is_exact(self):
+        """Blocks outside the (causal, window) band are skipped; perturbing
+        keys there must not change the output."""
+        B, H, Hkv, S, dh, win = 1, 2, 2, 512, 32, 64
+        q = jnp.asarray(RNG.normal(size=(B, H, S, dh)).astype(np.float32))
+        k = jnp.asarray(RNG.normal(size=(B, Hkv, S, dh)).astype(np.float32))
+        v = jnp.asarray(RNG.normal(size=(B, Hkv, S, dh)).astype(np.float32))
+        out1 = swa_prefill_pallas(q, k, v, window=win, bq=64, bk=64)
+        # corrupt keys/values far outside any query's window
+        k2 = k.at[:, :, :256].set(1e3)
+        v2 = v.at[:, :, :256].set(-1e3)
+        out2 = swa_prefill_pallas(q, k2, v2, window=win, bq=64, bk=64)
+        np.testing.assert_allclose(np.asarray(out1[:, :, 384:]),
+                                   np.asarray(out2[:, :, 384:]),
+                                   rtol=1e-6, atol=1e-6)

@@ -1,0 +1,191 @@
+"""Per-architecture smoke tests (assignment requirement).
+
+Each assigned architecture instantiates its REDUCED variant (2 layers,
+d_model <= 512, <= 4 experts) and runs one forward + one train step on CPU,
+asserting output shapes and the absence of NaNs. Serve-path equivalence
+(prefill + decode == full forward) is validated for every family, including
+the scan-over-layers paths used by the deep production configs.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, all_configs, get_config, reduced
+from repro.models import model as M
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+ARCHS = [a for a in ARCH_IDS if a != "paper_sim"]
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 16
+
+
+def _inputs(cfg):
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    kwargs = {}
+    if cfg.family == "audio":
+        kwargs["frames"] = jax.random.normal(
+            KEY, (B, cfg.n_frames, cfg.d_model), dtype=jnp.float32
+        )
+    if cfg.family == "vlm":
+        kwargs["patch_embeds"] = jax.random.normal(
+            KEY, (B, cfg.n_patches, 1024), dtype=jnp.float32
+        )
+    return toks, kwargs
+
+
+class TestConfigs:
+    def test_exact_assigned_dimensions(self):
+        """The full configs carry the exact public-literature dimensions."""
+        c = get_config("llama3_405b")
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads,
+                c.d_ff, c.vocab) == (126, 16384, 128, 8, 53248, 128256)
+        c = get_config("qwen3_moe_235b_a22b")
+        assert (c.n_layers, c.n_experts, c.top_k, c.n_kv_heads) == (94, 128, 8, 4)
+        c = get_config("recurrentgemma_2b")
+        assert c.block_pattern == ("rglru", "rglru", "swa") and c.window == 2048
+        c = get_config("rwkv6_1b6")
+        assert c.block_pattern == ("wkv6",) and c.family == "ssm"
+        c = get_config("whisper_small")
+        assert c.encoder_layers == 12 and c.n_frames == 1500
+
+    def test_param_counts_sane(self):
+        expect = {
+            "llama3_405b": (390e9, 420e9),
+            "qwen3_moe_235b_a22b": (225e9, 245e9),
+            "qwen3_8b": (7e9, 9e9),
+            "olmoe_1b_7b": (6e9, 8e9),
+            "rwkv6_1b6": (1.4e9, 2.0e9),
+            "minitron_4b": (3.5e9, 4.8e9),
+        }
+        for name, (lo, hi) in expect.items():
+            n = get_config(name).param_count()
+            assert lo < n < hi, f"{name}: {n/1e9:.2f}B"
+        # MoE active params
+        assert get_config("olmoe_1b_7b").active_param_count() < 2e9
+        assert get_config("qwen3_moe_235b_a22b").active_param_count() < 30e9
+
+    def test_reduced_is_small(self):
+        for name in ARCHS:
+            r = reduced(get_config(name))
+            assert r.n_layers <= 4 and r.d_model <= 512
+            if r.is_moe:
+                assert r.n_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+class TestSmoke:
+    def test_forward_and_train_step(self, arch):
+        cfg = reduced(get_config(arch))
+        params = M.init_params(KEY, cfg)
+        toks, kwargs = _inputs(cfg)
+
+        logits, aux = M.forward_train(params, cfg, toks, **kwargs)
+        S_total = S + (cfg.n_patches if cfg.family == "vlm" else 0)
+        assert logits.shape == (B, S_total, cfg.vocab)
+        assert not np.isnan(np.asarray(logits, np.float32)).any()
+
+        # one real optimizer step reduces nothing but must stay finite
+        opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=4)
+        opt = adamw_init(params)
+
+        def loss_fn(p):
+            return M.loss_fn(p, cfg, toks, toks, **{
+                ("patch_embeds" if k == "patch_embeds" else "frames"): v
+                for k, v in kwargs.items()
+            })
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        assert np.isfinite(float(loss))
+        new_params, _ = adamw_update(opt_cfg, grads, opt, params)
+        for leaf in jax.tree_util.tree_leaves(new_params):
+            assert not np.isnan(np.asarray(leaf, np.float32)).any()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_serve_equals_forward(arch):
+    """prefill + 3 decode steps must reproduce the full forward logits."""
+    cfg = reduced(get_config(arch))
+    params = M.init_params(KEY, cfg)
+    toks, kwargs = _inputs(cfg)
+    n_steps = 3
+    clen = S + n_steps + 1 + (cfg.n_patches if cfg.family == "vlm" else 0)
+    _, cache = M.prefill(params, cfg, toks, cache_len=clen, **kwargs)
+    seq = toks
+    for step in range(n_steps):
+        nxt = jax.random.randint(jax.random.PRNGKey(step + 7), (B, 1), 0,
+                                 cfg.vocab)
+        lg_dec, cache = M.decode_step(params, cfg, cache, nxt)
+        seq = jnp.concatenate([seq, nxt], 1)
+    lg_full, _ = M.forward_train(params, cfg, seq, **kwargs)
+    np.testing.assert_allclose(
+        np.asarray(lg_dec[:, 0]), np.asarray(lg_full[:, -1]),
+        rtol=5e-3, atol=5e-3,
+    )
+
+
+@pytest.mark.parametrize("arch,extra", [
+    ("llama3_405b", {"n_layers": 4, "scan_layers": True}),
+    ("qwen3_moe_235b_a22b", {"n_layers": 4, "scan_layers": True}),
+    ("recurrentgemma_2b", {"n_layers": 8, "scan_layers": True}),
+    ("rwkv6_1b6", {"n_layers": 4, "scan_layers": True}),
+])
+def test_scan_path_serve_equivalence(arch, extra):
+    """The scan-over-layers path (used by the deep production configs) must
+    agree with unrolled semantics on both train and serve."""
+    cfg = dataclasses.replace(reduced(get_config(arch)), **extra)
+    params = M.init_params(KEY, cfg)
+    toks, kwargs = _inputs(cfg)
+    clen = S + 3
+    _, cache = M.prefill(params, cfg, toks, cache_len=clen, **kwargs)
+    seq = toks
+    for step in range(2):
+        nxt = jax.random.randint(jax.random.PRNGKey(step), (B, 1), 0,
+                                 cfg.vocab)
+        lg_dec, cache = M.decode_step(params, cfg, cache, nxt)
+        seq = jnp.concatenate([seq, nxt], 1)
+    lg_full, _ = M.forward_train(params, cfg, seq, **kwargs)
+    np.testing.assert_allclose(
+        np.asarray(lg_dec[:, 0]), np.asarray(lg_full[:, -1]),
+        rtol=5e-3, atol=5e-3,
+    )
+
+
+def test_sliding_window_attention_masks_far_context():
+    """swa mixers must ignore tokens beyond the window."""
+    cfg = dataclasses.replace(
+        reduced(get_config("qwen3_8b")), block_pattern=("swa",), window=8,
+    )
+    params = M.init_params(KEY, cfg)
+    toks = jax.random.randint(KEY, (1, 32), 0, cfg.vocab)
+    logits, _ = M.forward_train(params, cfg, toks)
+    # perturbing a token > window away from the last position must not
+    # change the last position's logits
+    toks2 = toks.at[0, 5].set((toks[0, 5] + 1) % cfg.vocab)
+    logits2, _ = M.forward_train(params, cfg, toks2)
+    np.testing.assert_allclose(
+        np.asarray(logits[0, -1]), np.asarray(logits2[0, -1]),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_moe_router_balance_loss_positive():
+    cfg = reduced(get_config("olmoe_1b_7b"))
+    params = M.init_params(KEY, cfg)
+    toks = jax.random.randint(KEY, (2, 32), 0, cfg.vocab)
+    _, aux = M.forward_train(params, cfg, toks)
+    assert float(aux) > 0.0
+
+
+def test_long_context_decode_rwkv_constant_state():
+    """SSM decode state is O(1) in sequence length — the long_500k path."""
+    cfg = reduced(get_config("rwkv6_1b6"))
+    params = M.init_params(KEY, cfg)
+    toks = jax.random.randint(KEY, (1, 8), 0, cfg.vocab)
+    _, cache = M.prefill(params, cfg, toks, cache_len=16)
+    leaves = jax.tree_util.tree_leaves(cache)
+    total_bytes = sum(l.size * l.dtype.itemsize for l in leaves)
+    # state must not scale with a 500k context: bound is layers * (H*hd^2+d)
+    assert total_bytes < 5e6

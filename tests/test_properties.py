@@ -1,0 +1,110 @@
+"""Hypothesis property tests on system invariants.
+
+These complement the example-based tests with randomized structural
+checks: push-sum mass conservation on arbitrary strongly connected
+digraphs and drop schedules, SCC correctness vs brute-force reachability,
+KL dual-averaging == softmax, ring-alignment of the decode cache.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graphs import (
+    link_schedule, random_strongly_connected, strongly_connected_components,
+    is_strongly_connected,
+)
+from repro.core.pushsum import run_pushsum, mass_invariant
+from repro.core.social import kl_dual_averaging_update
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(3, 10),
+    drop=st.floats(0.0, 0.8),
+    B=st.integers(1, 6),
+    seed=st.integers(0, 2**16),
+)
+def test_pushsum_mass_conserved_any_graph(n, drop, B, seed):
+    rng = np.random.default_rng(seed)
+    adj = random_strongly_connected(n, 0.3, rng)
+    w = rng.normal(size=(n, 2)).astype(np.float32)
+    masks = link_schedule(adj, 60, drop, B, seed=seed)
+    final, _ = run_pushsum(w, adj, masks)
+    inv = np.asarray(mass_invariant(final, jnp.asarray(adj)))
+    np.testing.assert_allclose(inv, w.sum(0), rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 12), p=st.floats(0.0, 0.5), seed=st.integers(0, 2**16))
+def test_scc_matches_bruteforce_reachability(n, p, seed):
+    rng = np.random.default_rng(seed)
+    adj = rng.random((n, n)) < p
+    np.fill_diagonal(adj, False)
+    comps = strongly_connected_components(adj)
+    # brute force: transitive closure
+    reach = adj.copy()
+    for k in range(n):
+        reach = reach | (reach[:, k:k + 1] & reach[k:k + 1, :])
+    same = lambda i, j: (reach[i, j] and reach[j, i]) or i == j
+    # partition property: i,j in same comp <=> mutually reachable
+    comp_of = {}
+    for ci, comp in enumerate(comps):
+        for v in comp:
+            comp_of[v] = ci
+    for i in range(n):
+        for j in range(n):
+            assert (comp_of[i] == comp_of[j]) == same(i, j), (i, j)
+    # partition covers all nodes exactly once
+    assert sorted(v for c in comps for v in c) == list(range(n))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 6),
+    m=st.integers(2, 6),
+    seed=st.integers(0, 2**16),
+)
+def test_kl_dual_averaging_is_softmax(n, m, seed):
+    """The KL-proximal dual-averaging projection has the closed softmax
+    form (the identity Algorithm 3's belief update relies on)."""
+    rng = np.random.default_rng(seed)
+    z = jnp.asarray(rng.normal(size=(n, m)).astype(np.float32) * 5)
+    mass = jnp.asarray(rng.uniform(0.2, 3.0, size=(n,)).astype(np.float32))
+    mu = np.asarray(kl_dual_averaging_update(z, mass))
+    np.testing.assert_allclose(mu.sum(axis=1), 1.0, rtol=1e-5)
+    want = np.asarray(jax.nn.softmax(np.asarray(z) / np.asarray(mass)[:, None],
+                                     axis=-1))
+    np.testing.assert_allclose(mu, want, rtol=1e-5, atol=1e-6)
+    # argmax preserved: the belief ranks hypotheses by accumulated evidence
+    assert (mu.argmax(1) == np.asarray(z).argmax(1)).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    S=st.integers(4, 24),
+    wlen=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**16),
+)
+def test_decode_ring_cache_alignment(S, wlen, seed):
+    """Sliding-window prefill + decode must agree with the full forward for
+    ANY prompt length (the ring-roll alignment property)."""
+    import dataclasses
+    from repro.configs import get_config, reduced
+    from repro.models import model as M
+
+    cfg = dataclasses.replace(
+        reduced(get_config("qwen3_8b")), block_pattern=("swa",), window=wlen,
+        n_layers=2,
+    )
+    key = jax.random.PRNGKey(seed)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(key, (1, S), 0, cfg.vocab)
+    # capacity covers prompt + 1 decode token; the swa cache caps itself at
+    # the window and ring-rolls (the alignment property under test)
+    _, cache = M.prefill(params, cfg, toks, cache_len=S + 1)
+    nxt = jax.random.randint(jax.random.fold_in(key, 1), (1, 1), 0, cfg.vocab)
+    dec, _ = M.decode_step(params, cfg, cache, nxt)
+    full, _ = M.forward_train(params, cfg, jnp.concatenate([toks, nxt], 1))
+    np.testing.assert_allclose(np.asarray(dec[:, 0]), np.asarray(full[:, -1]),
+                               rtol=5e-3, atol=5e-3)
