@@ -3,13 +3,20 @@ numbered tables; each Theorem/Remark gets a benchmark).
 
 Prints ``name,us_per_call,derived`` CSV rows, plus a §Roofline summary from
 the latest dry-run results JSON if present (results/dryrun_single.json).
+
+With ``--json-dir DIR`` each module additionally writes a machine-readable
+``BENCH_<tag>.json`` (name -> {us_per_call, derived}) next to the CSV
+stream so the perf trajectory is tracked across PRs:
+
+    python -m benchmarks.run --json-dir results          # all modules
+    python -m benchmarks.run pushsum_sweep               # one module, CSV
 """
+import argparse
 import json
 import os
-import sys
 
 from . import consensus_rate, social_learning, byzantine_bench, gamma_sweep
-from . import aggregators_bench
+from . import aggregators_bench, pushsum_sweep
 
 MODULES = [
     ("thm1", consensus_rate),
@@ -17,21 +24,35 @@ MODULES = [
     ("thm3", byzantine_bench),
     ("remark3", gamma_sweep),
     ("aggregators", aggregators_bench),
+    ("pushsum_sweep", pushsum_sweep),
 ]
 
 
 def main() -> None:
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    ap = argparse.ArgumentParser()
+    ap.add_argument("only", nargs="?", default=None,
+                    help="run a single module tag (thm1, ..., pushsum_sweep)")
+    ap.add_argument("--json-dir", default=None,
+                    help="also write BENCH_<tag>.json per module here")
+    args = ap.parse_args()
+
     print("name,us_per_call,derived")
     for tag, mod in MODULES:
-        if only and tag != only:
+        if args.only and tag != args.only:
             continue
-        for name, us, derived in mod.rows():
+        rows = list(mod.rows())
+        for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived}", flush=True)
+        if args.json_dir:
+            os.makedirs(args.json_dir, exist_ok=True)
+            path = os.path.join(args.json_dir, f"BENCH_{tag}.json")
+            with open(path, "w") as f:
+                json.dump({name: {"us_per_call": us, "derived": derived}
+                           for name, us, derived in rows}, f, indent=1)
 
     path = os.path.join(os.path.dirname(__file__), "..",
                         "results", "dryrun_single.json")
-    if os.path.exists(path) and not only:
+    if os.path.exists(path) and not args.only:
         with open(path) as f:
             recs = json.load(f)
         ok = [r for r in recs if r.get("ok")]

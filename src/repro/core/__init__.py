@@ -14,26 +14,50 @@ from .graphs import (
     link_schedule,
     check_assumption3,
     is_strongly_connected,
+    random_strongly_connected,
+    EdgeList,
+    edge_list,
+    stack_edge_lists,
+    edge_masks,
 )
 from .signals import SignalModel, make_confused_model, check_global_observability
-from .pushsum import PushSumState, pushsum_step, run_pushsum, mass_invariant, ratios
+from .pushsum import (
+    PushSumState,
+    pushsum_step,
+    run_pushsum,
+    mass_invariant,
+    ratios,
+    SparsePushSumState,
+    sparse_pushsum_step,
+    run_pushsum_sparse,
+    sparse_mass_invariant,
+    sparse_ratios,
+)
 from .hps import HPSConfig, hps_fusion, hps_step, run_hps, theorem1_bound
 from .social import run_social_learning, kl_dual_averaging_update
 from .byzantine import (
     ByzantineConfig,
+    make_byzantine_scan,
     run_byzantine_learning,
     trimmed_neighbor_mean,
     healthy_networks,
     decide,
 )
+from .sweeps import PushSumSweepResult, run_pushsum_sweep, run_byzantine_sweep
 from . import attacks
 
 __all__ = [
     "HierTopology", "make_hierarchy", "link_schedule", "check_assumption3",
-    "is_strongly_connected", "SignalModel", "make_confused_model",
+    "is_strongly_connected", "random_strongly_connected", "EdgeList",
+    "edge_list", "stack_edge_lists",
+    "edge_masks", "SignalModel", "make_confused_model",
     "check_global_observability", "PushSumState", "pushsum_step", "run_pushsum",
-    "mass_invariant", "ratios", "HPSConfig", "hps_fusion", "hps_step", "run_hps",
+    "mass_invariant", "ratios", "SparsePushSumState", "sparse_pushsum_step",
+    "run_pushsum_sparse", "sparse_mass_invariant", "sparse_ratios",
+    "HPSConfig", "hps_fusion", "hps_step", "run_hps",
     "theorem1_bound", "run_social_learning", "kl_dual_averaging_update",
-    "ByzantineConfig", "run_byzantine_learning", "trimmed_neighbor_mean",
-    "healthy_networks", "decide", "attacks",
+    "ByzantineConfig", "make_byzantine_scan", "run_byzantine_learning",
+    "trimmed_neighbor_mean", "healthy_networks", "decide",
+    "PushSumSweepResult", "run_pushsum_sweep", "run_byzantine_sweep",
+    "attacks",
 ]

@@ -42,6 +42,7 @@ __all__ = [
     "ByzantineConfig",
     "ByzantineResult",
     "trimmed_neighbor_mean",
+    "make_byzantine_scan",
     "run_byzantine_learning",
     "decide",
     "healthy_networks",
@@ -140,13 +141,20 @@ def trimmed_neighbor_mean(
     return trimmed_sum, kept
 
 
-def run_byzantine_learning(
+def make_byzantine_scan(
     model: SignalModel,
     cfg: ByzantineConfig,
     T: int,
-    seed: int = 0,
-) -> ByzantineResult:
-    """Run Algorithm 2 for T iterations."""
+):
+    """Build Algorithm 2's scan for a fixed (model, cfg, T).
+
+    All host-side analysis (healthy-network detection, representative-set
+    index arrays) runs once here; the returned ``run(base_key) ->
+    ByzantineResult`` closure is a pure jax function of the PRNG key, so
+    scenario sweeps can ``jax.vmap`` it over a batch of seeds (see
+    :func:`repro.core.sweeps.run_byzantine_sweep`) and compile one scan for
+    the whole batch.
+    """
     topo = cfg.topo
     N, m = topo.N, model.m
     byz_mask_np = cfg.byz_mask()
@@ -181,88 +189,99 @@ def run_byzantine_learning(
 
     log_tables = model.log_tables().astype(jnp.float32)
     truth_probs = model.tables[:, model.truth, :].astype(jnp.float32)
-    base_key = jax.random.PRNGKey(seed)
+    def run(base_key: jnp.ndarray) -> ByzantineResult:
+        def sample_llr(t):
+            """One private signal per agent -> per-pair LLR increment (N, m, m)."""
+            key = jax.random.fold_in(base_key, t)
+            u = jax.random.uniform(key, (N,))
+            cdf = jnp.cumsum(truth_probs, axis=-1)
+            sig = (u[:, None] > cdf).sum(axis=-1)
+            ll = jnp.take_along_axis(
+                log_tables, sig[:, None, None].astype(jnp.int32), axis=2
+            )[:, :, 0]                                   # (N, m)
+            return ll[:, :, None] - ll[:, None, :]       # (N, m, m) antisymmetric
 
-    def sample_llr(t):
-        """One private signal per agent -> per-pair LLR increment (N, m, m)."""
-        key = jax.random.fold_in(base_key, t)
-        u = jax.random.uniform(key, (N,))
-        cdf = jnp.cumsum(truth_probs, axis=-1)
-        sig = (u[:, None] > cdf).sum(axis=-1)
-        ll = jnp.take_along_axis(
-            log_tables, sig[:, None, None].astype(jnp.int32), axis=2
-        )[:, :, 0]                                   # (N, m)
-        return ll[:, :, None] - ll[:, None, :]       # (N, m, m) antisymmetric
-
-    def select_reps(key):
-        """Random representative selection for a fusion round -> (n_reps,) idx."""
-        if use_all_nets:
-            ks = jax.random.split(key, topo.M)
+        def select_reps(key):
+            """Random representative selection for a fusion round -> (n_reps,) idx."""
+            if use_all_nets:
+                ks = jax.random.split(key, topo.M)
+                picks = [
+                    offsets[i] + jax.random.randint(ks[i], (), 0, sizes[i])
+                    for i in range(topo.M)
+                ]
+                return jnp.stack(picks)
+            # one rep from each network in C + (2F+1-|C|) uniform from outside C
+            ks = jax.random.split(key, len(C_arr) + 1)
             picks = [
-                offsets[i] + jax.random.randint(ks[i], (), 0, sizes[i])
-                for i in range(topo.M)
+                offsets[int(ci)] + jax.random.randint(ks[k], (), 0, sizes[int(ci)])
+                for k, ci in enumerate(C_arr)
             ]
-            return jnp.stack(picks)
-        # one rep from each network in C + (2F+1-|C|) uniform from outside C
-        ks = jax.random.split(key, len(C_arr) + 1)
-        picks = [
-            offsets[int(ci)] + jax.random.randint(ks[k], (), 0, sizes[int(ci)])
-            for k, ci in enumerate(C_arr)
-        ]
-        extra = jax.random.choice(
-            ks[-1], jnp.asarray(non_C_agents),
-            shape=(n_reps - len(C_arr),), replace=False,
+            extra = jax.random.choice(
+                ks[-1], jnp.asarray(non_C_agents),
+                shape=(n_reps - len(C_arr),), replace=False,
+            )
+            return jnp.concatenate([jnp.stack(picks), extra])
+
+        def body(carry, t):
+            r, cum_llr = carry
+            key = jax.random.fold_in(base_key, t * 2 + 1)
+
+            # ---- innovation accumulator (cumulative LLR of all signals so far)
+            cum_llr = cum_llr + sample_llr(t)
+
+            # ---- intra-C gossip with trimming (lines 6-9)
+            honest_msgs = jnp.broadcast_to(r[:, None], (N, N, m, m))
+            byz_msgs = cfg.attack.messages(key, t, r)
+            msgs = jnp.where(byz_mask[:, None, None, None], byz_msgs, honest_msgs)
+            tsum, kept = trimmed_neighbor_mean(msgs, adj_j, cfg.F)
+            r_gossip = (tsum + r) / (kept[:, None, None] + 1.0) + cum_llr
+            r_new = jnp.where(active_j[:, None, None], r_gossip, r)
+
+            # ---- PS fusion every Γ (lines 10-22)
+            def fuse(r_in):
+                kk = jax.random.fold_in(base_key, t * 2 + 2)
+                reps = select_reps(kk)                            # (n_reps,)
+                rep_vals = r_in[reps]                             # (n_reps, m, m)
+                byz_replies = cfg.attack.ps_reply(kk, t, r_in)    # (N, m, m)
+                rep_vals = jnp.where(
+                    byz_mask[reps][:, None, None], byz_replies[reps], rep_vals
+                )
+                s = jnp.sort(rep_vals, axis=0)
+                keep = (jnp.arange(n_reps) >= cfg.F) & (
+                    jnp.arange(n_reps) < n_reps - cfg.F
+                )
+                w = (s * keep[:, None, None]).sum(0) / keep.sum()
+                # queried reps outside C adopt w_tilde (line 20-22)
+                adopt = jnp.zeros((N,), bool).at[reps].set(True) & (~in_C_j)
+                return jnp.where(adopt[:, None, None], w[None], r_in)
+
+            is_fusion = (t + 1) % cfg.gamma_period == 0
+            r_new = jax.lax.cond(is_fusion, fuse, lambda x: x, r_new)
+
+            # Byzantine agents' own state is meaningless; keep it at 0.
+            r_new = jnp.where(byz_mask[:, None, None], 0.0, r_new)
+
+            dec = decide(r_new)
+            return (r_new, cum_llr), (r_new, dec)
+
+        r0 = jnp.zeros((N, m, m), jnp.float32)
+        cum0 = jnp.zeros((N, m, m), jnp.float32)
+        (_, _), (r_traj, decisions) = jax.lax.scan(
+            body, (r0, cum0), jnp.arange(T, dtype=jnp.uint32)
         )
-        return jnp.concatenate([jnp.stack(picks), extra])
+        return ByzantineResult(r=r_traj, decisions=decisions)
 
-    def body(carry, t):
-        r, cum_llr = carry
-        key = jax.random.fold_in(base_key, t * 2 + 1)
+    return run
 
-        # ---- innovation accumulator (cumulative LLR of all signals so far)
-        cum_llr = cum_llr + sample_llr(t)
 
-        # ---- intra-C gossip with trimming (lines 6-9)
-        honest_msgs = jnp.broadcast_to(r[:, None], (N, N, m, m))
-        byz_msgs = cfg.attack.messages(key, t, r)
-        msgs = jnp.where(byz_mask[:, None, None, None], byz_msgs, honest_msgs)
-        tsum, kept = trimmed_neighbor_mean(msgs, adj_j, cfg.F)
-        r_gossip = (tsum + r) / (kept[:, None, None] + 1.0) + cum_llr
-        r_new = jnp.where(active_j[:, None, None], r_gossip, r)
-
-        # ---- PS fusion every Γ (lines 10-22)
-        def fuse(r_in):
-            kk = jax.random.fold_in(base_key, t * 2 + 2)
-            reps = select_reps(kk)                            # (n_reps,)
-            rep_vals = r_in[reps]                             # (n_reps, m, m)
-            byz_replies = cfg.attack.ps_reply(kk, t, r_in)    # (N, m, m)
-            rep_vals = jnp.where(
-                byz_mask[reps][:, None, None], byz_replies[reps], rep_vals
-            )
-            s = jnp.sort(rep_vals, axis=0)
-            keep = (jnp.arange(n_reps) >= cfg.F) & (
-                jnp.arange(n_reps) < n_reps - cfg.F
-            )
-            w = (s * keep[:, None, None]).sum(0) / keep.sum()
-            # queried reps outside C adopt w_tilde (line 20-22)
-            adopt = jnp.zeros((N,), bool).at[reps].set(True) & (~in_C_j)
-            return jnp.where(adopt[:, None, None], w[None], r_in)
-
-        is_fusion = (t + 1) % cfg.gamma_period == 0
-        r_new = jax.lax.cond(is_fusion, fuse, lambda x: x, r_new)
-
-        # Byzantine agents' own state is meaningless; keep it at 0.
-        r_new = jnp.where(byz_mask[:, None, None], 0.0, r_new)
-
-        dec = decide(r_new)
-        return (r_new, cum_llr), (r_new, dec)
-
-    r0 = jnp.zeros((N, m, m), jnp.float32)
-    cum0 = jnp.zeros((N, m, m), jnp.float32)
-    (_, _), (r_traj, decisions) = jax.lax.scan(
-        body, (r0, cum0), jnp.arange(T, dtype=jnp.uint32)
-    )
-    return ByzantineResult(r=r_traj, decisions=decisions)
+def run_byzantine_learning(
+    model: SignalModel,
+    cfg: ByzantineConfig,
+    T: int,
+    seed: int = 0,
+) -> ByzantineResult:
+    """Run Algorithm 2 for T iterations (single scenario)."""
+    return make_byzantine_scan(model, cfg, T)(jax.random.PRNGKey(seed))
 
 
 def run_byzantine_learning_ovr(

@@ -36,6 +36,10 @@ __all__ = [
     "HierTopology",
     "make_hierarchy",
     "link_schedule",
+    "EdgeList",
+    "edge_list",
+    "stack_edge_lists",
+    "edge_masks",
 ]
 
 
@@ -366,6 +370,113 @@ def make_hierarchy(
     return HierTopology(
         adj=adj, sizes=tuple(int(s) for s in sizes), offsets=tuple(offsets), reps=reps
     )
+
+
+# ---------------------------------------------------------------------------
+# Sparse edge-list representation
+# ---------------------------------------------------------------------------
+#
+# The fast robust push-sum only ever needs per-*directed-link* state (the
+# cumulative ``rho`` a receiver has heard on each in-link), so on sparse
+# topologies the O(N^2) adjacency/mask tensors are pure waste. An
+# :class:`EdgeList` is the host-side (numpy) sparse view consumed by
+# :mod:`repro.core.pushsum`'s edge-list core: edge e is the directed link
+# ``src[e] -> dst[e]``; per-edge state arrays are (E, ...) and node updates
+# use ``jax.ops.segment_sum`` over ``dst``.
+
+@dataclasses.dataclass(frozen=True)
+class EdgeList:
+    """Sparse directed graph: edge ``e`` is ``src[e] -> dst[e]``.
+
+    ``valid`` marks live edges — always all-True for a single graph, but
+    batched/padded edge lists (see :func:`stack_edge_lists`) pad to a common
+    E with ``valid=False`` dummy edges so topology draws with different edge
+    counts can ride one ``jax.vmap`` axis.
+    """
+
+    src: np.ndarray    # (E,) int32 sender of each edge
+    dst: np.ndarray    # (E,) int32 receiver of each edge
+    n: int             # number of nodes
+    valid: np.ndarray  # (E,) bool — False on padding edges
+
+    @property
+    def E(self) -> int:
+        """Padded edge count — last axis, correct for single and batched."""
+        return int(self.src.shape[-1])
+
+    @property
+    def is_batched(self) -> bool:
+        return self.src.ndim == 2
+
+    def _require_single(self, what: str) -> None:
+        if self.is_batched:
+            raise ValueError(
+                f"{what} is per-graph; this EdgeList batches "
+                f"{self.src.shape[0]} topology draws — index a row first"
+            )
+
+    def out_degree(self) -> np.ndarray:
+        """(N,) out-degree over valid edges (the ``d_j`` of ``d_j + 1``)."""
+        self._require_single("out_degree()")
+        deg = np.zeros(self.n, dtype=np.int32)
+        np.add.at(deg, self.src[self.valid], 1)
+        return deg
+
+    def to_dense(self) -> np.ndarray:
+        self._require_single("to_dense()")
+        adj = np.zeros((self.n, self.n), dtype=bool)
+        adj[self.src[self.valid], self.dst[self.valid]] = True
+        return adj
+
+
+def edge_list(adj: np.ndarray) -> EdgeList:
+    """Dense (N, N) bool adjacency -> sparse :class:`EdgeList`.
+
+    Edges are emitted in C order (row-major: sorted by src, then dst), so
+    ``edge_masks(masks, el)[t, e] == masks[t, el.src[e], el.dst[e]]``.
+    """
+    src, dst = np.nonzero(np.asarray(adj, dtype=bool))
+    return EdgeList(
+        src=src.astype(np.int32),
+        dst=dst.astype(np.int32),
+        n=int(adj.shape[0]),
+        valid=np.ones(src.shape[0], dtype=bool),
+    )
+
+
+def stack_edge_lists(adjs: Sequence[np.ndarray]) -> EdgeList:
+    """Batch G topology draws into one padded EdgeList for vmapped sweeps.
+
+    Returns an EdgeList whose fields have a leading graph axis: src/dst/valid
+    are (G, E_max); ``n`` must agree across draws. Padding edges point 0 -> 0
+    with ``valid=False`` and are excluded from out-degrees and delivery by
+    the sparse core (their mask is forced False).
+    """
+    els = [edge_list(a) for a in adjs]
+    n = els[0].n
+    if any(el.n != n for el in els):
+        raise ValueError("all topology draws must have the same node count")
+    E = max(el.E for el in els)
+    src = np.zeros((len(els), E), dtype=np.int32)
+    dst = np.zeros((len(els), E), dtype=np.int32)
+    valid = np.zeros((len(els), E), dtype=bool)
+    for g, el in enumerate(els):
+        src[g, : el.E] = el.src
+        dst[g, : el.E] = el.dst
+        valid[g, : el.E] = True
+    return EdgeList(src=src, dst=dst, n=n, valid=valid)
+
+
+def edge_masks(masks: np.ndarray, el: EdgeList) -> np.ndarray:
+    """Project a dense (T, N, N) link schedule onto the edge list -> (T, E).
+
+    Used by the sparse<->dense equivalence tests; production sweeps draw
+    (T, E) Bernoulli masks directly inside the scan and never materialize
+    the dense schedule.
+    """
+    el._require_single("edge_masks()")
+    masks = np.asarray(masks)
+    return masks[:, el.src, el.dst] & el.valid[None, :]
 
 
 # ---------------------------------------------------------------------------

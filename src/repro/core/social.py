@@ -9,6 +9,13 @@ update with KL-divergence proximal, whose closed form is
 
 Per Algorithm 3 ordering: consensus (lines 4-12) -> innovation (13-15) ->
 belief (16) -> PS fusion every Gamma (17-22).
+
+The consensus state is the *sparse edge-list* push-sum core
+(:mod:`repro.core.pushsum`): ``rho`` is (E, m) over the topology's directed
+edges and each round's (E,) operational mask is drawn inside the scan —
+memory is O(N m + E m) and no (T, N, N) schedule or (N, N, m) relay tensor
+is ever materialized, so hierarchical systems with thousands of agents run
+on sparse intra-network graphs at full scan speed.
 """
 from __future__ import annotations
 
@@ -19,18 +26,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .graphs import link_schedule
+from .graphs import edge_list
 from .hps import HPSConfig, hps_fusion
-from .pushsum import PushSumState, init_state, pushsum_step
+from .pushsum import (
+    SparsePushSumState,
+    init_sparse_state,
+    sparse_pushsum_step,
+    step_edge_mask,
+)
 from .signals import SignalModel
 
 __all__ = ["SocialLearningResult", "kl_dual_averaging_update", "run_social_learning"]
 
 
 class SocialLearningResult(NamedTuple):
-    beliefs: jnp.ndarray        # (T, N, m) belief trajectories
-    final_state: PushSumState   # consensus state at T
-    log_ratio: jnp.ndarray      # (T, N, m) log mu(theta)/mu(theta*) — Thm 2 LHS
+    beliefs: jnp.ndarray             # (T, N, m) belief trajectories
+    final_state: SparsePushSumState  # edge-list consensus state at T
+    log_ratio: jnp.ndarray           # (T, N, m) log mu(theta)/mu(theta*) — Thm 2 LHS
 
 
 def kl_dual_averaging_update(z: jnp.ndarray, m: jnp.ndarray) -> jnp.ndarray:
@@ -49,23 +61,32 @@ def run_social_learning(
     seed: int = 0,
     signal_seed: int = 100,
 ) -> SocialLearningResult:
-    """Run Algorithm 3 for T iterations (jax.lax.scan over time)."""
+    """Run Algorithm 3 for T iterations (jax.lax.scan over time).
+
+    ``seed`` drives the per-round link masks (drawn edge-wise inside the
+    scan with :func:`pushsum.step_edge_mask` — same drop_prob/B semantics as
+    :func:`graphs.link_schedule`); ``signal_seed`` drives private signals.
+    """
     topo = cfg.topo
-    adj = cfg.adj()
+    el = edge_list(topo.adj)
+    src = jnp.asarray(el.src)
+    dst = jnp.asarray(el.dst)
+    valid = jnp.asarray(el.valid)
     rep_mask = cfg.rep_mask()
-    masks = jnp.asarray(link_schedule(topo.adj, T, cfg.drop_prob, cfg.B, seed=seed))
+    mask_key = jax.random.PRNGKey(seed)
     fuse = jnp.arange(1, T + 1) % cfg.gamma_period == 0
 
     # z accumulates per-hypothesis log-likelihood sums; init 0 (Alg. 3 line 1)
-    state0 = init_state(jnp.zeros((topo.N, model.m), jnp.float32))
+    state0 = init_sparse_state(jnp.zeros((topo.N, model.m), jnp.float32), el.E)
     log_tables = model.log_tables().astype(jnp.float32)  # (N, m, S)
     truth_probs = model.tables[:, model.truth, :].astype(jnp.float32)  # (N, S)
     base_key = jax.random.PRNGKey(signal_seed)
 
     def body(state, xs):
-        mask, do_fusion, t = xs
+        do_fusion, t = xs
         # --- consensus (lines 4-12) ---
-        st = pushsum_step(state, mask, adj)
+        mask = step_edge_mask(mask_key, t, el.E, cfg.drop_prob, cfg.B)
+        st = sparse_pushsum_step(state, mask, src, dst, valid)
         # --- innovation (lines 13-15): one fresh private signal per agent ---
         key = jax.random.fold_in(base_key, t)
         keys = jax.random.split(key, topo.N)
@@ -86,7 +107,7 @@ def run_social_learning(
         return new, mu
 
     final, mus = jax.lax.scan(
-        body, state0, (masks, fuse, jnp.arange(T, dtype=jnp.uint32))
+        body, state0, (fuse, jnp.arange(T, dtype=jnp.uint32))
     )
     log_mu = jnp.log(jnp.maximum(mus, 1e-38))
     log_ratio = log_mu - log_mu[:, :, model.truth : model.truth + 1]

@@ -1,0 +1,160 @@
+"""Vmapped scenario sweeps — "as many scenarios as you can imagine".
+
+The sparse edge-list push-sum core (:mod:`repro.core.pushsum`) keeps per-
+scenario state at O(E d), so a whole grid of scenarios — seeds x drop
+probabilities x topology draws — fits comfortably in one ``jax.vmap`` over a
+single compiled ``lax.scan``. One XLA program executes every scenario in
+lockstep; per-scenario consensus error is reduced inside the scan so the
+sweep's memory is O(K (N d + E d)) regardless of T.
+
+Two engines:
+
+* :func:`run_pushsum_sweep` — Theorem 1 dynamics (Alg. 1 consensus) over
+  seed x drop_prob x topology-draw grids.
+* :func:`run_byzantine_sweep` — Algorithm 2 learning over seed batches per
+  attack. Attack *type* changes the traced program (attacks are function-
+  valued), so types iterate host-side while seeds ride the vmap axis.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .attacks import Attack
+from .byzantine import ByzantineConfig, ByzantineResult, make_byzantine_scan
+from .graphs import EdgeList
+from .pushsum import (
+    init_sparse_state,
+    sparse_mass_invariant,
+    sparse_pushsum_step,
+    sparse_ratios,
+    step_edge_mask,
+)
+from .signals import SignalModel
+
+__all__ = [
+    "PushSumSweepResult",
+    "run_pushsum_sweep",
+    "run_byzantine_sweep",
+]
+
+
+class PushSumSweepResult(NamedTuple):
+    err: jnp.ndarray          # (K, T) max-agent consensus error per round
+    final_ratio: jnp.ndarray  # (K, N, d) z/m estimates at T
+    mass_gap: jnp.ndarray     # (K, d) mass-invariant violation at T
+    drop_prob: jnp.ndarray    # (K,) scenario coordinates
+    seed: jnp.ndarray         # (K,)
+    graph: jnp.ndarray        # (K,) topology-draw index
+
+    @property
+    def K(self) -> int:
+        return int(self.err.shape[0])
+
+
+def _scenario_grid(n_graphs: int, drop_probs, seeds):
+    """Flatten the (graph x drop x seed) grid into K-long coordinate arrays."""
+    drop_probs = np.atleast_1d(np.asarray(drop_probs, np.float32))
+    seeds = np.atleast_1d(np.asarray(seeds, np.uint32))
+    g, d, s = np.meshgrid(
+        np.arange(n_graphs, dtype=np.int32), drop_probs, seeds, indexing="ij"
+    )
+    return g.ravel(), d.ravel(), s.ravel()
+
+
+@functools.partial(jax.jit, static_argnames=("T", "B"))
+def _sweep_compiled(w, src_b, dst_b, valid_b, drop_b, seed_b, *, T, B):
+    """Module-level jit so repeated sweeps with the same shapes/statics hit
+    the compilation cache instead of retracing a fresh closure per call."""
+    E = src_b.shape[1]
+    target = w.mean(axis=0)          # (d,) true average, shared
+    w_sum = w.sum(axis=0)
+
+    def single(src, dst, valid, drop, seed):
+        key = jax.random.PRNGKey(seed)
+        state0 = init_sparse_state(w, E)
+
+        def body(state, t):
+            mask = step_edge_mask(key, t, E, drop, B)
+            new = sparse_pushsum_step(state, mask, src, dst, valid)
+            err = jnp.abs(sparse_ratios(new) - target).max()
+            return new, err
+
+        final, errs = jax.lax.scan(
+            body, state0, jnp.arange(T, dtype=jnp.uint32)
+        )
+        gap = sparse_mass_invariant(final, src, valid) - w_sum
+        return errs, sparse_ratios(final), gap
+
+    return jax.vmap(single)(src_b, dst_b, valid_b, drop_b, seed_b)
+
+
+def run_pushsum_sweep(
+    w: jnp.ndarray,            # (N, d) initial values, shared by scenarios
+    el: EdgeList,              # single graph or stacked draws (leading G axis)
+    T: int,
+    *,
+    drop_probs: Sequence[float] | float = 0.0,
+    seeds: Sequence[int] | int = 0,
+    B: int = 4,
+) -> PushSumSweepResult:
+    """Run the full scenario grid in ONE jitted, vmapped scan.
+
+    Scenario axes: every topology draw in ``el`` (see
+    :func:`graphs.stack_edge_lists`) x every drop probability x every seed —
+    K = G * |drop_probs| * |seeds| scenarios total. Per-round (E,) link
+    masks are drawn inside the scan; nothing of size (T, N, N) or (N, N)
+    ever exists. Compilation is cached at module level: repeated sweeps
+    with the same array shapes and (T, B) reuse the executable.
+    """
+    w = jnp.asarray(w)
+    src = np.atleast_2d(el.src)      # (G, E)
+    dst = np.atleast_2d(el.dst)
+    valid = np.atleast_2d(el.valid)
+    G, E = src.shape
+    gi, dp, sd = _scenario_grid(G, drop_probs, seeds)
+
+    drop_b = jnp.asarray(dp)
+    seed_b = jnp.asarray(sd)
+    errs, finals, gaps = _sweep_compiled(
+        w, jnp.asarray(src[gi]), jnp.asarray(dst[gi]),
+        jnp.asarray(valid[gi]), drop_b, seed_b, T=T, B=B,
+    )
+    return PushSumSweepResult(
+        err=errs, final_ratio=finals, mass_gap=gaps,
+        drop_prob=drop_b, seed=seed_b, graph=jnp.asarray(gi),
+    )
+
+
+def run_byzantine_sweep(
+    model: SignalModel,
+    cfg: ByzantineConfig,
+    T: int,
+    seeds: Sequence[int],
+    attacks: Sequence[Attack] | None = None,
+) -> dict[str, ByzantineResult]:
+    """Algorithm 2 over a seed batch per attack type.
+
+    For each attack (default: just ``cfg.attack``) the whole seed batch runs
+    as one jitted ``vmap`` of the scan built by
+    :func:`byzantine.make_byzantine_scan` — results carry a leading seed
+    axis: ``r`` is (S, T, N, m, m), ``decisions`` (S, T, N). Attack types
+    swap the traced message function, so they iterate host-side. Unlike
+    :func:`run_pushsum_sweep`, each call retraces (the scan closes over
+    per-config host analysis); amortize by batching all seeds of interest
+    into one call rather than calling per seed.
+    """
+    import dataclasses
+
+    seeds_j = jnp.asarray(np.asarray(seeds, np.uint32))
+    keys = jax.vmap(jax.random.PRNGKey)(seeds_j)
+    out: dict[str, ByzantineResult] = {}
+    for atk in attacks if attacks is not None else [cfg.attack]:
+        c = dataclasses.replace(cfg, attack=atk)
+        run = make_byzantine_scan(model, c, T)
+        out[atk.name] = jax.jit(jax.vmap(run))(keys)
+    return out

@@ -21,6 +21,14 @@ Aggregators
                    drops: robust push-sum rounds + hierarchical fusion; the
                    returned estimate is z/m (consensus error decays per
                    Theorem 1 in the number of rounds).
+``pushsum_sparse`` — Algorithm 1 on an *arbitrary* random digraph over all
+                   workers via the edge-list core of
+                   :mod:`repro.core.pushsum`: one all-gather, then every
+                   worker integrates the same sparse consensus and keeps its
+                   own row. Wire = one all-gather (vs one ppermute/round for
+                   ``pushsum``); use it to prototype non-ring gossip
+                   topologies (denser graphs -> faster Theorem 1 contraction)
+                   before committing them to collectives.
 ``trimmed_mean`` — Algorithm 2's extreme-value filter, coordinate-wise over
                    the worker axis (tolerates F Byzantine workers).
 ``hierarchical_trim`` — intra-pod trimmed mean + cross-pod trimmed fusion of
@@ -56,6 +64,10 @@ class AggregatorConfig:
     gamma_period: int = 4           # PS fusion every Γ rounds
     drop_prob: float = 0.1          # simulated packet-drop probability
     B: int = 2                      # every link delivers ≥ once per B rounds
+    # pushsum_sparse knobs: worker gossip digraph = random Hamiltonian cycle
+    # + Bernoulli extra edges (repro.core.graphs.random_strongly_connected)
+    graph_extra_edge_prob: float = 0.25
+    graph_seed: int = 0
     # byzantine knobs
     F: int = 1                      # trim F from each extreme
     use_kernel: bool = False        # Pallas trimmed-mean (TPU runtime)
@@ -67,7 +79,8 @@ class AggregatorConfig:
 
 
 def _axis_size(name) -> int:
-    return jax.lax.axis_size(name)
+    from repro.launch.compat import axis_size
+    return axis_size(name)
 
 
 def _worker_index(data_axis: str, pod_axis: str | None) -> jnp.ndarray:
@@ -173,6 +186,61 @@ def agg_pushsum(grads: Params, cfg: AggregatorConfig, data_axis, pod_axis, key):
         (z / jnp.maximum(m, 1e-12)).astype(l.dtype) for z, l in zip(zs, leaves)
     ]
     return jax.tree_util.tree_unflatten(treedef, est)
+
+
+# ---------------------------------------------------------------------------
+# edge-list push-sum on an arbitrary worker digraph (Algorithm 1, sparse core)
+# ---------------------------------------------------------------------------
+
+def agg_pushsum_sparse(
+    grads: Params, cfg: AggregatorConfig, data_axis, pod_axis, key
+):
+    """Robust push-sum over a random strongly connected digraph of ALL
+    workers (pods flattened), using the O(E d) edge-list core.
+
+    Each worker all-gathers the per-worker gradients once, then runs the
+    identical ``gossip_rounds`` of :func:`repro.core.pushsum.
+    sparse_pushsum_step` (same key -> same masks on every worker) and keeps
+    its own row of z/m. Deterministically identical inputs mean workers
+    agree on the whole consensus state, so the per-worker estimates are the
+    true Algorithm 1 iterates on that topology — the training-time testbed
+    for non-ring gossip graphs.
+    """
+    import numpy as np
+
+    from repro.core.graphs import edge_list, random_strongly_connected
+    from repro.core.pushsum import (
+        init_sparse_state, sparse_pushsum_step, sparse_ratios, step_edge_mask,
+    )
+
+    axes = (pod_axis, data_axis) if pod_axis else (data_axis,)
+    W = 1
+    for a in axes:
+        W *= _axis_size(a)
+    adj = random_strongly_connected(
+        W, cfg.graph_extra_edge_prob, np.random.default_rng(cfg.graph_seed)
+    )
+    el = edge_list(adj)
+    src = jnp.asarray(el.src)
+    dst = jnp.asarray(el.dst)
+    valid = jnp.asarray(el.valid)
+    widx = _worker_index(data_axis, pod_axis)
+
+    def gossip_leaf(g):
+        gf = g.astype(jnp.float32).reshape(-1)
+        allv = jax.lax.all_gather(gf, axes).reshape(W, -1)   # (W, D)
+
+        def round_fn(t, state):
+            mask = step_edge_mask(key, t, el.E, cfg.drop_prob, cfg.B)
+            return sparse_pushsum_step(state, mask, src, dst, valid)
+
+        final = jax.lax.fori_loop(
+            0, cfg.gossip_rounds, round_fn, init_sparse_state(allv, el.E)
+        )
+        est = sparse_ratios(final)                           # (W, D)
+        return est[widx].reshape(g.shape).astype(g.dtype)
+
+    return jax.tree_util.tree_map(gossip_leaf, grads)
 
 
 # ---------------------------------------------------------------------------
@@ -286,6 +354,7 @@ def agg_trimmed_sharded(
 AGGREGATORS: dict[str, Callable] = {
     "mean": agg_mean,
     "pushsum": agg_pushsum,
+    "pushsum_sparse": agg_pushsum_sparse,
     "trimmed_mean": agg_trimmed,
     "trimmed_mean_sharded": agg_trimmed_sharded,
     "hierarchical_trim": agg_hierarchical_trim,

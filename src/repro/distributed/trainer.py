@@ -31,6 +31,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
+from repro.launch import compat
 from repro.models import model as M
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 from .aggregation import AGGREGATORS, AggregatorConfig
@@ -123,10 +124,16 @@ def _make_gspmd_step(tc: TrainConfig, mesh: Mesh):
 
     def train_step_factory(params_like, batch_keys=("tokens", "labels")):
         pspecs, _, _ = shardings(params_like, batch_keys)
-        gshard = jax.tree_util.tree_map(
-            lambda s: NamedSharding(mesh, s), pspecs,
-            is_leaf=lambda x: isinstance(x, P),
-        )
+        # Pinning the grad accumulator to the param layout is a memory
+        # optimization only; jax 0.4.x's XLA CPU SPMD partitioner miscompiles
+        # the constrained backward pass (grads off by O(1) relative), so the
+        # constraint is applied on modern jax exclusively.
+        gshard = None
+        if compat.HAS_AXIS_TYPE:
+            gshard = jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s), pspecs,
+                is_leaf=lambda x: isinstance(x, P),
+            )
 
         def train_step(params, opt_state, batch):
             loss, grads = _grads_microbatched(
@@ -203,7 +210,7 @@ def _make_robust_step(tc: TrainConfig, mesh: Mesh):
             lambda s: _manual_only(s, manual), tree,
             is_leaf=lambda x: isinstance(x, P),
         )
-        return jax.shard_map(
+        return compat.shard_map(
             per_worker,
             mesh=mesh,
             in_specs=(strip(pspecs), strip(ospecs), strip(bspec), P()),

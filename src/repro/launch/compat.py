@@ -1,0 +1,118 @@
+"""jax version-compatibility shims.
+
+The repo targets the modern (jax >= 0.6) sharding surface — explicit-axis
+meshes (``jax.sharding.AxisType``), top-level ``jax.shard_map`` with
+``axis_names=``/``check_vma=``, the ``jax.set_mesh`` ambient-mesh context,
+and ``jax.lax.axis_size`` — but must also run on jax 0.4.x (the pinned
+container toolchain), where none of those exist:
+
+==================  =============================  ==========================
+modern jax          jax 0.4.x                      shim behaviour
+==================  =============================  ==========================
+AxisType meshes     no ``axis_types=`` kwarg       drop the kwarg (0.4.x
+                                                   meshes are implicitly
+                                                   fully Auto)
+jax.shard_map       jax.experimental.shard_map     ``axis_names`` -> ``auto``
+  (axis_names=,       (auto=, check_rep=)            complement; ``check_vma``
+   check_vma=)                                       -> ``check_rep``
+jax.set_mesh        ``with mesh:`` resource env    return the Mesh itself
+                                                   (it is a context manager)
+jax.lax.axis_size   n/a                            ``psum(1, name)`` (static)
+==================  =============================  ==========================
+
+Import these helpers instead of touching ``jax.shard_map`` / ``jax.set_mesh``
+/ ``jax.make_mesh(axis_types=...)`` directly anywhere in src/ or tests/.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh
+
+__all__ = ["HAS_AXIS_TYPE", "make_mesh", "shard_map", "set_mesh",
+           "axis_size", "get_abstract_mesh"]
+
+HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+
+
+def make_mesh(
+    axis_shapes: Sequence[int],
+    axis_names: Sequence[str],
+    *,
+    devices=None,
+    axis_types=None,
+) -> Mesh:
+    """``jax.make_mesh`` that works on both jax 0.4.x and >= 0.6.
+
+    On modern jax every axis defaults to ``AxisType.Auto`` (matching 0.4.x
+    semantics, where all mesh axes are implicitly auto); on 0.4.x the
+    ``axis_types`` kwarg does not exist and is dropped.
+    """
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if HAS_AXIS_TYPE:
+        if axis_types is None:
+            axis_types = (jax.sharding.AxisType.Auto,) * len(tuple(axis_names))
+        kwargs["axis_types"] = axis_types
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma: bool = False):
+    """``jax.shard_map`` with the modern keyword surface on any jax.
+
+    ``axis_names`` is the set of *manual* axes (modern convention);
+    ``check_vma`` maps to the legacy ``check_rep``.
+
+    On 0.4.x the partial-auto mode (``auto=`` complement) is NOT used even
+    when ``axis_names`` is a strict subset of the mesh axes: the era's XLA
+    SPMD partitioner rejects programs mixing manual subgroups with auto
+    regions (``PartitionId instruction is not supported`` aborts on
+    ``axis_index``; hard CHECK-failures on collectives over constants).
+    Instead the body runs fully manual over ALL mesh axes — semantics are
+    unchanged (dims whose spec omits an auto axis are simply replicated into
+    every shard), only the intra-body GSPMD tensor parallelism is lost on
+    the legacy toolchain.
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma)
+        if axis_names is not None:
+            kwargs["axis_names"] = frozenset(axis_names)
+        return jax.shard_map(f, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma, auto=frozenset())
+
+
+def set_mesh(mesh: Mesh):
+    """Ambient-mesh context: ``jax.set_mesh`` on modern jax, the Mesh's own
+    resource-env context manager on 0.4.x."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def axis_size(name) -> int:
+    """``jax.lax.axis_size`` fallback: ``psum`` of a literal 1 is evaluated
+    statically to the axis size on every jax version."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
+
+
+def get_abstract_mesh():
+    """The ambient mesh set by :func:`set_mesh`, or ``None`` when unset.
+
+    Modern jax exposes ``jax.sharding.get_abstract_mesh``; on 0.4.x the
+    ambient context is the Mesh resource env entered by ``with mesh:``.
+    """
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return jax.sharding.get_abstract_mesh()
+    from jax._src.mesh import thread_resources
+
+    mesh = thread_resources.env.physical_mesh
+    return None if mesh.empty else mesh

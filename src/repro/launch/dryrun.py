@@ -45,6 +45,7 @@ from repro.distributed.sharding import (
 from repro.distributed.trainer import (
     TrainConfig, make_train_step, _batch_spec_tree,
 )
+from repro.launch.compat import set_mesh
 from repro.launch.mesh import make_production_mesh
 from repro.models import model as M
 from repro.optim import AdamWConfig, adamw_init
@@ -163,7 +164,7 @@ def build_lowered(cfg: ArchConfig, shape: InputShape, mesh, agg: str,
             opt_struct = jax.eval_shape(
                 lambda p: adamw_init(p, opt_dtype), params_struct
             )
-            with jax.set_mesh(mesh):
+            with set_mesh(mesh):
                 jitted = jax.jit(
                     step_fn,
                     in_shardings=(
@@ -185,7 +186,7 @@ def build_lowered(cfg: ArchConfig, shape: InputShape, mesh, agg: str,
         step_fn = factory(pw_struct, tuple(batch))
         pspecs, ospecs, bspec = shard_fn(pw_struct, tuple(batch))
         key_struct = jax.ShapeDtypeStruct((2,), jnp.uint32)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             jitted = jax.jit(
                 step_fn,
                 in_shardings=(
@@ -209,7 +210,7 @@ def build_lowered(cfg: ArchConfig, shape: InputShape, mesh, agg: str,
                 frames=batch.get("frames"),
             )
 
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             jitted = jax.jit(
                 prefill_step,
                 in_shardings=(
@@ -241,7 +242,7 @@ def build_lowered(cfg: ArchConfig, shape: InputShape, mesh, agg: str,
 
     from repro.distributed.sharding import fit_spec
     tok_spec = fit_spec(P(batch_axes(mesh), None), (B, 1), mesh)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         jitted = jax.jit(
             decode_fn,
             in_shardings=(
@@ -254,6 +255,8 @@ def build_lowered(cfg: ArchConfig, shape: InputShape, mesh, agg: str,
 
 def _extract_costs(compiled, n_dev):
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # jax 0.4.x returns [dict]
+        cost = cost[0] if cost else {}
     coll = parse_collectives(compiled.as_text(), n_dev)
     return {
         "flops": float(cost.get("flops", 0.0)),

@@ -4,20 +4,25 @@ IMPORTANT: functions, not module-level constants — importing this module must
 never touch jax device state (the dry-run sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first init;
 everything else must see the real device count).
+
+Meshes are built via :func:`repro.launch.compat.make_mesh`, which requests
+``AxisType.Auto`` axes on modern jax and silently drops the kwarg on jax
+0.4.x (where all mesh axes are implicitly auto) — see
+:mod:`repro.launch.compat` for the full compatibility story.
 """
 from __future__ import annotations
 
 import jax
 from jax.sharding import Mesh
 
+from repro.launch.compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """v5e production mesh: 16x16 single pod, or 2 pods x 16 x 16."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model_parallel: int | None = None) -> Mesh:
@@ -25,7 +30,4 @@ def make_host_mesh(model_parallel: int | None = None) -> Mesh:
     n = jax.device_count()
     mp = model_parallel or 1
     assert n % mp == 0
-    return jax.make_mesh(
-        (n // mp, mp), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh((n // mp, mp), ("data", "model"))

@@ -24,8 +24,8 @@ def main() -> None:
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--global-batch", type=int, default=8)
     ap.add_argument("--agg", default="mean",
-                    choices=["mean", "pushsum", "trimmed_mean",
-                             "hierarchical_trim"])
+                    choices=["mean", "pushsum", "pushsum_sparse",
+                             "trimmed_mean", "hierarchical_trim"])
     ap.add_argument("--byzantine", default="",
                     help="comma-separated compromised worker indices")
     ap.add_argument("--trim-f", type=int, default=1)
@@ -56,6 +56,7 @@ def main() -> None:
         TrainConfig, make_train_step, param_spread,
         replicate_for_workers, worker_opt_init,
     )
+    from repro.launch.compat import set_mesh
     from repro.launch.mesh import make_host_mesh
     from repro.models import model as M
     from repro.optim import AdamWConfig, adamw_init
@@ -89,7 +90,7 @@ def main() -> None:
 
     factory, _ = make_train_step(tc, mesh)
     robust = args.agg != "mean"
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         if robust:
             params_w = replicate_for_workers(params, n_workers)
             opt_w = worker_opt_init(params_w)

@@ -5,6 +5,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_lr
@@ -192,8 +194,8 @@ class TestDryRunHelpers:
         from repro.launch.dryrun import pick_n_micro
         from repro.launch.mesh import make_production_mesh
         import repro.launch.dryrun as DR
-        mesh = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.compat import make_mesh
+        mesh = make_mesh((1, 1), ("data", "model"))
 
         class FakeMesh:
             shape = {"data": 16, "model": 16}

@@ -4,6 +4,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.trimmed_mean.ops import trimmed_mean, trimmed_mean_pytree

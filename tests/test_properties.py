@@ -8,13 +8,17 @@ KL dual-averaging == softmax, ring-alignment of the decode cache.
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.graphs import (
     link_schedule, random_strongly_connected, strongly_connected_components,
     is_strongly_connected,
 )
-from repro.core.pushsum import run_pushsum, mass_invariant
+from repro.core.graphs import edge_list, edge_masks
+from repro.core.pushsum import run_pushsum, run_pushsum_sparse, mass_invariant
 from repro.core.social import kl_dual_averaging_update
 
 
@@ -33,6 +37,29 @@ def test_pushsum_mass_conserved_any_graph(n, drop, B, seed):
     final, _ = run_pushsum(w, adj, masks)
     inv = np.asarray(mass_invariant(final, jnp.asarray(adj)))
     np.testing.assert_allclose(inv, w.sum(0), rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(3, 10),
+    drop=st.floats(0.0, 0.8),
+    B=st.integers(1, 6),
+    seed=st.integers(0, 2**16),
+)
+def test_sparse_matches_dense_any_graph(n, drop, B, seed):
+    """The edge-list core is trajectory-equivalent to the dense reference on
+    any strongly connected digraph and any admissible drop schedule."""
+    rng = np.random.default_rng(seed)
+    adj = random_strongly_connected(n, 0.3, rng)
+    w = rng.normal(size=(n, 2)).astype(np.float32)
+    masks = link_schedule(adj, 60, drop, B, seed=seed)
+    el = edge_list(adj)
+    _, traj_d = run_pushsum(w, adj, masks)
+    _, traj_s = run_pushsum_sparse(
+        w, el.src, el.dst, 60, masks=edge_masks(masks, el)
+    )
+    np.testing.assert_allclose(np.asarray(traj_s), np.asarray(traj_d),
+                               rtol=1e-4, atol=1e-5)
 
 
 @settings(max_examples=15, deadline=None)

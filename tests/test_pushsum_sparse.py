@@ -1,0 +1,192 @@
+"""Sparse edge-list push-sum core: equivalence, invariants, sweep engine.
+
+The dense (N, N, d) implementation is the executable spec; the sparse
+(E, d) core must match it on identical link schedules. On top: mass
+conservation under extreme (90%) drop rates, the mask-outside-topology
+regression (a stray True on a non-edge must never corrupt relay state), an
+N=1024 smoke proving the sparse path needs no (N, N) arrays, and the
+vmapped scenario-sweep engine.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.graphs import (
+    edge_list,
+    edge_masks,
+    link_schedule,
+    random_strongly_connected,
+    ring,
+    stack_edge_lists,
+)
+from repro.core.pushsum import (
+    init_state,
+    mass_invariant,
+    pushsum_step,
+    run_pushsum,
+    run_pushsum_sparse,
+    sparse_mass_invariant,
+    sparse_ratios,
+)
+from repro.core.sweeps import run_pushsum_sweep
+
+
+class TestSparseDenseEquivalence:
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_ratios_match_dense_reference(self, seed):
+        """Same schedule -> same trajectory, up to fp32 reduction order."""
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(5, 14))
+        adj = random_strongly_connected(n, 0.3, rng)
+        w = rng.normal(size=(n, 3)).astype(np.float32)
+        masks = link_schedule(adj, 80, 0.4, 4, seed=seed)
+        el = edge_list(adj)
+        _, traj_d = run_pushsum(w, adj, masks)
+        _, traj_s = run_pushsum_sparse(
+            w, el.src, el.dst, 80, masks=edge_masks(masks, el)
+        )
+        np.testing.assert_allclose(
+            np.asarray(traj_s), np.asarray(traj_d), rtol=1e-4, atol=1e-5
+        )
+
+    def test_final_mass_invariant_matches(self):
+        rng = np.random.default_rng(7)
+        adj = random_strongly_connected(9, 0.25, rng)
+        w = rng.normal(size=(9, 2)).astype(np.float32)
+        masks = link_schedule(adj, 100, 0.5, 5, seed=7)
+        el = edge_list(adj)
+        fd, _ = run_pushsum(w, adj, masks)
+        fs, _ = run_pushsum_sparse(
+            w, el.src, el.dst, 100, masks=edge_masks(masks, el)
+        )
+        inv_d = np.asarray(mass_invariant(fd, jnp.asarray(adj)))
+        inv_s = np.asarray(
+            sparse_mass_invariant(fs, jnp.asarray(el.src), jnp.asarray(el.valid))
+        )
+        np.testing.assert_allclose(inv_s, inv_d, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(inv_s, w.sum(0), rtol=1e-3, atol=1e-3)
+
+
+class TestSparseCore:
+    def test_mass_conserved_at_90pct_drop(self):
+        """In-scan Bernoulli masks at drop 0.9: the cumulative-sum recovery
+        keeps total mass exact (Theorem 1's augmented-graph invariant)."""
+        rng = np.random.default_rng(1)
+        adj = random_strongly_connected(12, 0.3, rng)
+        w = rng.normal(size=(12, 4)).astype(np.float32)
+        el = edge_list(adj)
+        final, _ = run_pushsum_sparse(
+            w, el.src, el.dst, 200, drop_prob=0.9, B=10,
+            key=jnp.asarray(np.array([0, 42], np.uint32)),
+        )
+        inv = np.asarray(
+            sparse_mass_invariant(final, jnp.asarray(el.src), jnp.asarray(el.valid))
+        )
+        np.testing.assert_allclose(inv, w.sum(0), rtol=2e-3, atol=2e-3)
+
+    def test_consensus_under_90pct_drop(self):
+        rng = np.random.default_rng(2)
+        adj = random_strongly_connected(8, 0.4, rng)
+        w = rng.normal(size=(8, 2)).astype(np.float32)
+        el = edge_list(adj)
+        final, _ = run_pushsum_sparse(
+            w, el.src, el.dst, 800, drop_prob=0.9, B=8
+        )
+        err = np.abs(np.asarray(sparse_ratios(final)) - w.mean(0)).max()
+        assert err < 1e-2, err
+
+    def test_n1024_no_dense_arrays(self):
+        """N=1024 agents on a sparse digraph: state stays O(E d); the whole
+        run never builds an (N, N) array (the dense rho alone would be 4 GB
+        at this d)."""
+        rng = np.random.default_rng(3)
+        adj = random_strongly_connected(1024, 0.002, rng)
+        el = edge_list(adj)
+        assert el.E < 0.01 * 1024 ** 2      # E << N^2
+        w = rng.normal(size=(1024, 4)).astype(np.float32)
+        final, _ = run_pushsum_sparse(
+            w, el.src, el.dst, 8, drop_prob=0.2, B=4, record_every=8
+        )
+        assert final.rho.shape == (el.E, 4)
+        assert final.z.shape == (1024, 4)
+        inv = np.asarray(
+            sparse_mass_invariant(final, jnp.asarray(el.src), jnp.asarray(el.valid))
+        )
+        np.testing.assert_allclose(inv, w.sum(0), rtol=1e-3, atol=1e-2)
+
+
+class TestMaskTopologyIntersection:
+    def test_stray_mask_bit_cannot_corrupt_dense_state(self):
+        """Regression: pushsum_step must AND the mask with the topology —
+        a True on a non-edge used to latch sigma into rho for a link that
+        does not exist, silently breaking the mass invariant."""
+        adj = ring(5)
+        w = np.random.default_rng(0).normal(size=(5, 2)).astype(np.float32)
+        good = np.asarray(adj)
+        bad = good.copy()
+        bad[2, 0] = True                     # 2 -> 0 is NOT a ring edge
+        assert not adj[2, 0]
+        st_good = pushsum_step(init_state(jnp.asarray(w)),
+                               jnp.asarray(good), jnp.asarray(adj))
+        st_bad = pushsum_step(init_state(jnp.asarray(w)),
+                              jnp.asarray(bad), jnp.asarray(adj))
+        for a, b in zip(st_good, st_bad):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_padding_edges_carry_nothing_sparse(self):
+        """Batched/padded edge lists: invalid edges never deliver, so two
+        stacked copies of the same graph give identical dynamics."""
+        rng = np.random.default_rng(4)
+        a1 = random_strongly_connected(6, 0.2, rng)
+        a2 = random_strongly_connected(6, 0.6, rng)   # more edges -> padding in a1
+        el = stack_edge_lists([a1, a2])
+        el1 = edge_list(a1)
+        assert el.src.shape[1] > el1.E                # a1's row is padded
+        w = rng.normal(size=(6, 2)).astype(np.float32)
+        masks = link_schedule(a1, 50, 0.3, 4, seed=4)
+        _, t_ref = run_pushsum_sparse(
+            w, el1.src, el1.dst, 50, masks=edge_masks(masks, el1)
+        )
+        padded_masks = np.zeros((50, el.src.shape[1]), bool)
+        padded_masks[:, : el1.E] = edge_masks(masks, el1)
+        padded_masks[:, el1.E:] = True                # stray Trues on padding
+        _, t_pad = run_pushsum_sparse(
+            w, el.src[0], el.dst[0], 50, masks=jnp.asarray(padded_masks),
+            valid=el.valid[0],
+        )
+        np.testing.assert_allclose(
+            np.asarray(t_pad), np.asarray(t_ref), rtol=1e-5, atol=1e-6
+        )
+
+
+class TestSweepEngine:
+    def test_vmapped_sweep_errors_decay_per_scenario(self):
+        """One jitted call over graph x drop x seed; consensus error decays
+        (or is already at the noise floor) in every scenario and mass is
+        conserved across the whole grid."""
+        rng = np.random.default_rng(0)
+        adjs = [random_strongly_connected(32, 0.05, rng) for _ in range(2)]
+        el = stack_edge_lists(adjs)
+        w = rng.normal(size=(32, 3)).astype(np.float32)
+        res = run_pushsum_sweep(
+            w, el, T=250, drop_probs=[0.0, 0.5, 0.9], seeds=[0, 1], B=4
+        )
+        assert res.K == 2 * 3 * 2
+        err = np.asarray(res.err)
+        assert np.isfinite(err).all()
+        # decay: final error under the round-25 level (or fp noise floor)
+        assert (err[:, -1] <= np.maximum(err[:, 25], 1e-4)).all(), err[:, -1]
+        assert err[:, -1].max() < 1e-2
+        np.testing.assert_allclose(
+            np.asarray(res.mass_gap), 0.0, atol=5e-3
+        )
+
+    def test_sweep_single_graph_broadcast(self):
+        """A non-batched EdgeList sweeps over drop x seed only."""
+        rng = np.random.default_rng(5)
+        el = edge_list(random_strongly_connected(16, 0.2, rng))
+        w = rng.normal(size=(16, 2)).astype(np.float32)
+        res = run_pushsum_sweep(w, el, T=150, drop_probs=[0.2, 0.6],
+                                seeds=[0, 1, 2], B=4)
+        assert res.K == 6
+        assert np.asarray(res.err)[:, -1].max() < 1e-2

@@ -273,6 +273,21 @@ class TestByzantine:
         assert (dec[normal_out_C] == model.truth).all()
 
 
+    def test_seed_sweep_vmapped(self):
+        """run_byzantine_sweep: one jitted vmap over seeds per attack; every
+        seed's normal agents converge to theta*."""
+        from repro.core.sweeps import run_byzantine_sweep
+
+        topo, model = _byz_setup()
+        cfg = ByzantineConfig(topo=topo, F=2, byz=(2, 9), gamma_period=10,
+                              attack=attacks.large_value())
+        out = run_byzantine_sweep(model, cfg, T=300, seeds=[0, 1])
+        res = out["large_value"]
+        dec = np.asarray(res.decisions)
+        assert dec.shape == (2, 300, topo.N)
+        bm = cfg.byz_mask()
+        assert (dec[:, -1][:, ~bm] == model.truth).all()
+
     def test_one_vs_rest_variant(self):
         """DESIGN.md §8 extension: m one-vs-rest dynamics instead of the
         paper's m(m-1) pairwise ones — same filter, cheaper, validated as
