@@ -1,0 +1,22 @@
+"""Benchmark modules, one per paper claim; driven by benchmarks/run.py."""
+import json
+import os
+
+__all__ = ["merge_bench_json"]
+
+
+def merge_bench_json(path: str, rows) -> None:
+    """Merge-update a BENCH_*.json artifact: keys not re-measured by this
+    invocation are preserved, and NaN rows (a failed sub-benchmark's
+    degraded placeholder) are dropped rather than serialized — bare ``NaN``
+    is not RFC-8259 JSON and breaks strict parsers of the perf-trajectory
+    artifact. The single shared writer for run.py --json-dir and the
+    standalone module __main__ blocks."""
+    merged = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            merged = json.load(f)
+    merged.update({name: {"us_per_call": us, "derived": derived}
+                   for name, us, derived in rows if us == us})
+    with open(path, "w") as f:
+        json.dump(merged, f, indent=1, allow_nan=False)

@@ -1,31 +1,48 @@
-"""Sparse-core + sweep-engine benchmark.
+"""Sparse-core + fused-kernel + sharded-sweep benchmark.
 
 Claims pinned:
- * the edge-list core runs N=1024 agents on a sparse digraph (E << N^2)
-   without ever allocating an (N, N) or (N, N, d) array — the dense
-   reference would need ~N^2 d floats of rho alone (16 GB at N=1024,
-   d=4096-equivalent sweeps);
- * a >= 32-scenario grid (topology draws x drop probs x seeds) runs as ONE
-   jitted vmapped scan (`repro.core.sweeps.run_pushsum_sweep`);
+ * the edge-list core runs N up to 131072 agents on sparse digraphs built
+   directly as edge lists (``graphs.random_strongly_connected_edge_list``)
+   without ever allocating an (N, N) or (N, N, d) array;
+ * the per-round delivery/integration runs through the
+   ``backend="xla"|"pallas"`` switch — per-step microseconds are recorded
+   for both at N in {1024, 16384, 131072} (on CPU the Pallas path is
+   ``interpret=True`` equivalence mode, not a fast path; the compiled
+   comparison is TPU-only);
+ * a >= 256-scenario grid (topology draws x drop probs x seeds) runs as ONE
+   program, vmapped on a single device AND shard_map-sharded over a
+   multi-device ``data`` mesh axis (`repro.core.sweeps.run_pushsum_sweep`),
+   with identical results;
  * consensus error decays in every scenario (Theorem 1 across the grid).
 
-Emits name,us_per_call,derived rows via :func:`rows`. The machine-readable
-``BENCH_pushsum_sweep.json`` perf-trajectory artifact is written to
+Emits name,us_per_call,derived rows via :func:`rows`; ``rows(smoke=True)``
+is the fast CI subset (small N, no subprocess). The machine-readable
+``BENCH_pushsum_sweep.json`` perf-trajectory artifact is merge-updated in
 ``results/`` when run standalone (``python -m benchmarks.pushsum_sweep``);
 under ``benchmarks/run.py`` the ``--json-dir`` flag is the single writer.
 """
 import json
 import os
+import subprocess
+import sys
+import textwrap
 import time
 
 import jax
 import numpy as np
 
-from repro.core.graphs import edge_list, random_strongly_connected, stack_edge_lists
+from repro.core.graphs import (
+    edge_list,
+    random_strongly_connected,
+    random_strongly_connected_edge_list,
+    sort_by_dst,
+    stack_edge_lists,
+)
 from repro.core.pushsum import run_pushsum_sparse, sparse_mass_invariant
 from repro.core.sweeps import run_pushsum_sweep
 
-RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS_DIR = os.path.join(REPO, "results")
 JSON_PATH = os.path.join(RESULTS_DIR, "BENCH_pushsum_sweep.json")
 
 
@@ -64,11 +81,53 @@ def _bench_large_sparse(n=1024, d=8, T=64, extra_edge_prob=0.002, seed=0):
     }
 
 
+def _bench_step_backend(n, backend, d=4, extra=2.0, seed=0, T=None):
+    """Per-step cost of one backend at scale N (dst-sorted edge index).
+
+    The graph is built directly as a sparse edge list — at N=131072 the
+    dense adjacency alone would be 17 GB. On CPU the Pallas backend runs
+    ``interpret=True`` (the equivalence mode CI tests), so its numbers
+    measure the interpreter, not the kernel; on TPU the same call compiles.
+    """
+    rng = np.random.default_rng(seed)
+    el = random_strongly_connected_edge_list(n, extra, rng)   # sorted by dst
+    w = rng.normal(size=(n, d)).astype(np.float32)
+    if T is None:   # interpret-mode pallas steps are expensive on CPU
+        T = 16 if backend == "xla" else 2
+
+    run = jax.jit(lambda w_, src_, dst_: run_pushsum_sparse(
+        w_, src_, dst_, T, drop_prob=0.2, B=4, record_every=T,
+        backend=backend,
+    ))
+
+    def go():
+        final, _ = run(w, el.src, el.dst)
+        jax.block_until_ready(final)
+        return final
+
+    t0 = time.perf_counter()
+    final = go()
+    compile_wall = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    final = go()
+    step_us = (time.perf_counter() - t0) / T * 1e6
+    gap = float(np.abs(np.asarray(
+        sparse_mass_invariant(final, el.src, el.valid)) - w.sum(0)).max())
+    mode = ("interpret" if backend == "pallas"
+            and jax.default_backend() != "tpu" else "compiled")
+    return {
+        "name": f"pushsum_step_{backend}_N{n}",
+        "us_per_call": step_us,
+        "derived": f"E={el.E};T={T};backend={backend};mode={mode};"
+                   f"mass_gap={gap:.1e};compile_s={compile_wall:.1f}",
+    }
+
+
 def _bench_sweep(n=256, d=4, T=300, n_graphs=2, seed=0):
     """>= 32-scenario grid in one jitted vmapped scan."""
     rng = np.random.default_rng(seed)
     adjs = [random_strongly_connected(n, 0.02, rng) for _ in range(n_graphs)]
-    el = stack_edge_lists(adjs)
+    el, _, _ = sort_by_dst(stack_edge_lists(adjs))
     w = rng.normal(size=(n, d)).astype(np.float32)
     drop_probs = [0.0, 0.3, 0.6, 0.9]
     seeds = [0, 1, 2, 3]
@@ -100,20 +159,119 @@ def _bench_sweep(n=256, d=4, T=300, n_graphs=2, seed=0):
     }
 
 
-def rows():
-    recs = [_bench_large_sparse(), _bench_sweep()]
+def _bench_sharded_sweep(n=128, d=3, T=100, devices=4, seed=0):
+    """K=256 scenarios in ONE call: single-device vmap vs mesh-sharded.
+
+    Runs in a subprocess so the fake multi-device CPU mesh
+    (``--xla_force_host_platform_device_count``) doesn't leak into this
+    process's jax runtime (same pattern as tests/test_distributed.py). On a
+    real multi-host fleet the same ``mesh=`` argument shards the scenario
+    batch across accelerators; the fake-device walls recorded here pin the
+    single-program/sharded semantics, not a speedup (the devices share one
+    CPU core).
+    """
+    prog = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
+        import json, time
+        import numpy as np
+        import jax
+        from repro.core.graphs import (
+            random_strongly_connected, sort_by_dst, stack_edge_lists)
+        from repro.core.sweeps import run_pushsum_sweep
+        from repro.launch import compat
+
+        rng = np.random.default_rng({seed})
+        adjs = [random_strongly_connected({n}, 0.03, rng) for _ in range(2)]
+        el, _, _ = sort_by_dst(stack_edge_lists(adjs))
+        w = rng.normal(size=({n}, {d})).astype(np.float32)
+        drops = [0.0, 0.2, 0.4, 0.6, 0.7, 0.8, 0.85, 0.9]
+        seeds = list(range(16))          # K = 2 * 8 * 16 = 256
+
+        def timed(**kw):
+            t0 = time.perf_counter()
+            r = run_pushsum_sweep(w, el, {T}, drop_probs=drops, seeds=seeds,
+                                  B=4, **kw)
+            r.err.block_until_ready()
+            compile_s = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            r = run_pushsum_sweep(w, el, {T}, drop_probs=drops, seeds=seeds,
+                                  B=4, **kw)
+            r.err.block_until_ready()
+            return r, time.perf_counter() - t0, compile_s
+
+        r1, single_s, c1 = timed()
+        mesh = compat.make_mesh(({devices},), ("data",))
+        r2, sharded_s, c2 = timed(mesh=mesh)
+        err = np.abs(np.asarray(r2.err) - np.asarray(r1.err)).max()
+        final = np.asarray(r2.err)[:, -1]
+        print(json.dumps({{
+            "K": int(r2.K), "single_s": single_s, "sharded_s": sharded_s,
+            "compile_single_s": c1, "compile_sharded_s": c2,
+            "shard_vs_vmap_err": float(err),
+            "err_final_max": float(final.max()),
+        }}))
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    try:
+        out = subprocess.run([sys.executable, "-c", prog],
+                             capture_output=True, text=True, timeout=900,
+                             env=env, cwd=REPO)
+        failure = out.stderr.strip()[-160:] if out.returncode else None
+    except subprocess.TimeoutExpired:
+        failure = "timeout_900s"
+    if failure is not None:
+        # degrade to a NaN row so the other modules' rows survive; the
+        # json merge skips NaN and --check ignores it
+        return {
+            "name": "pushsum_sweep_sharded256",
+            "us_per_call": float("nan"),
+            "derived": "subprocess_failed;" + failure,
+        }
+    res = json.loads(
+        [l for l in out.stdout.splitlines() if l.startswith("{")][-1]
+    )
+    return {
+        "name": f"pushsum_sweep_sharded{res['K']}",
+        "us_per_call": res["sharded_s"] / res["K"] * 1e6,
+        "derived": f"scenarios={res['K']};devices={devices};single_jit=true;"
+                   f"sharded_wall_s={res['sharded_s']:.2f};"
+                   f"single_dev_wall_s={res['single_s']:.2f};"
+                   f"shard_vs_vmap_err={res['shard_vs_vmap_err']:.1e};"
+                   f"err_final_max={res['err_final_max']:.2e};"
+                   f"compile_s={res['compile_sharded_s']:.1f}",
+        "scenarios": res["K"],
+        "single_jit": True,
+    }
+
+
+def rows(smoke: bool = False):
+    if smoke:
+        recs = [
+            _bench_large_sparse(),
+            _bench_step_backend(1024, "xla"),
+            _bench_step_backend(1024, "pallas"),
+        ]
+    else:
+        recs = [_bench_large_sparse()]
+        for n in (1024, 16384, 131072):
+            recs.append(_bench_step_backend(n, "xla"))
+            recs.append(_bench_step_backend(n, "pallas"))
+        recs.append(_bench_sweep())
+        recs.append(_bench_sharded_sweep())
     return [(r["name"], r["us_per_call"], r["derived"]) for r in recs]
 
 
 if __name__ == "__main__":
-    # standalone run writes the BENCH json itself; under benchmarks/run.py
-    # the --json-dir flag is the single writer.
-    out = rows()
+    # standalone run merge-updates the BENCH json itself; under
+    # benchmarks/run.py the --json-dir flag is the single writer.
+    out = rows(smoke="--smoke" in sys.argv)
     print("name,us_per_call,derived")
     for name, us, derived in out:
         print(f"{name},{us:.1f},{derived}")
+    from benchmarks import merge_bench_json
+
     os.makedirs(RESULTS_DIR, exist_ok=True)
-    with open(JSON_PATH, "w") as f:
-        json.dump({name: {"us_per_call": us, "derived": derived}
-                   for name, us, derived in out}, f, indent=1)
+    merge_bench_json(JSON_PATH, out)
     print(f"# wrote {os.path.normpath(JSON_PATH)}")

@@ -4,19 +4,32 @@ numbered tables; each Theorem/Remark gets a benchmark).
 Prints ``name,us_per_call,derived`` CSV rows, plus a §Roofline summary from
 the latest dry-run results JSON if present (results/dryrun_single.json).
 
-With ``--json-dir DIR`` each module additionally writes a machine-readable
-``BENCH_<tag>.json`` (name -> {us_per_call, derived}) next to the CSV
-stream so the perf trajectory is tracked across PRs:
+With ``--json-dir DIR`` each module additionally merge-updates a
+machine-readable ``BENCH_<tag>.json`` (name -> {us_per_call, derived})
+next to the CSV stream so the perf trajectory is tracked across PRs —
+existing keys not re-measured in this invocation (e.g. a ``--smoke`` or
+single-module run) are preserved, not clobbered:
 
     python -m benchmarks.run --json-dir results          # all modules
     python -m benchmarks.run pushsum_sweep               # one module, CSV
+    python -m benchmarks.run --smoke --json-dir results  # fast CI subset
+
+``--check FILE`` compares the freshly measured rows against the recorded
+baseline in FILE (a BENCH_*.json) and exits non-zero if any shared name's
+``us_per_call`` regressed by more than 25% — the perf gate:
+
+    python -m benchmarks.run pushsum_sweep --smoke \\
+        --check results/BENCH_pushsum_sweep.json
 """
 import argparse
+import inspect
 import json
 import os
+import sys
 
 from . import consensus_rate, social_learning, byzantine_bench, gamma_sweep
 from . import aggregators_bench, pushsum_sweep
+from . import merge_bench_json
 
 MODULES = [
     ("thm1", consensus_rate),
@@ -27,32 +40,94 @@ MODULES = [
     ("pushsum_sweep", pushsum_sweep),
 ]
 
+REGRESSION_FACTOR = 1.25
+
+
+def _module_rows(mod, smoke: bool):
+    """Call mod.rows(), passing smoke= only to modules that support it."""
+    if smoke and "smoke" in inspect.signature(mod.rows).parameters:
+        return list(mod.rows(smoke=True))
+    return list(mod.rows())
+
+
+def _check_regressions(baseline_path: str, baseline: dict,
+                       measured: dict[str, tuple[float, str]]) -> int:
+    """Compare measured us_per_call against the recorded baseline; return
+    the number of >25% regressions. Skipped: names absent from either side
+    (new benchmarks are not regressions), NaN rows, and rows whose derived
+    tag says ``mode=interpret`` — interpreter timings measure the Pallas
+    interpreter, not the kernel, and jitter far beyond the gate budget."""
+    bad = checked = 0
+    for name, (us, derived) in measured.items():
+        old = baseline.get(name, {}).get("us_per_call")
+        if old is None or not (old == old) or not (us == us):  # skip NaN
+            continue
+        if "mode=interpret" in derived:
+            continue
+        checked += 1
+        if us > old * REGRESSION_FACTOR:
+            print(f"# REGRESSION {name}: {us:.1f}us > "
+                  f"{REGRESSION_FACTOR:.2f} * baseline {old:.1f}us")
+            bad += 1
+    if bad == 0:
+        print(f"# perf check vs {baseline_path}: "
+              f"{checked} rows checked, no >25% regressions")
+    return bad
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("only", nargs="?", default=None,
                     help="run a single module tag (thm1, ..., pushsum_sweep)")
     ap.add_argument("--json-dir", default=None,
-                    help="also write BENCH_<tag>.json per module here")
+                    help="merge-update BENCH_<tag>.json per module here")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast subset for CI / verify flows (modules that "
+                         "support rows(smoke=True); others run as usual)")
+    ap.add_argument("--check", default=None, metavar="FILE",
+                    help="exit non-zero if any measured us_per_call "
+                         "regresses >25%% vs this recorded BENCH json")
     args = ap.parse_args()
+    if args.only and args.only not in {t for t, _ in MODULES}:
+        # a typo'd tag must fail loudly, not run zero modules and let a
+        # --check gate pass green on an empty measurement set
+        ap.error(f"unknown module tag {args.only!r}; "
+                 f"choose from {[t for t, _ in MODULES]}")
 
+    # snapshot the baseline BEFORE any module runs: --json-dir merge-updates
+    # the same BENCH files a --check baseline typically points at
+    baseline = None
+    if args.check:
+        with open(args.check) as f:
+            baseline = json.load(f)
+
+    measured: dict[str, tuple[float, str]] = {}
+    tag_rows: list[tuple[str, list]] = []
     print("name,us_per_call,derived")
     for tag, mod in MODULES:
         if args.only and tag != args.only:
             continue
-        rows = list(mod.rows())
+        rows = _module_rows(mod, args.smoke)
+        tag_rows.append((tag, rows))
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived}", flush=True)
-        if args.json_dir:
-            os.makedirs(args.json_dir, exist_ok=True)
-            path = os.path.join(args.json_dir, f"BENCH_{tag}.json")
-            with open(path, "w") as f:
-                json.dump({name: {"us_per_call": us, "derived": derived}
-                           for name, us, derived in rows}, f, indent=1)
+            measured[name] = (us, derived)
+
+    # gate BEFORE persisting: a failed check must not ratchet the recorded
+    # baseline with the regressed numbers (the retry would then pass)
+    if args.check and _check_regressions(args.check, baseline, measured):
+        sys.exit(1)
+
+    if args.json_dir:
+        os.makedirs(args.json_dir, exist_ok=True)
+        for tag, rows in tag_rows:
+            merge_bench_json(
+                os.path.join(args.json_dir, f"BENCH_{tag}.json"), rows
+            )
 
     path = os.path.join(os.path.dirname(__file__), "..",
                         "results", "dryrun_single.json")
-    if os.path.exists(path) and not args.only:
+    if os.path.exists(path) and not args.only and not args.smoke:
         with open(path) as f:
             recs = json.load(f)
         ok = [r for r in recs if r.get("ok")]
@@ -64,7 +139,6 @@ def main() -> None:
                 f"{t['bound_step_time_s']*1e6:.1f},"
                 f"dom={t['dominant']};useful={t['useful_flop_ratio']:.2f}"
             )
-
 
 if __name__ == "__main__":
     main()

@@ -19,6 +19,8 @@ from .graphs import (
     edge_list,
     stack_edge_lists,
     edge_masks,
+    sort_by_dst,
+    random_strongly_connected_edge_list,
 )
 from .signals import SignalModel, make_confused_model, check_global_observability
 from .pushsum import (
@@ -49,8 +51,8 @@ from . import attacks
 __all__ = [
     "HierTopology", "make_hierarchy", "link_schedule", "check_assumption3",
     "is_strongly_connected", "random_strongly_connected", "EdgeList",
-    "edge_list", "stack_edge_lists",
-    "edge_masks", "SignalModel", "make_confused_model",
+    "edge_list", "stack_edge_lists", "edge_masks", "sort_by_dst",
+    "random_strongly_connected_edge_list", "SignalModel", "make_confused_model",
     "check_global_observability", "PushSumState", "pushsum_step", "run_pushsum",
     "mass_invariant", "ratios", "SparsePushSumState", "sparse_pushsum_step",
     "run_pushsum_sparse", "sparse_mass_invariant", "sparse_ratios",

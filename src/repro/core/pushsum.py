@@ -25,16 +25,35 @@ against.
 actual links, so over a precomputed edge index (src[e] -> dst[e], E edges):
     z (N, d) | m (N,) | sigma (N, d) | sigma_m (N,) | rho (E, d) |
     rho_m (E,)
-Delivery latches ``sigma[src]`` per edge; integration is one
-``jax.ops.segment_sum`` over ``dst``. O(E d) memory — N >= 1024 agents on
-sparse digraphs never touch an (N, N, ...) array — and per-round link masks
-are (E,) Bernoulli draws generated inside the scan (no (T, N, N) schedule is
-ever materialized). Su & Vaidya's analysis (arXiv:1606.08904, relaxed in
-arXiv:1901.01943) is stated per-link, so the edge-list core is the faithful
-representation, not an approximation.
+O(E d) memory — N ~ 1e5 agents on sparse digraphs never touch an
+(N, N, ...) array — and per-round link masks are (E,) Bernoulli draws
+generated inside the scan (no (T, N, N) schedule is ever materialized).
+Su & Vaidya's analysis (arXiv:1606.08904, relaxed in arXiv:1901.01943) is
+stated per-link, so the edge-list core is the faithful representation, not
+an approximation.
+
+The delivery + integration half of each round is routed through a
+``backend`` switch (``sparse_pushsum_step`` / ``run_pushsum_sparse``, and
+the engines built on them in :mod:`repro.core.sweeps` and
+:mod:`repro.distributed.aggregation`):
+
+* ``"xla"``    — gather ``sigma[src]`` + ``jnp.where`` latch + one
+  ``jax.ops.segment_sum`` over ``dst``; runs on every platform and is the
+  equivalence oracle.
+* ``"pallas"`` — the fused streaming kernel of
+  :mod:`repro.kernels.pushsum_edge`: one pass over E doing the gather, the
+  mask-latch, and the per-receiver increment accumulation together. It
+  expects the *sorted-edge layout*: pre-sort the index by ``dst`` at
+  construction with :func:`repro.core.graphs.sort_by_dst` (the returned
+  inverse permutation maps per-edge state/masks back to the original edge
+  order). Unsorted indices stay correct but lose the contiguous-run fast
+  path. Value and mass columns ride one (·, d+1) matrix so a single pass
+  serves both recursions.
+* ``"auto"``   — ``"pallas"`` on TPU, ``"xla"`` elsewhere (CPU CI runs the
+  kernel in ``interpret=True`` mode for equivalence tests only).
 
 Everything is jax-traceable; see :mod:`repro.core.sweeps` for the vmapped
-scenario engine built on the sparse core.
+(and mesh-sharded) scenario engine built on the sparse core.
 """
 from __future__ import annotations
 
@@ -200,15 +219,22 @@ def sparse_pushsum_step(
     src: jnp.ndarray,      # (E,) int32 sender per edge
     dst: jnp.ndarray,      # (E,) int32 receiver per edge
     valid: jnp.ndarray,    # (E,) bool — False on padding edges
+    backend: str = "auto",
 ) -> SparsePushSumState:
     """One fast-robust-push-sum iteration on edge-list state.
 
     Identical recursion to :func:`pushsum_step`; delivery gathers
     ``sigma[src]`` per operational edge and integration scatter-adds the
-    latched increments into receivers with ``jax.ops.segment_sum``. The mask
-    is intersected with ``valid`` so padding edges can never carry mass —
-    the sparse analogue of the dense step's ``mask & adj``.
+    latched increments into receivers — via ``jax.ops.segment_sum``
+    (``backend="xla"``) or the fused Pallas edge-scatter kernel
+    (``backend="pallas"``, sorted-by-dst edge layout; see the module
+    docstring). The mask is intersected with ``valid`` so padding edges can
+    never carry mass — the sparse analogue of the dense step's
+    ``mask & adj``. ``backend`` is static: thread it through
+    ``static_argnames`` when jitting.
     """
+    from repro.kernels.pushsum_edge import edge_scatter, resolve_backend
+
     z, m, sigma, sigma_m, rho, rho_m = state
     n = z.shape[0]
     d_out = _out_degree(src, valid, n, z.dtype)   # (N,)
@@ -220,10 +246,20 @@ def sparse_pushsum_step(
 
     # --- delivery: operational edges latch the sender's new cumulative ---
     live = mask & valid
-    rho_new = jnp.where(live[:, None], sigma_p[src], rho)
-    rho_m_new = jnp.where(live, sigma_m_p[src], rho_m)
-    recv = jax.ops.segment_sum(rho_new - rho, dst, num_segments=n)
-    recv_m = jax.ops.segment_sum(rho_m_new - rho_m, dst, num_segments=n)
+    if resolve_backend(backend) == "pallas":
+        # value + mass columns in one (·, d+1) pass through the kernel
+        sigma_cat = jnp.concatenate([sigma_p, sigma_m_p[:, None]], axis=1)
+        rho_cat = jnp.concatenate([rho, rho_m[:, None]], axis=1)
+        rho_cat_new, recv_cat = edge_scatter(
+            sigma_cat, rho_cat, live, src, dst, backend="pallas"
+        )
+        rho_new, rho_m_new = rho_cat_new[:, :-1], rho_cat_new[:, -1]
+        recv, recv_m = recv_cat[:, :-1], recv_cat[:, -1]
+    else:
+        rho_new = jnp.where(live[:, None], sigma_p[src], rho)
+        rho_m_new = jnp.where(live, sigma_m_p[src], rho_m)
+        recv = jax.ops.segment_sum(rho_new - rho, dst, num_segments=n)
+        recv_m = jax.ops.segment_sum(rho_m_new - rho_m, dst, num_segments=n)
 
     # --- integrate ---
     z_p = z * share[:, None] + recv
@@ -282,6 +318,7 @@ def run_pushsum_sparse(
     valid: jnp.ndarray | None = None,
     masks: jnp.ndarray | None = None,   # optional explicit (T, E) schedule
     record_every: int = 1,
+    backend: str = "auto",
 ) -> tuple[SparsePushSumState, jnp.ndarray]:
     """Run T iterations of the edge-list core.
 
@@ -289,6 +326,8 @@ def run_pushsum_sparse(
     (drop_prob / B semantics of :func:`graphs.link_schedule`); pass an
     explicit ``masks`` (T, E) schedule instead to reproduce a dense run
     bit-for-bit (see :func:`graphs.edge_masks`); its length must equal T.
+    ``backend`` selects the per-round delivery lowering (module docstring);
+    ``"pallas"`` expects a dst-sorted edge index.
 
     Returns the final state and the ratio trajectory recorded at rounds
     ``record_every - 1, 2*record_every - 1, ...`` — i.e. the *end* of each
@@ -317,7 +356,7 @@ def run_pushsum_sparse(
             )
 
         def body(state, mask):
-            new = sparse_pushsum_step(state, mask, src, dst, valid)
+            new = sparse_pushsum_step(state, mask, src, dst, valid, backend)
             return new, sparse_ratios(new)
 
         final, traj = jax.lax.scan(body, state0, masks)
@@ -331,7 +370,7 @@ def run_pushsum_sparse(
         def window(state, t0):
             def inner(i, st):
                 mask = step_edge_mask(key, t0 + jnp.uint32(i), E, drop_prob, B)
-                return sparse_pushsum_step(st, mask, src, dst, valid)
+                return sparse_pushsum_step(st, mask, src, dst, valid, backend)
 
             new = jax.lax.fori_loop(0, k, inner, state)
             return new, sparse_ratios(new)
@@ -343,7 +382,7 @@ def run_pushsum_sparse(
 
     def body(state, t):
         mask = step_edge_mask(key, t, E, drop_prob, B)
-        new = sparse_pushsum_step(state, mask, src, dst, valid)
+        new = sparse_pushsum_step(state, mask, src, dst, valid, backend)
         return new, sparse_ratios(new)
 
     final, traj = jax.lax.scan(body, state0, jnp.arange(T, dtype=jnp.uint32))

@@ -1,28 +1,36 @@
-"""Vmapped scenario sweeps — "as many scenarios as you can imagine".
+"""Vmapped + mesh-sharded scenario sweeps — "as many scenarios as you can
+imagine".
 
 The sparse edge-list push-sum core (:mod:`repro.core.pushsum`) keeps per-
 scenario state at O(E d), so a whole grid of scenarios — seeds x drop
 probabilities x topology draws — fits comfortably in one ``jax.vmap`` over a
 single compiled ``lax.scan``. One XLA program executes every scenario in
 lockstep; per-scenario consensus error is reduced inside the scan so the
-sweep's memory is O(K (N d + E d)) regardless of T.
+sweep's memory is O(K (N d + E d)) regardless of T. Pass a ``mesh`` to
+:func:`run_pushsum_sweep` and the scenario axis is additionally sharded
+over the mesh's ``data`` axis with ``shard_map`` (one scenario batch per
+device), so grids in the thousands run as one program across the fleet.
 
 Two engines:
 
 * :func:`run_pushsum_sweep` — Theorem 1 dynamics (Alg. 1 consensus) over
-  seed x drop_prob x topology-draw grids.
+  seed x drop_prob x topology-draw grids; ``backend`` selects the XLA or
+  fused-Pallas delivery lowering per round.
 * :func:`run_byzantine_sweep` — Algorithm 2 learning over seed batches per
   attack. Attack *type* changes the traced program (attacks are function-
-  valued), so types iterate host-side while seeds ride the vmap axis.
+  valued), so types iterate host-side while seeds ride the vmap axis; the
+  compiled scan per (model, config, T, attack) is cached module-side so
+  repeated calls with the same shapes/config never retrace.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Sequence
+from typing import Callable, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
 
 from .attacks import Attack
 from .byzantine import ByzantineConfig, ByzantineResult, make_byzantine_scan
@@ -66,10 +74,9 @@ def _scenario_grid(n_graphs: int, drop_probs, seeds):
     return g.ravel(), d.ravel(), s.ravel()
 
 
-@functools.partial(jax.jit, static_argnames=("T", "B"))
-def _sweep_compiled(w, src_b, dst_b, valid_b, drop_b, seed_b, *, T, B):
-    """Module-level jit so repeated sweeps with the same shapes/statics hit
-    the compilation cache instead of retracing a fresh closure per call."""
+def _sweep_body(w, src_b, dst_b, valid_b, drop_b, seed_b, *, T, B, backend):
+    """Vmapped scenario batch: the shared traced program of both the
+    single-device and the shard_map-per-device sweep paths."""
     E = src_b.shape[1]
     target = w.mean(axis=0)          # (d,) true average, shared
     w_sum = w.sum(axis=0)
@@ -80,7 +87,7 @@ def _sweep_compiled(w, src_b, dst_b, valid_b, drop_b, seed_b, *, T, B):
 
         def body(state, t):
             mask = step_edge_mask(key, t, E, drop, B)
-            new = sparse_pushsum_step(state, mask, src, dst, valid)
+            new = sparse_pushsum_step(state, mask, src, dst, valid, backend)
             err = jnp.abs(sparse_ratios(new) - target).max()
             return new, err
 
@@ -93,6 +100,36 @@ def _sweep_compiled(w, src_b, dst_b, valid_b, drop_b, seed_b, *, T, B):
     return jax.vmap(single)(src_b, dst_b, valid_b, drop_b, seed_b)
 
 
+# Module-level jit so repeated sweeps with the same shapes/statics hit the
+# compilation cache instead of retracing a fresh closure per call.
+_sweep_compiled = functools.partial(
+    jax.jit, static_argnames=("T", "B", "backend")
+)(_sweep_body)
+
+
+@functools.lru_cache(maxsize=None)
+def _sweep_sharded(mesh: Mesh, data_axis: str, T: int, B: int, backend: str):
+    """Jitted shard_map sweep for one (mesh, axis, statics) combo: the
+    scenario axis of every batched argument is split over ``data_axis``,
+    one contiguous scenario block per device, and each device runs the
+    identical vmapped scan on its block. lru_cache keeps one compiled
+    executable per combo (Mesh is hashable), mirroring ``_sweep_compiled``'s
+    retrace-free behaviour."""
+    from repro.launch import compat
+
+    body = functools.partial(_sweep_body, T=T, B=B, backend=backend)
+    sharded = compat.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(), P(data_axis), P(data_axis), P(data_axis),
+                  P(data_axis), P(data_axis)),
+        out_specs=(P(data_axis), P(data_axis), P(data_axis)),
+        axis_names=frozenset({data_axis}),
+        check_vma=False,
+    )
+    return jax.jit(sharded)
+
+
 def run_pushsum_sweep(
     w: jnp.ndarray,            # (N, d) initial values, shared by scenarios
     el: EdgeList,              # single graph or stacked draws (leading G axis)
@@ -101,6 +138,9 @@ def run_pushsum_sweep(
     drop_probs: Sequence[float] | float = 0.0,
     seeds: Sequence[int] | int = 0,
     B: int = 4,
+    backend: str = "auto",
+    mesh: Mesh | None = None,
+    data_axis: str = "data",
 ) -> PushSumSweepResult:
     """Run the full scenario grid in ONE jitted, vmapped scan.
 
@@ -109,7 +149,15 @@ def run_pushsum_sweep(
     K = G * |drop_probs| * |seeds| scenarios total. Per-round (E,) link
     masks are drawn inside the scan; nothing of size (T, N, N) or (N, N)
     ever exists. Compilation is cached at module level: repeated sweeps
-    with the same array shapes and (T, B) reuse the executable.
+    with the same array shapes and statics reuse the executable.
+
+    ``backend`` selects the per-round delivery lowering
+    (:mod:`repro.kernels.pushsum_edge`; ``"pallas"`` expects dst-sorted
+    edges). With ``mesh`` given, the K scenario axis is sharded over
+    ``mesh``'s ``data_axis`` via ``shard_map`` — K is padded by repeating
+    the last scenario up to a multiple of the axis size (one scenario batch
+    per device; the pad rows are sliced off the result), so grids in the
+    thousands still run as a single program.
     """
     w = jnp.asarray(w)
     src = np.atleast_2d(el.src)      # (G, E)
@@ -117,16 +165,52 @@ def run_pushsum_sweep(
     valid = np.atleast_2d(el.valid)
     G, E = src.shape
     gi, dp, sd = _scenario_grid(G, drop_probs, seeds)
+    K = gi.shape[0]
+
+    if mesh is None:
+        pad = 0
+    else:
+        n_dev = int(mesh.shape[data_axis])
+        pad = (-K) % n_dev
+        if pad:                       # repeat the last scenario to fill
+            fill = np.full(pad, K - 1)
+            gi = np.concatenate([gi, gi[fill]])
+            dp = np.concatenate([dp, dp[fill]])
+            sd = np.concatenate([sd, sd[fill]])
 
     drop_b = jnp.asarray(dp)
     seed_b = jnp.asarray(sd)
-    errs, finals, gaps = _sweep_compiled(
-        w, jnp.asarray(src[gi]), jnp.asarray(dst[gi]),
-        jnp.asarray(valid[gi]), drop_b, seed_b, T=T, B=B,
-    )
+    args = (w, jnp.asarray(src[gi]), jnp.asarray(dst[gi]),
+            jnp.asarray(valid[gi]), drop_b, seed_b)
+    if mesh is None:
+        errs, finals, gaps = _sweep_compiled(*args, T=T, B=B, backend=backend)
+    else:
+        errs, finals, gaps = _sweep_sharded(
+            mesh, data_axis, T, B, backend
+        )(*args)
     return PushSumSweepResult(
-        err=errs, final_ratio=finals, mass_gap=gaps,
-        drop_prob=drop_b, seed=seed_b, graph=jnp.asarray(gi),
+        err=errs[:K], final_ratio=finals[:K], mass_gap=gaps[:K],
+        drop_prob=drop_b[:K], seed=seed_b[:K], graph=jnp.asarray(gi[:K]),
+    )
+
+
+# Compiled Algorithm-2 sweeps, one jitted vmapped scan per
+# (model, topology, F, byz set, Gamma, attack, T) combo. The scan closure
+# returned by make_byzantine_scan is a fresh Python object per call, so
+# wrapping it in jax.jit anew would retrace every time even though the
+# traced program is identical; keying the *jitted callable* on the config
+# fingerprint gives run_byzantine_sweep the same retrace-free repeated-call
+# behaviour as _sweep_compiled. Entries are tiny (a jit wrapper + its
+# executable); simulation studies touch at most a handful of combos.
+_BYZ_COMPILED: dict[tuple, Callable] = {}
+
+
+def _byz_sweep_key(model: SignalModel, cfg: ByzantineConfig, T: int) -> tuple:
+    topo = cfg.topo
+    return (
+        np.asarray(model.tables).tobytes(), model.truth,
+        topo.adj.tobytes(), topo.sizes, topo.offsets, topo.reps,
+        cfg.F, cfg.byz, cfg.gamma_period, cfg.attack, T,
     )
 
 
@@ -143,10 +227,13 @@ def run_byzantine_sweep(
     as one jitted ``vmap`` of the scan built by
     :func:`byzantine.make_byzantine_scan` — results carry a leading seed
     axis: ``r`` is (S, T, N, m, m), ``decisions`` (S, T, N). Attack types
-    swap the traced message function, so they iterate host-side. Unlike
-    :func:`run_pushsum_sweep`, each call retraces (the scan closes over
-    per-config host analysis); amortize by batching all seeds of interest
-    into one call rather than calling per seed.
+    swap the traced message function, so they iterate host-side.
+
+    Repeated calls with the same (model, config, T, attack) and seed-batch
+    shape neither retrace nor re-run the host-side healthy-network
+    analysis: the C-set lattice is memoized in :mod:`repro.core.byzantine`
+    and the jitted scan is reused from ``_BYZ_COMPILED`` (``Attack`` is a
+    frozen dataclass, so the same attack object keys the same entry).
     """
     import dataclasses
 
@@ -155,6 +242,10 @@ def run_byzantine_sweep(
     out: dict[str, ByzantineResult] = {}
     for atk in attacks if attacks is not None else [cfg.attack]:
         c = dataclasses.replace(cfg, attack=atk)
-        run = make_byzantine_scan(model, c, T)
-        out[atk.name] = jax.jit(jax.vmap(run))(keys)
+        cache_key = _byz_sweep_key(model, c, T)
+        fn = _BYZ_COMPILED.get(cache_key)
+        if fn is None:
+            run = make_byzantine_scan(model, c, T)
+            fn = _BYZ_COMPILED[cache_key] = jax.jit(jax.vmap(run))
+        out[atk.name] = fn(keys)
     return out

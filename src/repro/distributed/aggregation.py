@@ -68,6 +68,9 @@ class AggregatorConfig:
     # + Bernoulli extra edges (repro.core.graphs.random_strongly_connected)
     graph_extra_edge_prob: float = 0.25
     graph_seed: int = 0
+    pushsum_backend: str = "auto"   # "auto" | "xla" | "pallas" delivery
+                                    # lowering for the edge-list core (see
+                                    # repro.kernels.pushsum_edge)
     # byzantine knobs
     F: int = 1                      # trim F from each extreme
     use_kernel: bool = False        # Pallas trimmed-mean (TPU runtime)
@@ -204,11 +207,15 @@ def agg_pushsum_sparse(
     its own row of z/m. Deterministically identical inputs mean workers
     agree on the whole consensus state, so the per-worker estimates are the
     true Algorithm 1 iterates on that topology — the training-time testbed
-    for non-ring gossip graphs.
+    for non-ring gossip graphs. The edge index is kept in the sorted-by-dst
+    layout so ``cfg.pushsum_backend="pallas"`` hits the fused kernel's
+    contiguous-run fast path on TPU (``"auto"`` falls back to XLA off-TPU).
     """
     import numpy as np
 
-    from repro.core.graphs import edge_list, random_strongly_connected
+    from repro.core.graphs import (
+        edge_list, random_strongly_connected, sort_by_dst,
+    )
     from repro.core.pushsum import (
         init_sparse_state, sparse_pushsum_step, sparse_ratios, step_edge_mask,
     )
@@ -220,7 +227,7 @@ def agg_pushsum_sparse(
     adj = random_strongly_connected(
         W, cfg.graph_extra_edge_prob, np.random.default_rng(cfg.graph_seed)
     )
-    el = edge_list(adj)
+    el, _, _ = sort_by_dst(edge_list(adj))
     src = jnp.asarray(el.src)
     dst = jnp.asarray(el.dst)
     valid = jnp.asarray(el.valid)
@@ -232,7 +239,9 @@ def agg_pushsum_sparse(
 
         def round_fn(t, state):
             mask = step_edge_mask(key, t, el.E, cfg.drop_prob, cfg.B)
-            return sparse_pushsum_step(state, mask, src, dst, valid)
+            return sparse_pushsum_step(
+                state, mask, src, dst, valid, cfg.pushsum_backend
+            )
 
         final = jax.lax.fori_loop(
             0, cfg.gossip_rounds, round_fn, init_sparse_state(allv, el.E)

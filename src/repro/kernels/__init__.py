@@ -3,6 +3,10 @@
 - ``trimmed_mean`` — the Byzantine filter of Algorithm 2 applied
   coordinate-wise over the worker axis (the paper's scalar-dynamics trick
   vectorized over every gradient coordinate).
+- ``pushsum_edge`` — fused edge-scatter for the sparse robust push-sum
+  core: gather ``sigma[src]``, mask-latch, and the per-receiver increment
+  sum in one streaming pass over a dst-sorted edge index (Algorithm 1's
+  per-round hot path at N ~ 1e5).
 - ``wkv6`` — chunked RWKV6 linear recurrence with data-dependent decay
   (rwkv6-1.6b's training/prefill hot-spot).
 - ``swa`` — flash-decode attention over a sliding-window KV cache
@@ -13,6 +17,7 @@ are validated against their pure-jnp ``ref.py`` oracles via
 ``interpret=True`` on CPU (see tests/test_kernels.py).
 """
 from .trimmed_mean.ops import trimmed_mean, trimmed_mean_pytree
+from .pushsum_edge.ops import edge_scatter
 from .wkv6.ops import wkv6, wkv6_decode_step
 from .swa.ops import attn_decode
 from .swa.prefill import swa_prefill_pallas
@@ -20,6 +25,7 @@ from .swa.prefill import swa_prefill_pallas
 __all__ = [
     "trimmed_mean",
     "trimmed_mean_pytree",
+    "edge_scatter",
     "wkv6",
     "wkv6_decode_step",
     "attn_decode",

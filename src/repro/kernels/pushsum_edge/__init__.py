@@ -1,0 +1,20 @@
+"""Fused edge-scatter kernel for the robust push-sum delivery/integration.
+
+One push-sum round's hot half is, per directed edge e (src -> dst):
+
+    rho_new[e] = sigma[src[e]]  if live[e] else rho[e]     (mask-latch)
+    recv[v]   += rho_new[e] - rho[e]  for v = dst[e]       (integration)
+
+XLA lowers this to a gather plus a generic ``segment_sum`` scatter per
+round; with the edge index pre-sorted by ``dst``
+(:func:`repro.core.graphs.sort_by_dst`) the whole thing is one streaming
+pass over E with contiguous per-receiver segments, which is what the
+Pallas kernel in :mod:`.pushsum_edge` implements. :mod:`.ref` is the
+always-available XLA fallback and the equivalence oracle; :mod:`.ops`
+hosts the ``backend="auto"|"xla"|"pallas"`` dispatch used by
+:func:`repro.core.pushsum.sparse_pushsum_step`.
+"""
+from .ops import edge_scatter, resolve_backend
+from .ref import edge_scatter_ref
+
+__all__ = ["edge_scatter", "edge_scatter_ref", "resolve_backend"]

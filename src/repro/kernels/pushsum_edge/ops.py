@@ -1,0 +1,58 @@
+"""Backend dispatch for the fused push-sum edge scatter.
+
+``edge_scatter(..., backend=...)`` is the single entry point the sparse
+push-sum core calls per round:
+
+``"xla"``     — gather + ``segment_sum`` (:mod:`.ref`); runs anywhere.
+``"pallas"``  — the fused streaming kernel (:mod:`.pushsum_edge`);
+                compiled on TPU, interpreter mode elsewhere (equivalence
+                testing only — interpret mode is not a fast path).
+``"auto"``    — ``"pallas"`` on a TPU default backend, else ``"xla"``.
+
+Resolution is host-side and static (the choice changes the traced program),
+so callers thread ``backend`` through ``static_argnames`` when jitting.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .pushsum_edge import edge_scatter_pallas
+from .ref import edge_scatter_ref
+
+__all__ = ["edge_scatter", "resolve_backend", "BACKENDS"]
+
+BACKENDS = ("auto", "xla", "pallas")
+
+
+def resolve_backend(backend: str) -> str:
+    """Map ``"auto"`` to the platform default; validate explicit choices."""
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    if backend not in ("xla", "pallas"):
+        raise ValueError(
+            f"backend must be one of {BACKENDS}, got {backend!r}"
+        )
+    return backend
+
+
+def edge_scatter(
+    sigma: jnp.ndarray,   # (N, D)
+    rho: jnp.ndarray,     # (E, D)
+    live: jnp.ndarray,    # (E,) bool
+    src: jnp.ndarray,     # (E,) int32
+    dst: jnp.ndarray,     # (E,) int32
+    backend: str = "auto",
+    *,
+    block_e: int = 4096,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused mask-latch + per-receiver increment sum; see package docstring.
+
+    Returns ``(rho_new (E, D), recv (N, D))``.
+    """
+    if resolve_backend(backend) == "xla":
+        return edge_scatter_ref(sigma, rho, live, src, dst)
+    return edge_scatter_pallas(
+        sigma, rho, live, src, dst, block_e=block_e, interpret=interpret
+    )

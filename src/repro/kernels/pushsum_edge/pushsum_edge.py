@@ -1,0 +1,157 @@
+"""Pallas kernel: fused push-sum edge scatter over a dst-sorted edge index.
+
+One call covers the whole delivery + integration half of a robust push-sum
+round (Su '18 Alg. 1 lines 6-11) in a single streaming pass over the edge
+list — gather ``sigma[src]``, latch it into ``rho`` on live edges, and
+accumulate the per-receiver sum of increments — replacing XLA's gather +
+generic scatter lowering of ``jax.ops.segment_sum``.
+
+Design (see /opt/skills/guides/pallas_guide.md)
+-----------------------------------------------
+* Grid: 1-D over edge blocks of ``block_e`` edges. TPU grids execute
+  sequentially on a core, which the kernel exploits: ``recv`` is a full
+  (N, D) VMEM-resident output with a constant index map, zeroed at block 0
+  and accumulated into by every block (the matmul-K-loop accumulator
+  pattern). ``sigma`` (N, D) is likewise resident — at the target workload
+  (N ~ 1e5, D = d+1 with d small) it is a few MB, well under VMEM.
+* Within a block the per-receiver reduction uses the *sorted-run* trick:
+  with edges pre-sorted by ``dst`` (:func:`repro.core.graphs.sort_by_dst`)
+  each receiver's edges form one contiguous run, so a *segmented* scan
+  along the edge axis (log2(block_e) flag-carrying Hillis-Steele steps,
+  pure VPU shift+add) leaves each run's inclusive sum at its last edge and
+  the scatter touches each receiver row exactly once per block:
+  ``recv[v] += seg[end]``. Unique indices are the fast path Mosaic can
+  vectorize — the thing XLA's sorted-scatter lowering never recovers on
+  its own. The scan is segmented rather than a plain cumsum with boundary
+  differences precisely because push-sum's z/m ratio amplifies absolute
+  error by 1/m (m decays geometrically): subtracting two large
+  cross-segment prefixes to recover a small segment sum cancels
+  catastrophically, while segment-local partial sums keep the error at
+  the run's own reduction scale.
+* Correctness does NOT require sortedness: an unsorted index just breaks
+  runs into more fragments, each accumulated with scatter-add semantics.
+  Sorting is purely what collapses the update count to O(distinct dst).
+* A run spanning a block boundary is finished by the next block: the first
+  edge of every block opens a fresh run (``c_prev[0] == 0``), and the
+  trailing partial sum was already flushed by the previous block's
+  ``is_end[-1]`` update, so the two partials add up in ``recv``.
+* Padding edges (to a multiple of ``block_e``) are appended with
+  ``live=False`` and ``dst = N - 1``: their increment is exactly zero, so
+  the only effect is a zero added to the last receiver row.
+
+The feature axis D = d+1 is small for consensus workloads, which
+underutilizes the 128-wide lanes; the streaming axis (edges) carries the
+throughput. ``interpret=None`` auto-selects interpreter mode off-TPU so CPU
+CI validates the identical program (tests/test_pushsum_edge_kernel.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["edge_scatter_pallas"]
+
+
+def _segmented_cumsum(delta, is_first):
+    """Inclusive scan over the edge axis that restarts at run boundaries.
+
+    Flag-carrying Hillis-Steele: at stride s, position i absorbs i-s only
+    if no segment start lies in (i-s, i]; flags OR upward so the check
+    stays O(1) per step. log2(BE) static steps, shift+add only, and every
+    partial sum is segment-local (no cross-segment cancellation).
+    """
+    v, f = delta, is_first
+    n = delta.shape[0]
+    s = 1
+    while s < n:
+        v_prev = jnp.concatenate([jnp.zeros_like(v[:s]), v[:-s]], axis=0)
+        f_prev = jnp.concatenate(
+            [jnp.ones((min(s, n),), jnp.bool_), f[:-s]], axis=0
+        )
+        v = jnp.where(f[:, None], v, v + v_prev)
+        f = f | f_prev
+        s *= 2
+    return v
+
+
+def _kernel(sigma_ref, rho_ref, live_ref, src_ref, dst_ref,
+            rho_out_ref, recv_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _():
+        recv_ref[...] = jnp.zeros_like(recv_ref)
+
+    sigma = sigma_ref[...]                      # (N, D) resident
+    rho = rho_ref[...]                          # (BE, D)
+    live = live_ref[...]                        # (BE,)
+    src = src_ref[...]                          # (BE,)
+    dst = dst_ref[...]                          # (BE,)
+
+    # --- mask-latch: live edges adopt the sender's staged cumulative ---
+    gathered = jnp.take(sigma, src, axis=0)     # (BE, D)
+    rho_new = jnp.where(live[:, None], gathered, rho)
+    rho_out_ref[...] = rho_new
+
+    # --- per-receiver segment sum of increments via sorted runs ---
+    delta = rho_new - rho                       # zero on dead/padding edges
+    change = dst[1:] != dst[:-1]                # (BE-1,) run boundaries
+    one = jnp.ones((1,), jnp.bool_)
+    is_end = jnp.concatenate([change, one])     # last edge of each run
+    is_first = jnp.concatenate([one, change])   # first edge of each run
+    seg = _segmented_cumsum(delta, is_first)    # run-local inclusive sums
+    upd = jnp.where(is_end[:, None], seg, 0.0)
+    recv_ref[...] = recv_ref[...].at[dst].add(upd)
+
+
+@functools.partial(jax.jit, static_argnames=("block_e", "interpret"))
+def edge_scatter_pallas(
+    sigma: jnp.ndarray,   # (N, D) staged cumulative send per node
+    rho: jnp.ndarray,     # (E, D) last heard cumulative per edge
+    live: jnp.ndarray,    # (E,) bool — operational AND valid this round
+    src: jnp.ndarray,     # (E,) int32
+    dst: jnp.ndarray,     # (E,) int32, pre-sorted ascending for the fast path
+    *,
+    block_e: int = 4096,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused edge scatter -> ``(rho_new (E, D), recv (N, D))``.
+
+    Matches :func:`repro.kernels.pushsum_edge.ref.edge_scatter_ref` to fp32
+    reduction order. E is padded to a multiple of ``block_e`` with inert
+    edges; the pad rows are sliced off ``rho_new``.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n, D = sigma.shape
+    E = rho.shape[0]
+    pad = (-E) % block_e
+    if pad:
+        rho = jnp.pad(rho, ((0, pad), (0, 0)))
+        live = jnp.pad(live, (0, pad))                       # False
+        src = jnp.pad(src, (0, pad))                         # node 0
+        dst = jnp.pad(dst, (0, pad), constant_values=n - 1)  # inert target
+    Ep = E + pad
+
+    rho_new, recv = pl.pallas_call(
+        _kernel,
+        grid=(Ep // block_e,),
+        in_specs=[
+            pl.BlockSpec((n, D), lambda i: (0, 0)),          # sigma resident
+            pl.BlockSpec((block_e, D), lambda i: (i, 0)),
+            pl.BlockSpec((block_e,), lambda i: (i,)),
+            pl.BlockSpec((block_e,), lambda i: (i,)),
+            pl.BlockSpec((block_e,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_e, D), lambda i: (i, 0)),
+            pl.BlockSpec((n, D), lambda i: (0, 0)),          # accumulator
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Ep, D), rho.dtype),
+            jax.ShapeDtypeStruct((n, D), sigma.dtype),
+        ],
+        interpret=interpret,
+    )(sigma, rho, live, src, dst)
+    return rho_new[:E], recv

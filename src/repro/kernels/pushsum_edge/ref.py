@@ -1,0 +1,32 @@
+"""Pure-XLA oracle for the fused edge-scatter: gather + where + segment_sum.
+
+This is exactly the lowering the sparse push-sum core shipped before the
+Pallas kernel existed, factored out so both backends share one contract:
+
+    rho_new[e] = sigma[src[e]] if live[e] else rho[e]
+    recv[v]    = sum_{e : dst[e] == v} (rho_new[e] - rho[e])
+
+``sigma`` carries the value columns and the mass column stacked as one
+(N, d+1) matrix (see :func:`repro.core.pushsum.sparse_pushsum_step`), so a
+single segment reduction serves both the z and m recursions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["edge_scatter_ref"]
+
+
+def edge_scatter_ref(
+    sigma: jnp.ndarray,   # (N, D) staged cumulative send per node
+    rho: jnp.ndarray,     # (E, D) last heard cumulative per edge
+    live: jnp.ndarray,    # (E,) bool — operational AND valid this round
+    src: jnp.ndarray,     # (E,) int32
+    dst: jnp.ndarray,     # (E,) int32
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns ``(rho_new (E, D), recv (N, D))``. Any edge order is legal."""
+    n = sigma.shape[0]
+    rho_new = jnp.where(live[:, None], sigma[src], rho)
+    recv = jax.ops.segment_sum(rho_new - rho, dst, num_segments=n)
+    return rho_new, recv
