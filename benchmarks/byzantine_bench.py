@@ -1,21 +1,38 @@
-"""Theorem 3 benchmark: Byzantine-resilient learning, attack x F sweep.
+"""Theorem 3 benchmarks: Byzantine-resilient learning.
 
-Derived metric: fraction of normal agents deciding theta* at T, per attack
-strategy — with the paper's trim filter vs the unfiltered baseline.
+Three claim families:
+ * accuracy — fraction of normal agents deciding theta* at T per attack
+   strategy, with the paper's trim filter vs the unfiltered baseline, plus
+   the pairwise-vs-one-vs-rest ablation (``thm3_*`` rows);
+ * per-step cost of the sparse neighbor-list gossip core at
+   N in {64, 512, 4096} through the ``backend="xla"|"pallas"`` switch
+   (``byzantine_step_*`` rows), against the dense (N, N, m, m) broadcast
+   oracle where it still fits (the speedup is recorded in ``derived``; at
+   N = 4096 the dense path would materialize ~0.6 GB per sort input and is
+   skipped — which is the point of the sparse core);
+ * a (topology x F x seed) grid compiled ONCE as a single vmapped scan
+   (``byzantine_grid_*`` row; :func:`repro.core.sweeps.run_byzantine_grid`).
+
+On CPU the Pallas rows run ``interpret=True`` equivalence mode (tagged
+``mode=interpret``; the perf gate skips them) — the compiled comparison is
+TPU-only, as with the push-sum kernel rows.
 """
 import time
 
+import jax
 import numpy as np
 
 from repro.core.graphs import make_hierarchy
 from repro.core.signals import make_confused_model
 from repro.core.byzantine import (
-    ByzantineConfig, run_byzantine_learning, run_byzantine_learning_ovr,
+    ByzantineConfig, make_byzantine_scan, run_byzantine_learning,
+    run_byzantine_learning_ovr,
 )
+from repro.core.sweeps import run_byzantine_grid
 from repro.core import attacks
 
 
-def rows():
+def _accuracy_rows():
     out = []
     topo = make_hierarchy([7, 7, 7, 7], topology="complete", seed=0)
     model = make_confused_model(N=topo.N, m=3, truth=0, confusion=0.0, seed=1)
@@ -60,4 +77,110 @@ def rows():
         bm = cfg.byz_mask()
         acc = float((dec[~bm] == 1).mean())
         out.append((f"thm3_ablation_{name}", wall, f"normal_acc={acc:.3f}"))
+    return out
+
+
+def _step_setup(N):
+    """N/8 complete 8-agent networks — deg_max stays 7 at every scale."""
+    topo = make_hierarchy([8] * (N // 8), topology="complete", seed=0)
+    model = make_confused_model(N=N, m=3, truth=0, confusion=0.0, seed=1)
+    cfg = ByzantineConfig(topo=topo, F=2, byz=(2, 9), gamma_period=10,
+                          attack=attacks.large_value())
+    return model, cfg
+
+
+def _time_scan(model, cfg, T, **scan_kwargs):
+    run = jax.jit(make_byzantine_scan(model, cfg, T, store="final",
+                                      **scan_kwargs))
+    key = jax.random.PRNGKey(0)
+    t0 = time.perf_counter()
+    jax.block_until_ready(run(key))
+    compile_wall = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    jax.block_until_ready(run(key))
+    return (time.perf_counter() - t0) / T * 1e6, compile_wall
+
+
+def _step_rows(smoke: bool):
+    """byzantine_step_{xla,pallas}_N{64,512,4096} + the dense comparison."""
+    out = []
+    sizes = (64, 512) if smoke else (64, 512, 4096)
+    m = 3
+    for N in sizes:
+        model, cfg = _step_setup(N)
+        dense_bytes = N * N * m * m * 4
+        if N <= 512:
+            dense_us, _ = _time_scan(model, cfg, T=30, core="dense")
+            dense_tag = f"dense_us={dense_us:.1f}"
+        else:
+            # (N, N, m, m) fp32 sort input alone is ~0.6 GB at N=4096:
+            # the dense oracle is exactly what the sparse core retires
+            dense_us = None
+            dense_tag = f"dense=skipped;dense_bytes={dense_bytes:.1e}"
+        xla_us, compile_s = _time_scan(model, cfg, T=30, core="sparse",
+                                       backend="xla")
+        speedup = (f";speedup_vs_dense={dense_us / xla_us:.1f}x"
+                   if dense_us is not None else "")
+        out.append((
+            f"byzantine_step_xla_N{N}", xla_us,
+            f"deg_max=7;F=2;m={m};{dense_tag}{speedup};"
+            f"compile_s={compile_s:.1f}",
+        ))
+        mode = "interpret" if jax.default_backend() != "tpu" else "compiled"
+        T_p = 4 if mode == "interpret" else 30
+        pallas_us, compile_s = _time_scan(model, cfg, T=T_p, core="sparse",
+                                          backend="pallas")
+        out.append((
+            f"byzantine_step_pallas_N{N}", pallas_us,
+            f"deg_max=7;F=2;m={m};mode={mode};compile_s={compile_s:.1f}",
+        ))
+    return out
+
+
+def _grid_row(smoke: bool):
+    """topology x F x seed grid: one trace, one compiled program."""
+    model = make_confused_model(N=15, m=3, truth=0, confusion=0.0, seed=0)
+    atk = attacks.large_value()
+    topos = [make_hierarchy([5, 5, 5], topology="ring+", extra_edge_prob=0.9,
+                            seed=s) for s in range(3)]
+    cfgs = []
+    for topo in topos:
+        cfgs.append(ByzantineConfig(topo=topo, F=0, byz=(), gamma_period=4,
+                                    attack=atk))
+        cfgs.append(ByzantineConfig(topo=topo, F=1, byz=(1,), gamma_period=4,
+                                    attack=atk))
+    seeds = list(range(2 if smoke else 8))
+    T = 50 if smoke else 200
+
+    def go():
+        res = run_byzantine_grid(model, cfgs, T, seeds, store="decisions")
+        jax.block_until_ready(res.decisions)
+        return res
+
+    t0 = time.perf_counter()
+    res = go()
+    compile_wall = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res = go()
+    wall = time.perf_counter() - t0
+    dec = np.asarray(res.decisions)[:, -1]          # (K, N) final decisions
+    byz_cols = np.asarray([list(cfgs[int(c)].byz) for c in res.cfg],
+                          dtype=object)
+    accs = []
+    for k in range(res.K):
+        bm = np.zeros(15, bool)
+        bm[list(byz_cols[k])] = True
+        accs.append(float((dec[k][~bm] == model.truth).mean()))
+    return (
+        f"byzantine_grid_topoxF{res.K}", wall / res.K * 1e6,
+        f"scenarios={res.K};topos=3;F=0|1;seeds={len(seeds)};T={T};"
+        f"single_jit=true;acc_mean={np.mean(accs):.3f};"
+        f"compile_s={compile_wall:.1f}",
+    )
+
+
+def rows(smoke: bool = False):
+    out = [] if smoke else _accuracy_rows()
+    out.extend(_step_rows(smoke))
+    out.append(_grid_row(smoke))
     return out

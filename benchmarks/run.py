@@ -34,7 +34,7 @@ from . import merge_bench_json
 MODULES = [
     ("thm1", consensus_rate),
     ("thm2", social_learning),
-    ("thm3", byzantine_bench),
+    ("byzantine", byzantine_bench),
     ("remark3", gamma_sweep),
     ("aggregators", aggregators_bench),
     ("pushsum_sweep", pushsum_sweep),

@@ -21,6 +21,9 @@ from .graphs import (
     edge_masks,
     sort_by_dst,
     random_strongly_connected_edge_list,
+    NeighborList,
+    neighbor_lists,
+    stack_neighbor_lists,
 )
 from .signals import SignalModel, make_confused_model, check_global_observability
 from .pushsum import (
@@ -39,27 +42,40 @@ from .hps import HPSConfig, hps_fusion, hps_step, run_hps, theorem1_bound
 from .social import run_social_learning, kl_dual_averaging_update
 from .byzantine import (
     ByzantineConfig,
+    ByzRuntime,
+    make_byzantine_runtime,
     make_byzantine_scan,
     run_byzantine_learning,
+    run_byzantine_learning_ovr,
     trimmed_neighbor_mean,
     healthy_networks,
     decide,
 )
-from .sweeps import PushSumSweepResult, run_pushsum_sweep, run_byzantine_sweep
+from .sweeps import (
+    ByzantineGridResult,
+    PushSumSweepResult,
+    run_byzantine_grid,
+    run_byzantine_sweep,
+    run_pushsum_sweep,
+)
 from . import attacks
 
 __all__ = [
     "HierTopology", "make_hierarchy", "link_schedule", "check_assumption3",
     "is_strongly_connected", "random_strongly_connected", "EdgeList",
     "edge_list", "stack_edge_lists", "edge_masks", "sort_by_dst",
-    "random_strongly_connected_edge_list", "SignalModel", "make_confused_model",
+    "random_strongly_connected_edge_list", "NeighborList", "neighbor_lists",
+    "stack_neighbor_lists", "SignalModel", "make_confused_model",
     "check_global_observability", "PushSumState", "pushsum_step", "run_pushsum",
     "mass_invariant", "ratios", "SparsePushSumState", "sparse_pushsum_step",
     "run_pushsum_sparse", "sparse_mass_invariant", "sparse_ratios",
     "HPSConfig", "hps_fusion", "hps_step", "run_hps",
     "theorem1_bound", "run_social_learning", "kl_dual_averaging_update",
-    "ByzantineConfig", "make_byzantine_scan", "run_byzantine_learning",
-    "trimmed_neighbor_mean", "healthy_networks", "decide",
-    "PushSumSweepResult", "run_pushsum_sweep", "run_byzantine_sweep",
+    "ByzantineConfig", "ByzRuntime", "make_byzantine_runtime",
+    "make_byzantine_scan", "run_byzantine_learning",
+    "run_byzantine_learning_ovr", "trimmed_neighbor_mean",
+    "healthy_networks", "decide",
+    "PushSumSweepResult", "ByzantineGridResult", "run_pushsum_sweep",
+    "run_byzantine_sweep", "run_byzantine_grid",
     "attacks",
 ]

@@ -2,12 +2,27 @@
 
 The system adversary (Section II-B) has full knowledge of the system state,
 may collude, and uses *point-to-point* communication: a Byzantine sender may
-transmit different values to different receivers. An attack therefore
-produces a full ``(N_senders, N_receivers, m, m)`` message tensor for the
-compromised rows, plus a per-agent parameter-server reply.
+transmit different values to different receivers.
+
+Two interfaces coexist, keyed to the two gossip cores:
+
+* ``messages(key, t, r) -> (N_senders, N_receivers, m, m)`` — the dense
+  tensor the (N, N)-broadcast oracle consumes. O(N^2) by construction.
+* ``nbr_messages(key, t, r, nbr_idx) -> nbr_idx.shape + r.shape[1:]`` — the
+  sparse form: the value slot ``(j, k)`` of the padded neighbor list
+  receives from sender ``nbr_idx[j, k]``. The sparse Byzantine core only
+  evaluates attacks through this entry, so nothing (N, N, ...) is ever
+  built. For deterministic attacks the two forms agree exactly
+  (``nbr_messages(...)[j, k] == messages(...)[nbr_idx[j, k], j]``), which
+  is what the dense<->sparse equivalence tests lean on; ``random_noise``
+  draws per-slot instead of per-(sender, receiver) — same distribution,
+  different stream. ``r`` may carry any trailing pair shape ((m, m)
+  pairwise, (m,) one-vs-rest); attacks broadcast over it.
 
 All attacks are pure functions of (key, t, r_normal) so they stay inside
-``jax.lax.scan``.
+``jax.lax.scan``. An attack without ``nbr_messages`` still runs on the
+sparse core via a dense-gather fallback (compatibility only — it
+reintroduces the O(N^2) tensor).
 """
 from __future__ import annotations
 
@@ -23,6 +38,10 @@ __all__ = ["Attack", "sign_flip", "large_value", "random_noise", "extreme_pull",
 # messages(key, t, r) -> (N, N, m, m); ps_reply(key, t, r) -> (N, m, m)
 MsgFn = Callable[[jax.Array, jnp.ndarray, jnp.ndarray], jnp.ndarray]
 ReplyFn = Callable[[jax.Array, jnp.ndarray, jnp.ndarray], jnp.ndarray]
+# nbr_messages(key, t, r, nbr_idx) -> nbr_idx.shape + r.shape[1:]
+NbrMsgFn = Callable[
+    [jax.Array, jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,6 +51,7 @@ class Attack:
     name: str
     messages: MsgFn
     ps_reply: ReplyFn
+    nbr_messages: NbrMsgFn | None = None
 
 
 def _broadcast_reply(msg_fn: MsgFn) -> ReplyFn:
@@ -45,6 +65,16 @@ def _broadcast_reply(msg_fn: MsgFn) -> ReplyFn:
     return reply
 
 
+def _broadcast_nbr(val_fn) -> NbrMsgFn:
+    """Sparse form of a broadcast attack: one value, every slot."""
+
+    def nbr_messages(key, t, r, nbr_idx):
+        val = val_fn(key, t, r)                  # r.shape[1:]
+        return jnp.broadcast_to(val, nbr_idx.shape + val.shape)
+
+    return nbr_messages
+
+
 def sign_flip(scale: float = 2.0) -> Attack:
     """Send the negated (scaled) average of the normal agents' states.
 
@@ -52,13 +82,16 @@ def sign_flip(scale: float = 2.0) -> Attack:
     mirror image of the honest average.
     """
 
+    def val(key, t, r):
+        return -scale * r.mean(axis=0)
+
     def messages(key, t, r):
         n = r.shape[0]
-        avg = r.mean(axis=0)  # (m, m)
-        val = -scale * avg
-        return jnp.broadcast_to(val, (n, n) + val.shape)
+        v = val(key, t, r)
+        return jnp.broadcast_to(v, (n, n) + v.shape)
 
-    return Attack("sign_flip", messages, _broadcast_reply(messages))
+    return Attack("sign_flip", messages, _broadcast_reply(messages),
+                  _broadcast_nbr(val))
 
 
 def large_value(magnitude: float = 1e3) -> Attack:
@@ -69,7 +102,11 @@ def large_value(magnitude: float = 1e3) -> Attack:
         val = jnp.full((m, m), magnitude, r.dtype)
         return jnp.broadcast_to(val, (n, n, m, m))
 
-    return Attack("large_value", messages, _broadcast_reply(messages))
+    def nbr_messages(key, t, r, nbr_idx):
+        return jnp.full(nbr_idx.shape + r.shape[1:], magnitude, r.dtype)
+
+    return Attack("large_value", messages, _broadcast_reply(messages),
+                  nbr_messages)
 
 
 def random_noise(scale: float = 50.0) -> Attack:
@@ -80,18 +117,29 @@ def random_noise(scale: float = 50.0) -> Attack:
         k = jax.random.fold_in(key, t)
         return scale * jax.random.normal(k, (n, n, m, m), r.dtype)
 
-    return Attack("random_noise", messages, _broadcast_reply(messages))
+    def nbr_messages(key, t, r, nbr_idx):
+        k = jax.random.fold_in(key, t)
+        return scale * jax.random.normal(
+            k, nbr_idx.shape + r.shape[1:], r.dtype
+        )
+
+    return Attack("random_noise", messages, _broadcast_reply(messages),
+                  nbr_messages)
 
 
 def extreme_pull(offset: float = 10.0) -> Attack:
     """Sit just past the honest extremes to bias the post-trim window."""
 
+    def val(key, t, r):
+        return r.max(axis=0) + offset
+
     def messages(key, t, r):
         n = r.shape[0]
-        hi = r.max(axis=0) + offset  # (m, m)
-        return jnp.broadcast_to(hi, (n, n) + hi.shape)
+        v = val(key, t, r)
+        return jnp.broadcast_to(v, (n, n) + v.shape)
 
-    return Attack("extreme_pull", messages, _broadcast_reply(messages))
+    return Attack("extreme_pull", messages, _broadcast_reply(messages),
+                  _broadcast_nbr(val))
 
 
 def truth_suppression(truth: int, magnitude: float = 1e3) -> Attack:
@@ -99,18 +147,33 @@ def truth_suppression(truth: int, magnitude: float = 1e3) -> Attack:
 
     For every pair (theta*, theta) send -magnitude, for (theta, theta*) send
     +magnitude — i.e. pretend every other hypothesis dominates the truth.
-    The adversary knows theta* (full-knowledge threat model).
+    The adversary knows theta* (full-knowledge threat model). The attack
+    needs the pairwise (m, m) statistic structure; on one-vs-rest dynamics
+    it degrades to silence (zeros), matching the dense lowering's behaviour
+    when the pair axis is squeezed away.
     """
 
-    def messages(key, t, r):
-        n, m = r.shape[0], r.shape[-1]
-        val = jnp.zeros((m, m), r.dtype)
+    def _pair_val(m, dtype):
+        val = jnp.zeros((m, m), dtype)
         val = val.at[truth, :].set(-magnitude)
         val = val.at[:, truth].set(magnitude)
         val = val.at[truth, truth].set(0.0)
-        return jnp.broadcast_to(val, (n, n, m, m))
+        return val
 
-    return Attack("truth_suppression", messages, _broadcast_reply(messages))
+    def messages(key, t, r):
+        n, m = r.shape[0], r.shape[-1]
+        return jnp.broadcast_to(_pair_val(m, r.dtype), (n, n, m, m))
+
+    def nbr_messages(key, t, r, nbr_idx):
+        pair = r.shape[1:]
+        if len(pair) == 2 and pair[0] == pair[1] and pair[0] > truth:
+            val = _pair_val(pair[0], r.dtype)
+        else:
+            val = jnp.zeros(pair, r.dtype)
+        return jnp.broadcast_to(val, nbr_idx.shape + pair)
+
+    return Attack("truth_suppression", messages, _broadcast_reply(messages),
+                  nbr_messages)
 
 
 ATTACKS = {

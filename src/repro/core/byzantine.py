@@ -24,10 +24,29 @@ Mechanics per iteration t:
 
 All pairwise dynamics for all (m x m) ordered pairs run simultaneously as a
 single (N, m, m) tensor program under jax.lax.scan.
+
+Gossip cores
+------------
+``core="sparse"`` (default) runs the trim on the padded neighbor-list layout
+(:class:`repro.core.graphs.NeighborList`): per receiver, gather the deg_max
+in-neighbor statistics, substitute attack values on Byzantine slots, and trim
+via :mod:`repro.kernels.byz_trim` — O(N deg_max m^2 F) per step with nothing
+larger than (N, deg_max, m^2) live. ``core="dense"`` is the seed lowering —
+an (N, N, m, m) message broadcast filtered by :func:`trimmed_neighbor_mean`
+— retained purely as the equivalence oracle for tests. Both cores share one
+scan body (innovation, PS fusion, PRNG streams), so their trajectories agree
+to fp reordering; ``mode="ovr"`` runs the one-vs-rest ablation through the
+same body with pair shape (m,) instead of (m, m).
+
+PRNG streams: each iteration consumes three independent streams (private
+signal, gossip attack, PS fusion), given disjoint fold-in domains
+``t * 3 + stream`` (see :func:`stream_fold`) so no two streams ever share a
+fold-in value over any horizon.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import NamedTuple
 
 import jax
@@ -35,18 +54,40 @@ import jax.numpy as jnp
 import numpy as np
 
 from .attacks import Attack
-from .graphs import HierTopology, check_assumption3
+from .graphs import HierTopology, check_assumption3, neighbor_lists
 from .signals import SignalModel
 
 __all__ = [
     "ByzantineConfig",
     "ByzantineResult",
+    "ByzRuntime",
     "trimmed_neighbor_mean",
+    "make_byzantine_runtime",
     "make_byzantine_scan",
     "run_byzantine_learning",
+    "run_byzantine_learning_ovr",
     "decide",
     "healthy_networks",
+    "stream_fold",
 ]
+
+MODES = ("pairwise", "ovr")
+CORES = ("sparse", "dense")
+STORES = ("trajectory", "decisions", "final")
+
+# Per-iteration PRNG streams. Each gets a disjoint fold-in domain
+# t * N_STREAMS + stream, so e.g. the signal key at t can never collide with
+# the gossip or fusion key of any other iteration (the seed's t / 2t+1 / 2t+2
+# scheme aliased signal keys onto both other streams).
+N_STREAMS = 3
+STREAM_SIGNAL, STREAM_GOSSIP, STREAM_FUSION = range(N_STREAMS)
+
+
+def stream_fold(t, stream: int):
+    """Fold-in value of ``stream`` at iteration ``t`` — injective over
+    (t, stream), which is what keeps the three per-iteration streams
+    non-colliding over any horizon."""
+    return t * N_STREAMS + stream
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,8 +106,17 @@ class ByzantineConfig:
 
 
 class ByzantineResult(NamedTuple):
-    r: jnp.ndarray          # (T, N, m, m) pairwise statistics (normals only valid)
-    decisions: jnp.ndarray  # (T, N) argmax-min decision per agent per step
+    """Scan output; shapes depend on the ``store`` option.
+
+    ``store="trajectory"`` (default): ``r`` (T, N, m, m), ``decisions``
+    (T, N). ``store="decisions"``: ``r`` is the final (N, m, m) only,
+    ``decisions`` still (T, N) — the curve without the O(T N m^2) state.
+    ``store="final"``: both are final-step only, (N, m, m) / (N,).
+    One-vs-rest runs carry pair shape (m, 1) instead of (m, m).
+    """
+
+    r: jnp.ndarray
+    decisions: jnp.ndarray
 
 
 # Host-side analysis lattices. Assumption 3's reduced-graph enumeration is
@@ -158,6 +208,10 @@ def trimmed_neighbor_mean(
     Returns (trimmed_sum, kept_count): sum over received values after
     dropping the F largest and F smallest, and the number kept, per
     receiver — both (N, m, m) / (N, 1, 1)-broadcastable.
+
+    This is the dense O(N^2 m^2 log N) lowering; production paths run the
+    neighbor-list trim in :mod:`repro.kernels.byz_trim` instead, and this
+    stays as the equivalence oracle the sparse core is tested against.
     """
     n = vals.shape[0]
     big = jnp.asarray(jnp.finfo(vals.dtype).max / 4, vals.dtype)
@@ -173,22 +227,36 @@ def trimmed_neighbor_mean(
     return trimmed_sum, kept
 
 
-def make_byzantine_scan(
-    model: SignalModel,
-    cfg: ByzantineConfig,
-    T: int,
-):
-    """Build Algorithm 2's scan for a fixed (model, cfg, T).
+# ---------------------------------------------------------------------------
+# Scan runtime: the per-scenario arrays of one (topology, F, byz set) config
+# ---------------------------------------------------------------------------
 
-    All host-side analysis (healthy-network detection, representative-set
-    index arrays) runs once here; the returned ``run(base_key) ->
-    ByzantineResult`` closure is a pure jax function of the PRNG key, so
-    scenario sweeps can ``jax.vmap`` it over a batch of seeds (see
-    :func:`repro.core.sweeps.run_byzantine_sweep`) and compile one scan for
-    the whole batch.
+class ByzRuntime(NamedTuple):
+    """Everything the scan body reads that can vary per scenario.
+
+    All fields are arrays, so a batch of *compatible* configs — same
+    (N, M, deg_max) after padding — stacks leaf-wise onto one leading
+    scenario axis and rides a single ``jax.vmap``
+    (:func:`repro.core.sweeps.run_byzantine_grid`). ``F`` and ``gamma`` are
+    scalars here precisely so they can be traced per-scenario; the
+    single-config path shadows ``F`` with the static Python int (which is
+    what lets the Pallas trim kernel unroll its extraction loop).
     """
+
+    nbr_idx: jnp.ndarray    # (N, deg_max) int32 in-neighbor sender per slot
+    nbr_valid: jnp.ndarray  # (N, deg_max) bool — False on padding slots
+    byz_mask: jnp.ndarray   # (N,) bool
+    active: jnp.ndarray     # (N,) bool — normal agents inside C networks
+    in_C: jnp.ndarray       # (N,) bool
+    offsets: jnp.ndarray    # (M,) int32 network block starts
+    sizes: jnp.ndarray      # (M,) int32 network block sizes
+    F: jnp.ndarray          # () int32 trim count
+    gamma: jnp.ndarray      # () int32 PS fusion period
+
+
+def _analyze(model: SignalModel, cfg: ByzantineConfig):
+    """Host-side healthy-network analysis shared by every scan builder."""
     topo = cfg.topo
-    N, m = topo.N, model.m
     byz_mask_np = cfg.byz_mask()
     C = healthy_networks(topo, byz_mask_np, cfg.F, model)
     if len(C) < cfg.F + 1:
@@ -201,108 +269,291 @@ def make_byzantine_scan(
     same_net = net_of[:, None] == net_of[None, :]
     gossip_adj = topo.adj & same_net & in_C[None, :]   # receivers in C
     active = in_C & ~byz_mask_np                        # normal agents that gossip
+    return C, in_C, gossip_adj, active, byz_mask_np
 
-    adj_j = jnp.asarray(gossip_adj)
-    byz_mask = jnp.asarray(byz_mask_np)
-    active_j = jnp.asarray(active)
-    in_C_j = jnp.asarray(in_C)
-    net_of_j = jnp.asarray(net_of, dtype=jnp.int32)
 
+def make_byzantine_runtime(
+    model: SignalModel,
+    cfg: ByzantineConfig,
+    deg_max: int | None = None,
+):
+    """Host-side setup of one config -> ``(runtime, extra_reps, n_reps,
+    gossip_adj)``.
+
+    ``extra_reps`` is ``None`` when the all-networks representative rule
+    applies (M >= 2F+1: one rep per network); otherwise it carries the
+    static index arrays of the M < 2F+1 branch (reps from every C network
+    plus uniform extras from outside C). ``gossip_adj`` is the dense (N, N)
+    intra-C adjacency, consumed only by the ``core="dense"`` oracle.
+    """
+    C, in_C, gossip_adj, active, byz_mask_np = _analyze(model, cfg)
+    topo = cfg.topo
+    nl = neighbor_lists(gossip_adj, deg_max=deg_max)
     use_all_nets = topo.M >= 2 * cfg.F + 1
-    n_reps = topo.M if use_all_nets else 2 * cfg.F + 1
-    sizes = jnp.asarray(topo.sizes, dtype=jnp.int32)
-    offsets = jnp.asarray(topo.offsets, dtype=jnp.int32)
-    # static host-side index arrays for the M < 2F+1 branch
-    C_arr = np.asarray(C, dtype=np.int32)
     non_C_agents = np.nonzero(~in_C)[0].astype(np.int32)
     if not use_all_nets and len(non_C_agents) == 0:
         # degenerate: every network is healthy — query one rep per network
-        use_all_nets, n_reps = True, topo.M
+        use_all_nets = True
+    n_reps = topo.M if use_all_nets else 2 * cfg.F + 1
+    extra_reps = None if use_all_nets else (
+        tuple(int(c) for c in C), tuple(int(a) for a in non_C_agents), n_reps
+    )
+    rt = ByzRuntime(
+        nbr_idx=jnp.asarray(nl.idx),
+        nbr_valid=jnp.asarray(nl.valid),
+        byz_mask=jnp.asarray(byz_mask_np),
+        active=jnp.asarray(active),
+        in_C=jnp.asarray(in_C),
+        offsets=jnp.asarray(topo.offsets, dtype=jnp.int32),
+        sizes=jnp.asarray(topo.sizes, dtype=jnp.int32),
+        F=jnp.asarray(cfg.F, dtype=jnp.int32),
+        gamma=jnp.asarray(cfg.gamma_period, dtype=jnp.int32),
+    )
+    return rt, extra_reps, n_reps, gossip_adj
 
-    log_tables = model.log_tables().astype(jnp.float32)
-    truth_probs = model.tables[:, model.truth, :].astype(jnp.float32)
-    def run(base_key: jnp.ndarray) -> ByzantineResult:
-        def sample_llr(t):
-            """One private signal per agent -> per-pair LLR increment (N, m, m)."""
-            key = jax.random.fold_in(base_key, t)
-            u = jax.random.uniform(key, (N,))
-            cdf = jnp.cumsum(truth_probs, axis=-1)
-            sig = (u[:, None] > cdf).sum(axis=-1)
-            ll = jnp.take_along_axis(
-                log_tables, sig[:, None, None].astype(jnp.int32), axis=2
-            )[:, :, 0]                                   # (N, m)
-            return ll[:, :, None] - ll[:, None, :]       # (N, m, m) antisymmetric
 
-        def select_reps(key):
-            """Random representative selection for a fusion round -> (n_reps,) idx."""
-            if use_all_nets:
-                ks = jax.random.split(key, topo.M)
-                picks = [
-                    offsets[i] + jax.random.randint(ks[i], (), 0, sizes[i])
-                    for i in range(topo.M)
-                ]
-                return jnp.stack(picks)
-            # one rep from each network in C + (2F+1-|C|) uniform from outside C
-            ks = jax.random.split(key, len(C_arr) + 1)
-            picks = [
-                offsets[int(ci)] + jax.random.randint(ks[k], (), 0, sizes[int(ci)])
-                for k, ci in enumerate(C_arr)
-            ]
-            extra = jax.random.choice(
-                ks[-1], jnp.asarray(non_C_agents),
-                shape=(n_reps - len(C_arr),), replace=False,
-            )
-            return jnp.concatenate([jnp.stack(picks), extra])
+# ---------------------------------------------------------------------------
+# Gossip lowerings (Alg. 2 lines 6-9)
+# ---------------------------------------------------------------------------
 
-        def body(carry, t):
-            r, cum_llr = carry
-            key = jax.random.fold_in(base_key, t * 2 + 1)
+def _sparse_gossip(key, t, r, rt: ByzRuntime, F, *, attack: Attack,
+                   mode: str, backend: str):
+    """Neighbor-list trim-gather -> (trimmed_sum (N, *pair), kept (N,))."""
+    from repro.kernels.byz_trim import trim_gather_pairs
 
-            # ---- innovation accumulator (cumulative LLR of all signals so far)
-            cum_llr = cum_llr + sample_llr(t)
-
-            # ---- intra-C gossip with trimming (lines 6-9)
-            honest_msgs = jnp.broadcast_to(r[:, None], (N, N, m, m))
-            byz_msgs = cfg.attack.messages(key, t, r)
-            msgs = jnp.where(byz_mask[:, None, None, None], byz_msgs, honest_msgs)
-            tsum, kept = trimmed_neighbor_mean(msgs, adj_j, cfg.F)
-            r_gossip = (tsum + r) / (kept[:, None, None] + 1.0) + cum_llr
-            r_new = jnp.where(active_j[:, None, None], r_gossip, r)
-
-            # ---- PS fusion every Γ (lines 10-22)
-            def fuse(r_in):
-                kk = jax.random.fold_in(base_key, t * 2 + 2)
-                reps = select_reps(kk)                            # (n_reps,)
-                rep_vals = r_in[reps]                             # (n_reps, m, m)
-                byz_replies = cfg.attack.ps_reply(kk, t, r_in)    # (N, m, m)
-                rep_vals = jnp.where(
-                    byz_mask[reps][:, None, None], byz_replies[reps], rep_vals
-                )
-                s = jnp.sort(rep_vals, axis=0)
-                keep = (jnp.arange(n_reps) >= cfg.F) & (
-                    jnp.arange(n_reps) < n_reps - cfg.F
-                )
-                w = (s * keep[:, None, None]).sum(0) / keep.sum()
-                # queried reps outside C adopt w_tilde (line 20-22)
-                adopt = jnp.zeros((N,), bool).at[reps].set(True) & (~in_C_j)
-                return jnp.where(adopt[:, None, None], w[None], r_in)
-
-            is_fusion = (t + 1) % cfg.gamma_period == 0
-            r_new = jax.lax.cond(is_fusion, fuse, lambda x: x, r_new)
-
-            # Byzantine agents' own state is meaningless; keep it at 0.
-            r_new = jnp.where(byz_mask[:, None, None], 0.0, r_new)
-
-            dec = decide(r_new)
-            return (r_new, cum_llr), (r_new, dec)
-
-        r0 = jnp.zeros((N, m, m), jnp.float32)
-        cum0 = jnp.zeros((N, m, m), jnp.float32)
-        (_, _), (r_traj, decisions) = jax.lax.scan(
-            body, (r0, cum0), jnp.arange(T, dtype=jnp.uint32)
+    n = r.shape[0]
+    pair = r.shape[1:]
+    if attack.nbr_messages is not None:
+        bmsg = attack.nbr_messages(key, t, r, rt.nbr_idx).astype(r.dtype)
+    else:
+        # compatibility fallback for attacks without a sparse form: build
+        # the dense point-to-point tensor and gather the needed slots —
+        # correct, but reintroduces the O(N^2) intermediate
+        full = attack.messages(
+            key, t, r if mode == "pairwise" else r[:, :, None]
         )
-        return ByzantineResult(r=r_traj, decisions=decisions)
+        if mode == "ovr":
+            full = full[..., 0]
+        picked = full[rt.nbr_idx, jnp.arange(n)[:, None]]
+        bmsg = jnp.broadcast_to(
+            picked, rt.nbr_idx.shape + pair
+        ).astype(r.dtype)
+    byz_nbr = rt.byz_mask[rt.nbr_idx]
+    return trim_gather_pairs(
+        r, rt.nbr_idx, rt.nbr_valid, bmsg, byz_nbr, F, backend
+    )
 
+
+def _dense_gossip(key, t, r, rt: ByzRuntime, F, *, attack: Attack,
+                  mode: str, adj: jnp.ndarray):
+    """(N, N) broadcast + sort oracle -> (trimmed_sum, kept)."""
+    n = r.shape[0]
+    pair = r.shape[1:]
+    honest = jnp.broadcast_to(r[:, None], (n, n) + pair)
+    if mode == "pairwise":
+        byz = attack.messages(key, t, r)
+    else:
+        byz = attack.messages(key, t, r[:, :, None])[..., 0]
+    sender = (slice(None), None) + (None,) * len(pair)
+    msgs = jnp.where(rt.byz_mask[sender], byz, honest)
+    if mode == "pairwise":
+        return trimmed_neighbor_mean(msgs, adj, F)
+    tsum, kept = trimmed_neighbor_mean(msgs[..., None], adj, F)
+    return tsum[..., 0], kept
+
+
+# ---------------------------------------------------------------------------
+# PS fusion (Alg. 2 lines 10-22)
+# ---------------------------------------------------------------------------
+
+def _select_reps(key, rt: ByzRuntime, extra_reps):
+    """Random representative selection for a fusion round -> (n_reps,) idx."""
+    M = rt.offsets.shape[0]
+    if extra_reps is None:
+        ks = jax.random.split(key, M)
+        rint = jax.vmap(lambda k, s: jax.random.randint(k, (), 0, s))
+        return (rt.offsets + rint(ks, rt.sizes)).astype(jnp.int32)
+    # one rep from each network in C + (2F+1-|C|) uniform from outside C
+    C_arr, non_C, n_reps = extra_reps
+    ks = jax.random.split(key, len(C_arr) + 1)
+    picks = [
+        rt.offsets[ci] + jax.random.randint(ks[k], (), 0, rt.sizes[ci])
+        for k, ci in enumerate(C_arr)
+    ]
+    extra = jax.random.choice(
+        ks[-1], jnp.asarray(non_C, dtype=jnp.int32),
+        shape=(n_reps - len(C_arr),), replace=False,
+    )
+    return jnp.concatenate([jnp.stack(picks), extra]).astype(jnp.int32)
+
+
+def _fusion(key, t, r_in, rt: ByzRuntime, F, *, n_reps: int, extra_reps,
+            attack: Attack):
+    pair = r_in.shape[1:]
+    sl = (slice(None),) + (None,) * len(pair)
+    reps = _select_reps(key, rt, extra_reps)              # (n_reps,)
+    rep_vals = r_in[reps]                                 # (n_reps, *pair)
+    if attack.nbr_messages is not None:
+        reply = attack.nbr_messages(
+            key, t, r_in, reps[None, :]
+        )[0].astype(r_in.dtype)
+    elif len(pair) == 2:
+        reply = attack.ps_reply(key, t, r_in)[reps]
+    else:
+        reply = rep_vals        # no sparse reply defined: state is replayed
+    rep_vals = jnp.where(rt.byz_mask[reps][sl], reply, rep_vals)
+    s = jnp.sort(rep_vals, axis=0)
+    ar = jnp.arange(n_reps)
+    keep = (ar >= F) & (ar < n_reps - F)
+    w = (s * keep[sl]).sum(0) / keep.sum()
+    # queried reps outside C adopt w_tilde (lines 20-22)
+    adopt = jnp.zeros((r_in.shape[0],), bool).at[reps].set(True) & (~rt.in_C)
+    return jnp.where(adopt[sl], w[None], r_in)
+
+
+# ---------------------------------------------------------------------------
+# The shared scan body
+# ---------------------------------------------------------------------------
+
+def _scan_core(
+    base_key: jnp.ndarray,
+    rt: ByzRuntime,
+    *,
+    gossip,                 # gossip(key, t, r, rt, F) -> (tsum, kept)
+    log_tables: jnp.ndarray,
+    truth_probs: jnp.ndarray,
+    T: int,
+    mode: str,
+    attack: Attack,
+    store: str,
+    static_F: int | None,
+    extra_reps,
+    n_reps: int,
+) -> ByzantineResult:
+    """Algorithm 2's scan, parameterized over the gossip lowering and the
+    per-scenario runtime arrays (vmappable for batched grids)."""
+    N = rt.byz_mask.shape[0]
+    m = log_tables.shape[1]
+    pair = (m, m) if mode == "pairwise" else (m,)
+    sl = (slice(None),) + (None,) * len(pair)
+    F = static_F if static_F is not None else rt.F
+    cdf = jnp.cumsum(truth_probs, axis=-1)
+    eye = jnp.eye(m, dtype=bool)
+
+    def innovation(t):
+        """One private signal per agent -> per-pair statistic increment."""
+        key = jax.random.fold_in(base_key, stream_fold(t, STREAM_SIGNAL))
+        u = jax.random.uniform(key, (N,))
+        sig = (u[:, None] > cdf).sum(axis=-1)
+        ll = jnp.take_along_axis(
+            log_tables, sig[:, None, None].astype(jnp.int32), axis=2
+        )[:, :, 0]                                   # (N, m)
+        if mode == "pairwise":
+            return ll[:, :, None] - ll[:, None, :]   # (N, m, m) antisymmetric
+        rest = jnp.where(eye[None], -jnp.inf, ll[:, None, :])
+        return ll - rest.max(axis=-1)                # (N, m) one-vs-rest
+
+    def body(carry, t):
+        r, cum_llr = carry
+
+        # ---- innovation accumulator (cumulative LLR of all signals so far)
+        cum_llr = cum_llr + innovation(t)
+
+        # ---- intra-C gossip with trimming (lines 6-9)
+        gk = jax.random.fold_in(base_key, stream_fold(t, STREAM_GOSSIP))
+        tsum, kept = gossip(gk, t, r, rt, F)
+        r_gossip = (tsum + r) / (kept[sl] + 1.0) + cum_llr
+        r_new = jnp.where(rt.active[sl], r_gossip, r)
+
+        # ---- PS fusion every Γ (lines 10-22)
+        def fuse(r_in):
+            fk = jax.random.fold_in(base_key, stream_fold(t, STREAM_FUSION))
+            return _fusion(fk, t, r_in, rt, F, n_reps=n_reps,
+                           extra_reps=extra_reps, attack=attack)
+
+        is_fusion = (t + 1) % rt.gamma.astype(t.dtype) == 0
+        r_new = jax.lax.cond(is_fusion, fuse, lambda x: x, r_new)
+
+        # Byzantine agents' own state is meaningless; keep it at 0.
+        r_new = jnp.where(rt.byz_mask[sl], 0.0, r_new)
+
+        dec = decide(r_new) if mode == "pairwise" else r_new.argmax(axis=-1)
+        if store == "trajectory":
+            ys = (r_new, dec)
+        elif store == "decisions":
+            ys = dec
+        else:
+            ys = None
+        return (r_new, cum_llr), ys
+
+    zeros = jnp.zeros((N,) + pair, jnp.float32)
+    (r_fin, _), ys = jax.lax.scan(
+        body, (zeros, zeros), jnp.arange(T, dtype=jnp.uint32)
+    )
+    tail = (lambda x: x[..., None]) if mode == "ovr" else (lambda x: x)
+    if store == "trajectory":
+        return ByzantineResult(r=tail(ys[0]), decisions=ys[1])
+    if store == "decisions":
+        return ByzantineResult(r=tail(r_fin), decisions=ys)
+    dec_fin = decide(r_fin) if mode == "pairwise" else r_fin.argmax(axis=-1)
+    return ByzantineResult(r=tail(r_fin), decisions=dec_fin)
+
+
+def make_byzantine_scan(
+    model: SignalModel,
+    cfg: ByzantineConfig,
+    T: int,
+    *,
+    mode: str = "pairwise",
+    core: str = "sparse",
+    backend: str = "auto",
+    store: str = "trajectory",
+):
+    """Build Algorithm 2's scan for a fixed (model, cfg, T).
+
+    All host-side analysis (healthy-network detection, neighbor-list
+    construction, representative-set index arrays) runs once here; the
+    returned ``run(base_key) -> ByzantineResult`` closure is a pure jax
+    function of the PRNG key, so scenario sweeps can ``jax.vmap`` it over a
+    batch of seeds (see :func:`repro.core.sweeps.run_byzantine_sweep`) and
+    compile one scan for the whole batch.
+
+    ``mode`` selects pairwise (m, m) dynamics or the one-vs-rest (m,)
+    ablation; ``core`` the sparse neighbor-list trim (production) or the
+    dense broadcast oracle; ``backend`` the sparse trim lowering
+    (:mod:`repro.kernels.byz_trim`); ``store`` what the scan materializes
+    (see :class:`ByzantineResult`).
+    """
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    if core not in CORES:
+        raise ValueError(f"core must be one of {CORES}, got {core!r}")
+    if store not in STORES:
+        raise ValueError(f"store must be one of {STORES}, got {store!r}")
+    rt, extra_reps, n_reps, gossip_adj = make_byzantine_runtime(model, cfg)
+    if core == "sparse":
+        gossip = functools.partial(
+            _sparse_gossip, attack=cfg.attack, mode=mode, backend=backend
+        )
+    else:
+        gossip = functools.partial(
+            _dense_gossip, attack=cfg.attack, mode=mode,
+            adj=jnp.asarray(gossip_adj),
+        )
+    run = functools.partial(
+        _scan_core,
+        rt=rt,
+        gossip=gossip,
+        log_tables=model.log_tables().astype(jnp.float32),
+        truth_probs=model.tables[:, model.truth, :].astype(jnp.float32),
+        T=T,
+        mode=mode,
+        attack=cfg.attack,
+        store=store,
+        static_F=cfg.F,
+        extra_reps=extra_reps,
+        n_reps=n_reps,
+    )
     return run
 
 
@@ -311,9 +562,16 @@ def run_byzantine_learning(
     cfg: ByzantineConfig,
     T: int,
     seed: int = 0,
+    **scan_kwargs,
 ) -> ByzantineResult:
-    """Run Algorithm 2 for T iterations (single scenario)."""
-    return make_byzantine_scan(model, cfg, T)(jax.random.PRNGKey(seed))
+    """Run Algorithm 2 for T iterations (single scenario).
+
+    Keyword arguments (``mode``, ``core``, ``backend``, ``store``) pass
+    through to :func:`make_byzantine_scan`.
+    """
+    return make_byzantine_scan(model, cfg, T, **scan_kwargs)(
+        jax.random.PRNGKey(seed)
+    )
 
 
 def run_byzantine_learning_ovr(
@@ -321,6 +579,7 @@ def run_byzantine_learning_ovr(
     cfg: ByzantineConfig,
     T: int,
     seed: int = 0,
+    **scan_kwargs,
 ) -> ByzantineResult:
     """One-vs-rest variant of Algorithm 2 (extension; DESIGN.md §8).
 
@@ -334,86 +593,8 @@ def run_byzantine_learning_ovr(
 
     Returns a ByzantineResult whose ``r`` has shape (T, N, m, 1).
     """
-    topo = cfg.topo
-    N, m = topo.N, model.m
-    byz_mask_np = cfg.byz_mask()
-    C = healthy_networks(topo, byz_mask_np, cfg.F, model)
-    if len(C) < cfg.F + 1:
-        raise ValueError(
-            f"Assumption 5 violated: |C|={len(C)} < F+1={cfg.F + 1}"
-        )
-    net_of = topo.network_of()
-    in_C = np.isin(net_of, C)
-    same_net = net_of[:, None] == net_of[None, :]
-    gossip_adj = topo.adj & same_net & in_C[None, :]
-    active = in_C & ~byz_mask_np
-
-    adj_j = jnp.asarray(gossip_adj)
-    byz_mask = jnp.asarray(byz_mask_np)
-    active_j = jnp.asarray(active)
-    in_C_j = jnp.asarray(in_C)
-
-    n_reps = topo.M  # M >= 2F+1 assumed for the ablation
-    sizes = jnp.asarray(topo.sizes, dtype=jnp.int32)
-    offsets = jnp.asarray(topo.offsets, dtype=jnp.int32)
-
-    log_tables = model.log_tables().astype(jnp.float32)
-    truth_probs = model.tables[:, model.truth, :].astype(jnp.float32)
-    base_key = jax.random.PRNGKey(seed)
-
-    def sample_ovr(t):
-        key = jax.random.fold_in(base_key, t)
-        u = jax.random.uniform(key, (N,))
-        cdf = jnp.cumsum(truth_probs, axis=-1)
-        sig = (u[:, None] > cdf).sum(axis=-1)
-        ll = jnp.take_along_axis(
-            log_tables, sig[:, None, None].astype(jnp.int32), axis=2
-        )[:, :, 0]                                   # (N, m)
-        rest = jnp.where(jnp.eye(m, dtype=bool)[None], -jnp.inf, ll[:, None, :])
-        return ll - rest.max(axis=-1)                 # (N, m) one-vs-rest
-
-    def body(carry, t):
-        r, cum = carry
-        key = jax.random.fold_in(base_key, t * 2 + 1)
-        cum = cum + sample_ovr(t)
-
-        honest = jnp.broadcast_to(r[:, None], (N, N, m))
-        byz_full = cfg.attack.messages(key, t, r[:, :, None])[..., 0]
-        msgs = jnp.where(byz_mask[:, None, None], byz_full, honest)
-        tsum, kept = trimmed_neighbor_mean(
-            msgs[..., None], adj_j, cfg.F
-        )
-        r_gossip = (tsum[..., 0] + r) / (kept[:, None] + 1.0) + cum
-        r_new = jnp.where(active_j[:, None], r_gossip, r)
-
-        def fuse(r_in):
-            kk = jax.random.fold_in(base_key, t * 2 + 2)
-            ks = jax.random.split(kk, topo.M)
-            reps = jnp.stack([
-                offsets[i] + jax.random.randint(ks[i], (), 0, sizes[i])
-                for i in range(topo.M)
-            ])
-            rep_vals = r_in[reps]
-            s = jnp.sort(rep_vals, axis=0)
-            keep = (jnp.arange(n_reps) >= cfg.F) & (
-                jnp.arange(n_reps) < n_reps - cfg.F
-            )
-            w = (s * keep[:, None]).sum(0) / keep.sum()
-            adopt = jnp.zeros((N,), bool).at[reps].set(True) & (~in_C_j)
-            return jnp.where(adopt[:, None], w[None], r_in)
-
-        r_new = jax.lax.cond((t + 1) % cfg.gamma_period == 0, fuse,
-                             lambda x: x, r_new)
-        r_new = jnp.where(byz_mask[:, None], 0.0, r_new)
-        dec = r_new.argmax(axis=-1)
-        return (r_new, cum), (r_new[..., None], dec)
-
-    r0 = jnp.zeros((N, m), jnp.float32)
-    (_, _), (r_traj, decisions) = jax.lax.scan(
-        body, (r0, jnp.zeros((N, m), jnp.float32)),
-        jnp.arange(T, dtype=jnp.uint32),
-    )
-    return ByzantineResult(r=r_traj, decisions=decisions)
+    scan_kwargs.setdefault("mode", "ovr")
+    return run_byzantine_learning(model, cfg, T, seed, **scan_kwargs)
 
 
 def decide(r: jnp.ndarray) -> jnp.ndarray:

@@ -42,6 +42,9 @@ __all__ = [
     "edge_masks",
     "sort_by_dst",
     "random_strongly_connected_edge_list",
+    "NeighborList",
+    "neighbor_lists",
+    "stack_neighbor_lists",
 ]
 
 
@@ -559,6 +562,96 @@ def edge_masks(masks: np.ndarray, el: EdgeList) -> np.ndarray:
     el._require_single("edge_masks()")
     masks = np.asarray(masks)
     return masks[:, el.src, el.dst] & el.valid[None, :]
+
+
+# ---------------------------------------------------------------------------
+# Padded neighbor lists (receiver-major sparse view)
+# ---------------------------------------------------------------------------
+#
+# The Byzantine gossip core (:mod:`repro.core.byzantine`) trims per *receiver*
+# over the set of in-neighbor values, so its natural sparse layout is
+# receiver-major: one row of in-neighbor indices per agent, padded to the
+# maximum in-degree. An :class:`EdgeList` is the edge-major dual used by
+# push-sum's per-link state; a :class:`NeighborList` has no per-edge state at
+# all — it is a pure gather index consumed by the trim-gather kernel
+# (:mod:`repro.kernels.byz_trim`).
+
+@dataclasses.dataclass(frozen=True)
+class NeighborList:
+    """Padded in-neighbor lists: slot ``(j, k)`` is the k-th in-neighbor of j.
+
+    ``idx[j, k]`` is a *sender* index (``adj[idx[j, k], j]`` is True for
+    valid slots); rows are padded to a common ``deg_max`` with ``idx = 0``,
+    ``valid = False`` slots, which consumers mask out before trimming.
+    Batched/stacked lists (see :func:`stack_neighbor_lists`) carry a leading
+    scenario axis on ``idx``/``valid`` so topology draws with different
+    degree profiles can ride one ``jax.vmap`` axis.
+    """
+
+    idx: np.ndarray    # (N, deg_max) int32 sender per slot, 0 on padding
+    valid: np.ndarray  # (N, deg_max) bool — False on padding slots
+    n: int             # number of nodes
+
+    @property
+    def deg_max(self) -> int:
+        """Padded slot count — last axis, correct for single and batched."""
+        return int(self.idx.shape[-1])
+
+    @property
+    def is_batched(self) -> bool:
+        return self.idx.ndim == 3
+
+    def in_degree(self) -> np.ndarray:
+        """In-degree per receiver over valid slots (the trim's ``d_j``)."""
+        return self.valid.sum(axis=-1).astype(np.int32)
+
+
+def neighbor_lists(
+    topo_or_adj, deg_max: int | None = None, shuffle_seed: int | None = None
+) -> NeighborList:
+    """Dense (N, N) bool adjacency (or :class:`HierTopology`) -> padded
+    in-neighbor lists.
+
+    Slots are emitted in ascending sender order; ``shuffle_seed`` permutes
+    each row's valid slots instead (slot order is irrelevant to trimming —
+    the equivalence tests exercise both). ``deg_max`` pads beyond the actual
+    maximum in-degree, e.g. to align scenario batches.
+    """
+    adj = topo_or_adj.adj if isinstance(topo_or_adj, HierTopology) else topo_or_adj
+    adj = np.asarray(adj, dtype=bool)
+    n = adj.shape[0]
+    degs = adj.sum(axis=0)
+    dm = int(degs.max()) if degs.size else 0
+    if deg_max is not None:
+        if deg_max < dm:
+            raise ValueError(f"deg_max={deg_max} < actual max in-degree {dm}")
+        dm = deg_max
+    dm = max(dm, 1)  # keep the slot axis non-empty for edgeless graphs
+    rng = None if shuffle_seed is None else np.random.default_rng(shuffle_seed)
+    idx = np.zeros((n, dm), dtype=np.int32)
+    valid = np.zeros((n, dm), dtype=bool)
+    for j in range(n):
+        nb = np.nonzero(adj[:, j])[0]
+        if rng is not None:
+            nb = rng.permutation(nb)
+        idx[j, : nb.shape[0]] = nb
+        valid[j, : nb.shape[0]] = True
+    return NeighborList(idx=idx, valid=valid, n=n)
+
+
+def stack_neighbor_lists(nls: Sequence[NeighborList]) -> NeighborList:
+    """Batch neighbor lists onto a leading scenario axis, padded to the
+    widest ``deg_max``; ``n`` must agree across entries."""
+    n = nls[0].n
+    if any(nl.n != n for nl in nls):
+        raise ValueError("all neighbor lists must have the same node count")
+    dm = max(nl.deg_max for nl in nls)
+    idx = np.zeros((len(nls), n, dm), dtype=np.int32)
+    valid = np.zeros((len(nls), n, dm), dtype=bool)
+    for g, nl in enumerate(nls):
+        idx[g, :, : nl.deg_max] = nl.idx
+        valid[g, :, : nl.deg_max] = nl.valid
+    return NeighborList(idx=idx, valid=valid, n=n)
 
 
 # ---------------------------------------------------------------------------

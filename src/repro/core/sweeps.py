@@ -21,11 +21,24 @@ Two engines:
   valued), so types iterate host-side while seeds ride the vmap axis; the
   compiled scan per (model, config, T, attack) is cached module-side so
   repeated calls with the same shapes/config never retrace.
+* :func:`run_byzantine_grid` — batched (topology, F) x seed grids on the
+  sparse neighbor-list core: compatible configs (same N, M, m; neighbor
+  lists padded to a common deg_max) stack leaf-wise into one
+  :class:`repro.core.byzantine.ByzRuntime` batch and the whole grid runs as
+  ONE vmapped scan — heterogeneous F rides the scenario axis as a traced
+  scalar through the sort-based trim. Pass ``mesh=`` to shard the scenario
+  axis like :func:`run_pushsum_sweep`.
+
+Compiled-executable caches are LRU-bounded (:class:`_LRUCache`): long
+parameter studies cycle through many config fingerprints, and an unbounded
+dict would pin every retired executable for the process lifetime.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Callable, NamedTuple, Sequence
+from collections import OrderedDict
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +46,15 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from .attacks import Attack
-from .byzantine import ByzantineConfig, ByzantineResult, make_byzantine_scan
+from .byzantine import (
+    ByzantineConfig,
+    ByzantineResult,
+    ByzRuntime,
+    _scan_core,
+    _sparse_gossip,
+    make_byzantine_runtime,
+    make_byzantine_scan,
+)
 from .graphs import EdgeList
 from .pushsum import (
     init_sparse_state,
@@ -46,9 +67,43 @@ from .signals import SignalModel
 
 __all__ = [
     "PushSumSweepResult",
+    "ByzantineGridResult",
     "run_pushsum_sweep",
     "run_byzantine_sweep",
+    "run_byzantine_grid",
 ]
+
+
+class _LRUCache(OrderedDict):
+    """Bounded mapping with least-recently-used eviction.
+
+    Used for the compiled-scan caches below: entries are jit wrappers plus
+    their executables, keyed on config fingerprints. Reads refresh recency;
+    inserting beyond ``maxsize`` drops the stalest entry, so a long
+    parameter study holds at most ``maxsize`` executables at a time.
+    """
+
+    def __init__(self, maxsize: int):
+        super().__init__()
+        self.maxsize = maxsize
+
+    def __getitem__(self, key):
+        val = super().__getitem__(key)
+        self.move_to_end(key)
+        return val
+
+    def get(self, key, default=None):
+        if key in self:
+            return self[key]
+        return default
+
+    def __setitem__(self, key, value):
+        super().__setitem__(key, value)
+        self.move_to_end(key)
+        while len(self) > self.maxsize:
+            # not popitem(): its C path re-enters the recency-tracking
+            # __getitem__ on the half-unlinked entry
+            del self[next(iter(self))]
 
 
 class PushSumSweepResult(NamedTuple):
@@ -195,22 +250,29 @@ def run_pushsum_sweep(
 
 
 # Compiled Algorithm-2 sweeps, one jitted vmapped scan per
-# (model, topology, F, byz set, Gamma, attack, T) combo. The scan closure
-# returned by make_byzantine_scan is a fresh Python object per call, so
-# wrapping it in jax.jit anew would retrace every time even though the
-# traced program is identical; keying the *jitted callable* on the config
-# fingerprint gives run_byzantine_sweep the same retrace-free repeated-call
-# behaviour as _sweep_compiled. Entries are tiny (a jit wrapper + its
-# executable); simulation studies touch at most a handful of combos.
-_BYZ_COMPILED: dict[tuple, Callable] = {}
+# (model, topology, F, byz set, Gamma, attack, T, mode/core/backend/store)
+# combo. The scan closure returned by make_byzantine_scan is a fresh Python
+# object per call, so wrapping it in jax.jit anew would retrace every time
+# even though the traced program is identical; keying the *jitted callable*
+# on the config fingerprint gives run_byzantine_sweep the same retrace-free
+# repeated-call behaviour as _sweep_compiled. The cache is LRU-bounded so
+# parameter studies cycling through many fingerprints do not accumulate
+# executables without limit.
+_BYZ_COMPILED = _LRUCache(maxsize=32)
+_BYZ_GRID_COMPILED = _LRUCache(maxsize=8)
 
 
-def _byz_sweep_key(model: SignalModel, cfg: ByzantineConfig, T: int) -> tuple:
+def _byz_sweep_key(
+    model: SignalModel, cfg: ByzantineConfig, T: int,
+    mode: str = "pairwise", core: str = "sparse", backend: str = "auto",
+    store: str = "trajectory",
+) -> tuple:
     topo = cfg.topo
     return (
         np.asarray(model.tables).tobytes(), model.truth,
         topo.adj.tobytes(), topo.sizes, topo.offsets, topo.reps,
         cfg.F, cfg.byz, cfg.gamma_period, cfg.attack, T,
+        mode, core, backend, store,
     )
 
 
@@ -220,14 +282,24 @@ def run_byzantine_sweep(
     T: int,
     seeds: Sequence[int],
     attacks: Sequence[Attack] | None = None,
+    *,
+    mode: str = "pairwise",
+    core: str = "sparse",
+    backend: str = "auto",
+    store: str = "trajectory",
 ) -> dict[str, ByzantineResult]:
     """Algorithm 2 over a seed batch per attack type.
 
     For each attack (default: just ``cfg.attack``) the whole seed batch runs
     as one jitted ``vmap`` of the scan built by
     :func:`byzantine.make_byzantine_scan` — results carry a leading seed
-    axis: ``r`` is (S, T, N, m, m), ``decisions`` (S, T, N). Attack types
-    swap the traced message function, so they iterate host-side.
+    axis: with ``store="trajectory"`` ``r`` is (S, T, N, m, m) and
+    ``decisions`` (S, T, N). Seed batches over long horizons should pass
+    ``store="decisions"`` (decision curves reduced in-scan, final r only) or
+    ``store="final"`` so the batch never carries the (S, T, N, m, m)
+    trajectory out of the scan. Attack types swap the traced message
+    function, so they iterate host-side. ``core``/``backend`` select the
+    gossip lowering (:func:`make_byzantine_scan`).
 
     Repeated calls with the same (model, config, T, attack) and seed-batch
     shape neither retrace nor re-run the host-side healthy-network
@@ -235,17 +307,207 @@ def run_byzantine_sweep(
     and the jitted scan is reused from ``_BYZ_COMPILED`` (``Attack`` is a
     frozen dataclass, so the same attack object keys the same entry).
     """
-    import dataclasses
-
     seeds_j = jnp.asarray(np.asarray(seeds, np.uint32))
     keys = jax.vmap(jax.random.PRNGKey)(seeds_j)
     out: dict[str, ByzantineResult] = {}
     for atk in attacks if attacks is not None else [cfg.attack]:
         c = dataclasses.replace(cfg, attack=atk)
-        cache_key = _byz_sweep_key(model, c, T)
+        cache_key = _byz_sweep_key(model, c, T, mode, core, backend, store)
         fn = _BYZ_COMPILED.get(cache_key)
         if fn is None:
-            run = make_byzantine_scan(model, c, T)
+            run = make_byzantine_scan(
+                model, c, T, mode=mode, core=core, backend=backend,
+                store=store,
+            )
             fn = _BYZ_COMPILED[cache_key] = jax.jit(jax.vmap(run))
         out[atk.name] = fn(keys)
     return out
+
+
+class ByzantineGridResult(NamedTuple):
+    """One row per scenario (config x seed), leading axis K.
+
+    ``r``/``decisions`` follow the ``store`` shapes of
+    :class:`repro.core.byzantine.ByzantineResult` with the extra leading K;
+    ``cfg`` indexes into the ``cfgs`` list passed to
+    :func:`run_byzantine_grid`, ``F``/``seed`` are the per-scenario
+    coordinates.
+    """
+
+    r: jnp.ndarray
+    decisions: jnp.ndarray
+    cfg: jnp.ndarray       # (K,) config index
+    F: jnp.ndarray         # (K,) trim count of that config
+    seed: jnp.ndarray      # (K,)
+
+    @property
+    def K(self) -> int:
+        return int(self.decisions.shape[0])
+
+
+def _cfgs_fingerprint(model, cfgs, atk) -> tuple:
+    parts = [np.asarray(model.tables).tobytes(), model.truth, atk]
+    for c in cfgs:
+        topo = c.topo
+        parts.append((
+            topo.adj.tobytes(), topo.sizes, topo.offsets, topo.reps,
+            c.F, c.byz, c.gamma_period,
+        ))
+    return tuple(parts)
+
+
+def _byz_grid_key(model, cfgs, T, atk, mode, backend, store,
+                  mesh, data_axis) -> tuple:
+    """``backend`` must be the *effective* lowering (post ``resolve_backend``
+    and the dynamic-F downgrade), so the key names the traced program."""
+    return _cfgs_fingerprint(model, cfgs, atk) + (
+        T, mode, backend, store, mesh, data_axis,
+    )
+
+
+# Stacked ByzRuntime batches keyed on the (model, configs, attack)
+# fingerprint: repeated grid calls (e.g. host-side attack/T loops over one
+# config set) skip the per-config analysis, neighbor-list construction, and
+# device uploads entirely.
+_BYZ_RUNTIME_CACHE = _LRUCache(maxsize=16)
+
+
+def run_byzantine_grid(
+    model: SignalModel,
+    cfgs: Sequence[ByzantineConfig],
+    T: int,
+    seeds: Sequence[int] | int,
+    *,
+    attack: Attack | None = None,
+    mode: str = "pairwise",
+    backend: str = "auto",
+    store: str = "decisions",
+    mesh: Mesh | None = None,
+    data_axis: str = "data",
+) -> ByzantineGridResult:
+    """Batched (topology, F) x seed grid as ONE compiled vmapped scan.
+
+    Every config's host analysis runs once; the per-config runtime arrays
+    (neighbor lists padded to the common deg_max, byz/active masks, F,
+    gamma) stack leaf-wise onto a scenario axis and the K = |cfgs| x |seeds|
+    grid executes in lockstep under a single ``jax.vmap``. Configs must be
+    *compatible*: same N, same network count M (so one trace serves all),
+    and M >= 2F+1 (the all-networks representative rule — the M < 2F+1
+    branch needs per-config static index sets). Heterogeneous F values ride
+    the scenario axis as traced scalars, which forces the sort-based XLA
+    trim; a uniform F keeps the static-F Pallas path available.
+
+    ``attack`` overrides every config's attack (one traced program per grid
+    call — loop attacks host-side as in :func:`run_byzantine_sweep`). With
+    ``mesh``, the scenario axis is sharded over ``data_axis`` via
+    ``shard_map`` exactly like :func:`run_pushsum_sweep` (K padded up to a
+    multiple of the axis size by repeating the last scenario).
+
+    The jitted grid program is cached in ``_BYZ_GRID_COMPILED`` keyed on the
+    full config-list fingerprint, so repeated studies neither retrace nor
+    re-run the reduced-graph analysis.
+    """
+    from repro.kernels.byz_trim import resolve_backend
+
+    cfgs = list(cfgs)
+    if not cfgs:
+        raise ValueError("need at least one config")
+    atk = attack if attack is not None else cfgs[0].attack
+    N, M = cfgs[0].topo.N, cfgs[0].topo.M
+    if any(c.topo.N != N or c.topo.M != M for c in cfgs) or model.N != N:
+        raise ValueError("grid configs (and the model) must share (N, M)")
+
+    rt_key = _cfgs_fingerprint(model, cfgs, atk)
+    hit = _BYZ_RUNTIME_CACHE.get(rt_key)
+    if hit is None:
+        runtimes = []
+        for c in cfgs:
+            rt, extra_reps, _, _ = make_byzantine_runtime(
+                model, dataclasses.replace(c, attack=atk)
+            )
+            if extra_reps is not None:
+                raise ValueError(
+                    "grid configs must satisfy M >= 2F+1 (the all-networks "
+                    f"representative rule); config with F={c.F}, "
+                    f"M={c.topo.M} needs the static extra-reps branch"
+                )
+            runtimes.append(rt)
+        deg_max = max(int(rt.nbr_idx.shape[1]) for rt in runtimes)
+
+        def pad_rt(rt: ByzRuntime) -> ByzRuntime:
+            pad = deg_max - rt.nbr_idx.shape[1]
+            return rt._replace(
+                nbr_idx=jnp.pad(rt.nbr_idx, ((0, 0), (0, pad))),
+                nbr_valid=jnp.pad(rt.nbr_valid, ((0, 0), (0, pad))),
+            )
+
+        stacked = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *[pad_rt(rt) for rt in runtimes]
+        )
+        hit = _BYZ_RUNTIME_CACHE[rt_key] = stacked
+    stacked = hit
+    Fs = np.asarray([c.F for c in cfgs], np.int32)
+    # a uniform F stays a static Python int (Pallas-trim eligible);
+    # heterogeneous F is traced per scenario, which needs the sort lowering.
+    # backend is normalized to the effective lowering so the compiled-cache
+    # key names the traced program on every platform.
+    static_F = int(Fs[0]) if bool((Fs == Fs[0]).all()) else None
+    backend = resolve_backend(backend)
+    if static_F is None and backend == "pallas":
+        backend = "xla"
+
+    seeds_np = np.atleast_1d(np.asarray(seeds, np.uint32))
+    gi, sd = np.meshgrid(
+        np.arange(len(cfgs), dtype=np.int32), seeds_np, indexing="ij"
+    )
+    gi, sd = gi.ravel(), sd.ravel()
+    K = gi.shape[0]
+    if mesh is not None:
+        pad = (-K) % int(mesh.shape[data_axis])
+        if pad:
+            fill = np.full(pad, K - 1)
+            gi = np.concatenate([gi, gi[fill]])
+            sd = np.concatenate([sd, sd[fill]])
+
+    cache_key = _byz_grid_key(model, cfgs, T, atk, mode, backend, store,
+                              mesh, data_axis)
+    fn = _BYZ_GRID_COMPILED.get(cache_key)
+    if fn is None:
+        single = functools.partial(
+            _scan_core,
+            gossip=functools.partial(
+                _sparse_gossip, attack=atk, mode=mode, backend=backend
+            ),
+            log_tables=model.log_tables().astype(jnp.float32),
+            truth_probs=model.tables[:, model.truth, :].astype(jnp.float32),
+            T=T,
+            mode=mode,
+            attack=atk,
+            store=store,
+            static_F=static_F,
+            extra_reps=None,
+            n_reps=M,
+        )
+        batched = jax.vmap(single)
+        if mesh is not None:
+            from repro.launch import compat
+
+            spec = P(data_axis)
+            batched = compat.shard_map(
+                batched,
+                mesh=mesh,
+                in_specs=(spec, ByzRuntime(*([spec] * len(ByzRuntime._fields)))),
+                out_specs=ByzantineResult(r=spec, decisions=spec),
+                axis_names=frozenset({data_axis}),
+                check_vma=False,
+            )
+        fn = _BYZ_GRID_COMPILED[cache_key] = jax.jit(batched)
+
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.asarray(sd))
+    rt_batch = jax.tree_util.tree_map(lambda x: x[jnp.asarray(gi)], stacked)
+    res = fn(keys, rt_batch)
+    return ByzantineGridResult(
+        r=res.r[:K], decisions=res.decisions[:K],
+        cfg=jnp.asarray(gi[:K]), F=jnp.asarray(Fs[gi[:K]]),
+        seed=jnp.asarray(sd[:K]),
+    )

@@ -7,6 +7,10 @@
   core: gather ``sigma[src]``, mask-latch, and the per-receiver increment
   sum in one streaming pass over a dst-sorted edge index (Algorithm 1's
   per-round hot path at N ~ 1e5).
+- ``byz_trim`` — fused neighbor trim-gather for the sparse Byzantine
+  gossip core: gather over a padded neighbor list, Byzantine-message
+  substitution, and the F-round extremes-extraction trim in one streaming
+  pass over receiver blocks (Algorithm 2's per-round hot path).
 - ``wkv6`` — chunked RWKV6 linear recurrence with data-dependent decay
   (rwkv6-1.6b's training/prefill hot-spot).
 - ``swa`` — flash-decode attention over a sliding-window KV cache
@@ -18,6 +22,7 @@ are validated against their pure-jnp ``ref.py`` oracles via
 """
 from .trimmed_mean.ops import trimmed_mean, trimmed_mean_pytree
 from .pushsum_edge.ops import edge_scatter
+from .byz_trim.ops import trim_gather, trim_gather_pairs
 from .wkv6.ops import wkv6, wkv6_decode_step
 from .swa.ops import attn_decode
 from .swa.prefill import swa_prefill_pallas
@@ -26,6 +31,8 @@ __all__ = [
     "trimmed_mean",
     "trimmed_mean_pytree",
     "edge_scatter",
+    "trim_gather",
+    "trim_gather_pairs",
     "wkv6",
     "wkv6_decode_step",
     "attn_decode",

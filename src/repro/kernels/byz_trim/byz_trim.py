@@ -1,0 +1,139 @@
+"""Pallas TPU kernel: fused neighbor trim-gather for the Byzantine core.
+
+One call covers the whole gossip half of an Algorithm 2 round in a single
+streaming pass over receiver blocks: gather each receiver's in-neighbor
+statistics from the resident ``r`` matrix, substitute attack values on slots
+whose sender is Byzantine, run the 2F-extraction trim per pair coordinate,
+and emit the survivor sum plus kept count — no ``(N, N, m, m)`` broadcast,
+no ``jnp.sort``.
+
+Design (see /opt/skills/guides/pallas_guide.md)
+-----------------------------------------------
+* Grid: 1-D over receiver blocks of ``block_n`` rows. ``r`` (N, P) stays
+  VMEM-resident with a constant index map (at the target workload N ~ 1e5
+  with P = m^2 small it is a few MB); per-block inputs are the neighbor
+  index/validity/Byzantine tensors, all O(block_n * deg_max * P).
+* A full per-coordinate sort would waste the VPU: F << deg_max, so the trim
+  runs F rounds of argmax *extraction* followed by F rounds of argmin — the
+  same O(F * deg) design as :mod:`repro.kernels.trimmed_mean`, generalized
+  to a per-receiver slot axis with validity padding. Each round is an
+  argmax + compare + select over the (block_n, deg_max, P) tile; the F loop
+  is a Python static, so it fully unrolls.
+* Extraction == sort-slice trimming as multisets: each max round removes one
+  instance of the current maximum over the still-kept valid slots (ties by
+  first occurrence, like a stable sort slice), so after F rounds exactly the
+  F largest values are gone; symmetrically for minima. When deg <= 2F both
+  formulations keep nothing: extraction exhausts the valid slots (argmax
+  over an all-sentinel column is a no-op on the keep mask), and the rank
+  window [F, deg - F) is empty. Survivor sums therefore agree with the sort
+  oracle up to fp ordering.
+* Survivors are summed through a keep mask, never via total - extremes —
+  Byzantine magnitudes ~1e6x the honest scale make the subtractive
+  formulation cancel catastrophically (same lesson as trimmed_mean).
+* Padding receivers (to a multiple of ``block_n``) carry all-invalid slot
+  rows: their trimmed sum is exactly zero and the rows are sliced off.
+
+The pair axis P = m^2 (or m for one-vs-rest) is small, which underutilizes
+the 128-wide lanes; the streaming axis (receivers) carries the throughput.
+``interpret=None`` auto-selects interpreter mode off-TPU so CPU CI validates
+the identical program (tests/test_byz_trim_kernel.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["trim_gather_pallas"]
+
+
+def _kernel(r_ref, idx_ref, valid_ref, bmsg_ref, bnbr_ref,
+            tsum_ref, kept_ref, *, F: int):
+    r = r_ref[...]                               # (N, P) resident
+    idx = idx_ref[...]                           # (BN, deg_max)
+    valid = valid_ref[...]                       # (BN, deg_max)
+    bmsg = bmsg_ref[...]                         # (BN, deg_max, P)
+    bnbr = bnbr_ref[...]                         # (BN, deg_max)
+    bn, dm = idx.shape
+    p = r.shape[1]
+
+    gathered = jnp.take(r, idx.reshape(-1), axis=0).reshape(bn, dm, p)
+    vals = jnp.where(bnbr[:, :, None], bmsg, gathered).astype(jnp.float32)
+
+    deg = valid.sum(axis=1).astype(jnp.int32)    # (BN,)
+    kept_ref[...] = jnp.maximum(deg - 2 * F, 0).astype(kept_ref.dtype)
+
+    keep = jnp.broadcast_to(valid[:, :, None], vals.shape)
+    if F > 0:
+        ranks = jax.lax.broadcasted_iota(jnp.int32, vals.shape, 1)
+        neg = jnp.float32(jnp.finfo(jnp.float32).min)
+        pos = jnp.float32(jnp.finfo(jnp.float32).max)
+        cur = jnp.where(keep, vals, neg)
+        for _ in range(F):                       # static unroll: drop maxima
+            onehot = ranks == jnp.argmax(cur, axis=1)[:, None, :]
+            keep = keep & ~onehot
+            cur = jnp.where(onehot, neg, cur)
+        cur = jnp.where(keep, vals, pos)
+        for _ in range(F):                       # drop minima among survivors
+            onehot = ranks == jnp.argmin(cur, axis=1)[:, None, :]
+            keep = keep & ~onehot
+            cur = jnp.where(onehot, pos, cur)
+
+    tsum = jnp.where(keep, vals, 0.0).sum(axis=1)
+    tsum_ref[...] = tsum.astype(tsum_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("F", "block_n", "interpret"))
+def trim_gather_pallas(
+    r: jnp.ndarray,         # (N, P) current statistics
+    nbr_idx: jnp.ndarray,   # (N, deg_max) int32
+    nbr_valid: jnp.ndarray, # (N, deg_max) bool
+    byz_msgs: jnp.ndarray,  # (N, deg_max, P)
+    byz_nbr: jnp.ndarray,   # (N, deg_max) bool
+    F: int,
+    *,
+    block_n: int = 1024,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused trim-gather -> ``(trimmed_sum (N, P), kept (N,))``.
+
+    Matches :func:`repro.kernels.byz_trim.ref.trim_gather_ref` to fp32
+    reduction order. N is padded to a multiple of ``block_n`` with
+    all-invalid receiver rows; the pad rows are sliced off.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n, p = r.shape
+    dm = nbr_idx.shape[1]
+    block_n = min(block_n, max(n, 1))
+    pad = (-n) % block_n
+    if pad:
+        nbr_idx = jnp.pad(nbr_idx, ((0, pad), (0, 0)))
+        nbr_valid = jnp.pad(nbr_valid, ((0, pad), (0, 0)))     # False
+        byz_msgs = jnp.pad(byz_msgs, ((0, pad), (0, 0), (0, 0)))
+        byz_nbr = jnp.pad(byz_nbr, ((0, pad), (0, 0)))
+    n_pad = n + pad
+
+    tsum, kept = pl.pallas_call(
+        functools.partial(_kernel, F=F),
+        grid=(n_pad // block_n,),
+        in_specs=[
+            pl.BlockSpec((n, p), lambda i: (0, 0)),            # r resident
+            pl.BlockSpec((block_n, dm), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, dm), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, dm, p), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_n, dm), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, p), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad, p), r.dtype),
+            jax.ShapeDtypeStruct((n_pad,), r.dtype),
+        ],
+        interpret=interpret,
+    )(r, nbr_idx, nbr_valid, byz_msgs, byz_nbr)
+    return tsum[:n], kept[:n]

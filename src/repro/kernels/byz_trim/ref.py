@@ -1,0 +1,49 @@
+"""Pure-XLA oracle for the fused Byzantine trim-gather.
+
+The contract both backends implement, per receiver ``j`` and per pair
+coordinate ``p`` independently (the paper's "collection of scalar dynamics"):
+
+    vals[j, k, p] = byz_msgs[j, k, p]      if byz_nbr[j, k]
+                    r[nbr_idx[j, k], p]    otherwise
+    drop slots with nbr_valid[j, k] == False,
+    drop the F largest and F smallest of the remaining values,
+    trimmed_sum[j, p] = sum of the survivors
+    kept[j]           = max(deg_j - 2F, 0)
+
+``kept`` is the survivor count Algorithm 2's update divides by; it does not
+depend on the pair coordinate because padding is per-slot, not per-value.
+
+This lowering sorts the static ``deg_max`` slot axis and masks by rank, so
+``F`` may be a *traced* scalar — the keep window ``[F, deg - F)`` moves at
+runtime while the program stays fixed. That is what lets batched
+(topology, F) sweeps put F on a ``vmap`` scenario axis with a single trace
+(:func:`repro.core.sweeps.run_byzantine_grid`). The Pallas kernel
+(:mod:`.byz_trim`) requires a static F instead (its extraction loop unrolls).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["trim_gather_ref"]
+
+
+def trim_gather_ref(
+    r: jnp.ndarray,         # (N, P) current statistics, P pair coordinates
+    nbr_idx: jnp.ndarray,   # (N, deg_max) int32 sender per slot
+    nbr_valid: jnp.ndarray, # (N, deg_max) bool
+    byz_msgs: jnp.ndarray,  # (N, deg_max, P) attack values per slot
+    byz_nbr: jnp.ndarray,   # (N, deg_max) bool — slot's sender is Byzantine
+    F,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns ``(trimmed_sum (N, P), kept (N,) float)``."""
+    big = jnp.asarray(jnp.finfo(r.dtype).max / 4, r.dtype)
+    gathered = r[nbr_idx]                                  # (N, deg_max, P)
+    vals = jnp.where(byz_nbr[:, :, None], byz_msgs, gathered)
+    masked = jnp.where(nbr_valid[:, :, None], vals, big)   # pads sort high
+    s = jnp.sort(masked, axis=1)
+    deg = nbr_valid.sum(axis=1).astype(jnp.int32)          # (N,)
+    ranks = jnp.arange(masked.shape[1])[None, :, None]
+    keep = (ranks >= F) & (ranks < (deg[:, None, None] - F))
+    tsum = (s * keep.astype(s.dtype)).sum(axis=1)
+    kept = jnp.maximum(deg - 2 * F, 0).astype(r.dtype)
+    return tsum, kept

@@ -29,7 +29,10 @@ def trimmed_mean_pytree(stacked, F: int, use_kernel: bool = True):
 
     Flattens every leaf to (W, -1), trims coordinate-wise, restores shapes.
     Leaves are concatenated into a single (W, D_total) matrix first so the
-    kernel launches once (one HBM stream) instead of per-leaf.
+    kernel launches once (one HBM stream) instead of per-leaf. The trim is
+    computed in float32 for accuracy, but every output leaf is returned in
+    its input dtype (bf16 trees round-trip as bf16; mixed-dtype trees keep
+    each leaf's own dtype).
     """
     leaves, treedef = jax.tree_util.tree_flatten(stacked)
     W = leaves[0].shape[0]

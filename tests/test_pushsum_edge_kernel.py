@@ -353,12 +353,20 @@ class TestByzantineSweepNoRetrace:
         from repro.core.byzantine import ByzantineConfig
         from repro.core.graphs import make_hierarchy
         from repro.core.signals import make_confused_model
-        from repro.core.sweeps import _BYZ_COMPILED, run_byzantine_sweep
+        from repro.core.sweeps import (
+            _BYZ_COMPILED, _byz_sweep_key, run_byzantine_sweep,
+        )
 
         topo = make_hierarchy([4, 4, 4], topology="complete", seed=0)
         model = make_confused_model(topo.N, 3, confusion=0.0, seed=0)
         cfg = ByzantineConfig(topo=topo, F=1, byz=(1,), gamma_period=4,
                               attack=attacks.large_value())
-        before = len(_BYZ_COMPILED)
+        key13 = _byz_sweep_key(model, cfg, 13)
+        assert key13 not in _BYZ_COMPILED
         run_byzantine_sweep(model, cfg, T=13, seeds=[0])
-        assert len(_BYZ_COMPILED) == before + 1
+        # a distinct horizon gets its own entry (the cache is LRU-bounded,
+        # so total length may stay flat when an older entry is evicted)
+        assert key13 in _BYZ_COMPILED
+        assert _BYZ_COMPILED[key13] is not _BYZ_COMPILED.get(
+            _byz_sweep_key(model, cfg, 12))
+        assert len(_BYZ_COMPILED) <= _BYZ_COMPILED.maxsize
