@@ -33,7 +33,7 @@ from . import merge_bench_json
 
 MODULES = [
     ("thm1", consensus_rate),
-    ("thm2", social_learning),
+    ("social", social_learning),
     ("byzantine", byzantine_bench),
     ("remark3", gamma_sweep),
     ("aggregators", aggregators_bench),
@@ -78,7 +78,8 @@ def _check_regressions(baseline_path: str, baseline: dict,
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("only", nargs="?", default=None,
-                    help="run a single module tag (thm1, ..., pushsum_sweep)")
+                    help="run a single module tag (thm1, social, ..., "
+                         "pushsum_sweep)")
     ap.add_argument("--json-dir", default=None,
                     help="merge-update BENCH_<tag>.json per module here")
     ap.add_argument("--smoke", action="store_true",

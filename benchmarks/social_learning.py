@@ -1,21 +1,40 @@
-"""Theorem 2 benchmark: non-Bayesian learning under packet drops.
+"""Algorithm 3 / Theorem 2 benchmarks: the fused social-learning engine.
 
-Derived metric: iterations to drive every agent's belief in theta* past
-0.9, for increasing drop probabilities. The paper's claim: convergence
-persists for any drop rate given B-window delivery, at a rate degraded
-through gamma (Theorem 1's constant).
+Three claim families:
+ * convergence — iterations to drive every agent's belief in theta* past
+   0.9 for increasing drop probabilities (``social_conv_drop*`` rows; the
+   paper's claim: convergence persists for any drop rate given B-window
+   delivery, at a rate degraded through Theorem 1's gamma);
+ * per-step cost of the fused engine at N in {1024, 16384} through the
+   ``backend="xla"|"pallas"`` switch (``social_step_*`` rows) — runtimes
+   are built dense-free via :func:`graphs.block_complete_edge_list`, so no
+   (N, N) adjacency ever exists, and ``store="final"`` keeps the scan from
+   materializing (T, N, m);
+ * a (drop_prob x Gamma x seed) grid compiled ONCE as a single vmapped
+   scan (``social_sweep_dropxgamma`` row;
+   :func:`repro.core.sweeps.run_social_sweep`).
+
+On CPU the Pallas rows run ``interpret=True`` equivalence mode (tagged
+``mode=interpret``; the perf gate skips them) — the compiled comparison is
+TPU-only, as with the push-sum and trim kernel rows.
 """
 import time
 
+import jax
 import numpy as np
 
-from repro.core.graphs import make_hierarchy
+from repro.core.graphs import block_complete_edge_list, make_hierarchy
 from repro.core.hps import HPSConfig
 from repro.core.signals import make_confused_model
-from repro.core.social import run_social_learning
+from repro.core.social import (
+    run_social_learning,
+    run_social_runtime,
+    social_runtime_from_edge_list,
+)
+from repro.core.sweeps import run_social_sweep
 
 
-def rows():
+def _conv_rows():
     out = []
     topo = make_hierarchy([6, 6, 6], topology="complete", seed=2)
     model = make_confused_model(N=topo.N, m=3, truth=1, confusion=0.5, seed=0)
@@ -28,6 +47,92 @@ def rows():
         wall = (time.perf_counter() - t0) / T * 1e6
         hit = np.nonzero((b[:, :, 1] > 0.9).all(axis=1))[0]
         t_conv = int(hit[0]) if len(hit) else -1
-        out.append((f"thm2_social_drop{drop}", wall,
+        out.append((f"social_conv_drop{drop}", wall,
                     f"t_to_0.9={t_conv};final_min={b[-1,:,1].min():.3f}"))
+    return out
+
+
+def _step_setup(N):
+    """N/8 complete 8-agent networks, built dense-free (no (N, N) array)."""
+    el, rep_mask = block_complete_edge_list([8] * (N // 8))
+    model = make_confused_model(N=N, m=3, truth=0, confusion=0.75, seed=1)
+    rt = social_runtime_from_edge_list(
+        el, rep_mask, drop_prob=0.1, gamma_period=8, B=4
+    )
+    return model, rt, N // 8
+
+
+def _time_run(model, rt, M, T, backend):
+    t0 = time.perf_counter()
+    jax.block_until_ready(run_social_runtime(
+        model, rt, M, T, seed=0, backend=backend, store="final"
+    ).beliefs)
+    compile_wall = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    jax.block_until_ready(run_social_runtime(
+        model, rt, M, T, seed=0, backend=backend, store="final"
+    ).beliefs)
+    return (time.perf_counter() - t0) / T * 1e6, compile_wall
+
+
+def _step_rows(smoke: bool):
+    """social_step_{xla,pallas}_N{1024,16384}: fused-engine per-step cost."""
+    out = []
+    sizes = (1024,) if smoke else (1024, 16384)
+    for N in sizes:
+        model, rt, M = _step_setup(N)
+        E = int(rt.src.shape[0])
+        xla_us, compile_s = _time_run(model, rt, M, T=30, backend="xla")
+        out.append((
+            f"social_step_xla_N{N}", xla_us,
+            f"E={E};m=3;Gamma=8;drop=0.1;store=final;"
+            f"compile_s={compile_s:.1f}",
+        ))
+        mode = "interpret" if jax.default_backend() != "tpu" else "compiled"
+        T_p = 4 if mode == "interpret" else 30
+        pallas_us, compile_s = _time_run(model, rt, M, T=T_p,
+                                         backend="pallas")
+        out.append((
+            f"social_step_pallas_N{N}", pallas_us,
+            f"E={E};m=3;Gamma=8;drop=0.1;store=final;mode={mode};"
+            f"compile_s={compile_s:.1f}",
+        ))
+    return out
+
+
+def _sweep_row(smoke: bool):
+    """drop_prob x Gamma x seed grid: one trace, one compiled program."""
+    topo = make_hierarchy([6, 6, 6], topology="complete", seed=0)
+    model = make_confused_model(N=topo.N, m=3, truth=1, confusion=0.5, seed=0)
+    cfg = HPSConfig(topo=topo, gamma_period=8, B=4, drop_prob=0.0)
+    drops = (0.0, 0.3) if smoke else (0.0, 0.3, 0.6, 0.9)
+    gammas = (4, 16) if smoke else (4, 8, 16)
+    seeds = list(range(2 if smoke else 4))
+    T = 50 if smoke else 300
+
+    def go():
+        res = run_social_sweep(model, cfg, T, drop_probs=drops,
+                               gammas=gammas, seeds=seeds)
+        jax.block_until_ready(res.log_ratio)
+        return res
+
+    t0 = time.perf_counter()
+    res = go()
+    compile_wall = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res = go()
+    wall = time.perf_counter() - t0
+    final = np.asarray(res.beliefs)[:, :, model.truth]   # (K, N)
+    return (
+        f"social_sweep_dropxgamma{res.K}", wall / res.K * 1e6,
+        f"scenarios={res.K};drops={len(drops)};gammas={len(gammas)};"
+        f"seeds={len(seeds)};T={T};single_jit=true;"
+        f"belief_min={final.min():.3f};compile_s={compile_wall:.1f}",
+    )
+
+
+def rows(smoke: bool = False):
+    out = [] if smoke else _conv_rows()
+    out.extend(_step_rows(smoke))
+    out.append(_sweep_row(smoke))
     return out

@@ -20,6 +20,7 @@ from .graphs import (
     stack_edge_lists,
     edge_masks,
     sort_by_dst,
+    block_complete_edge_list,
     random_strongly_connected_edge_list,
     NeighborList,
     neighbor_lists,
@@ -39,7 +40,16 @@ from .pushsum import (
     sparse_ratios,
 )
 from .hps import HPSConfig, hps_fusion, hps_step, run_hps, theorem1_bound
-from .social import run_social_learning, kl_dual_averaging_update
+from .social import (
+    SocialLearningResult,
+    SocialRuntime,
+    kl_dual_averaging_update,
+    make_social_runtime,
+    run_social_learning,
+    run_social_runtime,
+    social_runtime_from_edge_list,
+    social_stream_fold,
+)
 from .byzantine import (
     ByzantineConfig,
     ByzRuntime,
@@ -54,9 +64,12 @@ from .byzantine import (
 from .sweeps import (
     ByzantineGridResult,
     PushSumSweepResult,
+    SocialSweepResult,
     run_byzantine_grid,
     run_byzantine_sweep,
     run_pushsum_sweep,
+    run_social_grid,
+    run_social_sweep,
 )
 from . import attacks
 
@@ -64,6 +77,7 @@ __all__ = [
     "HierTopology", "make_hierarchy", "link_schedule", "check_assumption3",
     "is_strongly_connected", "random_strongly_connected", "EdgeList",
     "edge_list", "stack_edge_lists", "edge_masks", "sort_by_dst",
+    "block_complete_edge_list",
     "random_strongly_connected_edge_list", "NeighborList", "neighbor_lists",
     "stack_neighbor_lists", "SignalModel", "make_confused_model",
     "check_global_observability", "PushSumState", "pushsum_step", "run_pushsum",
@@ -71,11 +85,15 @@ __all__ = [
     "run_pushsum_sparse", "sparse_mass_invariant", "sparse_ratios",
     "HPSConfig", "hps_fusion", "hps_step", "run_hps",
     "theorem1_bound", "run_social_learning", "kl_dual_averaging_update",
+    "SocialLearningResult", "SocialRuntime", "make_social_runtime",
+    "run_social_runtime", "social_runtime_from_edge_list",
+    "social_stream_fold",
     "ByzantineConfig", "ByzRuntime", "make_byzantine_runtime",
     "make_byzantine_scan", "run_byzantine_learning",
     "run_byzantine_learning_ovr", "trimmed_neighbor_mean",
     "healthy_networks", "decide",
-    "PushSumSweepResult", "ByzantineGridResult", "run_pushsum_sweep",
-    "run_byzantine_sweep", "run_byzantine_grid",
+    "PushSumSweepResult", "ByzantineGridResult", "SocialSweepResult",
+    "run_pushsum_sweep", "run_byzantine_sweep", "run_byzantine_grid",
+    "run_social_sweep", "run_social_grid",
     "attacks",
 ]

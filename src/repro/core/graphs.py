@@ -41,6 +41,7 @@ __all__ = [
     "stack_edge_lists",
     "edge_masks",
     "sort_by_dst",
+    "block_complete_edge_list",
     "random_strongly_connected_edge_list",
     "NeighborList",
     "neighbor_lists",
@@ -550,6 +551,44 @@ def random_strongly_connected_edge_list(
     if sort:
         el, _, _ = sort_by_dst(el)
     return el
+
+
+def block_complete_edge_list(
+    sizes: Sequence[int],
+) -> tuple[EdgeList, np.ndarray]:
+    """Hierarchical system of complete sub-networks, built dense-free.
+
+    ``make_hierarchy(sizes, topology="complete")`` materializes the (N, N)
+    bool adjacency — 256 MB at N = 16384 — but the sparse engines only ever
+    consume the edge index and the representative mask, so large-N social /
+    consensus workloads build those directly: per network, all ordered
+    intra-block pairs (no self-loops); no O(N^2) array is ever touched.
+
+    Returns ``(el, rep_mask)``: a dst-sorted :class:`EdgeList` (the layout
+    the Pallas consensus kernel expects) and the (N,) bool representative
+    mask (first agent of each block, matching ``make_hierarchy``'s
+    ``rep_choice="first"``).
+    """
+    srcs, dsts = [], []
+    off = 0
+    offsets = []
+    for sz in sizes:
+        idx = np.arange(sz, dtype=np.int32)
+        s = np.repeat(idx, sz)
+        d = np.tile(idx, sz)
+        keep = s != d
+        srcs.append(off + s[keep])
+        dsts.append(off + d[keep])
+        offsets.append(off)
+        off += int(sz)
+    src = np.concatenate(srcs).astype(np.int32)
+    dst = np.concatenate(dsts).astype(np.int32)
+    el = EdgeList(src=src, dst=dst, n=off,
+                  valid=np.ones(src.shape[0], dtype=bool))
+    el, _, _ = sort_by_dst(el)
+    rep_mask = np.zeros(off, dtype=bool)
+    rep_mask[np.asarray(offsets)] = True
+    return el, rep_mask
 
 
 def edge_masks(masks: np.ndarray, el: EdgeList) -> np.ndarray:

@@ -44,14 +44,26 @@ class HPSConfig:
     def adj(self) -> jnp.ndarray:
         return jnp.asarray(self.topo.adj)
 
+    def edge_index(self):
+        """The topology's dst-sorted sparse :class:`~repro.core.graphs.EdgeList`
+        — the one layout both the XLA and the fused-Pallas consensus
+        lowerings consume (:mod:`repro.kernels.pushsum_edge` streams
+        contiguous per-receiver runs)."""
+        from .graphs import edge_list, sort_by_dst
+
+        el, _, _ = sort_by_dst(edge_list(self.topo.adj))
+        return el
+
 
 def hps_fusion(
-    z: jnp.ndarray, m: jnp.ndarray, rep_mask: jnp.ndarray, M: int
+    z: jnp.ndarray, m: jnp.ndarray, rep_mask: jnp.ndarray, M
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Apply the hierarchical fusion matrix F to (z, m) at the reps.
 
     Non-representative agents are untouched; this is exactly lines 13-21 of
     Algorithm 1 (each rep sends half, PS averages the halves and pushes back).
+    ``M`` may be a Python int or a traced scalar — batched sweeps whose
+    scenarios differ only in arrays keep one traced program either way.
     """
     repf = rep_mask.astype(z.dtype)
     pooled_z = (z * repf[:, None]).sum(axis=0) / (2.0 * M)   # (d,)

@@ -220,6 +220,8 @@ def sparse_pushsum_step(
     dst: jnp.ndarray,      # (E,) int32 receiver per edge
     valid: jnp.ndarray,    # (E,) bool — False on padding edges
     backend: str = "auto",
+    *,
+    share: jnp.ndarray | None = None,
 ) -> SparsePushSumState:
     """One fast-robust-push-sum iteration on edge-list state.
 
@@ -232,13 +234,20 @@ def sparse_pushsum_step(
     never carry mass — the sparse analogue of the dense step's
     ``mask & adj``. ``backend`` is static: thread it through
     ``static_argnames`` when jitting.
+
+    ``share`` optionally supplies the precomputed (N,) ``1 / (d_out + 1)``
+    factors — a loop invariant of the fixed edge index that scan-heavy
+    callers (:mod:`repro.core.social`) hoist once instead of re-deriving
+    the segment-sum out-degree every iteration. It must equal
+    ``1 / (_out_degree(src, valid, N) + 1)``.
     """
     from repro.kernels.pushsum_edge import edge_scatter, resolve_backend
 
     z, m, sigma, sigma_m, rho, rho_m = state
     n = z.shape[0]
-    d_out = _out_degree(src, valid, n, z.dtype)   # (N,)
-    share = 1.0 / (d_out + 1.0)
+    if share is None:
+        d_out = _out_degree(src, valid, n, z.dtype)   # (N,)
+        share = 1.0 / (d_out + 1.0)
 
     # --- first half: stage cumulative send ---
     sigma_p = sigma + z * share[:, None]
@@ -295,13 +304,22 @@ def step_edge_mask(
     t: jnp.ndarray,
     n_edges: int,
     drop_prob,
-    B: int,
+    B,
+    fold_t=None,
 ) -> jnp.ndarray:
     """(E,) operational mask for round t: i.i.d. Bernoulli keep with forced
     delivery at ``t % B == B - 1`` (the paper's B-connectivity window),
     matching :func:`repro.core.graphs.link_schedule` semantics without ever
-    materializing a (T, N, N) schedule."""
-    kt = jax.random.fold_in(key, t)
+    materializing a (T, N, N) schedule.
+
+    ``fold_t`` overrides the fold-in value (default ``t``) so callers that
+    consume several PRNG streams per iteration can give the link-mask
+    stream its own disjoint fold-in domain (see
+    :func:`repro.core.social.social_stream_fold`) while the B-window logic
+    still runs on the *iteration* index. ``drop_prob`` and ``B`` may be
+    traced scalars — scenario sweeps put both on a vmap axis.
+    """
+    kt = jax.random.fold_in(key, t if fold_t is None else fold_t)
     up = jax.random.uniform(kt, (n_edges,)) >= drop_prob
     return up | ((t % B) == (B - 1))
 

@@ -10,39 +10,143 @@ update with KL-divergence proximal, whose closed form is
 Per Algorithm 3 ordering: consensus (lines 4-12) -> innovation (13-15) ->
 belief (16) -> PS fusion every Gamma (17-22).
 
-The consensus state is the *sparse edge-list* push-sum core
-(:mod:`repro.core.pushsum`): ``rho`` is (E, m) over the topology's directed
-edges and each round's (E,) operational mask is drawn inside the scan —
-memory is O(N m + E m) and no (T, N, N) schedule or (N, N, m) relay tensor
-is ever materialized, so hierarchical systems with thousands of agents run
-on sparse intra-network graphs at full scan speed.
+The fused, batched engine
+-------------------------
+The scan body is split into the two per-iteration hot halves, each behind
+the repo-wide ``backend="auto"|"xla"|"pallas"`` switch:
+
+* **consensus** — the sparse edge-list push-sum core
+  (:mod:`repro.core.pushsum`): ``rho`` is (E, m) over the topology's
+  directed edges, each round's (E,) operational mask is drawn inside the
+  scan, and delivery + integration run through
+  :mod:`repro.kernels.pushsum_edge` (fused gather/mask-latch/segment-sum
+  over the dst-sorted edge index). Memory is O(N m + E m); no (T, N, N)
+  schedule or (N, N, m) relay tensor ever exists.
+* **innovation + belief** — :mod:`repro.kernels.social_innov`: inverse-CDF
+  signal sampling, the (N, m) log-likelihood gather, ``z += loglik``, and
+  the softmax belief in ONE streaming pass over agent blocks instead of
+  five separate XLA ops with (N, S) intermediates per step.
+
+Every loop invariant is hoisted out of the scan: the truth-row CDF (the
+seed path recomputed ``jnp.cumsum(truth_probs)`` every iteration), the log
+tables, the representative mask, and the out-degree share factors of the
+fixed edge index. Per-agent uniforms are one ``jax.random.uniform(key,
+(N,))`` draw (the seed path split N keys and vmapped scalar draws).
+
+All per-scenario inputs live in a :class:`SocialRuntime` of *arrays*
+(``drop_prob``/``gamma``/``B`` are traced scalars), so a batch of
+compatible scenarios stacks leaf-wise and rides one ``jax.vmap`` axis —
+see :func:`repro.core.sweeps.run_social_sweep` /
+:func:`repro.core.sweeps.run_social_grid` for the batched (and
+mesh-sharded) engines built on :func:`_social_scan_core`.
+
+``store`` selects what the scan materializes — ``"trajectory"`` the full
+(T, N, m) belief + log-ratio histories, ``"log_ratio"`` the in-scan-reduced
+(T,) worst log-ratio curve (Theorem 2's LHS) plus final beliefs, and
+``"final"`` final beliefs only — so long horizons never carry O(T N m)
+out of the scan unless asked to.
+
+PRNG streams: each iteration consumes two independent streams (link masks,
+private signals) with disjoint fold-in domains ``t * 2 + stream``
+(:func:`social_stream_fold`), so ``seed == signal_seed`` no longer aliases
+the two streams (the seed scheme folded plain ``t`` into both base keys).
 """
 from __future__ import annotations
 
-import dataclasses
+import functools
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .graphs import edge_list
+from .graphs import EdgeList
 from .hps import HPSConfig, hps_fusion
 from .pushsum import (
     SparsePushSumState,
+    _out_degree,
     init_sparse_state,
     sparse_pushsum_step,
     step_edge_mask,
 )
 from .signals import SignalModel
 
-__all__ = ["SocialLearningResult", "kl_dual_averaging_update", "run_social_learning"]
+__all__ = [
+    "SocialLearningResult",
+    "SocialRuntime",
+    "SOCIAL_STORES",
+    "N_SOCIAL_STREAMS",
+    "STREAM_LINK",
+    "STREAM_SIGNAL",
+    "social_stream_fold",
+    "kl_dual_averaging_update",
+    "make_social_runtime",
+    "social_runtime_from_edge_list",
+    "run_social_learning",
+    "run_social_runtime",
+    "theorem2_rate",
+]
+
+SOCIAL_STORES = ("trajectory", "log_ratio", "final")
+
+# Belief floor for the log-ratio: the smallest NORMAL fp32. The seed path
+# floored at 1e-38, which is subnormal — XLA CPU flushes subnormal log
+# inputs to zero, so a fully-converged wrong-hypothesis belief (mu == 0)
+# yielded log(-inf) and a NaN truth-column ratio at high drop rates.
+_MU_FLOOR = np.float32(np.finfo(np.float32).tiny)
+
+# Per-iteration PRNG streams, disjoint fold-in domains t * N_STREAMS + s
+# (same scheme as repro.core.byzantine.stream_fold): the link-mask draw at
+# iteration t can never collide with the signal draw of any iteration even
+# when both streams are rooted at the same base key (seed == signal_seed).
+N_SOCIAL_STREAMS = 2
+STREAM_LINK, STREAM_SIGNAL = range(N_SOCIAL_STREAMS)
+
+
+def social_stream_fold(t, stream: int):
+    """Fold-in value of ``stream`` at iteration ``t`` — injective over
+    (t, stream), which is what keeps the two per-iteration streams
+    non-colliding over any horizon."""
+    return t * N_SOCIAL_STREAMS + stream
 
 
 class SocialLearningResult(NamedTuple):
-    beliefs: jnp.ndarray             # (T, N, m) belief trajectories
+    """Engine output; shapes depend on the ``store`` option.
+
+    ``store="trajectory"`` (default): ``beliefs`` (T, N, m), ``log_ratio``
+    (T, N, m) — log mu(theta)/mu(theta*), Theorem 2's LHS.
+    ``store="log_ratio"``: ``beliefs`` is the final (N, m) only and
+    ``log_ratio`` the (T,) worst-case curve max_{j, theta != theta*}
+    log mu_j(theta)/mu_j(theta*), reduced inside the scan.
+    ``store="final"``: both final-step only, (N, m) each.
+    """
+
+    beliefs: jnp.ndarray
     final_state: SparsePushSumState  # edge-list consensus state at T
-    log_ratio: jnp.ndarray           # (T, N, m) log mu(theta)/mu(theta*) — Thm 2 LHS
+    log_ratio: jnp.ndarray
+
+
+class SocialRuntime(NamedTuple):
+    """Everything the scan body reads that can vary per scenario.
+
+    All fields are arrays, so a batch of *compatible* scenarios — same
+    (N, M) and edge lists padded to a common E — stacks leaf-wise onto one
+    leading scenario axis and rides a single ``jax.vmap``
+    (:func:`repro.core.sweeps.run_social_grid`). ``drop_prob``, ``gamma``
+    and ``B`` are scalars here precisely so they can be traced
+    per-scenario: the fusion schedule ``(t + 1) % gamma == 0`` and the
+    B-window forced delivery are computed in-scan from the traced values,
+    keeping ONE compiled program for the whole (drop x Gamma x topology)
+    grid.
+    """
+
+    src: jnp.ndarray        # (E,) int32 sender per edge (dst-sorted layout)
+    dst: jnp.ndarray        # (E,) int32 receiver per edge
+    valid: jnp.ndarray      # (E,) bool — False on padding edges
+    rep_mask: jnp.ndarray   # (N,) bool — designated representatives
+    drop_prob: jnp.ndarray  # () f32 per-link packet-drop probability
+    gamma: jnp.ndarray      # () i32 PS fusion period
+    B: jnp.ndarray          # () i32 link-reliability window
 
 
 def kl_dual_averaging_update(z: jnp.ndarray, m: jnp.ndarray) -> jnp.ndarray:
@@ -54,64 +158,214 @@ def kl_dual_averaging_update(z: jnp.ndarray, m: jnp.ndarray) -> jnp.ndarray:
     return jax.nn.softmax(z / jnp.maximum(m, 1e-30)[:, None], axis=-1)
 
 
+def social_runtime_from_edge_list(
+    el: EdgeList,
+    rep_mask: np.ndarray,
+    *,
+    drop_prob: float,
+    gamma_period: int,
+    B: int = 1,
+    e_max: int | None = None,
+) -> SocialRuntime:
+    """Build a :class:`SocialRuntime` directly from a sparse edge index.
+
+    The dense-free entry point for large-N systems (pair with
+    :func:`repro.core.graphs.block_complete_edge_list` — no (N, N)
+    adjacency is ever touched). ``el`` should be dst-sorted
+    (:func:`graphs.sort_by_dst`) for the Pallas consensus backend; the XLA
+    backend accepts any order. ``e_max`` pads the edge axis (inert
+    ``valid=False`` edges with ``dst = N - 1``, which keeps a sorted layout
+    sorted) so scenario batches over different topologies can share one
+    shape.
+    """
+    if el.is_batched:
+        raise ValueError("pass one topology draw; batching happens leaf-wise")
+    src, dst, valid = el.src, el.dst, el.valid
+    if e_max is not None:
+        pad = e_max - el.E
+        if pad < 0:
+            raise ValueError(f"e_max={e_max} < edge count {el.E}")
+        src = np.concatenate([src, np.zeros(pad, np.int32)])
+        dst = np.concatenate([dst, np.full(pad, el.n - 1, np.int32)])
+        valid = np.concatenate([valid, np.zeros(pad, bool)])
+    return SocialRuntime(
+        src=jnp.asarray(src, jnp.int32),
+        dst=jnp.asarray(dst, jnp.int32),
+        valid=jnp.asarray(valid, bool),
+        rep_mask=jnp.asarray(np.asarray(rep_mask, bool)),
+        drop_prob=jnp.asarray(drop_prob, jnp.float32),
+        gamma=jnp.asarray(gamma_period, jnp.int32),
+        B=jnp.asarray(B, jnp.int32),
+    )
+
+
+def make_social_runtime(cfg: HPSConfig, e_max: int | None = None) -> SocialRuntime:
+    """Host-side setup of one :class:`~repro.core.hps.HPSConfig` scenario."""
+    return social_runtime_from_edge_list(
+        cfg.edge_index(),
+        cfg.topo.rep_mask(),
+        drop_prob=cfg.drop_prob,
+        gamma_period=cfg.gamma_period,
+        B=cfg.B,
+        e_max=e_max,
+    )
+
+
+# ---------------------------------------------------------------------------
+# The shared scan core
+# ---------------------------------------------------------------------------
+
+def _social_scan_core(
+    mask_key: jnp.ndarray,
+    sig_key: jnp.ndarray,
+    rt: SocialRuntime,
+    log_tables: jnp.ndarray,  # (N, m, S) hoisted log-likelihood tables
+    cdf: jnp.ndarray,         # (N, S) hoisted truth-row inclusive cumsum
+    *,
+    truth: int,
+    M: int,
+    T: int,
+    store: str,
+    backend: str,
+) -> tuple[SparsePushSumState, tuple[jnp.ndarray, jnp.ndarray]]:
+    """Algorithm 3's scan, parameterized over the per-scenario runtime
+    arrays (vmappable for batched grids).
+
+    Returns ``(final_state, (beliefs, log_ratio))`` with the store-dependent
+    shapes of :class:`SocialLearningResult`.
+    """
+    from repro.kernels.social_innov import innovation_step
+
+    N, m = log_tables.shape[0], log_tables.shape[1]
+    E = rt.src.shape[0]
+    # z accumulates per-hypothesis log-likelihood sums; init 0 (Alg. 3 line 1)
+    state0 = init_sparse_state(jnp.zeros((N, m), jnp.float32), E)
+    # loop invariants of the fixed edge index, hoisted out of the scan
+    share = 1.0 / (_out_degree(rt.src, rt.valid, N, jnp.float32) + 1.0)
+
+    # the trajectory store emits every belief through ys, so only the other
+    # stores need the final mu threaded through the carry
+    carry_mu = store != "trajectory"
+
+    def body(carry, t):
+        state = carry[0]
+        # --- consensus (lines 4-12) ---
+        mask = step_edge_mask(
+            mask_key, t, E, rt.drop_prob, rt.B,
+            fold_t=social_stream_fold(t, STREAM_LINK),
+        )
+        st = sparse_pushsum_step(
+            state, mask, rt.src, rt.dst, rt.valid, backend, share=share
+        )
+        # --- innovation + belief (lines 13-16), one fused pass ---
+        sk = jax.random.fold_in(sig_key, social_stream_fold(t, STREAM_SIGNAL))
+        u = jax.random.uniform(sk, (N,))
+        z, mu = innovation_step(st.z, st.m, u, cdf, log_tables, backend)
+        # --- PS fusion every Γ (lines 17-22), applied post-innovation ---
+        z_f, m_f = hps_fusion(z, st.m, rt.rep_mask, M)
+        do_fusion = (t + 1) % rt.gamma == 0
+        new = st._replace(
+            z=jnp.where(do_fusion, z_f, z),
+            m=jnp.where(do_fusion, m_f, st.m),
+        )
+        if store == "trajectory":
+            ys = mu
+        elif store == "log_ratio":
+            log_mu = jnp.log(jnp.maximum(mu, _MU_FLOOR))
+            lr = log_mu - log_mu[:, truth : truth + 1]
+            wrong = jnp.where(jnp.arange(m) == truth, -jnp.inf, lr)
+            ys = wrong.max()          # () worst wrong-hypothesis log ratio
+        else:
+            ys = None
+        return ((new, mu) if carry_mu else (new,)), ys
+
+    carry0 = ((state0, jnp.zeros((N, m), jnp.float32)) if carry_mu
+              else (state0,))
+    (final, *rest), ys = jax.lax.scan(
+        body, carry0, jnp.arange(T, dtype=jnp.int32)
+    )
+    if store == "trajectory":
+        log_mu = jnp.log(jnp.maximum(ys, _MU_FLOOR))
+        return final, (ys, log_mu - log_mu[:, :, truth : truth + 1])
+    mu_fin = rest[0]
+    if store == "log_ratio":
+        return final, (mu_fin, ys)
+    log_mu = jnp.log(jnp.maximum(mu_fin, _MU_FLOOR))
+    return final, (mu_fin, log_mu - log_mu[:, truth : truth + 1])
+
+
+# Module-level jit so repeated runs with the same shapes/statics hit the
+# compilation cache instead of retracing a fresh closure per call.
+_social_compiled = functools.partial(
+    jax.jit, static_argnames=("truth", "M", "T", "store", "backend")
+)(_social_scan_core)
+
+
+def run_social_runtime(
+    model: SignalModel,
+    rt: SocialRuntime,
+    M: int,
+    T: int,
+    seed: int = 0,
+    signal_seed: int | None = None,
+    *,
+    backend: str = "auto",
+    store: str = "trajectory",
+) -> SocialLearningResult:
+    """Run Algorithm 3 on a prebuilt :class:`SocialRuntime`.
+
+    The dense-free entry point (see :func:`social_runtime_from_edge_list`);
+    :func:`run_social_learning` is the :class:`~repro.core.hps.HPSConfig`
+    convenience wrapper. ``signal_seed`` defaults to ``seed`` — the two
+    streams stay independent either way thanks to the disjoint fold-in
+    domains, and the batched sweeps drive both streams from one
+    per-scenario seed.
+    """
+    if store not in SOCIAL_STORES:
+        raise ValueError(f"store must be one of {SOCIAL_STORES}, got {store!r}")
+    truth_probs = model.tables[:, model.truth, :].astype(jnp.float32)
+    final, (beliefs, log_ratio) = _social_compiled(
+        jax.random.PRNGKey(seed),
+        jax.random.PRNGKey(seed if signal_seed is None else signal_seed),
+        rt,
+        model.log_tables().astype(jnp.float32),
+        jnp.cumsum(truth_probs, axis=-1),
+        truth=model.truth,
+        M=M,
+        T=T,
+        store=store,
+        backend=backend,
+    )
+    return SocialLearningResult(
+        beliefs=beliefs, final_state=final, log_ratio=log_ratio
+    )
+
+
 def run_social_learning(
     model: SignalModel,
     cfg: HPSConfig,
     T: int,
     seed: int = 0,
     signal_seed: int = 100,
+    *,
+    backend: str = "auto",
+    store: str = "trajectory",
 ) -> SocialLearningResult:
-    """Run Algorithm 3 for T iterations (jax.lax.scan over time).
+    """Run Algorithm 3 for T iterations (single scenario).
 
     ``seed`` drives the per-round link masks (drawn edge-wise inside the
     scan with :func:`pushsum.step_edge_mask` — same drop_prob/B semantics as
     :func:`graphs.link_schedule`); ``signal_seed`` drives private signals.
+    The two streams use disjoint fold-in domains, so any (seed,
+    signal_seed) pair — including equal values — yields independent masks
+    and signals. ``backend`` selects the consensus + innovation lowerings
+    (module docstring); ``store`` what the scan materializes
+    (:class:`SocialLearningResult`).
     """
-    topo = cfg.topo
-    el = edge_list(topo.adj)
-    src = jnp.asarray(el.src)
-    dst = jnp.asarray(el.dst)
-    valid = jnp.asarray(el.valid)
-    rep_mask = cfg.rep_mask()
-    mask_key = jax.random.PRNGKey(seed)
-    fuse = jnp.arange(1, T + 1) % cfg.gamma_period == 0
-
-    # z accumulates per-hypothesis log-likelihood sums; init 0 (Alg. 3 line 1)
-    state0 = init_sparse_state(jnp.zeros((topo.N, model.m), jnp.float32), el.E)
-    log_tables = model.log_tables().astype(jnp.float32)  # (N, m, S)
-    truth_probs = model.tables[:, model.truth, :].astype(jnp.float32)  # (N, S)
-    base_key = jax.random.PRNGKey(signal_seed)
-
-    def body(state, xs):
-        do_fusion, t = xs
-        # --- consensus (lines 4-12) ---
-        mask = step_edge_mask(mask_key, t, el.E, cfg.drop_prob, cfg.B)
-        st = sparse_pushsum_step(state, mask, src, dst, valid)
-        # --- innovation (lines 13-15): one fresh private signal per agent ---
-        key = jax.random.fold_in(base_key, t)
-        keys = jax.random.split(key, topo.N)
-        u = jax.vmap(lambda k: jax.random.uniform(k))(keys)  # (N,)
-        cdf = jnp.cumsum(truth_probs, axis=-1)               # (N, S)
-        sig = (u[:, None] > cdf).sum(axis=-1)                # inverse-CDF sample
-        loglik = jnp.take_along_axis(
-            log_tables, sig[:, None, None].astype(jnp.int32), axis=2
-        )[:, :, 0]                                           # (N, m)
-        z = st.z + loglik
-        # --- belief update (line 16) ---
-        mu = kl_dual_averaging_update(z, st.m)
-        # --- PS fusion (lines 17-22), applied post-innovation ---
-        z_f, m_f = hps_fusion(z, st.m, rep_mask, topo.M)
-        z = jnp.where(do_fusion, z_f, z)
-        m = jnp.where(do_fusion, m_f, st.m)
-        new = st._replace(z=z, m=m)
-        return new, mu
-
-    final, mus = jax.lax.scan(
-        body, state0, (fuse, jnp.arange(T, dtype=jnp.uint32))
+    return run_social_runtime(
+        model, make_social_runtime(cfg), cfg.topo.M, T,
+        seed=seed, signal_seed=signal_seed, backend=backend, store=store,
     )
-    log_mu = jnp.log(jnp.maximum(mus, 1e-38))
-    log_ratio = log_mu - log_mu[:, :, model.truth : model.truth + 1]
-    return SocialLearningResult(beliefs=mus, final_state=final, log_ratio=log_ratio)
 
 
 def theorem2_rate(model: SignalModel, topo_N: int) -> np.ndarray:

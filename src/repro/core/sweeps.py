@@ -28,6 +28,16 @@ Two engines:
   ONE vmapped scan — heterogeneous F rides the scenario axis as a traced
   scalar through the sort-based trim. Pass ``mesh=`` to shard the scenario
   axis like :func:`run_pushsum_sweep`.
+* :func:`run_social_grid` / :func:`run_social_sweep` — Algorithm 3
+  (packet-drop-tolerant non-Bayesian learning) over batched
+  (topology x drop_prob x Gamma) x seed grids on the fused social engine
+  (:mod:`repro.core.social`): compatible configs (same N, M; edge lists
+  padded to a common E) stack leaf-wise into one
+  :class:`repro.core.social.SocialRuntime` batch, with drop_prob, the
+  fusion period Gamma, and the B-window riding the scenario axis as traced
+  scalars — the whole grid is ONE traced program, jitted once per
+  (mesh, statics) combo regardless of model or topology identity. Pass
+  ``mesh=`` to shard the scenario axis like the other engines.
 
 Compiled-executable caches are LRU-bounded (:class:`_LRUCache`): long
 parameter studies cycle through many config fingerprints, and an unbounded
@@ -63,14 +73,19 @@ from .pushsum import (
     sparse_ratios,
     step_edge_mask,
 )
+from .hps import HPSConfig
 from .signals import SignalModel
+from .social import SOCIAL_STORES, SocialRuntime, _social_scan_core, make_social_runtime
 
 __all__ = [
     "PushSumSweepResult",
     "ByzantineGridResult",
+    "SocialSweepResult",
     "run_pushsum_sweep",
     "run_byzantine_sweep",
     "run_byzantine_grid",
+    "run_social_sweep",
+    "run_social_grid",
 ]
 
 
@@ -510,4 +525,243 @@ def run_byzantine_grid(
         r=res.r[:K], decisions=res.decisions[:K],
         cfg=jnp.asarray(gi[:K]), F=jnp.asarray(Fs[gi[:K]]),
         seed=jnp.asarray(sd[:K]),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 3: batched (topology x drop_prob x Gamma) x seed social sweeps
+# ---------------------------------------------------------------------------
+
+class SocialSweepResult(NamedTuple):
+    """One row per scenario (config x seed), leading axis K.
+
+    ``beliefs``/``log_ratio`` follow the ``store`` shapes of
+    :class:`repro.core.social.SocialLearningResult` with the extra leading
+    K — ``store="log_ratio"`` (the sweep default) gives the (K, T) worst
+    log-ratio curves of Theorem 2 plus final (K, N, m) beliefs, which is
+    the phase-diagram payload. ``cfg`` indexes into the expanded config
+    list; ``drop_prob``/``gamma``/``seed`` are the per-scenario
+    coordinates.
+    """
+
+    beliefs: jnp.ndarray
+    log_ratio: jnp.ndarray
+    drop_prob: jnp.ndarray  # (K,)
+    gamma: jnp.ndarray      # (K,)
+    seed: jnp.ndarray       # (K,)
+    cfg: jnp.ndarray        # (K,) config index
+
+    @property
+    def K(self) -> int:
+        return int(self.seed.shape[0])
+
+
+# Jitted social-sweep programs keyed on (mesh, data_axis, statics). The
+# per-scenario data is ALL arrays (SocialRuntime leaves + PRNG keys), so one
+# cached executable serves every model/topology of the same shapes — the
+# jit wrapper's own cache handles shape changes; the LRU bound keeps long
+# parameter studies from pinning retired shard_map wrappers.
+_SOCIAL_COMPILED = _LRUCache(maxsize=16)
+
+# Stacked SocialRuntime batches keyed on the (configs,) fingerprint:
+# repeated sweep calls (e.g. host-side seed batches over one grid) skip the
+# per-config edge-list construction and device uploads entirely.
+_SOCIAL_RUNTIME_CACHE = _LRUCache(maxsize=16)
+
+
+def _social_sweep_fn(mesh, data_axis, *, truth, M, T, store, backend):
+    key = (mesh, data_axis, truth, M, T, store, backend)
+    fn = _SOCIAL_COMPILED.get(key)
+    if fn is not None:
+        return fn
+
+    def body(keys, rt_batch, log_tables, cdf):
+        def single(k, rt):
+            _, outs = _social_scan_core(
+                k, k, rt, log_tables, cdf,
+                truth=truth, M=M, T=T, store=store, backend=backend,
+            )
+            return outs
+
+        return jax.vmap(single, in_axes=(0, 0))(keys, rt_batch)
+
+    if mesh is not None:
+        from repro.launch import compat
+
+        spec = P(data_axis)
+        body = compat.shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(
+                spec,
+                SocialRuntime(*([spec] * len(SocialRuntime._fields))),
+                P(),
+                P(),
+            ),
+            out_specs=(spec, spec),
+            axis_names=frozenset({data_axis}),
+            check_vma=False,
+        )
+    fn = _SOCIAL_COMPILED[key] = jax.jit(body)
+    return fn
+
+
+def _social_cfg_fingerprint(cfgs) -> tuple:
+    parts = []
+    for c in cfgs:
+        topo = c.topo
+        parts.append((
+            topo.adj.tobytes(), topo.sizes, topo.offsets, topo.reps,
+            float(c.drop_prob), c.gamma_period, c.B,
+        ))
+    return tuple(parts)
+
+
+def run_social_grid(
+    model: SignalModel,
+    cfgs: Sequence[HPSConfig],
+    T: int,
+    seeds: Sequence[int] | int,
+    *,
+    store: str = "log_ratio",
+    backend: str = "auto",
+    mesh: Mesh | None = None,
+    data_axis: str = "data",
+) -> SocialSweepResult:
+    """Batched (topology, drop_prob, Gamma) x seed grid as ONE compiled
+    vmapped scan of the fused Algorithm 3 engine.
+
+    Every config's edge index builds once; the per-config runtime arrays
+    (edge lists padded to the common E, representative masks, drop_prob /
+    Gamma / B as traced scalars) stack leaf-wise onto a scenario axis and
+    the K = |cfgs| x |seeds| grid executes in lockstep under a single
+    ``jax.vmap``. Configs must be *compatible*: same N and same network
+    count M (the fusion matrix divides by 2M, which stays static so one
+    trace serves all). Each scenario's seed drives both PRNG streams (link
+    masks and signals) through disjoint fold-in domains — a grid row is
+    bit-identical to ``run_social_learning(..., seed=s, signal_seed=s)``
+    whenever the config's edge count equals the grid's padded E (always
+    true for single-topology drop x Gamma x seed sweeps). Mixed-E grids
+    pad smaller edge lists up to the widest, which re-indexes the (E,)
+    link-mask draw (jax's counter-based bits have no prefix property), so
+    those rows are instead bit-identical to :func:`run_social_runtime` on
+    the same ``e_max``-padded runtime.
+
+    ``store`` defaults to ``"log_ratio"``: the (K, T) worst log-ratio
+    curves are reduced inside the scan, so nothing of size (K, T, N, m)
+    ever exists — pass ``store="trajectory"`` explicitly to materialize
+    full belief histories. With ``mesh``, the scenario axis is sharded over
+    ``data_axis`` via ``shard_map`` exactly like :func:`run_pushsum_sweep`
+    (K padded up to a multiple of the axis size by repeating the last
+    scenario; results bit-identical to the single-device vmap).
+
+    The jitted program is cached in ``_SOCIAL_COMPILED`` keyed on
+    (mesh, statics) only — the grid data is all arrays, so repeated studies
+    over different models or topologies of the same shapes reuse one
+    executable without retracing.
+
+    This config-list API is anchored on dense-adjacency
+    :class:`~repro.core.hps.HPSConfig` topologies (the fingerprint
+    serializes ``topo.adj``), which targets moderate-N phase diagrams. For
+    dense-free large-N grids, build :class:`~repro.core.social.SocialRuntime`
+    batches from edge lists (:func:`graphs.block_complete_edge_list` +
+    :func:`social.social_runtime_from_edge_list`, stacked leaf-wise) and
+    ``jax.vmap`` :func:`repro.core.social._social_scan_core` directly — the
+    scan core is the shared vmappable contract.
+    """
+    from repro.kernels.social_innov import resolve_backend
+
+    cfgs = list(cfgs)
+    if not cfgs:
+        raise ValueError("need at least one config")
+    if store not in SOCIAL_STORES:
+        raise ValueError(f"store must be one of {SOCIAL_STORES}, got {store!r}")
+    N, M = cfgs[0].topo.N, cfgs[0].topo.M
+    if any(c.topo.N != N or c.topo.M != M for c in cfgs) or model.N != N:
+        raise ValueError("grid configs (and the model) must share (N, M)")
+
+    rt_key = _social_cfg_fingerprint(cfgs)
+    stacked = _SOCIAL_RUNTIME_CACHE.get(rt_key)
+    if stacked is None:
+        e_max = max(int(np.count_nonzero(c.topo.adj)) for c in cfgs)
+        runtimes = [make_social_runtime(c, e_max=e_max) for c in cfgs]
+        stacked = _SOCIAL_RUNTIME_CACHE[rt_key] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *runtimes
+        )
+
+    seeds_np = np.atleast_1d(np.asarray(seeds, np.uint32))
+    gi, sd = np.meshgrid(
+        np.arange(len(cfgs), dtype=np.int32), seeds_np, indexing="ij"
+    )
+    gi, sd = gi.ravel(), sd.ravel()
+    K = gi.shape[0]
+    if mesh is not None:
+        pad = (-K) % int(mesh.shape[data_axis])
+        if pad:
+            fill = np.full(pad, K - 1)
+            gi = np.concatenate([gi, gi[fill]])
+            sd = np.concatenate([sd, sd[fill]])
+
+    fn = _social_sweep_fn(
+        mesh, data_axis, truth=model.truth, M=M, T=T, store=store,
+        backend=resolve_backend(backend),
+    )
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.asarray(sd))
+    rt_batch = jax.tree_util.tree_map(lambda x: x[jnp.asarray(gi)], stacked)
+    truth_probs = model.tables[:, model.truth, :].astype(jnp.float32)
+    beliefs, log_ratio = fn(
+        keys, rt_batch,
+        model.log_tables().astype(jnp.float32),
+        jnp.cumsum(truth_probs, axis=-1),
+    )
+    drops = np.asarray([c.drop_prob for c in cfgs], np.float32)
+    gammas = np.asarray([c.gamma_period for c in cfgs], np.int32)
+    return SocialSweepResult(
+        beliefs=beliefs[:K], log_ratio=log_ratio[:K],
+        drop_prob=jnp.asarray(drops[gi[:K]]),
+        gamma=jnp.asarray(gammas[gi[:K]]),
+        seed=jnp.asarray(sd[:K]), cfg=jnp.asarray(gi[:K]),
+    )
+
+
+def run_social_sweep(
+    model: SignalModel,
+    cfg: HPSConfig | Sequence[HPSConfig],
+    T: int,
+    *,
+    drop_probs: Sequence[float] | float | None = None,
+    gammas: Sequence[int] | int | None = None,
+    seeds: Sequence[int] | int = 0,
+    store: str = "log_ratio",
+    backend: str = "auto",
+    mesh: Mesh | None = None,
+    data_axis: str = "data",
+) -> SocialSweepResult:
+    """Cross-product (topology x drop_prob x Gamma x seed) Algorithm 3 sweep.
+
+    ``cfg`` is one base config or a sequence of them (e.g. topology draws —
+    all sharing (N, M)); every base is crossed with every ``drop_probs``
+    value and every ``gammas`` fusion period (defaults: the base's own
+    settings), and the expanded scenario list runs with every seed as ONE
+    jitted vmapped scan via :func:`run_social_grid` — drop_prob and Gamma
+    ride the scenario axis as traced scalars, so the entire grid is one
+    compiled program. Scenario order: base-major, then drop, then Gamma,
+    then seed (matching the ``cfg``/``drop_prob``/``gamma``/``seed``
+    coordinate arrays of the result).
+    """
+    bases = [cfg] if isinstance(cfg, HPSConfig) else list(cfg)
+    expanded = []
+    for base in bases:
+        dps = ([base.drop_prob] if drop_probs is None
+               else np.atleast_1d(np.asarray(drop_probs, np.float32)).tolist())
+        gms = ([base.gamma_period] if gammas is None
+               else np.atleast_1d(np.asarray(gammas, np.int32)).tolist())
+        for dp in dps:
+            for g in gms:
+                expanded.append(dataclasses.replace(
+                    base, drop_prob=float(dp), gamma_period=int(g)
+                ))
+    return run_social_grid(
+        model, expanded, T, seeds,
+        store=store, backend=backend, mesh=mesh, data_axis=data_axis,
     )

@@ -11,6 +11,11 @@
   gossip core: gather over a padded neighbor list, Byzantine-message
   substitution, and the F-round extremes-extraction trim in one streaming
   pass over receiver blocks (Algorithm 2's per-round hot path).
+- ``social_innov`` — fused innovation + belief step for the Algorithm 3
+  social-learning engine: inverse-CDF signal sampling, the log-likelihood
+  table gather, dual accumulation, and the KL-proximal softmax belief in
+  one streaming pass over agent blocks (Algorithm 3's per-round hot path
+  alongside ``pushsum_edge``).
 - ``wkv6`` — chunked RWKV6 linear recurrence with data-dependent decay
   (rwkv6-1.6b's training/prefill hot-spot).
 - ``swa`` — flash-decode attention over a sliding-window KV cache
@@ -23,6 +28,7 @@ are validated against their pure-jnp ``ref.py`` oracles via
 from .trimmed_mean.ops import trimmed_mean, trimmed_mean_pytree
 from .pushsum_edge.ops import edge_scatter
 from .byz_trim.ops import trim_gather, trim_gather_pairs
+from .social_innov.ops import innovation_step
 from .wkv6.ops import wkv6, wkv6_decode_step
 from .swa.ops import attn_decode
 from .swa.prefill import swa_prefill_pallas
@@ -33,6 +39,7 @@ __all__ = [
     "edge_scatter",
     "trim_gather",
     "trim_gather_pairs",
+    "innovation_step",
     "wkv6",
     "wkv6_decode_step",
     "attn_decode",

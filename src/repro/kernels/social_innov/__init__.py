@@ -1,0 +1,31 @@
+"""Fused innovation + belief step for the Algorithm 3 social-learning engine.
+
+One social-learning iteration interleaves a consensus half (robust push-sum
+over the packet-dropping edge list — :mod:`repro.kernels.pushsum_edge`) with
+an innovation half, per agent j:
+
+    draw a private signal  s ~ l_j(. | theta*)        (inverse-CDF on u[j])
+    loglik[j] = log l_j(s | .)                        ((m,) table gather)
+    z[j]     += loglik[j]                             (dual accumulator)
+    mu[j]     = softmax(z[j] / mass[j])               (KL-prox belief)
+
+The seed lowering ran these as five separate XLA ops per scan step — with
+the (N, S) truth-CDF *recomputed* inside the scan and a per-agent
+key-split/vmap for the uniforms — each op a full HBM round-trip over (N, ·)
+intermediates. Here the CDF is precomputed once (hoisted loop invariant),
+the uniforms are one (N,) draw, and the remaining work is a single
+streaming pass over agent blocks.
+
+:mod:`.ref` is the always-available XLA oracle; :mod:`.ops` hosts the
+``backend="auto"|"xla"|"pallas"`` dispatch used by
+:mod:`repro.core.social`; :mod:`.social_innov` is the fused Pallas kernel.
+"""
+from .ops import BACKENDS, innovation_step, resolve_backend
+from .ref import innovation_ref
+
+__all__ = [
+    "innovation_step",
+    "innovation_ref",
+    "resolve_backend",
+    "BACKENDS",
+]

@@ -1,0 +1,46 @@
+"""Backend dispatch for the fused social-learning innovation step.
+
+``innovation_step(..., backend=...)`` is the single entry point the
+Algorithm 3 engine calls per iteration:
+
+``"xla"``     — compare/reduce + gather + softmax (:mod:`.ref`); runs
+                anywhere and is the equivalence oracle.
+``"pallas"``  — the fused streaming kernel (:mod:`.social_innov`);
+                compiled on TPU, interpreter mode elsewhere (equivalence
+                testing only — interpret mode is not a fast path).
+``"auto"``    — ``"pallas"`` on a TPU default backend, else ``"xla"``.
+
+Resolution is host-side and static (the choice changes the traced program),
+so callers thread ``backend`` through ``static_argnames`` when jitting.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..pushsum_edge.ops import BACKENDS, resolve_backend
+from .ref import innovation_ref
+from .social_innov import innovation_pallas
+
+__all__ = ["innovation_step", "resolve_backend", "BACKENDS"]
+
+
+def innovation_step(
+    z: jnp.ndarray,           # (N, m)
+    mass: jnp.ndarray,        # (N,)
+    u: jnp.ndarray,           # (N,)
+    cdf: jnp.ndarray,         # (N, S)
+    log_tables: jnp.ndarray,  # (N, m, S)
+    backend: str = "auto",
+    *,
+    block_n: int = 4096,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused sample + gather + accumulate + belief; see package docstring.
+
+    Returns ``(z_new (N, m), mu (N, m))``.
+    """
+    if resolve_backend(backend) == "xla":
+        return innovation_ref(z, mass, u, cdf, log_tables)
+    return innovation_pallas(
+        z, mass, u, cdf, log_tables, block_n=block_n, interpret=interpret
+    )

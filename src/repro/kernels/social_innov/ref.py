@@ -1,0 +1,47 @@
+"""Pure-XLA oracle for the fused social-learning innovation step.
+
+The contract both backends implement, per agent ``j`` independently — the
+innovation + belief half of one Algorithm 3 iteration (lines 13-16):
+
+    sig[j]    = #{ s : u[j] > cdf[j, s] }          (inverse-CDF categorical)
+    loglik[j] = log_tables[j, :, sig[j]]           ((m,) gather)
+    z_new[j]  = z[j] + loglik[j]                   (dual accumulator)
+    mu[j]     = softmax(z_new[j] / max(mass[j], 1e-30))   (KL-prox belief)
+
+``cdf`` is the *precomputed* inclusive cumsum of the truth-row likelihoods
+(hoisted out of the scan — the seed path recomputed the (N, S) cumsum every
+iteration), ``u`` the per-agent uniforms for this iteration (one
+``jax.random.uniform(key, (N,))`` draw; the seed path split N keys and
+vmapped scalar draws). The belief formula is exactly
+:func:`repro.core.social.kl_dual_averaging_update`; it lives here too so a
+single fused pass can emit both the accumulator and the belief.
+
+This lowering is the equivalence oracle for the Pallas kernel
+(:mod:`.social_innov`) and the executable the engine uses off-TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["innovation_ref"]
+
+
+def innovation_ref(
+    z: jnp.ndarray,           # (N, m) log-likelihood accumulator
+    mass: jnp.ndarray,        # (N,)  push-sum mass
+    u: jnp.ndarray,           # (N,)  uniforms for this iteration
+    cdf: jnp.ndarray,         # (N, S) inclusive cumsum of truth-row probs
+    log_tables: jnp.ndarray,  # (N, m, S) log l_j(s | theta_k)
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns ``(z_new (N, m), mu (N, m))``."""
+    S = cdf.shape[1]
+    # clamp: an fp32 cumsum can end below 1.0, so u >= cdf[:, -1] would
+    # index past the alphabet (NaN gather fill poisoning z forever)
+    sig = jnp.minimum((u[:, None] > cdf).sum(axis=-1), S - 1)    # (N,) int
+    loglik = jnp.take_along_axis(
+        log_tables, sig[:, None, None].astype(jnp.int32), axis=2
+    )[:, :, 0]                                           # (N, m)
+    z_new = z + loglik
+    mu = jax.nn.softmax(z_new / jnp.maximum(mass, 1e-30)[:, None], axis=-1)
+    return z_new, mu

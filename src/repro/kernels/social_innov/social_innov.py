@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: fused innovation + belief step for Algorithm 3.
+
+One call covers the innovation half of a social-learning iteration (lines
+13-16) in a single streaming pass over agent blocks: inverse-CDF categorical
+signal sampling, the (m,)-row log-likelihood gather from the resident log
+tables, the ``z += loglik`` dual-averaging accumulation, and the KL-proximal
+softmax belief — replacing five separate XLA ops (compare, reduce, gather,
+add, softmax) each reading/writing (N, ·) HBM intermediates per scan step.
+
+Design (see /opt/skills/guides/pallas_guide.md)
+-----------------------------------------------
+* Grid: 1-D over agent blocks of ``block_n`` rows. Every input is
+  block-mapped — nothing is resident across blocks, so the kernel streams:
+  per block it touches O(block_n * (m S + S + m)) VMEM and emits
+  O(block_n * m). No cross-block state means any grid order is legal.
+* The per-agent gather ``log_tables[j, :, sig[j]]`` is lowered as a one-hot
+  contraction over the alphabet axis (``iota_S == sig`` mask + sum) rather
+  than a dynamic gather: S is small (4-16 for the paper's models), the
+  one-hot select is pure VPU, and Mosaic vectorizes it where a per-row
+  dynamic slice would serialize.
+* The softmax runs on the block tile with the standard max-subtraction;
+  hypotheses m is small so the reduction axis is cheap — the streaming axis
+  (agents) carries the throughput, as with the other consensus kernels.
+* Padding agents (to a multiple of ``block_n``) carry ``mass = 0`` /
+  ``u = 0`` / all-zero table rows: their ``sig`` is 0, their ``z_new`` row
+  is ``z + 0`` and the softmax of a zero row is uniform — finite, inert,
+  and sliced off.
+
+``interpret=None`` auto-selects interpreter mode off-TPU so CPU CI
+validates the identical program (tests/test_social_engine.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["innovation_pallas"]
+
+
+def _kernel(z_ref, mass_ref, u_ref, cdf_ref, lt_ref, z_out_ref, mu_ref):
+    z = z_ref[...]                               # (BN, m)
+    mass = mass_ref[...]                         # (BN,)
+    u = u_ref[...]                               # (BN,)
+    cdf = cdf_ref[...]                           # (BN, S)
+    lt = lt_ref[...]                             # (BN, m, S)
+
+    # --- inverse-CDF categorical sample per agent; clamp because an fp32
+    # cumsum can end below 1.0 (u >= cdf[-1] must map to the last letter) ---
+    s_max = cdf.shape[1] - 1
+    sig = jnp.minimum((u[:, None] > cdf).sum(axis=-1), s_max).astype(jnp.int32)
+
+    # --- (m,) log-likelihood row gather as a one-hot contraction over S ---
+    s_iota = jax.lax.broadcasted_iota(jnp.int32, lt.shape, 2)
+    onehot = s_iota == sig[:, None, None]
+    loglik = jnp.where(onehot, lt, 0.0).sum(axis=-1)          # (BN, m)
+
+    # --- dual accumulation + KL-proximal belief (softmax of z/m) ---
+    z_new = z + loglik
+    z_out_ref[...] = z_new
+    ratio = z_new / jnp.maximum(mass, 1e-30)[:, None]
+    shifted = ratio - ratio.max(axis=-1, keepdims=True)
+    e = jnp.exp(shifted)
+    mu_ref[...] = e / e.sum(axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def innovation_pallas(
+    z: jnp.ndarray,           # (N, m) log-likelihood accumulator
+    mass: jnp.ndarray,        # (N,)  push-sum mass
+    u: jnp.ndarray,           # (N,)  uniforms for this iteration
+    cdf: jnp.ndarray,         # (N, S) inclusive cumsum of truth-row probs
+    log_tables: jnp.ndarray,  # (N, m, S)
+    *,
+    block_n: int = 4096,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused innovation step -> ``(z_new (N, m), mu (N, m))``.
+
+    Matches :func:`repro.kernels.social_innov.ref.innovation_ref` to fp32
+    rounding (the softmax applies the max-subtraction the XLA lowering also
+    performs). N is padded to a multiple of ``block_n`` with inert rows; the
+    pad rows are sliced off.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n, m = z.shape
+    S = cdf.shape[1]
+    block_n = min(block_n, max(n, 1))
+    pad = (-n) % block_n
+    if pad:
+        z = jnp.pad(z, ((0, pad), (0, 0)))
+        mass = jnp.pad(mass, (0, pad))
+        u = jnp.pad(u, (0, pad))
+        cdf = jnp.pad(cdf, ((0, pad), (0, 0)))
+        log_tables = jnp.pad(log_tables, ((0, pad), (0, 0), (0, 0)))
+    n_pad = n + pad
+
+    z_new, mu = pl.pallas_call(
+        _kernel,
+        grid=(n_pad // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, m), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n, S), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, m, S), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, m), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, m), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad, m), z.dtype),
+            jax.ShapeDtypeStruct((n_pad, m), z.dtype),
+        ],
+        interpret=interpret,
+    )(z, mass, u, cdf, log_tables)
+    return z_new[:n], mu[:n]
