@@ -1,0 +1,50 @@
+"""Render the committed perf-trajectory artifacts as a markdown table.
+
+Reads every ``results/BENCH_*.json`` (the merge-updated artifacts written
+by ``benchmarks/run.py --json-dir``) and prints one markdown table per
+artifact — the generator behind README.md's benchmark section:
+
+    PYTHONPATH=src python -m benchmarks.bench_table [--only NAME ...]
+
+Interpreter-mode Pallas rows are kept but labeled: on CPU they measure the
+Pallas interpreter (equivalence testing), not the kernel, so they are not
+comparable to the compiled XLA rows next to them.
+"""
+import argparse
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "..", "results")
+
+
+def tables(only=None):
+    out = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "BENCH_*.json"))):
+        tag = os.path.basename(path)[len("BENCH_"):-len(".json")]
+        if only and tag not in only:
+            continue
+        with open(path) as f:
+            rows = json.load(f)
+        lines = [f"### {tag}", "",
+                 "| benchmark | us/call | notes |",
+                 "|---|---:|---|"]
+        for name in sorted(rows):
+            r = rows[name]
+            notes = r["derived"].replace("|", "\\|")
+            lines.append(f"| `{name}` | {r['us_per_call']:.1f} | {notes} |")
+        out.append("\n".join(lines))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="restrict to these artifact tags (e.g. hps social)")
+    args = ap.parse_args()
+    print("\n\n".join(tables(args.only)))
+
+
+if __name__ == "__main__":
+    main()

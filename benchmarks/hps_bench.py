@@ -1,0 +1,157 @@
+"""Theorem 1 benchmarks: the fused hierarchical push-sum (HPS) engine.
+
+Three claim families:
+ * consensus-decay claims of the paper on the fused engine, with the (T,)
+   error curves reduced in-scan via ``store="gap"`` (no (T, N, d) history):
+   smaller B (more reliable links) => faster; more sub-networks (smaller
+   D*) => faster than one gigantic network (Remark 2); exponential decay
+   checkpoints (``hps_consensus_*`` / ``hps_decay_checkpoints`` rows);
+ * per-step cost of the fused engine at N in {1024, 16384} through the
+   ``backend="xla"|"pallas"`` switch (``hps_step_*`` rows) — runtimes are
+   built dense-free via :func:`graphs.hier_edge_list`, so no (N, N)
+   adjacency ever exists, and ``store="final"`` keeps the scan from
+   materializing (T, N, d);
+ * a (topology x M x Gamma x drop x seed) grid compiled ONCE as a single
+   vmapped scan — the sub-network count M rides the scenario axis as a
+   traced scalar (``hps_grid_topoxMxGxD`` row;
+   :func:`repro.core.sweeps.run_hps_grid`).
+
+On CPU the Pallas rows run ``interpret=True`` equivalence mode (tagged
+``mode=interpret``; the perf gate skips them) — the compiled comparison is
+TPU-only, as with the push-sum, trim and innovation kernel rows.
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.core.graphs import hier_edge_list, make_hierarchy
+from repro.core.hps import HPSConfig, hps_runtime_from_edge_list, run_hps, run_hps_runtime
+from repro.core.sweeps import run_hps_grid
+
+
+def _consensus_rows():
+    out = []
+    rng = np.random.default_rng(0)
+
+    def gap_curve(sizes, gamma, B, drop, T, topology="complete", seed=0):
+        topo = make_hierarchy(sizes, topology=topology, seed=seed)
+        w = rng.normal(size=(topo.N, 4)).astype(np.float32)
+        cfg = HPSConfig(topo=topo, gamma_period=gamma, B=B, drop_prob=drop)
+        t0 = time.perf_counter()
+        err = np.asarray(run_hps(w, cfg, T, seed=seed, store="gap").gap)
+        wall = (time.perf_counter() - t0) / T * 1e6
+        return wall, err
+
+    # B sweep (drop forced-delivery window) under heavy loss
+    for B in (1, 2, 8):
+        wall, err = gap_curve([6, 6, 6], gamma=8, B=B, drop=0.7, T=600)
+        out.append((f"hps_consensus_B{B}", wall, f"err_t300={err[300]:.2e}"))
+    # M sweep at fixed N=24 on RINGS: hierarchy shrinks the diameter D*
+    # (Remark 2) — one 24-ring (D=23) vs four 6-rings (D=5) + PS fusion
+    for sizes in ([24], [12, 12], [6, 6, 6, 6]):
+        wall, err = gap_curve(sizes, gamma=4, B=2, drop=0.2, T=900,
+                              topology="ring")
+        out.append((f"hps_consensus_ringM{len(sizes)}", wall,
+                    f"err_t600={err[600]:.2e}"))
+    # exponential decay checkpoints
+    wall, err = gap_curve([6, 6, 6], gamma=4, B=1, drop=0.1, T=600)
+    halves = [float(err[t]) for t in (100, 200, 400)]
+    out.append(("hps_decay_checkpoints", wall,
+                "err(100;200;400)=" + ";".join(f"{h:.1e}" for h in halves)))
+    return out
+
+
+def _step_setup(N):
+    """N/8 complete 8-agent networks, built dense-free (no (N, N) array)."""
+    el, rep_mask = hier_edge_list([8] * (N // 8), topology="complete")
+    rt = hps_runtime_from_edge_list(
+        el, rep_mask, drop_prob=0.1, gamma_period=8, B=4
+    )
+    w = np.random.default_rng(1).normal(size=(N, 4)).astype(np.float32)
+    return rt, w
+
+
+def _time_run(w, rt, T, backend):
+    t0 = time.perf_counter()
+    jax.block_until_ready(run_hps_runtime(
+        w, rt, T, seed=0, backend=backend, store="final"
+    ).ratio)
+    compile_wall = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    jax.block_until_ready(run_hps_runtime(
+        w, rt, T, seed=0, backend=backend, store="final"
+    ).ratio)
+    return (time.perf_counter() - t0) / T * 1e6, compile_wall
+
+
+def _step_rows(smoke: bool):
+    """hps_step_{xla,pallas}_N{1024,16384}: fused-engine per-step cost."""
+    out = []
+    sizes = (1024,) if smoke else (1024, 16384)
+    for N in sizes:
+        rt, w = _step_setup(N)
+        E = int(rt.src.shape[0])
+        xla_us, compile_s = _time_run(w, rt, T=30, backend="xla")
+        out.append((
+            f"hps_step_xla_N{N}", xla_us,
+            f"E={E};d=4;Gamma=8;drop=0.1;store=final;"
+            f"compile_s={compile_s:.1f}",
+        ))
+        mode = "interpret" if jax.default_backend() != "tpu" else "compiled"
+        T_p = 4 if mode == "interpret" else 30
+        pallas_us, compile_s = _time_run(w, rt, T=T_p, backend="pallas")
+        out.append((
+            f"hps_step_pallas_N{N}", pallas_us,
+            f"E={E};d=4;Gamma=8;drop=0.1;store=final;mode={mode};"
+            f"compile_s={compile_s:.1f}",
+        ))
+    return out
+
+
+def _grid_row(smoke: bool):
+    """topology x M x Gamma x drop x seed grid: one trace, one program."""
+    topos = [
+        make_hierarchy([6, 6, 6], topology="complete", seed=0),
+        make_hierarchy([6, 6, 6], topology="ring+", extra_edge_prob=0.8,
+                       seed=1),
+        make_hierarchy([9, 9], topology="complete", seed=2),
+        make_hierarchy([3] * 6, topology="complete", seed=3),
+    ]
+    cfgs = [
+        HPSConfig(topo=t, gamma_period=g, B=2, drop_prob=d)
+        for t in topos for g in (4, 8) for d in (0.0, 0.3)
+    ]
+    seeds = list(range(3))
+    T = 50 if smoke else 300
+    w = np.random.default_rng(0).normal(size=(18, 3)).astype(np.float32)
+
+    def go():
+        res = run_hps_grid(w, cfgs, T, seeds=seeds)
+        jax.block_until_ready(res.gap)
+        return res
+
+    t0 = time.perf_counter()
+    res = go()
+    compile_wall = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res = go()
+    wall = time.perf_counter() - t0
+    gap = np.asarray(res.gap)
+    Ms = sorted(set(np.asarray(res.M).tolist()))
+    # T in the name: the smoke and full variants time different horizons
+    # and must not ratchet each other's baseline under --json-dir
+    return (
+        f"hps_grid_topoxMxGxD{res.K}_T{T}", wall / res.K * 1e6,
+        f"scenarios={res.K};topos=4;Ms={Ms};gammas=2;drops=2;"
+        f"seeds={len(seeds)};T={T};single_jit=true;"
+        f"worst_final_gap={gap[:, -1].max():.2e};"
+        f"compile_s={compile_wall:.1f}",
+    )
+
+
+def rows(smoke: bool = False):
+    out = [] if smoke else _consensus_rows()
+    out.extend(_step_rows(smoke))
+    out.append(_grid_row(smoke))
+    return out

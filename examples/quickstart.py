@@ -7,7 +7,11 @@
    send calibrated lies; every normal agent still learns theta*.
 4. Sweep 32 consensus scenarios (topology draws x drop rates x seeds) in ONE
    jitted vmapped scan over the sparse edge-list push-sum core.
-5. Phase diagram: a (drop_prob x Gamma x seed) Algorithm 3 grid as ONE
+5. Hierarchical consensus grid: a (topology x M x Gamma x drop x seed)
+   Algorithm 1 sweep as ONE compiled program — the sub-network count M
+   rides the scenario axis as a traced scalar, and each scenario's (T,)
+   Theorem-1 error curve is reduced inside the scan (``store="gap"``).
+6. Phase diagram: a (drop_prob x Gamma x seed) Algorithm 3 grid as ONE
    compiled program — belief-convergence rate per cell, with the (T,) worst
    log-ratio curves reduced inside the scan (nothing of size (K, T, N, m)
    ever exists).
@@ -20,7 +24,7 @@ from repro.core import (
     HPSConfig, ByzantineConfig, make_hierarchy, make_confused_model,
     run_social_learning, run_byzantine_learning, attacks, healthy_networks,
     random_strongly_connected, stack_edge_lists, run_pushsum_sweep,
-    run_social_sweep,
+    run_hps_sweep, run_social_sweep,
 )
 
 # --- system: 3 sub-networks of 6/6/6 agents, complete intra-network graphs
@@ -74,6 +78,26 @@ for dp in (0.0, 0.9):
     sel = np.asarray(sweep.drop_prob) == np.float32(dp)
     print(f"  drop={dp:.1f}  worst final consensus err: {err[sel, -1].max():.2e}")
 assert err[:, -1].max() < 1e-2
+
+# --- Algorithm 1 grid: topology x M x Γ x drop x seed in one call ----------
+hier_a = make_hierarchy([6, 6, 6], topology="complete", seed=0)   # M=3
+hier_b = make_hierarchy([9, 9], topology="complete", seed=1)      # M=2
+w18 = np.random.default_rng(2).normal(size=(18, 3)).astype(np.float32)
+bases = [HPSConfig(topo=t, gamma_period=8, B=2, drop_prob=0.0)
+         for t in (hier_a, hier_b)]
+hps = run_hps_sweep(w18, bases, T=2000, drop_probs=[0.0, 0.3],
+                    gammas=[2, 8], seeds=[0, 1])   # store="gap" default
+gaps = np.asarray(hps.gap)                          # (K, T) Thm-1 curves
+print(f"\n[Alg 1 grid] {hps.K} HPS scenarios (2 hierarchies M∈{{3,2}} x "
+      f"2 drops x 2 Γ x 2 seeds), one jitted vmapped scan;\n"
+      f"  final consensus error per (M, Γ) cell (worst over drops/seeds):")
+for m_val in (3, 2):
+    cells = []
+    for g in (2, 8):
+        sel = (np.asarray(hps.M) == m_val) & (np.asarray(hps.gamma) == g)
+        cells.append(f"Γ={g}:{gaps[sel, -1].max():.1e}")
+    print(f"  M={m_val}  " + "  ".join(cells))
+assert gaps[:, -1].max() < 5e-2   # every scenario reached consensus
 
 # --- Algorithm 3 phase diagram: drop x Γ x seed in one compiled call -------
 topo3 = make_hierarchy([6, 6, 6], topology="complete", seed=0)

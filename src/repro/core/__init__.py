@@ -21,6 +21,7 @@ from .graphs import (
     edge_masks,
     sort_by_dst,
     block_complete_edge_list,
+    hier_edge_list,
     random_strongly_connected_edge_list,
     NeighborList,
     neighbor_lists,
@@ -39,7 +40,21 @@ from .pushsum import (
     sparse_mass_invariant,
     sparse_ratios,
 )
-from .hps import HPSConfig, hps_fusion, hps_step, run_hps, theorem1_bound
+from .hps import (
+    HPSConfig,
+    HPSResult,
+    HPSRuntime,
+    hps_fusion,
+    hps_runtime_from_edge_list,
+    hps_step,
+    hps_stream_fold,
+    make_hps_runtime,
+    ps_trimmed_pool,
+    run_hps,
+    run_hps_dense,
+    run_hps_runtime,
+    theorem1_bound,
+)
 from .social import (
     SocialLearningResult,
     SocialRuntime,
@@ -63,10 +78,13 @@ from .byzantine import (
 )
 from .sweeps import (
     ByzantineGridResult,
+    HPSSweepResult,
     PushSumSweepResult,
     SocialSweepResult,
     run_byzantine_grid,
     run_byzantine_sweep,
+    run_hps_grid,
+    run_hps_sweep,
     run_pushsum_sweep,
     run_social_grid,
     run_social_sweep,
@@ -77,13 +95,15 @@ __all__ = [
     "HierTopology", "make_hierarchy", "link_schedule", "check_assumption3",
     "is_strongly_connected", "random_strongly_connected", "EdgeList",
     "edge_list", "stack_edge_lists", "edge_masks", "sort_by_dst",
-    "block_complete_edge_list",
+    "block_complete_edge_list", "hier_edge_list",
     "random_strongly_connected_edge_list", "NeighborList", "neighbor_lists",
     "stack_neighbor_lists", "SignalModel", "make_confused_model",
     "check_global_observability", "PushSumState", "pushsum_step", "run_pushsum",
     "mass_invariant", "ratios", "SparsePushSumState", "sparse_pushsum_step",
     "run_pushsum_sparse", "sparse_mass_invariant", "sparse_ratios",
-    "HPSConfig", "hps_fusion", "hps_step", "run_hps",
+    "HPSConfig", "HPSResult", "HPSRuntime", "hps_fusion", "hps_step",
+    "hps_stream_fold", "hps_runtime_from_edge_list", "make_hps_runtime",
+    "ps_trimmed_pool", "run_hps", "run_hps_dense", "run_hps_runtime",
     "theorem1_bound", "run_social_learning", "kl_dual_averaging_update",
     "SocialLearningResult", "SocialRuntime", "make_social_runtime",
     "run_social_runtime", "social_runtime_from_edge_list",
@@ -92,8 +112,10 @@ __all__ = [
     "make_byzantine_scan", "run_byzantine_learning",
     "run_byzantine_learning_ovr", "trimmed_neighbor_mean",
     "healthy_networks", "decide",
-    "PushSumSweepResult", "ByzantineGridResult", "SocialSweepResult",
+    "PushSumSweepResult", "ByzantineGridResult", "HPSSweepResult",
+    "SocialSweepResult",
     "run_pushsum_sweep", "run_byzantine_sweep", "run_byzantine_grid",
+    "run_hps_sweep", "run_hps_grid",
     "run_social_sweep", "run_social_grid",
     "attacks",
 ]

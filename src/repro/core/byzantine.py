@@ -389,6 +389,16 @@ def _select_reps(key, rt: ByzRuntime, extra_reps):
 
 def _fusion(key, t, r_in, rt: ByzRuntime, F, *, n_reps: int, extra_reps,
             attack: Attack):
+    """PS fusion round: query reps, trim F from each end, push w_tilde back.
+
+    The trimmed-pool average is :func:`repro.core.hps.ps_trimmed_pool` —
+    the same masked-segment reduction Algorithm 1's resilient
+    :func:`~repro.core.hps.hps_fusion` lowers through, so the two PS-side
+    fusion rules share one implementation (accepting a traced F for the
+    batched (topology, F) grids).
+    """
+    from .hps import ps_trimmed_pool
+
     pair = r_in.shape[1:]
     sl = (slice(None),) + (None,) * len(pair)
     reps = _select_reps(key, rt, extra_reps)              # (n_reps,)
@@ -402,10 +412,7 @@ def _fusion(key, t, r_in, rt: ByzRuntime, F, *, n_reps: int, extra_reps,
     else:
         reply = rep_vals        # no sparse reply defined: state is replayed
     rep_vals = jnp.where(rt.byz_mask[reps][sl], reply, rep_vals)
-    s = jnp.sort(rep_vals, axis=0)
-    ar = jnp.arange(n_reps)
-    keep = (ar >= F) & (ar < n_reps - F)
-    w = (s * keep[sl]).sum(0) / keep.sum()
+    w = ps_trimmed_pool(rep_vals, jnp.ones((n_reps,), bool), F)
     # queried reps outside C adopt w_tilde (lines 20-22)
     adopt = jnp.zeros((r_in.shape[0],), bool).at[reps].set(True) & (~rt.in_C)
     return jnp.where(adopt[sl], w[None], r_in)

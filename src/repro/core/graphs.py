@@ -42,6 +42,7 @@ __all__ = [
     "edge_masks",
     "sort_by_dst",
     "block_complete_edge_list",
+    "hier_edge_list",
     "random_strongly_connected_edge_list",
     "NeighborList",
     "neighbor_lists",
@@ -553,32 +554,60 @@ def random_strongly_connected_edge_list(
     return el
 
 
-def block_complete_edge_list(
+def hier_edge_list(
     sizes: Sequence[int],
+    topology: str = "complete",
+    extra_edge_prob: float = 0.3,
+    seed: int = 0,
+    rep_choice: str = "first",
 ) -> tuple[EdgeList, np.ndarray]:
-    """Hierarchical system of complete sub-networks, built dense-free.
+    """Hierarchical M-network system built directly as a sparse edge list.
 
-    ``make_hierarchy(sizes, topology="complete")`` materializes the (N, N)
-    bool adjacency — 256 MB at N = 16384 — but the sparse engines only ever
-    consume the edge index and the representative mask, so large-N social /
-    consensus workloads build those directly: per network, all ordered
-    intra-block pairs (no self-loops); no O(N^2) array is ever touched.
+    The dense-free dual of :func:`make_hierarchy`: the same block-diagonal
+    topologies ("ring" | "complete" | "ring+"), but emitted as per-block
+    edge runs with no (N, N) bool adjacency ever touched — 256 MB at
+    N = 16384, 17 GB at N = 131072 — which is what lets the fused
+    hierarchical engines (:mod:`repro.core.hps`, :mod:`repro.core.social`)
+    run N ~ 1e4-1e5 systems. "ring+" blocks are a random Hamiltonian cycle
+    plus ``~extra_edge_prob * n^2`` uniform extra edges (deduplicated) — the
+    same cycle-backbone construction as :func:`random_strongly_connected`,
+    with a fixed extra-edge count instead of per-pair Bernoulli draws so the
+    block never touches an (n, n) array.
 
     Returns ``(el, rep_mask)``: a dst-sorted :class:`EdgeList` (the layout
-    the Pallas consensus kernel expects) and the (N,) bool representative
-    mask (first agent of each block, matching ``make_hierarchy``'s
-    ``rep_choice="first"``).
+    the Pallas consensus kernel expects — rep links to the PS are implicit,
+    carried by the (N,) bool representative mask, since the PS fusion is a
+    masked reduction, not a set of graph edges) and the mask itself
+    (``rep_choice="first"``: first agent of each block, matching
+    :func:`make_hierarchy`; ``"random"``: a uniform draw per block).
     """
+    rng = np.random.default_rng(seed)
     srcs, dsts = [], []
     off = 0
     offsets = []
     for sz in sizes:
-        idx = np.arange(sz, dtype=np.int32)
-        s = np.repeat(idx, sz)
-        d = np.tile(idx, sz)
-        keep = s != d
-        srcs.append(off + s[keep])
-        dsts.append(off + d[keep])
+        idx = np.arange(sz, dtype=np.int64)
+        if topology == "ring":
+            s, d = idx, (idx + 1) % sz
+        elif topology == "complete":
+            s = np.repeat(idx, sz)
+            d = np.tile(idx, sz)
+            keep = s != d
+            s, d = s[keep], d[keep]
+        elif topology == "ring+":
+            perm = rng.permutation(sz).astype(np.int64)
+            n_extra = int(round(sz * sz * extra_edge_prob))
+            ex_s = rng.integers(0, sz, size=n_extra)
+            ex_d = rng.integers(0, sz, size=n_extra)
+            keep = ex_s != ex_d
+            s = np.concatenate([perm, ex_s[keep]])
+            d = np.concatenate([np.roll(perm, -1), ex_d[keep]])
+            _, uniq = np.unique(s * np.int64(sz) + d, return_index=True)
+            s, d = s[uniq], d[uniq]
+        else:
+            raise ValueError(f"unknown topology {topology!r}")
+        srcs.append(off + s)
+        dsts.append(off + d)
         offsets.append(off)
         off += int(sz)
     src = np.concatenate(srcs).astype(np.int32)
@@ -587,8 +616,26 @@ def block_complete_edge_list(
                   valid=np.ones(src.shape[0], dtype=bool))
     el, _, _ = sort_by_dst(el)
     rep_mask = np.zeros(off, dtype=bool)
-    rep_mask[np.asarray(offsets)] = True
+    if rep_choice == "first":
+        reps = np.asarray(offsets)
+    elif rep_choice == "random":
+        reps = np.asarray([o + rng.integers(sz)
+                           for o, sz in zip(offsets, sizes)])
+    else:
+        raise ValueError(rep_choice)
+    rep_mask[reps] = True
     return el, rep_mask
+
+
+def block_complete_edge_list(
+    sizes: Sequence[int],
+) -> tuple[EdgeList, np.ndarray]:
+    """Hierarchical system of complete sub-networks, built dense-free.
+
+    The ``topology="complete"`` specialization of :func:`hier_edge_list`,
+    kept as the established large-N entry point of the social engine.
+    """
+    return hier_edge_list(sizes, topology="complete")
 
 
 def edge_masks(masks: np.ndarray, el: EdgeList) -> np.ndarray:

@@ -1,4 +1,4 @@
-"""Hierarchical Push-Sum (HPS) — Algorithm 1 of the paper.
+"""Hierarchical Push-Sum (HPS) — Algorithm 1 of the paper, fused and batched.
 
 M sub-networks each run fast robust push-sum in parallel (block-diagonal
 adjacency); every ``Gamma`` iterations each network's *designated
@@ -13,20 +13,108 @@ i.e. the doubly-stochastic *hierarchical fusion matrix* F with
 
 Theorem 1: with ``Gamma = B * D*``, the consensus error decays as
 ``gamma^(t / 2Gamma)`` with ``gamma = 1 - (1/4M^2)(min_i beta_i)^(2 D* B)``.
+
+The fused, batched engine
+-------------------------
+The production path mirrors :mod:`repro.core.social`'s architecture: the
+consensus half of every iteration runs on the sparse edge-list push-sum core
+(:mod:`repro.core.pushsum`) behind the repo-wide
+``backend="auto"|"xla"|"pallas"`` switch (delivery + integration through
+:mod:`repro.kernels.pushsum_edge` on the dst-sorted edge index), per-round
+(E,) operational masks are Bernoulli draws *inside* the scan (no (T, N, N)
+``link_schedule`` tensor is ever materialized), and every loop invariant —
+the out-degree share factors, the consensus target — is hoisted out of the
+scan. All per-scenario inputs live in an :class:`HPSRuntime` of arrays
+(``drop_prob`` / ``gamma`` / ``B`` / ``M`` are traced scalars), so a batch
+of compatible scenarios — even with *different sub-network counts M* —
+stacks leaf-wise and rides one ``jax.vmap`` axis
+(:func:`repro.core.sweeps.run_hps_grid`).
+
+``store`` selects what the scan materializes — ``"trajectory"`` the full
+(T, N, d) ratio history, ``"gap"`` the in-scan-reduced (T,) worst consensus
+error ``max_{j,k} |z_j/m_j - mean(w)|`` (Theorem 1's LHS) plus the final
+ratios, and ``"final"`` final ratios only — so Theorem-1 curves at long
+horizons never carry O(T N d) out of the scan.
+
+PS-side resilient fusion
+------------------------
+:func:`hps_fusion` generalizes the plain averaging rule to a masked-pool
+reduction: ``F=0`` is the exact Algorithm-1 fusion above (masked mean, no
+sort), while ``F>0`` drops the F largest and F smallest representative
+contributions per coordinate before averaging — the Byzantine-resilient
+gossiping-type rule of the Su & Vaidya PS-fusion lineage — through
+:func:`ps_trimmed_pool`, the same lowering Algorithm 2's parameter-server
+step (:func:`repro.core.byzantine._fusion`) reduces through. The trimmed
+rule is resilient, not average-preserving: it trades the exact
+doubly-stochastic mass invariant for outlier rejection.
+
+PRNG stream: the per-round link-mask draw folds in ``hps_stream_fold(t) =
+~t`` — the bitwise-not domain, which bitcasts to the top of the uint32
+range and is disjoint from the social engine's ``2t + s`` and the Byzantine
+engine's ``3t + s`` fold-in domains for any horizon ``T < 2^31 / 3``. The
+seed-era ``run_hps`` derived its schedule from ``seed`` alone on the plain
+``t`` domain, which aliased the HPS mask stream with the social-learning
+mask stream (and the Byzantine signal stream) whenever base seeds matched.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .graphs import HierTopology, link_schedule
-from .pushsum import PushSumState, init_state, pushsum_step, ratios
+from .graphs import EdgeList, HierTopology
+from .pushsum import (
+    PushSumState,
+    SparsePushSumState,
+    _out_degree,
+    init_sparse_state,
+    init_state,
+    pushsum_step,
+    ratios,
+    sparse_ratios,
+    sparse_pushsum_step,
+    step_edge_mask,
+)
 
-__all__ = ["HPSConfig", "hps_fusion", "hps_step", "run_hps", "theorem1_bound"]
+__all__ = [
+    "HPSConfig",
+    "HPSResult",
+    "HPSRuntime",
+    "HPS_STORES",
+    "hps_stream_fold",
+    "ps_trimmed_pool",
+    "hps_fusion",
+    "hps_step",
+    "make_hps_runtime",
+    "hps_runtime_from_edge_list",
+    "run_hps",
+    "run_hps_runtime",
+    "run_hps_dense",
+    "theorem1_bound",
+]
+
+HPS_STORES = ("trajectory", "gap", "final")
+
+
+def hps_stream_fold(t):
+    """Fold-in value of the HPS link-mask stream at iteration ``t``.
+
+    ``~t`` bitcasts to ``2^32 - 1 - t`` in the uint32 fold-in space, so the
+    HPS mask stream lives at the top of the domain — disjoint from the
+    social engine's ``t * 2 + s`` and the Byzantine engine's ``t * 3 + s``
+    streams for any realistic horizon, even when every engine roots its
+    base key at the same seed. (The seed scheme folded plain ``t``, which
+    collided with the social link-mask stream at every even value.)
+    """
+    if isinstance(t, int):
+        # ~t is negative; fold_in bitcasts int32 but rejects negative
+        # PYTHON ints (no dtype to reinterpret), so pin the width here
+        t = np.int32(t)
+    return ~t
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,19 +143,68 @@ class HPSConfig:
         return el
 
 
+# ---------------------------------------------------------------------------
+# PS-side fusion: one masked-pool reduction for Algorithms 1 and 2
+# ---------------------------------------------------------------------------
+
+def ps_trimmed_pool(
+    pool: jnp.ndarray,    # (R, *coord) candidate values at the PS
+    valid: jnp.ndarray,   # (R,) bool — pool membership mask
+    F,                    # trim count; Python int or traced scalar
+) -> jnp.ndarray:
+    """Trimmed mean over the parameter server's candidate pool, (*coord,).
+
+    Per scalar coordinate independently (the paper's "collection of scalar
+    dynamics"): drop invalid slots, drop the F largest and F smallest of
+    the rest, average the survivors. This is THE PS-side resilient
+    reduction — :func:`hps_fusion` (Algorithm 1, ``F > 0``) and
+    :func:`repro.core.byzantine._fusion` (Algorithm 2 lines 10-22) both
+    lower through it, so the two fusion rules share one implementation.
+
+    Routed through :func:`repro.kernels.byz_trim.trim_gather_ref` — the
+    sort-based XLA lowering, which accepts a *traced* F — as a single
+    virtual receiver whose "neighbors" are the pool slots. The pool is
+    O(n_reps), far below the streaming Pallas kernel's profitable range, so
+    no backend switch is exposed here.
+    """
+    from repro.kernels.byz_trim import trim_gather_ref
+
+    r = pool.reshape(pool.shape[0], -1)                   # (R, P)
+    tsum, kept = trim_gather_ref(
+        r,
+        jnp.arange(pool.shape[0], dtype=jnp.int32)[None, :],   # (1, R)
+        valid[None, :],
+        jnp.zeros((1,) + r.shape, r.dtype),               # no substitution
+        jnp.zeros((1, pool.shape[0]), bool),
+        F,
+    )
+    return (tsum[0] / jnp.maximum(kept[0], 1.0)).reshape(pool.shape[1:])
+
+
 def hps_fusion(
-    z: jnp.ndarray, m: jnp.ndarray, rep_mask: jnp.ndarray, M
+    z: jnp.ndarray, m: jnp.ndarray, rep_mask: jnp.ndarray, M, F=0
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Apply the hierarchical fusion matrix F to (z, m) at the reps.
 
-    Non-representative agents are untouched; this is exactly lines 13-21 of
-    Algorithm 1 (each rep sends half, PS averages the halves and pushes back).
-    ``M`` may be a Python int or a traced scalar — batched sweeps whose
-    scenarios differ only in arrays keep one traced program either way.
+    Non-representative agents are untouched; with ``F=0`` this is exactly
+    lines 13-21 of Algorithm 1 (each rep sends half, PS averages the halves
+    and pushes back). ``M`` may be a Python int or a traced scalar —
+    batched sweeps whose scenarios differ only in arrays keep one traced
+    program either way, and grids may even batch *different M* values.
+
+    ``F > 0`` swaps the plain average for :func:`ps_trimmed_pool`'s trimmed
+    rep-pool mean — the Byzantine-resilient gossiping-type PS rule. The
+    trimmed rule needs ``M >= 2F + 1`` surviving reps and is not
+    average-preserving (module docstring).
     """
     repf = rep_mask.astype(z.dtype)
-    pooled_z = (z * repf[:, None]).sum(axis=0) / (2.0 * M)   # (d,)
-    pooled_m = (m * repf).sum() / (2.0 * M)
+    if isinstance(F, int) and F == 0:
+        pooled_z = (z * repf[:, None]).sum(axis=0) / (2.0 * M)   # (d,)
+        pooled_m = (m * repf).sum() / (2.0 * M)
+    else:
+        cat = jnp.concatenate([z, m[:, None]], axis=1)           # (N, d+1)
+        pooled = 0.5 * ps_trimmed_pool(cat, rep_mask, F)         # (d+1,)
+        pooled_z, pooled_m = pooled[:-1], pooled[-1]
     z_new = jnp.where(rep_mask[:, None], 0.5 * z + pooled_z[None, :], z)
     m_new = jnp.where(rep_mask, 0.5 * m + pooled_m, m)
     return z_new, m_new
@@ -81,7 +218,11 @@ def hps_step(
     M: int,
     do_fusion: jnp.ndarray,  # scalar bool — t % Γ == 0
 ) -> PushSumState:
-    """One HPS iteration: robust push-sum + (conditionally) PS fusion."""
+    """One dense HPS iteration: robust push-sum + (conditionally) PS fusion.
+
+    The (N, N)-mask reference step consumed by :func:`run_hps_dense`; the
+    production engine runs :func:`_hps_scan_core` on edge-list state.
+    """
     st = pushsum_step(state, mask, adj)
     z_f, m_f = hps_fusion(st.z, st.m, rep_mask, M)
     z = jnp.where(do_fusion, z_f, st.z)
@@ -89,27 +230,267 @@ def hps_step(
     return st._replace(z=z, m=m)
 
 
+# ---------------------------------------------------------------------------
+# Runtime: the per-scenario arrays of one (topology, M, Γ, drop, B) config
+# ---------------------------------------------------------------------------
+
+class HPSResult(NamedTuple):
+    """Engine output; shapes depend on the ``store`` option.
+
+    ``store="trajectory"`` (default): ``ratio`` (T, N, d) per-step z/m
+    estimates, ``gap`` the (T,) worst consensus error (derived post-scan).
+    ``store="gap"``: ``ratio`` is the final (N, d) only and ``gap`` the
+    (T,) curve ``max_{j,k} |ratio - mean(w)|`` reduced inside the scan
+    (Theorem 1's LHS without the O(T N d) history).
+    ``store="final"``: final ``ratio`` (N, d) and the final scalar ``gap``.
+    """
+
+    ratio: jnp.ndarray
+    final_state: SparsePushSumState
+    gap: jnp.ndarray
+
+
+class HPSRuntime(NamedTuple):
+    """Everything the scan body reads that can vary per scenario.
+
+    All fields are arrays, so a batch of *compatible* scenarios — same N,
+    edge lists padded to a common E — stacks leaf-wise onto one leading
+    scenario axis and rides a single ``jax.vmap``
+    (:func:`repro.core.sweeps.run_hps_grid`). ``drop_prob``, ``gamma``,
+    ``B`` and ``M`` are scalars here precisely so they can be traced
+    per-scenario: the fusion schedule ``(t + 1) % gamma == 0``, the
+    B-window forced delivery, and the 1/2M fusion weight are all computed
+    in-scan from the traced values, keeping ONE compiled program for a
+    whole (topology x M x Γ x drop) grid — sub-network count included.
+    """
+
+    src: jnp.ndarray        # (E,) int32 sender per edge (dst-sorted layout)
+    dst: jnp.ndarray        # (E,) int32 receiver per edge
+    valid: jnp.ndarray      # (E,) bool — False on padding edges
+    rep_mask: jnp.ndarray   # (N,) bool — designated representatives
+    drop_prob: jnp.ndarray  # () f32 per-link packet-drop probability
+    gamma: jnp.ndarray      # () i32 PS fusion period
+    B: jnp.ndarray          # () i32 link-reliability window
+    M: jnp.ndarray          # () i32 sub-network count (fusion weight 1/2M)
+
+
+def hps_runtime_from_edge_list(
+    el: EdgeList,
+    rep_mask: np.ndarray,
+    *,
+    drop_prob: float,
+    gamma_period: int,
+    B: int = 1,
+    M: int | None = None,
+    e_max: int | None = None,
+) -> HPSRuntime:
+    """Build an :class:`HPSRuntime` directly from a sparse edge index.
+
+    The dense-free entry point for large-N systems (pair with
+    :func:`repro.core.graphs.hier_edge_list` — no (N, N) adjacency is ever
+    touched). ``el`` should be dst-sorted (:func:`graphs.sort_by_dst`) for
+    the Pallas consensus backend; the XLA backend accepts any order.
+    ``M`` defaults to the representative count; ``e_max`` pads the edge
+    axis (inert ``valid=False`` edges with ``dst = N - 1``, which keeps a
+    sorted layout sorted) so scenario batches over different topologies can
+    share one shape.
+    """
+    if el.is_batched:
+        raise ValueError("pass one topology draw; batching happens leaf-wise")
+    rep_mask = np.asarray(rep_mask, bool)
+    src, dst, valid = el.src, el.dst, el.valid
+    if e_max is not None:
+        pad = e_max - el.E
+        if pad < 0:
+            raise ValueError(f"e_max={e_max} < edge count {el.E}")
+        src = np.concatenate([src, np.zeros(pad, np.int32)])
+        dst = np.concatenate([dst, np.full(pad, el.n - 1, np.int32)])
+        valid = np.concatenate([valid, np.zeros(pad, bool)])
+    return HPSRuntime(
+        src=jnp.asarray(src, jnp.int32),
+        dst=jnp.asarray(dst, jnp.int32),
+        valid=jnp.asarray(valid, bool),
+        rep_mask=jnp.asarray(rep_mask),
+        drop_prob=jnp.asarray(drop_prob, jnp.float32),
+        gamma=jnp.asarray(gamma_period, jnp.int32),
+        B=jnp.asarray(B, jnp.int32),
+        M=jnp.asarray(
+            int(rep_mask.sum()) if M is None else M, jnp.int32
+        ),
+    )
+
+
+def make_hps_runtime(cfg: HPSConfig, e_max: int | None = None) -> HPSRuntime:
+    """Host-side setup of one :class:`HPSConfig` scenario."""
+    return hps_runtime_from_edge_list(
+        cfg.edge_index(),
+        cfg.topo.rep_mask(),
+        drop_prob=cfg.drop_prob,
+        gamma_period=cfg.gamma_period,
+        B=cfg.B,
+        M=cfg.topo.M,
+        e_max=e_max,
+    )
+
+
+# ---------------------------------------------------------------------------
+# The shared scan core
+# ---------------------------------------------------------------------------
+
+def _hps_scan_core(
+    key: jnp.ndarray,
+    rt: HPSRuntime,
+    w: jnp.ndarray,        # (N, d) initial values
+    *,
+    T: int,
+    store: str,
+    backend: str,
+    F: int = 0,
+) -> tuple[SparsePushSumState, tuple[jnp.ndarray, jnp.ndarray]]:
+    """Algorithm 1's scan, parameterized over the per-scenario runtime
+    arrays (vmappable for batched grids).
+
+    Returns ``(final_state, (ratio, gap))`` with the store-dependent shapes
+    of :class:`HPSResult`.
+    """
+    N = w.shape[0]
+    E = rt.src.shape[0]
+    state0 = init_sparse_state(w, E)
+    # loop invariants of the fixed edge index / inputs, hoisted out of the
+    # scan: out-degree share factors and the consensus target mean(w)
+    share = 1.0 / (_out_degree(rt.src, rt.valid, N, w.dtype) + 1.0)
+    target = w.mean(axis=0)
+
+    def body(state, t):
+        # --- consensus (Alg. 1 lines 3-12) ---
+        mask = step_edge_mask(
+            key, t, E, rt.drop_prob, rt.B, fold_t=hps_stream_fold(t)
+        )
+        st = sparse_pushsum_step(
+            state, mask, rt.src, rt.dst, rt.valid, backend, share=share
+        )
+        # --- PS fusion every Γ (lines 13-21) ---
+        z_f, m_f = hps_fusion(st.z, st.m, rt.rep_mask, rt.M, F)
+        do_fusion = (t + 1) % rt.gamma == 0
+        new = st._replace(
+            z=jnp.where(do_fusion, z_f, st.z),
+            m=jnp.where(do_fusion, m_f, st.m),
+        )
+        if store == "trajectory":
+            ys = sparse_ratios(new)
+        elif store == "gap":
+            ys = jnp.abs(sparse_ratios(new) - target).max()   # () worst err
+        else:
+            ys = None
+        return new, ys
+
+    final, ys = jax.lax.scan(body, state0, jnp.arange(T, dtype=jnp.int32))
+    if store == "trajectory":
+        return final, (ys, jnp.abs(ys - target[None, None, :]).max(axis=(1, 2)))
+    fr = sparse_ratios(final)
+    if store == "gap":
+        return final, (fr, ys)
+    return final, (fr, jnp.abs(fr - target).max())
+
+
+# Module-level jit so repeated runs with the same shapes/statics hit the
+# compilation cache instead of retracing a fresh closure per call.
+_hps_compiled = functools.partial(
+    jax.jit, static_argnames=("T", "store", "backend", "F")
+)(_hps_scan_core)
+
+
+def run_hps_runtime(
+    w: jnp.ndarray,
+    rt: HPSRuntime,
+    T: int,
+    seed: int = 0,
+    *,
+    backend: str = "auto",
+    store: str = "trajectory",
+    F: int = 0,
+) -> HPSResult:
+    """Run Algorithm 1 on a prebuilt :class:`HPSRuntime`.
+
+    The dense-free entry point (see :func:`hps_runtime_from_edge_list`);
+    :func:`run_hps` is the :class:`HPSConfig` convenience wrapper. ``seed``
+    drives the per-round link-mask stream on the ``hps_stream_fold``
+    domain; ``backend`` selects the consensus delivery lowering; ``store``
+    what the scan materializes (:class:`HPSResult`); ``F > 0`` swaps the PS
+    average for the trimmed-pool resilient rule.
+    """
+    if store not in HPS_STORES:
+        raise ValueError(f"store must be one of {HPS_STORES}, got {store!r}")
+    final, (ratio, gap) = _hps_compiled(
+        jax.random.PRNGKey(seed), rt, jnp.asarray(w),
+        T=T, store=store, backend=backend, F=F,
+    )
+    return HPSResult(ratio=ratio, final_state=final, gap=gap)
+
+
 def run_hps(
     w: jnp.ndarray,
     cfg: HPSConfig,
     T: int,
     seed: int = 0,
+    *,
+    backend: str = "auto",
+    store: str = "trajectory",
+    F: int = 0,
+) -> HPSResult:
+    """Run HPS for T iterations (single scenario) on the fused engine.
+
+    Per-round (E,) link masks are drawn inside the scan from ``seed`` with
+    the drop_prob / B semantics of :func:`graphs.link_schedule` (forced
+    delivery at ``t % B == B - 1``) on the dedicated ``hps_stream_fold``
+    PRNG domain — nothing of size (T, N, N) or (N, N) is ever materialized.
+    """
+    return run_hps_runtime(
+        w, make_hps_runtime(cfg), T, seed=seed,
+        backend=backend, store=store, F=F,
+    )
+
+
+def run_hps_dense(
+    w: jnp.ndarray,
+    cfg: HPSConfig,
+    T: int,
+    seed: int = 0,
 ) -> tuple[PushSumState, jnp.ndarray]:
-    """Run HPS for T iterations. Returns final state + per-step ratios (T, N, d)."""
+    """The seed-era dense reference: (N, N) masks, O(N^2 d) relay state.
+
+    Kept as the executable spec the sparse engine is tested against
+    (mirroring :func:`repro.core.pushsum.pushsum_step`'s role). It consumes
+    the IDENTICAL per-round (E,) mask stream as :func:`run_hps` at the same
+    seed — drawn on the ``hps_stream_fold`` domain over the dst-sorted edge
+    index and scattered to (N, N) — so matched-seed runs see the same link
+    failures; trajectories then agree to fp reduction order (the dense
+    axis-0 delivery reduce and the sparse segment-sum associate
+    differently, so bit-identity across the two lowerings is a 1-ulp-scale
+    non-goal — the bit-exact contract lives between :func:`run_hps` and the
+    pre-refactor sparse scan, see tests/test_hps_engine.py).
+
+    Returns the final dense state and the (T, N, d) ratio trajectory.
+    """
+    el = cfg.edge_index()
+    src, dst = jnp.asarray(el.src), jnp.asarray(el.dst)
+    E = el.E
+    n = cfg.topo.N
     adj = cfg.adj()
     rep_mask = cfg.rep_mask()
-    masks = jnp.asarray(
-        link_schedule(cfg.topo.adj, T, cfg.drop_prob, cfg.B, seed=seed)
-    )
-    fuse = jnp.arange(1, T + 1) % cfg.gamma_period == 0
+    key = jax.random.PRNGKey(seed)
     state0 = init_state(jnp.asarray(w))
 
-    def body(state, xs):
-        mask, do_fusion = xs
+    def body(state, t):
+        mask_e = step_edge_mask(
+            key, t, E, cfg.drop_prob, cfg.B, fold_t=hps_stream_fold(t)
+        )
+        mask = jnp.zeros((n, n), bool).at[src, dst].set(mask_e)
+        do_fusion = (t + 1) % cfg.gamma_period == 0
         new = hps_step(state, mask, adj, rep_mask, cfg.topo.M, do_fusion)
         return new, ratios(new)
 
-    final, traj = jax.lax.scan(body, state0, (masks, fuse))
+    final, traj = jax.lax.scan(body, state0, jnp.arange(T, dtype=jnp.int32))
     return final, traj
 
 

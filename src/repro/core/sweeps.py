@@ -28,6 +28,15 @@ Two engines:
   ONE vmapped scan — heterogeneous F rides the scenario axis as a traced
   scalar through the sort-based trim. Pass ``mesh=`` to shard the scenario
   axis like :func:`run_pushsum_sweep`.
+* :func:`run_hps_grid` / :func:`run_hps_sweep` — Algorithm 1 (hierarchical
+  push-sum) over batched (topology x M x Gamma x drop) x seed grids on the
+  fused HPS engine (:mod:`repro.core.hps`): compatible configs (same N;
+  edge lists padded to a common E) stack leaf-wise into one
+  :class:`repro.core.hps.HPSRuntime` batch, with drop_prob, Gamma, the
+  B-window AND the sub-network count M riding the scenario axis as traced
+  scalars — grids may mix hierarchies with different numbers of
+  sub-networks in one compiled program. ``store="gap"`` (default) reduces
+  each scenario's Theorem-1 consensus-error curve inside the scan.
 * :func:`run_social_grid` / :func:`run_social_sweep` — Algorithm 3
   (packet-drop-tolerant non-Bayesian learning) over batched
   (topology x drop_prob x Gamma) x seed grids on the fused social engine
@@ -73,17 +82,26 @@ from .pushsum import (
     sparse_ratios,
     step_edge_mask,
 )
-from .hps import HPSConfig
+from .hps import (
+    HPS_STORES,
+    HPSConfig,
+    HPSRuntime,
+    _hps_scan_core,
+    make_hps_runtime,
+)
 from .signals import SignalModel
 from .social import SOCIAL_STORES, SocialRuntime, _social_scan_core, make_social_runtime
 
 __all__ = [
     "PushSumSweepResult",
     "ByzantineGridResult",
+    "HPSSweepResult",
     "SocialSweepResult",
     "run_pushsum_sweep",
     "run_byzantine_sweep",
     "run_byzantine_grid",
+    "run_hps_sweep",
+    "run_hps_grid",
     "run_social_sweep",
     "run_social_grid",
 ]
@@ -606,7 +624,11 @@ def _social_sweep_fn(mesh, data_axis, *, truth, M, T, store, backend):
     return fn
 
 
-def _social_cfg_fingerprint(cfgs) -> tuple:
+def _cfg_fingerprint(cfgs) -> tuple:
+    """Runtime-cache key over HPSConfig-shaped config lists — everything
+    the stacked runtime arrays are derived from (shared by the HPS and
+    social grid engines; keep in sync with any cache-relevant field added
+    to :class:`repro.core.hps.HPSConfig`)."""
     parts = []
     for c in cfgs:
         topo = c.topo
@@ -680,7 +702,7 @@ def run_social_grid(
     if any(c.topo.N != N or c.topo.M != M for c in cfgs) or model.N != N:
         raise ValueError("grid configs (and the model) must share (N, M)")
 
-    rt_key = _social_cfg_fingerprint(cfgs)
+    rt_key = _cfg_fingerprint(cfgs)
     stacked = _SOCIAL_RUNTIME_CACHE.get(rt_key)
     if stacked is None:
         e_max = max(int(np.count_nonzero(c.topo.adj)) for c in cfgs)
@@ -763,5 +785,219 @@ def run_social_sweep(
                 ))
     return run_social_grid(
         model, expanded, T, seeds,
+        store=store, backend=backend, mesh=mesh, data_axis=data_axis,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1: batched (topology x M x Gamma x drop) x seed HPS sweeps
+# ---------------------------------------------------------------------------
+
+class HPSSweepResult(NamedTuple):
+    """One row per scenario (config x seed), leading axis K.
+
+    ``ratio``/``gap`` follow the ``store`` shapes of
+    :class:`repro.core.hps.HPSResult` with the extra leading K —
+    ``store="gap"`` (the sweep default) gives the (K, T) worst
+    consensus-error curves of Theorem 1 plus final (K, N, d) ratios, which
+    is the decay-diagram payload without any O(K T N d) history. ``cfg``
+    indexes into the config list; ``drop_prob``/``gamma``/``M``/``seed``
+    are the per-scenario coordinates.
+    """
+
+    ratio: jnp.ndarray
+    gap: jnp.ndarray
+    drop_prob: jnp.ndarray  # (K,)
+    gamma: jnp.ndarray      # (K,)
+    M: jnp.ndarray          # (K,) sub-network count of that scenario
+    seed: jnp.ndarray       # (K,)
+    cfg: jnp.ndarray        # (K,) config index
+
+    @property
+    def K(self) -> int:
+        return int(self.seed.shape[0])
+
+
+# Jitted HPS-sweep programs keyed on (mesh, data_axis, statics). The
+# per-scenario data is ALL arrays (HPSRuntime leaves + PRNG keys + the
+# shared w), so one cached executable serves every topology/M/Gamma/drop
+# combo of the same shapes; the LRU bound keeps long parameter studies from
+# pinning retired shard_map wrappers.
+_HPS_COMPILED = _LRUCache(maxsize=16)
+
+# Stacked HPSRuntime batches keyed on the (configs,) fingerprint: repeated
+# sweep calls (e.g. host-side seed batches over one grid) skip the
+# per-config edge-list construction and device uploads entirely.
+_HPS_RUNTIME_CACHE = _LRUCache(maxsize=16)
+
+
+def _hps_sweep_fn(mesh, data_axis, *, T, store, backend):
+    key = (mesh, data_axis, T, store, backend)
+    fn = _HPS_COMPILED.get(key)
+    if fn is not None:
+        return fn
+
+    def body(keys, rt_batch, w):
+        def single(k, rt):
+            _, outs = _hps_scan_core(
+                k, rt, w, T=T, store=store, backend=backend,
+            )
+            return outs
+
+        return jax.vmap(single, in_axes=(0, 0))(keys, rt_batch)
+
+    if mesh is not None:
+        from repro.launch import compat
+
+        spec = P(data_axis)
+        body = compat.shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(
+                spec,
+                HPSRuntime(*([spec] * len(HPSRuntime._fields))),
+                P(),
+            ),
+            out_specs=(spec, spec),
+            axis_names=frozenset({data_axis}),
+            check_vma=False,
+        )
+    fn = _HPS_COMPILED[key] = jax.jit(body)
+    return fn
+
+
+def run_hps_grid(
+    w: jnp.ndarray,
+    cfgs: Sequence[HPSConfig],
+    T: int,
+    seeds: Sequence[int] | int,
+    *,
+    store: str = "gap",
+    backend: str = "auto",
+    mesh: Mesh | None = None,
+    data_axis: str = "data",
+) -> HPSSweepResult:
+    """Batched (topology, M, Gamma, drop) x seed grid as ONE compiled
+    vmapped scan of the fused Algorithm 1 engine.
+
+    Every config's edge index builds once; the per-config runtime arrays
+    (edge lists padded to the common E, representative masks, drop_prob /
+    Gamma / B / M as traced scalars) stack leaf-wise onto a scenario axis
+    and the K = |cfgs| x |seeds| grid executes in lockstep under a single
+    ``jax.vmap``. Configs must share N — the sub-network count M rides the
+    scenario axis as a traced scalar through the 1/2M fusion weight, so
+    hierarchies with DIFFERENT numbers of sub-networks batch into the same
+    trace. ``w`` (N, d) is shared by every scenario. Each scenario's seed
+    drives the link-mask stream on the dedicated ``hps_stream_fold``
+    domain — a grid row is bit-identical to ``run_hps(w, cfg, T, seed=s)``
+    whenever the config's edge count equals the grid's padded E (always
+    true for single-topology Gamma x drop x seed sweeps); mixed-E grids
+    pad smaller edge lists up to the widest, which re-indexes the (E,)
+    link-mask draw, so those rows are instead bit-identical to
+    :func:`repro.core.hps.run_hps_runtime` on the same padded runtime.
+
+    ``store`` defaults to ``"gap"``: the (K, T) worst consensus-error
+    curves are reduced inside the scan, so nothing of size (K, T, N, d)
+    ever exists — pass ``store="trajectory"`` explicitly to materialize
+    full ratio histories. With ``mesh``, the scenario axis is sharded over
+    ``data_axis`` via ``shard_map`` exactly like the other engines (K
+    padded up to a multiple of the axis size by repeating the last
+    scenario; results bit-identical to the single-device vmap).
+
+    The jitted program is cached in ``_HPS_COMPILED`` keyed on
+    (mesh, statics) only — the grid data is all arrays, so repeated studies
+    over different topologies of the same shapes reuse one executable.
+    """
+    from repro.kernels.pushsum_edge import resolve_backend
+
+    cfgs = list(cfgs)
+    if not cfgs:
+        raise ValueError("need at least one config")
+    if store not in HPS_STORES:
+        raise ValueError(f"store must be one of {HPS_STORES}, got {store!r}")
+    w = jnp.asarray(w)
+    N = cfgs[0].topo.N
+    if any(c.topo.N != N for c in cfgs) or w.shape[0] != N:
+        raise ValueError("grid configs (and w) must share the node count N")
+
+    rt_key = _cfg_fingerprint(cfgs)
+    stacked = _HPS_RUNTIME_CACHE.get(rt_key)
+    if stacked is None:
+        e_max = max(int(np.count_nonzero(c.topo.adj)) for c in cfgs)
+        runtimes = [make_hps_runtime(c, e_max=e_max) for c in cfgs]
+        stacked = _HPS_RUNTIME_CACHE[rt_key] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *runtimes
+        )
+
+    seeds_np = np.atleast_1d(np.asarray(seeds, np.uint32))
+    gi, sd = np.meshgrid(
+        np.arange(len(cfgs), dtype=np.int32), seeds_np, indexing="ij"
+    )
+    gi, sd = gi.ravel(), sd.ravel()
+    K = gi.shape[0]
+    if mesh is not None:
+        pad = (-K) % int(mesh.shape[data_axis])
+        if pad:
+            fill = np.full(pad, K - 1)
+            gi = np.concatenate([gi, gi[fill]])
+            sd = np.concatenate([sd, sd[fill]])
+
+    fn = _hps_sweep_fn(
+        mesh, data_axis, T=T, store=store, backend=resolve_backend(backend),
+    )
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.asarray(sd))
+    rt_batch = jax.tree_util.tree_map(lambda x: x[jnp.asarray(gi)], stacked)
+    ratio, gap = fn(keys, rt_batch, w)
+    drops = np.asarray([c.drop_prob for c in cfgs], np.float32)
+    gammas = np.asarray([c.gamma_period for c in cfgs], np.int32)
+    Ms = np.asarray([c.topo.M for c in cfgs], np.int32)
+    return HPSSweepResult(
+        ratio=ratio[:K], gap=gap[:K],
+        drop_prob=jnp.asarray(drops[gi[:K]]),
+        gamma=jnp.asarray(gammas[gi[:K]]),
+        M=jnp.asarray(Ms[gi[:K]]),
+        seed=jnp.asarray(sd[:K]), cfg=jnp.asarray(gi[:K]),
+    )
+
+
+def run_hps_sweep(
+    w: jnp.ndarray,
+    cfg: HPSConfig | Sequence[HPSConfig],
+    T: int,
+    *,
+    drop_probs: Sequence[float] | float | None = None,
+    gammas: Sequence[int] | int | None = None,
+    seeds: Sequence[int] | int = 0,
+    store: str = "gap",
+    backend: str = "auto",
+    mesh: Mesh | None = None,
+    data_axis: str = "data",
+) -> HPSSweepResult:
+    """Cross-product (topology x M x drop_prob x Gamma x seed) HPS sweep.
+
+    ``cfg`` is one base config or a sequence of them (e.g. hierarchies with
+    different sub-network counts — all sharing N); every base is crossed
+    with every ``drop_probs`` value and every ``gammas`` fusion period
+    (defaults: the base's own settings), and the expanded scenario list
+    runs with every seed as ONE jitted vmapped scan via
+    :func:`run_hps_grid` — drop_prob, Gamma and M ride the scenario axis
+    as traced scalars, so the entire grid is one compiled program.
+    Scenario order: base-major, then drop, then Gamma, then seed (matching
+    the ``cfg``/``drop_prob``/``gamma``/``seed`` coordinates).
+    """
+    bases = [cfg] if isinstance(cfg, HPSConfig) else list(cfg)
+    expanded = []
+    for base in bases:
+        dps = ([base.drop_prob] if drop_probs is None
+               else np.atleast_1d(np.asarray(drop_probs, np.float32)).tolist())
+        gms = ([base.gamma_period] if gammas is None
+               else np.atleast_1d(np.asarray(gammas, np.int32)).tolist())
+        for dp in dps:
+            for g in gms:
+                expanded.append(dataclasses.replace(
+                    base, drop_prob=float(dp), gamma_period=int(g)
+                ))
+    return run_hps_grid(
+        w, expanded, T, seeds,
         store=store, backend=backend, mesh=mesh, data_axis=data_axis,
     )

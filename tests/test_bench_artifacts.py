@@ -1,0 +1,56 @@
+"""Schema guard for the committed perf-trajectory artifacts.
+
+CI's bench lane gates timings against a runner-local baseline (cross-
+machine numbers are incomparable), so THIS is where the committed
+``results/BENCH_*.json`` files are held to the contract every PR: strict
+RFC-8259 JSON (no bare NaN), the ``{name: {us_per_call, derived}}`` row
+shape the ``--check`` gate and the README table generator consume, and the
+benchmark-name coverage the ROADMAP's perf story is tracked by.
+"""
+import glob
+import json
+import math
+import os
+
+import pytest
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results")
+BENCH_FILES = sorted(glob.glob(os.path.join(RESULTS, "BENCH_*.json")))
+
+
+def test_bench_artifacts_exist():
+    names = {os.path.basename(p) for p in BENCH_FILES}
+    # one artifact per fused engine family (PRs 2-5)
+    assert {"BENCH_pushsum_sweep.json", "BENCH_byzantine.json",
+            "BENCH_social.json", "BENCH_hps.json"} <= names
+
+
+@pytest.mark.parametrize("path", BENCH_FILES,
+                         ids=[os.path.basename(p) for p in BENCH_FILES])
+def test_rows_follow_schema(path):
+    # strict parse: parse_constant trips on NaN/Infinity literals, which
+    # merge_bench_json promises never to serialize
+    with open(path) as f:
+        data = json.load(f, parse_constant=lambda c: pytest.fail(
+            f"{path}: non-RFC-8259 constant {c!r}"))
+    assert isinstance(data, dict) and data
+    for name, row in data.items():
+        assert isinstance(name, str) and name
+        assert set(row) == {"us_per_call", "derived"}, (name, row)
+        assert isinstance(row["us_per_call"], (int, float))
+        assert math.isfinite(row["us_per_call"]) and row["us_per_call"] >= 0
+        assert isinstance(row["derived"], str)
+
+
+def test_hps_rows_cover_the_acceptance_names():
+    """PR acceptance: hps_step_{xla,pallas}_N{1024,16384} and a >= 48
+    scenario grid row recorded in BENCH_hps.json."""
+    with open(os.path.join(RESULTS, "BENCH_hps.json")) as f:
+        rows = json.load(f)
+    for backend in ("xla", "pallas"):
+        for n in (1024, 16384):
+            assert f"hps_step_{backend}_N{n}" in rows
+    grids = [n for n in rows if n.startswith("hps_grid_")]
+    assert grids
+    assert any("scenarios=48" in rows[g]["derived"] for g in grids)

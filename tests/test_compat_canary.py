@@ -1,0 +1,113 @@
+"""Canary for the jax 0.4.x residue in :mod:`repro.launch.compat`.
+
+ROADMAP's "jax 0.4.x residue" item documents two shims that exist ONLY
+because the pinned container toolchain is jax 0.4.x: the fully-manual
+``shard_map`` path (the era's XLA SPMD partitioner aborts on partial-auto
+programs) and the skipped grad-accumulator sharding constraint (0.4.x CPU
+SPMD miscompiles the constrained backward). This module asserts those
+behaviors while the container is legacy — and FAILS LOUDLY, pointing at
+the exact code to delete, the moment the container jax moves to >= 0.6.
+That failure is the signal to do the cleanup, not a regression.
+"""
+import inspect
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import compat
+
+# The modern sharding surface (jax >= 0.6): top-level shard_map, AxisType
+# meshes, jax.set_mesh, jax.lax.axis_size. All four land together.
+LEGACY = not hasattr(jax, "shard_map")
+
+MODERNIZE = (
+    "container jax is >= 0.6 ({}): the 0.4.x residue is now deletable — "
+    "drop the fully-manual shard_map fallback and the HAS_AXIS_TYPE "
+    "grad-constraint gate (repro/launch/compat.py, "
+    "repro/distributed/trainer.py), re-enable partial-auto shard_map and "
+    "the grad-accumulator sharding constraint, then retire this canary. "
+    "See ROADMAP.md 'jax 0.4.x residue'."
+).format(jax.__version__)
+
+
+def test_container_toolchain_still_needs_the_shims():
+    """THE canary: fails (with the deletion checklist) once the container
+    jax gains the modern surface the shims paper over."""
+    if not LEGACY:
+        pytest.fail(MODERNIZE)
+    # the four modern APIs are absent together — the shims' premise
+    assert not hasattr(jax.sharding, "AxisType")
+    assert not hasattr(jax, "set_mesh")
+    assert not hasattr(jax.lax, "axis_size")
+    assert compat.HAS_AXIS_TYPE is False
+
+
+@pytest.mark.skipif(not LEGACY, reason="0.4.x-only shim behaviour "
+                    "(the canary above already demands deletion)")
+class TestLegacyShimBehaviour:
+    def test_shard_map_runs_fully_manual(self):
+        """On 0.4.x the shim must route through
+        ``jax.experimental.shard_map`` with ``auto=frozenset()`` — fully
+        manual even when ``axis_names`` names every mesh axis — and the
+        wrapped body must still execute correctly on a 1-device mesh."""
+        src = inspect.getsource(compat.shard_map)
+        assert "auto=frozenset()" in src       # the manual-mode pin
+
+        mesh = compat.make_mesh((1,), ("data",))
+        x = jnp.arange(8, dtype=jnp.float32).reshape(4, 2)
+
+        def body(block):
+            return block * compat.axis_size("data")
+
+        out = jax.jit(compat.shard_map(
+            body, mesh=mesh, in_specs=(P("data"),), out_specs=P("data"),
+            axis_names=frozenset({"data"}), check_vma=False,
+        ))(x)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+    def test_axis_size_falls_back_to_psum(self):
+        """``jax.lax.axis_size`` does not exist on 0.4.x; the shim's
+        ``psum(1, name)`` evaluates statically to the axis size."""
+        mesh = compat.make_mesh((1,), ("data",))
+        got = jax.jit(compat.shard_map(
+            lambda: jnp.int32(compat.axis_size("data")),
+            mesh=mesh, in_specs=(), out_specs=P(),
+            axis_names=frozenset({"data"}), check_vma=False,
+        ))()
+        assert int(got) == 1
+
+    def test_make_mesh_drops_axis_types_kwarg(self):
+        """0.4.x ``jax.make_mesh`` has no ``axis_types=``; the shim must
+        swallow the kwarg instead of exploding."""
+        mesh = compat.make_mesh((1,), ("data",), axis_types=("whatever",))
+        assert tuple(mesh.axis_names) == ("data",)
+
+    def test_set_mesh_is_the_resource_env_context(self):
+        """No ``jax.set_mesh`` on 0.4.x: the shim returns the Mesh itself
+        (a context manager), and the ambient mesh is visible through
+        ``get_abstract_mesh`` inside the context only."""
+        mesh = compat.make_mesh((1,), ("data",))
+        ctx = compat.set_mesh(mesh)
+        assert ctx is mesh
+        with ctx:
+            inside = compat.get_abstract_mesh()
+            assert inside is not None and not inside.empty
+        assert compat.get_abstract_mesh() is None
+
+    def test_trainer_skips_grad_constraint_on_legacy(self):
+        """The gspmd trainer must gate the grad-accumulator sharding
+        constraint on ``compat.HAS_AXIS_TYPE`` — 0.4.x CPU SPMD
+        miscompiles the constrained backward pass (grads off by O(1)
+        relative), so on the legacy toolchain the constraint is skipped."""
+        from repro.distributed import trainer
+
+        src = inspect.getsource(trainer._make_gspmd_step)
+        assert "HAS_AXIS_TYPE" in src, (
+            "the grad-constraint legacy gate disappeared from "
+            "trainer._make_gspmd_step — if it was removed on purpose, "
+            "delete this canary with it"
+        )
+        assert trainer.compat.HAS_AXIS_TYPE is False
