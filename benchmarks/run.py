@@ -61,7 +61,20 @@ def _check_regressions(baseline_path: str, baseline: dict,
     names absent from either side (new benchmarks are not regressions),
     NaN rows, and rows whose derived tag says ``mode=interpret`` —
     interpreter timings measure the Pallas interpreter, not the kernel,
-    and jitter far beyond the gate budget."""
+    and jitter far beyond the gate budget.
+
+    A baseline that shares NO row name with the measured set is a hard
+    failure, not a pass: the gate would otherwise compare nothing and
+    report success (renamed benchmarks, or --check pointed at the wrong
+    artifacts). Keyed on the name intersection — NOT on the checked count,
+    which legitimately drops to zero when every overlapping row is
+    interpret-mode (the CPU CI lane)."""
+    if not (set(baseline) & set(measured)):
+        print(f"# perf check vs {baseline_path}: baseline holds "
+              f"{len(baseline)} row(s) but NONE match the {len(measured)} "
+              "measured name(s) — the gate compared nothing (renamed "
+              "benchmarks? wrong --check path?)")
+        return 1
     bad = checked = 0
     for name, (us, derived) in measured.items():
         old = baseline.get(name, {}).get("us_per_call")

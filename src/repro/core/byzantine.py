@@ -56,6 +56,7 @@ import numpy as np
 from .attacks import Attack
 from .graphs import HierTopology, check_assumption3, neighbor_lists
 from .signals import SignalModel
+from repro.statics.contracts import contract as statics_contract
 
 __all__ = [
     "ByzantineConfig",
@@ -506,6 +507,20 @@ def _scan_core(
     return ByzantineResult(r=tail(r_fin), decisions=dec_fin)
 
 
+@statics_contract(
+    name="byzantine",
+    # Covers the production core="sparse" path ONLY: the dense broadcast
+    # oracle exists to materialize (N, N) on purpose and is exempt. The
+    # "decisions"/"trajectory" stores legitimately carry (T, N) history,
+    # so no horizon pattern is declared.
+    forbidden={"*": (("N", "N"),)},
+    streams=(
+        ("signal", lambda t: stream_fold(t, STREAM_SIGNAL)),
+        ("gossip", lambda t: stream_fold(t, STREAM_GOSSIP)),
+        ("fusion", lambda t: stream_fold(t, STREAM_FUSION)),
+    ),
+    caches=("byz.compiled", "byz.grid", "byz.runtime"),
+)
 def make_byzantine_scan(
     model: SignalModel,
     cfg: ByzantineConfig,

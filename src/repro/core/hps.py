@@ -67,6 +67,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from .graphs import EdgeList, HierTopology
+from repro.statics.contracts import contract as statics_contract
+from repro.statics.retrace import register_cache as register_statics_cache
 from .pushsum import (
     PushSumState,
     SparsePushSumState,
@@ -337,6 +339,21 @@ def make_hps_runtime(cfg: HPSConfig, e_max: int | None = None) -> HPSRuntime:
 # The shared scan core
 # ---------------------------------------------------------------------------
 
+@statics_contract(
+    name="hps",
+    forbidden={
+        "*": (("N", "N"),),
+        "final": (("T", "*"),),
+        "gap": (("T", "*"),),
+    },
+    # One link-mask stream at the TOP of the uint32 fold-in space (~t):
+    # one experiment seed may root this engine together with the social or
+    # Byzantine engines (the PR-5 aliasing bug class), so the analyzer must
+    # also prove cross-engine disjointness against both.
+    streams=(("link", hps_stream_fold),),
+    shares_seed_with=("social", "byzantine"),
+    caches=("hps.compiled", "hps.runtime", "hps.jit"),
+)
 def _hps_scan_core(
     key: jnp.ndarray,
     rt: HPSRuntime,
@@ -398,6 +415,7 @@ def _hps_scan_core(
 _hps_compiled = functools.partial(
     jax.jit, static_argnames=("T", "store", "backend", "F")
 )(_hps_scan_core)
+register_statics_cache("hps.jit", _hps_compiled._cache_size)
 
 
 def run_hps_runtime(

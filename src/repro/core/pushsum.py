@@ -62,6 +62,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.statics.contracts import contract as statics_contract
+
 __all__ = [
     "PushSumState",
     "init_state",
@@ -324,6 +326,16 @@ def step_edge_mask(
     return up | ((t % B) == (B - 1))
 
 
+@statics_contract(
+    name="pushsum",
+    # The sparse core's reason to exist: no (N, N) value may ever appear
+    # in the traced program (the trajectory output is (T, N, d) — fine).
+    forbidden={"*": (("N", "N"),)},
+    # One PRNG stream, folded at the plain iteration index; engines that
+    # add more streams must move to a strided domain (see social/byzantine).
+    streams=(("link", lambda t: t),),
+    caches=("pushsum.sweep-jit",),
+)
 def run_pushsum_sparse(
     w: jnp.ndarray,            # (N, d) inputs
     src: jnp.ndarray,          # (E,) int32

@@ -70,6 +70,8 @@ from .pushsum import (
     step_edge_mask,
 )
 from .signals import SignalModel
+from repro.statics.contracts import contract as statics_contract
+from repro.statics.retrace import register_cache as register_statics_cache
 
 __all__ = [
     "SocialLearningResult",
@@ -215,6 +217,22 @@ def make_social_runtime(cfg: HPSConfig, e_max: int | None = None) -> SocialRunti
 # The shared scan core
 # ---------------------------------------------------------------------------
 
+@statics_contract(
+    name="social",
+    # Dense-free everywhere; the in-scan-reducing stores must additionally
+    # never materialize a rank>=2 horizon-major value (the (T,) reduced
+    # curves are the POINT of those stores and stay allowed).
+    forbidden={
+        "*": (("N", "N"),),
+        "final": (("T", "*"),),
+        "log_ratio": (("T", "*"),),
+    },
+    streams=(
+        ("link", lambda t: social_stream_fold(t, STREAM_LINK)),
+        ("signal", lambda t: social_stream_fold(t, STREAM_SIGNAL)),
+    ),
+    caches=("social.compiled", "social.runtime", "social.jit"),
+)
 def _social_scan_core(
     mask_key: jnp.ndarray,
     sig_key: jnp.ndarray,
@@ -299,6 +317,7 @@ def _social_scan_core(
 _social_compiled = functools.partial(
     jax.jit, static_argnames=("truth", "M", "T", "store", "backend")
 )(_social_scan_core)
+register_statics_cache("social.jit", _social_compiled._cache_size)
 
 
 def run_social_runtime(

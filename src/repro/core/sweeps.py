@@ -91,6 +91,7 @@ from .hps import (
 )
 from .signals import SignalModel
 from .social import SOCIAL_STORES, SocialRuntime, _social_scan_core, make_social_runtime
+from repro.statics.retrace import register_cache as register_statics_cache
 
 __all__ = [
     "PushSumSweepResult",
@@ -1001,3 +1002,17 @@ def run_hps_sweep(
         w, expanded, T, seeds,
         store=store, backend=backend, mesh=mesh, data_axis=data_axis,
     )
+
+# ---------------------------------------------------------------------------
+# Retrace-sentinel registrations: every compiled cache this module owns is
+# visible to repro.statics.retrace, so the lint can prove that repeated
+# sweep calls with unchanged configs never recompile.
+# ---------------------------------------------------------------------------
+register_statics_cache("pushsum.sweep-jit", _sweep_compiled._cache_size)
+register_statics_cache("byz.compiled", _BYZ_COMPILED)
+register_statics_cache("byz.grid", _BYZ_GRID_COMPILED)
+register_statics_cache("byz.runtime", _BYZ_RUNTIME_CACHE)
+register_statics_cache("social.compiled", _SOCIAL_COMPILED)
+register_statics_cache("social.runtime", _SOCIAL_RUNTIME_CACHE)
+register_statics_cache("hps.compiled", _HPS_COMPILED)
+register_statics_cache("hps.runtime", _HPS_RUNTIME_CACHE)

@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from ..pushsum_edge.ops import BACKENDS, resolve_backend
+from ..dispatch import BACKENDS, resolve_backend
 from .byz_trim import trim_gather_pallas
 from .ref import trim_gather_ref
 

@@ -1,0 +1,49 @@
+"""Repo-wide kernel backend dispatch — the ONE resolver every ops.py uses.
+
+``backend`` is the user-facing switch on every kernel entry point:
+
+``"xla"``     — the pure-jnp reference lowering; runs anywhere and is the
+                equivalence oracle the Pallas path is tested against.
+``"pallas"``  — the fused Pallas TPU kernel; compiled on TPU, interpreter
+                mode elsewhere (equivalence testing only, not a fast path).
+``"auto"``    — ``"pallas"`` on a TPU default backend, else ``"xla"``.
+
+Resolution is host-side and static (the choice changes the traced
+program), so callers thread ``backend`` through ``static_argnames`` when
+jitting. Historically this lived in ``pushsum_edge/ops.py`` and the other
+engine kernels imported it from there; it is now owned here so the
+model-stack kernels (``swa``, ``wkv6``, ``trimmed_mean``) share the same
+vocabulary — their legacy ``use_kernel`` booleans remain supported and are
+bridged through :func:`resolve_use_kernel`.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["BACKENDS", "resolve_backend", "resolve_use_kernel"]
+
+BACKENDS = ("auto", "xla", "pallas")
+
+
+def resolve_backend(backend: str) -> str:
+    """Map ``"auto"`` to the platform default; validate explicit choices."""
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    if backend not in ("xla", "pallas"):
+        raise ValueError(
+            f"backend must be one of {BACKENDS}, got {backend!r}"
+        )
+    return backend
+
+
+def resolve_use_kernel(backend: str | None, use_kernel: bool) -> bool:
+    """Bridge the repo-wide ``backend`` switch onto a kernel whose internal
+    dispatch is the legacy ``use_kernel`` boolean.
+
+    ``backend=None`` (the default everywhere) preserves the caller's
+    ``use_kernel`` bit exactly; an explicit ``backend`` wins over it, with
+    ``"auto"`` resolving per platform like every other kernel.
+    """
+    if backend is None:
+        return use_kernel
+    return resolve_backend(backend) == "pallas"

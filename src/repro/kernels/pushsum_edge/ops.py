@@ -14,26 +14,15 @@ so callers thread ``backend`` through ``static_argnames`` when jitting.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
+# Re-exported for back-compat: the resolver now lives in
+# repro.kernels.dispatch and is shared by every kernel family.
+from ..dispatch import BACKENDS, resolve_backend
 from .pushsum_edge import edge_scatter_pallas
 from .ref import edge_scatter_ref
 
 __all__ = ["edge_scatter", "resolve_backend", "BACKENDS"]
-
-BACKENDS = ("auto", "xla", "pallas")
-
-
-def resolve_backend(backend: str) -> str:
-    """Map ``"auto"`` to the platform default; validate explicit choices."""
-    if backend == "auto":
-        return "pallas" if jax.default_backend() == "tpu" else "xla"
-    if backend not in ("xla", "pallas"):
-        raise ValueError(
-            f"backend must be one of {BACKENDS}, got {backend!r}"
-        )
-    return backend
 
 
 def edge_scatter(

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from ..pushsum_edge.ops import BACKENDS, resolve_backend
+from ..dispatch import BACKENDS, resolve_backend
 from .ref import innovation_ref
 from .social_innov import innovation_pallas
 

@@ -10,6 +10,7 @@ import jax.numpy as jnp
 
 import functools
 
+from ..dispatch import resolve_use_kernel
 from .ref import wkv6_ref, wkv6_decode_step, wkv6_chunked_jnp
 from .wkv6 import wkv6_chunked_pallas
 
@@ -49,6 +50,8 @@ def wkv6(
     u: jnp.ndarray,
     chunk: int | None = None,
     use_kernel: bool = True,
+    *,
+    backend: str | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """(BH, T, K/V) chunked WKV6 -> (y, final_state).
 
@@ -56,9 +59,11 @@ def wkv6(
     off-TPU (same math, python chunk loop so dry-run cost analysis sees
     every chunk — capped at 32 unrolled chunks since WKV FLOPs are dwarfed
     by the r/k/v/g projections); sequential scan oracle for ragged shapes.
+    ``backend`` (``"auto"|"xla"|"pallas"``) overrides ``use_kernel`` when
+    given, mapping ``"xla"`` onto the chunked-jnp oracle path.
     """
     T = r.shape[1]
-    if use_kernel:
+    if resolve_use_kernel(backend, use_kernel):
         c = chunk or 64
         if T % c == 0 and T >= c:
             return _wkv6_kernel_ad(r, k, v, lw, u, c)

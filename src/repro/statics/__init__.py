@@ -1,0 +1,63 @@
+"""repro.statics — jaxpr static analysis for the fused engines.
+
+Everything here runs at TRACE time: no engine executes, no accelerator is
+needed, yet the checks prove properties that runtime tests can only sample
+— that no (N, N) intermediate exists in a sparse path for *any* input,
+that two PRNG fold-in domains are disjoint for *every* iteration pair over
+the horizon, that a repeated sweep call compiles *zero* new executables,
+and that a benchmarked configuration fits the hardware budget by
+construction.
+
+Layout (each module's docstring carries the full story):
+
+* :mod:`~repro.statics.walk`      — the jaxpr IR walker everything shares
+* :mod:`~repro.statics.contracts` — ``@statics.contract`` declarations
+* :mod:`~repro.statics.dense`     — dense-intermediate + subnormal linter
+* :mod:`~repro.statics.streams`   — PRNG stream-domain disjointness proofs
+* :mod:`~repro.statics.retrace`   — compiled-cache retrace sentinel
+* :mod:`~repro.statics.memory`    — static memory/FLOP budgeter
+* :mod:`~repro.statics.cli`       — ``python -m repro.statics lint``
+
+The engines under :mod:`repro.core` declare their invariants at the
+definition site via :func:`contract`; the CLI (and ``tests/test_statics.py``)
+replay every declaration against freshly traced programs.
+"""
+from .contracts import EngineContract, REGISTRY, all_contracts, contract, get
+from .dense import (
+    Finding,
+    assert_nonempty,
+    find_forbidden,
+    find_subnormal_consts,
+)
+from .memory import jaxpr_footprint, step_floor, validate_bench
+from .retrace import CacheWatch, check_idempotent, register_cache, snapshot
+from .streams import AffineMap, affine_disjoint, check_streams, fit_affine
+from .walk import collect_avals, collect_values, subjaxprs, symbolize, trace
+
+__all__ = [
+    "AffineMap",
+    "CacheWatch",
+    "EngineContract",
+    "Finding",
+    "REGISTRY",
+    "affine_disjoint",
+    "all_contracts",
+    "assert_nonempty",
+    "check_idempotent",
+    "check_streams",
+    "collect_avals",
+    "collect_values",
+    "contract",
+    "find_forbidden",
+    "find_subnormal_consts",
+    "fit_affine",
+    "get",
+    "jaxpr_footprint",
+    "register_cache",
+    "snapshot",
+    "step_floor",
+    "subjaxprs",
+    "symbolize",
+    "trace",
+    "validate_bench",
+]

@@ -1,0 +1,498 @@
+"""``python -m repro.statics`` — run the static checks from the command line.
+
+Subcommands:
+
+* ``lint``   — trace every public entry point across backend x store
+  combos and run the full registry of checks: dense-intermediate linter,
+  subnormal-constant scan, PRNG stream-domain disjointness proofs (within
+  each engine and across engines that may share one experiment seed), the
+  per-trace PRNG-site lower bound, the retrace sentinel (tiny XLA runs,
+  executed twice — the second call must compile nothing), and the static
+  memory-budget validation of the committed BENCH artifacts. Exit 0 iff no
+  findings.
+* ``budget`` — print the analytic per-engine step-byte models, their
+  TPU-v5e roofline floors, and the traced-footprint accounting.
+* ``list``   — show the registered contracts and compiled caches.
+
+A passing lint verdict is cached in ``--cache-dir`` keyed on the sha256 of
+every ``src/repro/**/*.py`` file, the BENCH artifacts, and the jax
+version, so repeated CI runs on unchanged sources answer from the cache
+(the CI lane additionally persists that directory across workflow runs).
+
+The ``--inject-*`` flags are TEST hooks: they swap a known-bad historical
+configuration (the three shipped PRNG aliasing schemes, or a synthetic
+dense intermediate) into the checked set so ``tests/test_statics.py`` can
+prove the lint would have caught each one. They are not for normal use.
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import sys
+from pathlib import Path
+
+import numpy as np
+
+from . import contracts, dense, memory, retrace, streams, walk
+from .dense import Finding
+
+_REPO_ROOT = Path(__file__).resolve().parents[3]
+
+_TRACE_BACKENDS = ("xla", "pallas")
+
+
+# ---------------------------------------------------------------------------
+# Fixtures — tiny concrete programs per engine. Dim sizes are pairwise
+# distinct WITHIN each fixture so repro.statics.walk.symbolize can never
+# confuse axes (the discipline the historical per-test walkers used).
+# ---------------------------------------------------------------------------
+
+def _pushsum_fixture():
+    import jax
+
+    from repro.core.graphs import edge_list, random_strongly_connected
+    from repro.core.pushsum import run_pushsum_sparse
+
+    rng = np.random.default_rng(0)
+    adj = random_strongly_connected(11, 0.3, rng)
+    el = edge_list(adj)
+    w = rng.normal(size=(11, 2)).astype(np.float32)
+    dims = {"N": 11, "d": 2, "T": 7, "E": int(el.E)}
+
+    def make(backend, store):
+        return walk.trace(
+            lambda w_, key_: run_pushsum_sparse(
+                w_, el.src, el.dst, T=7, drop_prob=0.1, B=2,
+                key=key_, backend=backend,
+            ),
+            w, jax.random.PRNGKey(0),
+        )
+
+    return dims, (None,), make
+
+
+def _social_fixture():
+    from repro.core.graphs import make_hierarchy
+    from repro.core.hps import HPSConfig
+    from repro.core.signals import make_confused_model
+    from repro.core.social import (
+        SOCIAL_STORES,
+        make_social_runtime,
+        run_social_runtime,
+    )
+
+    topo = make_hierarchy([6, 6, 6], topology="complete", seed=2)
+    model = make_confused_model(N=topo.N, m=3, truth=1, confusion=0.5,
+                                seed=0)
+    cfg = HPSConfig(topo=topo, gamma_period=4, B=2, drop_prob=0.3)
+    rt = make_social_runtime(cfg)
+    dims = {"N": 18, "m": 3, "T": 37, "E": int(np.asarray(rt.src).shape[0])}
+
+    def make(backend, store):
+        return walk.trace(
+            lambda rt_: run_social_runtime(
+                model, rt_, M=len(topo.sizes), T=37,
+                backend=backend, store=store,
+            ),
+            rt,
+        )
+
+    return dims, SOCIAL_STORES, make
+
+
+def _hps_fixture():
+    from repro.core.graphs import make_hierarchy
+    from repro.core.hps import HPS_STORES, HPSConfig, make_hps_runtime, run_hps
+
+    topo = make_hierarchy([5, 5, 5], topology="complete", seed=0)
+    cfg = HPSConfig(topo=topo, gamma_period=4, B=2, drop_prob=0.2)
+    rt = make_hps_runtime(cfg)
+    w = np.random.default_rng(3).normal(size=(15, 2)).astype(np.float32)
+    dims = {"N": 15, "d": 2, "T": 31, "E": int(np.asarray(rt.src).shape[0])}
+
+    def make(backend, store):
+        return walk.trace(
+            lambda w_: run_hps(w_, cfg, T=31, seed=0,
+                               backend=backend, store=store),
+            w,
+        )
+
+    return dims, HPS_STORES, make
+
+
+def _byz_fixture():
+    import jax
+
+    from repro.core import attacks
+    from repro.core.byzantine import (
+        STORES,
+        ByzantineConfig,
+        make_byzantine_scan,
+    )
+    from repro.core.graphs import make_hierarchy
+    from repro.core.signals import make_confused_model
+
+    topo = make_hierarchy([8] * 8, topology="complete", seed=0)   # N = 64
+    model = make_confused_model(N=64, m=3, truth=0, confusion=0.0, seed=1)
+    cfg = ByzantineConfig(topo=topo, F=2, byz=(2, 9), gamma_period=4,
+                          attack=attacks.sign_flip())
+    dims = {"N": 64, "m": 3, "T": 5}
+
+    def make(backend, store):
+        run = make_byzantine_scan(model, cfg, T=5, core="sparse",
+                                  backend=backend, store=store)
+        return walk.trace(run, jax.random.PRNGKey(0))
+
+    return dims, STORES, make
+
+
+_FIXTURES = {
+    "pushsum": _pushsum_fixture,
+    "social": _social_fixture,
+    "hps": _hps_fixture,
+    "byzantine": _byz_fixture,
+}
+
+
+def _retrace_thunks():
+    """Tiny concrete runs of every sweep/grid entry point (XLA, CPU-safe).
+    Each is executed twice by the sentinel; the second call must hit every
+    compiled cache."""
+    from repro.core import attacks
+    from repro.core.byzantine import ByzantineConfig
+    from repro.core.graphs import edge_list, make_hierarchy, \
+        random_strongly_connected
+    from repro.core.hps import HPSConfig
+    from repro.core.signals import make_confused_model
+    from repro.core.sweeps import (
+        run_byzantine_grid,
+        run_byzantine_sweep,
+        run_hps_grid,
+        run_hps_sweep,
+        run_pushsum_sweep,
+        run_social_grid,
+        run_social_sweep,
+    )
+
+    rng = np.random.default_rng(1)
+    el = edge_list(random_strongly_connected(16, 0.2, rng))
+    w16 = rng.normal(size=(16, 2)).astype(np.float32)
+
+    topo = make_hierarchy([5, 5, 5], topology="complete", seed=0)   # N = 15
+    model = make_confused_model(N=15, m=3, truth=0, confusion=0.0, seed=0)
+    bcfgs = [
+        ByzantineConfig(topo=topo, F=0, byz=(), gamma_period=4,
+                        attack=attacks.sign_flip()),
+        ByzantineConfig(topo=topo, F=1, byz=(1,), gamma_period=4,
+                        attack=attacks.sign_flip()),
+    ]
+    hcfgs = [HPSConfig(topo=topo, gamma_period=g, B=2, drop_prob=0.0)
+             for g in (2, 4)]
+    w15 = rng.normal(size=(15, 2)).astype(np.float32)
+
+    return {
+        "run_pushsum_sweep": lambda: run_pushsum_sweep(
+            w16, el, T=5, drop_probs=[0.0, 0.5], seeds=[0, 1], B=2,
+            backend="xla"),
+        "run_byzantine_sweep": lambda: run_byzantine_sweep(
+            model, bcfgs[1], T=3, seeds=[0, 1], backend="xla",
+            store="final"),
+        "run_byzantine_grid": lambda: run_byzantine_grid(
+            model, bcfgs, T=3, seeds=[0, 1], backend="xla",
+            store="decisions"),
+        "run_hps_sweep": lambda: run_hps_sweep(
+            w15, hcfgs[0], T=4, drop_probs=[0.0, 0.3], seeds=[0],
+            backend="xla", store="gap"),
+        "run_hps_grid": lambda: run_hps_grid(
+            w15, hcfgs, T=4, seeds=[0, 1], backend="xla", store="gap"),
+        "run_social_sweep": lambda: run_social_sweep(
+            model, hcfgs[0], T=4, drop_probs=[0.0, 0.3], seeds=[0],
+            backend="xla", store="log_ratio"),
+        "run_social_grid": lambda: run_social_grid(
+            model, hcfgs, T=4, seeds=[0, 1], backend="xla",
+            store="log_ratio"),
+    }
+
+
+def _count_prng_sites(closed) -> int:
+    n = 0
+    for _, eqn in walk.iter_eqns(closed):
+        name = eqn.primitive.name
+        if "threefry" in name or name.startswith("random_"):
+            n += 1
+    return n
+
+
+def _synthetic_dense(dims):
+    """A deliberately-broken pushsum-shaped program: materializes the
+    (N, N) averaging matrix the sparse core exists to avoid."""
+    import jax.numpy as jnp
+
+    N = dims["N"]
+
+    def bad(w):
+        dense_mix = jnp.ones((N, N), w.dtype) / N      # the bug
+        return dense_mix @ w
+
+    return walk.trace(bad, np.zeros((N, dims["d"]), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Checks
+# ---------------------------------------------------------------------------
+
+def _trace_findings(engines, inject_dense=False) -> list[Finding]:
+    out: list[Finding] = []
+    for name in engines:
+        c = contracts.get(name)
+        dims, stores, make = _FIXTURES[name]()
+        for backend in _TRACE_BACKENDS:
+            for store in stores:
+                where = f"{name}[backend={backend}" + (
+                    f", store={store}]" if store else "]")
+                try:
+                    closed = make(backend, store)
+                except Exception as e:  # tracing itself must not break
+                    out.append(Finding(
+                        check="trace-error", where=where,
+                        message=f"{type(e).__name__}: {e}",
+                    ))
+                    continue
+                out.extend(dense.assert_nonempty(closed, where=where))
+                out.extend(dense.find_forbidden(
+                    closed, dims, c.forbidden_for(store), where=where))
+                out.extend(dense.find_subnormal_consts(closed, where=where))
+                sites = _count_prng_sites(closed)
+                if sites < c.n_prng_sites:
+                    out.append(Finding(
+                        check="prng-sites", where=where,
+                        message=(
+                            f"traced program holds {sites} counter-PRNG "
+                            f"call sites but the contract declares "
+                            f"{c.n_prng_sites} streams — a stream was "
+                            "hoisted or dropped"
+                        ),
+                    ))
+        if inject_dense and name == "pushsum":
+            out.extend(dense.find_forbidden(
+                _synthetic_dense(dims), dims, c.forbidden_for(None),
+                where="pushsum[synthetic-dense-injection]"))
+    return out
+
+
+def _fitted_streams(c, override: dict | None) -> list[streams.AffineMap]:
+    if override and c.name in override:
+        return list(override[c.name])
+    return [streams.fit_affine(s.fold, f"{c.name}.{s.name}")
+            for s in c.streams]
+
+
+def _stream_findings(engines, override: dict | None = None) -> list[Finding]:
+    out: list[Finding] = []
+    fitted = {}
+    for name in engines:
+        c = contracts.get(name)
+        try:
+            fitted[name] = _fitted_streams(c, override)
+        except ValueError as e:
+            out.append(Finding(check="prng-stream-collision", where=name,
+                               message=str(e)))
+            fitted[name] = []
+    for name in engines:
+        c = contracts.get(name)
+        out.extend(streams.check_streams(fitted[name], c.horizon,
+                                         where=name))
+        for other in c.shares_seed_with:
+            if other not in fitted:
+                oc = contracts.get(other)
+                fitted[other] = _fitted_streams(oc, override)
+            oc = contracts.get(other)
+            horizon = min(c.horizon, oc.horizon)
+            for m1 in fitted[name]:
+                for m2 in fitted[other]:
+                    disjoint, wit = streams.affine_disjoint(
+                        m1, m2, horizon)
+                    if not disjoint:
+                        t1, t2, val = wit
+                        out.append(Finding(
+                            check="prng-stream-collision",
+                            where=f"{name} x {other}",
+                            message=(
+                                f"shared-seed engines collide: {m1.name}"
+                                f"@t={t1} == {m2.name}@t={t2} (both fold "
+                                f"{val}); maps [{m1}] vs [{m2}] over "
+                                f"horizon T={horizon}"
+                            ),
+                        ))
+    return out
+
+
+def _retrace_findings() -> list[Finding]:
+    out: list[Finding] = []
+    for name, thunk in _retrace_thunks().items():
+        out.extend(retrace.check_idempotent(thunk, where=name))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Verdict cache
+# ---------------------------------------------------------------------------
+
+def _source_fingerprint() -> str:
+    import jax
+
+    h = hashlib.sha256()
+    h.update(jax.__version__.encode())
+    src = _REPO_ROOT / "src" / "repro"
+    for p in sorted(src.rglob("*.py")):
+        h.update(str(p.relative_to(src)).encode())
+        h.update(hashlib.sha256(p.read_bytes()).digest())
+    results = _REPO_ROOT / "results"
+    if results.is_dir():
+        for p in sorted(results.glob("BENCH_*.json")):
+            h.update(p.name.encode())
+            h.update(hashlib.sha256(p.read_bytes()).digest())
+    return h.hexdigest()
+
+
+def _cache_path(cache_dir: str) -> Path:
+    return Path(cache_dir) / "lint-verdict.json"
+
+
+# ---------------------------------------------------------------------------
+# Subcommands
+# ---------------------------------------------------------------------------
+
+def _cmd_lint(args) -> int:
+    retrace.register_default_caches()
+    engines = sorted(contracts.REGISTRY)
+
+    key = _source_fingerprint()
+    cache_file = _cache_path(args.cache_dir)
+    if not args.no_cache and not args.inject_legacy_streams \
+            and not args.inject_dense and cache_file.is_file():
+        try:
+            verdict = json.loads(cache_file.read_text())
+        except (OSError, ValueError):
+            verdict = {}
+        if verdict.get("key") == key and verdict.get("ok"):
+            print(f"lint: cached PASS for source fingerprint "
+                  f"{key[:12]} ({cache_file})")
+            return 0
+
+    override = None
+    if args.inject_legacy_streams:
+        override = {args.inject_legacy_streams:
+                    streams.LEGACY_BUGGY_STREAMS[args.inject_legacy_streams]}
+
+    findings: list[Finding] = []
+    findings += _trace_findings(engines, inject_dense=args.inject_dense)
+    findings += _stream_findings(engines, override)
+    if not args.skip_exec:
+        findings += _retrace_findings()
+    findings += memory.validate_bench(_REPO_ROOT / "results")
+
+    for f in findings:
+        print(f, file=sys.stderr)
+    n_targets = sum(len(_FIXTURES[e]()[1]) for e in engines) \
+        * len(_TRACE_BACKENDS)
+    if findings:
+        print(f"lint: FAIL — {len(findings)} finding(s) over {n_targets} "
+              "traced targets", file=sys.stderr)
+        return 1
+
+    print(f"lint: PASS — {n_targets} traced targets, "
+          f"{len(engines)} engine contracts, 0 findings")
+    if not args.no_cache and not args.inject_legacy_streams \
+            and not args.inject_dense:
+        cache_file.parent.mkdir(parents=True, exist_ok=True)
+        cache_file.write_text(json.dumps(
+            {"key": key, "ok": True, "targets": n_targets}))
+    return 0
+
+
+def _cmd_budget(args) -> int:
+    retrace.register_default_caches()
+    print("analytic per-round step bytes and TPU-v5e roofline floors:")
+    cases = [
+        ("pushsum  N=1024 E=3102 d=1",
+         memory.pushsum_step_bytes(1024, 3102, 1)),
+        ("social   N=18 E=90 m=3", memory.social_step_bytes(18, 90, 3)),
+        ("hps      N=15 E=62 d=2", memory.hps_step_bytes(15, 62, 2)),
+        ("byz-sparse N=64 deg=8 m=3",
+         memory.byz_sparse_step_bytes(64, 8, 3)),
+        ("byz-DENSE  N=4096 m=3", memory.byz_dense_bytes(4096, 3)),
+    ]
+    for label, b in cases:
+        floor = memory.step_floor(b)
+        print(f"  {label:28s} {b / 1e6:10.3f} MB  "
+              f"floor {floor['bound_step_time_s'] * 1e6:8.3f} us  "
+              f"({floor['dominant']}-bound)")
+
+    print("traced footprints:")
+    for name in sorted(contracts.REGISTRY):
+        dims, stores, make = _FIXTURES[name]()
+        closed = make("xla", stores[0])
+        fp = memory.jaxpr_footprint(closed, dims)
+        print(f"  {name}: {fp['n_values']} values, peak "
+              f"{fp['peak_value_bytes']} B, total {fp['total_bytes']} B")
+        for line in fp["top"][:3]:
+            print(f"    {line}")
+
+    findings = memory.validate_bench(_REPO_ROOT / "results")
+    for f in findings:
+        print(f, file=sys.stderr)
+    return 1 if findings else 0
+
+
+def _cmd_list(args) -> int:
+    retrace.register_default_caches()
+    print("contracts:")
+    for c in contracts.all_contracts():
+        pats = {k: list(v) for k, v in c.forbidden.items()}
+        print(f"  {c.name}: streams={[s.name for s in c.streams]}, "
+              f"forbidden={pats}, shares_seed_with="
+              f"{list(c.shares_seed_with)}, caches={list(c.caches)}")
+    print("registered caches:")
+    for name, size in retrace.snapshot().items():
+        print(f"  {name}: {size} entries")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.statics",
+        description="jaxpr static analysis for the fused engines",
+    )
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    lint = sub.add_parser("lint", help="run every static check")
+    lint.add_argument("--cache-dir", default=str(_REPO_ROOT / ".statics-cache"),
+                      help="verdict-cache directory (CI persists this)")
+    lint.add_argument("--no-cache", action="store_true",
+                      help="ignore and do not write the verdict cache")
+    lint.add_argument("--skip-exec", action="store_true",
+                      help="skip the executed retrace-sentinel checks "
+                           "(trace-only lint)")
+    lint.add_argument("--inject-legacy-streams",
+                      choices=sorted(streams.LEGACY_BUGGY_STREAMS),
+                      help="TEST ONLY: check the named engine with its "
+                           "historical buggy fold-in scheme")
+    lint.add_argument("--inject-dense", action="store_true",
+                      help="TEST ONLY: add a synthetic (N, N) intermediate "
+                           "to the pushsum lint target")
+    lint.set_defaults(fn=_cmd_lint)
+
+    budget = sub.add_parser("budget", help="static memory/FLOP budgets")
+    budget.set_defaults(fn=_cmd_budget)
+
+    lst = sub.add_parser("list", help="show contracts and caches")
+    lst.set_defaults(fn=_cmd_list)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

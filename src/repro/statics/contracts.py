@@ -1,0 +1,154 @@
+"""Engine contracts — the declared structural invariants the linter enforces.
+
+Every engine that wants the static checks by default declares them ONCE at
+its definition site with the :func:`contract` decorator (or a direct
+:func:`register` call), instead of each invariant living in a copy-pasted
+test walker:
+
+    @statics.contract(
+        name="social",
+        forbidden={"*": (("N", "N"),), "final": (("T", "*"),)},
+        streams=(("link", lambda t: social_stream_fold(t, STREAM_LINK)),
+                 ("signal", lambda t: social_stream_fold(t, STREAM_SIGNAL))),
+        caches=("social.compiled", "social.runtime"),
+    )
+    def _social_scan_core(...):
+
+The decorator is transparent — it registers the declaration and returns
+the function unchanged, so tracing/jit behavior is untouched. Checks pull
+declarations from :data:`REGISTRY`; the CLI (:mod:`repro.statics.cli`)
+maps each registered name to a small concrete fixture and runs the full
+registry over it.
+
+Declaration vocabulary:
+
+* ``forbidden`` — symbolic shape patterns (see
+  :func:`repro.statics.dense.find_forbidden`) keyed by ``store`` variant;
+  the ``"*"`` key applies to every variant.
+* ``streams`` — ``(name, fold)`` pairs, one per PRNG stream the engine
+  folds into its base key each iteration. The stream-domain analyzer fits
+  each ``fold`` to an affine map over ``t`` and statically proves pairwise
+  disjointness over ``horizon`` (:mod:`repro.statics.streams`).
+* ``shares_seed_with`` — names of OTHER registered engines whose streams
+  must also stay disjoint from this one's, because one experiment seed may
+  legitimately root both engines' base keys (the HPS link stream vs the
+  social streams — the PR-5 aliasing bug class).
+* ``caches`` — names in the retrace-sentinel cache registry
+  (:mod:`repro.statics.retrace`) whose growth this engine is accountable
+  for.
+* ``min_prng_sites`` — lower bound on counter-PRNG call sites the traced
+  scan must contain (defaults to ``len(streams)``); a program that traces
+  fewer has hoisted or dropped a stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping, Sequence
+
+__all__ = [
+    "StreamDecl",
+    "EngineContract",
+    "REGISTRY",
+    "contract",
+    "register",
+    "get",
+    "all_contracts",
+]
+
+# The default horizon disjointness is proven over: far beyond any committed
+# benchmark run (T <= ~1e3 today) while keeping every affine image well
+# inside the signed-int32 fold-in space the proof requires.
+DEFAULT_HORIZON = 1 << 20
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamDecl:
+    """One per-iteration PRNG stream: ``fold(t)`` is the value folded into
+    the engine's base key at iteration ``t``."""
+
+    name: str
+    fold: Callable[[int], int]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineContract:
+    name: str
+    forbidden: Mapping[str, tuple[tuple, ...]] = dataclasses.field(
+        default_factory=dict
+    )
+    streams: tuple[StreamDecl, ...] = ()
+    shares_seed_with: tuple[str, ...] = ()
+    caches: tuple[str, ...] = ()
+    horizon: int = DEFAULT_HORIZON
+    min_prng_sites: int | None = None
+
+    def forbidden_for(self, store: str | None) -> tuple[tuple, ...]:
+        pats = tuple(self.forbidden.get("*", ()))
+        if store is not None:
+            pats += tuple(self.forbidden.get(store, ()))
+        return pats
+
+    @property
+    def n_prng_sites(self) -> int:
+        if self.min_prng_sites is not None:
+            return self.min_prng_sites
+        return len(self.streams)
+
+
+REGISTRY: dict[str, EngineContract] = {}
+
+
+def register(c: EngineContract) -> EngineContract:
+    """Insert (or replace — re-imports under importlib.reload must not
+    error) a contract in the global registry."""
+    REGISTRY[c.name] = c
+    return c
+
+
+def contract(
+    *,
+    name: str,
+    forbidden: Mapping[str, Sequence[tuple]] | None = None,
+    streams: Sequence[tuple[str, Callable[[int], int]]] = (),
+    shares_seed_with: Sequence[str] = (),
+    caches: Sequence[str] = (),
+    horizon: int = DEFAULT_HORIZON,
+    min_prng_sites: int | None = None,
+):
+    """Declare an engine's static invariants at its definition site.
+
+    Transparent: returns the decorated function unchanged, with the
+    registered :class:`EngineContract` attached as
+    ``fn.__statics_contract__`` for discovery.
+    """
+    c = EngineContract(
+        name=name,
+        forbidden={k: tuple(tuple(p) for p in v)
+                   for k, v in (forbidden or {}).items()},
+        streams=tuple(StreamDecl(n, f) for n, f in streams),
+        shares_seed_with=tuple(shares_seed_with),
+        caches=tuple(caches),
+        horizon=horizon,
+        min_prng_sites=min_prng_sites,
+    )
+    register(c)
+
+    def deco(fn):
+        fn.__statics_contract__ = c
+        return fn
+
+    return deco
+
+
+def get(name: str) -> EngineContract:
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"no statics contract named {name!r}; registered: "
+            f"{sorted(REGISTRY)}"
+        ) from None
+
+
+def all_contracts() -> list[EngineContract]:
+    return [REGISTRY[k] for k in sorted(REGISTRY)]

@@ -1,0 +1,118 @@
+"""Dense-intermediate linter + subnormal-constant check.
+
+The repo's core scaling guarantee is *structural*: the sparse engines must
+never materialize an (N, N, ...) value, and the in-scan-reducing ``store``
+variants must never materialize a (T, ...) value. These used to be
+enforced by per-test jaxpr walkers; here they are one reusable pass over
+:func:`repro.statics.walk.collect_values`.
+
+Patterns are symbolic shape *prefixes* over the fixture's dim table:
+``("N", "N")`` flags any value whose first two axes are both N (the exact
+predicate the historical tests asserted — ``s[0] == n and s[1] == n``);
+``("T", "*")`` flags any rank >= 2 value led by the horizon axis (``"*"``
+matches any single axis). Engines declare their patterns per ``store``
+variant via :func:`repro.statics.contracts.contract`.
+
+:func:`find_subnormal_consts` is the would-have-caught check for the PR-4
+belief-floor bug: a literal like ``1e-38`` sits below the smallest normal
+fp32 (~1.1754944e-38), so XLA CPU's flush-to-zero turned
+``log(max(mu, 1e-38))`` into ``log(0) = -inf`` and NaN'd the Theorem-2
+ratios. Any float literal in the subnormal range of its own dtype is a
+latent FTZ bug and gets flagged.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .walk import Value, collect_literals, collect_values, symbolize
+
+__all__ = ["Finding", "find_forbidden", "find_subnormal_consts"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One lint violation; ``check`` names the pass, ``where`` the engine /
+    entry point the traced program came from."""
+
+    check: str
+    where: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"[{self.check}] {self.where}: {self.message}"
+
+
+def _matches(sym_shape: tuple, pattern: tuple) -> bool:
+    """Anchored prefix match with ``"*"`` single-axis wildcard."""
+    if len(sym_shape) < len(pattern):
+        return False
+    for got, want in zip(sym_shape, pattern):
+        if want != "*" and got != want:
+            return False
+    return True
+
+
+def find_forbidden(
+    closed,
+    dims: dict[str, int],
+    patterns: tuple[tuple, ...],
+    *,
+    where: str = "<traced fn>",
+) -> list[Finding]:
+    """Flag every intermediate whose symbolized shape starts with a
+    forbidden pattern. ``dims`` maps fixture symbols to the concrete sizes
+    the program was traced at (pairwise-distinct; see
+    :func:`repro.statics.walk.symbolize`)."""
+    out: list[Finding] = []
+    for val in collect_values(closed):
+        sym = symbolize(val.shape, dims)
+        for pat in patterns:
+            if _matches(sym, pat):
+                out.append(Finding(
+                    check="dense-intermediate",
+                    where=where,
+                    message=(
+                        f"forbidden {pat} value: {val.describe(dims)} "
+                        f"(concrete shape {val.shape})"
+                    ),
+                ))
+                break
+    return out
+
+
+def assert_nonempty(closed, *, where: str = "<traced fn>") -> list[Finding]:
+    """A jaxpr with no equations means the walker was handed a constant
+    program — the historical tests guarded this ("jaxpr walker found no
+    values"), so the framework does too."""
+    if collect_values(closed):
+        return []
+    return [Finding(
+        check="dense-intermediate", where=where,
+        message="jaxpr walker found no values (empty traced program?)",
+    )]
+
+
+def find_subnormal_consts(closed, *, where: str = "<traced fn>") -> list[Finding]:
+    """Flag float literals in the subnormal range of their own dtype."""
+    out: list[Finding] = []
+    for path, arr in collect_literals(closed):
+        if not np.issubdtype(arr.dtype, np.floating):
+            continue
+        tiny = np.finfo(arr.dtype).tiny
+        vals = np.atleast_1d(arr)
+        bad = vals[(vals != 0) & np.isfinite(vals) & (np.abs(vals) < tiny)]
+        if bad.size:
+            at = "/".join(path) or "<consts>"
+            out.append(Finding(
+                check="subnormal-const",
+                where=where,
+                message=(
+                    f"literal {bad.ravel()[0]!r} at {at} is subnormal for "
+                    f"{arr.dtype} (tiny={tiny!r}); XLA CPU flush-to-zero "
+                    "reads it as 0.0 — use the dtype's smallest NORMAL "
+                    "value instead (the PR-4 belief-floor NaN class)"
+                ),
+            ))
+    return out

@@ -1,0 +1,133 @@
+"""Retrace sentinel — compiled-cache growth accounting.
+
+The sweep engines keep their executables in module-level LRU caches
+(``_BYZ_COMPILED``, ``_SOCIAL_COMPILED``, ``_HPS_COMPILED``, the grid and
+runtime caches) plus jit tracing caches on the module-level jits. The
+whole point of those caches is that a *repeated* call with the same
+shapes/statics costs zero compilations — a key that hashes unstably (a
+default-``__hash__`` dataclass, a float that should be rounded, an array
+in a static) silently retraces every call and the only symptom is a 100x
+slower sweep.
+
+This module makes that property checkable:
+
+* engines :func:`register_cache` their cache objects at the definition
+  site (name -> ``len()``-able mapping or a ``() -> int`` size callable —
+  jit wrappers register their ``_cache_size`` bound method);
+* :class:`CacheWatch` snapshots every registered size on enter/exit and
+  turns unexpected growth into findings;
+* :func:`check_idempotent` runs a thunk twice and fails if the SECOND
+  call grew any cache — the exact "repeat call must not retrace"
+  contract.
+"""
+from __future__ import annotations
+
+from typing import Callable, Mapping
+
+from .dense import Finding
+
+__all__ = [
+    "CACHE_REGISTRY",
+    "register_cache",
+    "register_default_caches",
+    "snapshot",
+    "CacheWatch",
+    "check_idempotent",
+]
+
+# name -> () -> current entry count. Populated by the engine modules at
+# import time (sweeps.py / social.py / hps.py call register_cache).
+CACHE_REGISTRY: dict[str, Callable[[], int]] = {}
+
+
+def register_cache(name: str, cache) -> None:
+    """Register a compiled cache under ``name``.
+
+    ``cache`` is either a sized mapping (the ``_LRUCache`` dicts) or a
+    zero-arg callable returning the entry count (a jit's ``_cache_size``).
+    Re-registration replaces (importlib.reload must not error).
+    """
+    if callable(cache) and not hasattr(cache, "__len__"):
+        CACHE_REGISTRY[name] = cache
+    else:
+        CACHE_REGISTRY[name] = lambda c=cache: len(c)
+
+
+def register_default_caches() -> None:
+    """Import the core engines so their definition-site registrations run."""
+    from repro.core import hps, social, sweeps  # noqa: F401
+
+
+def snapshot() -> dict[str, int]:
+    """Current entry count of every registered cache."""
+    return {name: int(fn()) for name, fn in sorted(CACHE_REGISTRY.items())}
+
+
+class CacheWatch:
+    """Context manager: snapshot registered caches around a block.
+
+    ``allowed`` bounds per-cache growth (entries); caches not named are
+    allowed unlimited growth when ``strict=False`` (warm-up blocks) and
+    zero growth when ``strict=True`` (repeat-call blocks).
+    """
+
+    def __init__(
+        self,
+        allowed: Mapping[str, int] | None = None,
+        *,
+        strict: bool = False,
+        where: str = "<caches>",
+    ):
+        self.allowed = dict(allowed or {})
+        self.strict = strict
+        self.where = where
+        self.before: dict[str, int] = {}
+        self.after: dict[str, int] = {}
+
+    def __enter__(self) -> "CacheWatch":
+        self.before = snapshot()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.after = snapshot()
+
+    @property
+    def deltas(self) -> dict[str, int]:
+        return {
+            name: self.after.get(name, 0) - self.before.get(name, 0)
+            for name in self.after
+            if self.after.get(name, 0) != self.before.get(name, 0)
+        }
+
+    def findings(self) -> list[Finding]:
+        out: list[Finding] = []
+        for name, delta in sorted(self.deltas.items()):
+            budget = self.allowed.get(name, 0 if self.strict else None)
+            if budget is None or delta <= budget:
+                continue
+            out.append(Finding(
+                check="unexpected-retrace",
+                where=self.where,
+                message=(
+                    f"cache {name!r} grew by {delta} "
+                    f"({self.before.get(name, 0)} -> {self.after.get(name, 0)}) "
+                    f"but at most {budget} new entries were expected — a "
+                    "repeated call is recompiling (unstable cache key?)"
+                ),
+            ))
+        return out
+
+
+def check_idempotent(
+    thunk: Callable[[], object],
+    *,
+    where: str = "<entry point>",
+) -> list[Finding]:
+    """Run ``thunk`` twice; the second run must not grow ANY registered
+    cache. The first run may compile freely (that is what caches are for);
+    a second identical call that still compiles is the retrace bug class
+    this sentinel exists to catch."""
+    thunk()  # warm-up: may populate caches
+    with CacheWatch(strict=True, where=where) as watch:
+        thunk()
+    return watch.findings()

@@ -294,25 +294,11 @@ class TestByzantineCoreEquivalence:
                                    rtol=1e-5, atol=1e-5)
 
 
-def _collect_avals(jaxpr, out):
-    for eqn in jaxpr.eqns:
-        for v in eqn.outvars:
-            if hasattr(v, "aval") and hasattr(v.aval, "shape"):
-                out.append(v.aval.shape)
-        for val in eqn.params.values():
-            for sub in _subjaxprs(val):
-                _collect_avals(sub, out)
-    return out
-
-
-def _subjaxprs(val):
-    if isinstance(val, jax.core.ClosedJaxpr):
-        yield val.jaxpr
-    elif isinstance(val, jax.core.Jaxpr):
-        yield val
-    elif isinstance(val, (list, tuple)):
-        for item in val:
-            yield from _subjaxprs(item)
+# The jaxpr walker these tests introduced now lives in repro.statics.walk
+# (PR 6); imported under the historical names so the assertions below stay
+# bit-for-bit what they were when the helpers were local.
+from repro.statics.walk import collect_avals as _collect_avals  # noqa: E402
+from repro.statics.walk import subjaxprs as _subjaxprs  # noqa: E402,F401
 
 
 class TestNoDenseIntermediate:

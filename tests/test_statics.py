@@ -1,0 +1,536 @@
+"""repro.statics — the jaxpr static-analysis subsystem (PR 6).
+
+Covers, in order:
+* the IR walker's equivalence with the historical per-test helpers,
+* exactness of the affine stream-disjointness decision procedure
+  (hypothesis property tests when the library is available, a seeded
+  4000-trial randomized sweep otherwise — same property either way),
+* would-have-caught regressions for the three PRNG aliasing bugs that
+  shipped in PRs 3-5 and the PR-4 subnormal belief-floor NaN,
+* the dense-intermediate linter on a synthetic injection AND the real
+  engines,
+* the retrace sentinel (positive and negative),
+* the static memory budgeter against the committed BENCH artifacts,
+* the benchmark --check vacuous-pass fix,
+* the CLI end-to-end, including verdict-cache behavior.
+"""
+from __future__ import annotations
+
+import json
+import random
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.statics import contracts, dense, memory, retrace, streams, walk
+from repro.statics.streams import (
+    AffineMap,
+    LEGACY_BUGGY_STREAMS,
+    affine_disjoint,
+    brute_force_disjoint,
+    check_streams,
+    fit_affine,
+)
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _ensure_engines_imported():
+    retrace.register_default_caches()
+
+
+# ---------------------------------------------------------------------------
+# Walker
+# ---------------------------------------------------------------------------
+
+def _legacy_collect_avals(jaxpr, out):
+    """The exact helper the PR-3/4/5 tests carried, re-inlined as the
+    equivalence oracle for repro.statics.walk.collect_avals."""
+    for eqn in jaxpr.eqns:
+        for v in eqn.outvars:
+            if hasattr(v, "aval") and hasattr(v.aval, "shape"):
+                out.append(v.aval.shape)
+        for val in eqn.params.values():
+            for sub in walk.subjaxprs(val):
+                _legacy_collect_avals(sub, out)
+    return out
+
+
+class TestWalker:
+    def test_collect_avals_matches_historical_helper(self):
+        def fn(x):
+            def body(c, t):
+                return c * 0.5 + jnp.sin(t), c.sum()
+            c, ys = jax.lax.scan(body, x, jnp.arange(5, dtype=jnp.float32))
+            return jnp.where(ys[-1] > 0, c, -c)
+
+        closed = jax.make_jaxpr(fn)(jnp.ones((3, 4), jnp.float32))
+        assert walk.collect_avals(closed.jaxpr, []) == \
+            _legacy_collect_avals(closed.jaxpr, [])
+
+    def test_collect_values_paths_and_bytes(self):
+        def fn(x):
+            def body(c, _):
+                return c @ c.T @ c, ()
+            c, _ = jax.lax.scan(body, x, None, length=3)
+            return c
+
+        closed = jax.make_jaxpr(fn)(jnp.ones((4, 4), jnp.float32))
+        vals = walk.collect_values(closed)
+        in_scan = [v for v in vals if "scan" in v.path]
+        assert in_scan and all(v.nbytes == 4 * 4 * 4 for v in in_scan)
+
+    def test_collect_values_tolerates_key_dtypes(self):
+        closed = jax.make_jaxpr(
+            lambda k: jax.random.uniform(jax.random.fold_in(k, 3), (7,))
+        )(jax.random.PRNGKey(0))
+        fp = memory.jaxpr_footprint(closed)
+        assert fp["n_values"] > 0 and fp["total_bytes"] > 0
+
+    def test_symbolize(self):
+        assert walk.symbolize((64, 64, 3), {"N": 64, "m": 3}) == \
+            ("N", "N", "m")
+        assert walk.symbolize((5,), {"N": 64}) == (5,)
+
+    def test_symbolize_rejects_ambiguous_dims(self):
+        with pytest.raises(ValueError, match="ambiguous"):
+            walk.symbolize((8,), {"N": 8, "T": 8})
+
+
+# ---------------------------------------------------------------------------
+# Affine disjointness: exactness property
+# ---------------------------------------------------------------------------
+
+def _check_one(a1, b1, a2, b2, T, T2):
+    m1, m2 = AffineMap("x", a1, b1), AffineMap("y", a2, b2)
+    disjoint, wit = affine_disjoint(m1, m2, T, T2)
+    assert disjoint == brute_force_disjoint(m1, m2, T, T2), \
+        (a1, b1, a2, b2, T, T2)
+    if not disjoint:
+        t1, t2, val = wit
+        assert 0 <= t1 < T and 0 <= t2 < T2, (wit, m1, m2, T, T2)
+        assert m1(t1) == m2(t2) == val, (wit, m1, m2)
+
+
+class TestAffineDisjointProperty:
+    if HAVE_HYPOTHESIS:
+        @settings(max_examples=500, deadline=None)
+        @given(
+            a1=st.integers(-6, 6), b1=st.integers(-20, 20),
+            a2=st.integers(-6, 6), b2=st.integers(-20, 20),
+            T=st.integers(1, 30), T2=st.integers(1, 30),
+        )
+        def test_matches_brute_force(self, a1, b1, a2, b2, T, T2):
+            _check_one(a1, b1, a2, b2, T, T2)
+    else:
+        def test_matches_brute_force(self):
+            # seeded fallback: same box, dense randomized coverage
+            rng = random.Random(0)
+            for _ in range(4000):
+                _check_one(
+                    rng.randint(-6, 6), rng.randint(-20, 20),
+                    rng.randint(-6, 6), rng.randint(-20, 20),
+                    rng.randint(1, 30), rng.randint(1, 30),
+                )
+
+    def test_degenerate_and_zero_slope_cases(self):
+        for args in [(0, 5, 0, 5, 9, 9), (0, 5, 0, 6, 9, 9),
+                     (2, 0, 0, 4, 9, 9), (0, 4, 2, 0, 9, 9),
+                     (-3, 0, 3, 0, 9, 9), (1, 0, 1, 0, 1, 1)]:
+            _check_one(*args)
+
+    def test_horizon_bound_enforced(self):
+        big = AffineMap("big", 1 << 20, 0)
+        with pytest.raises(ValueError, match="signed fold-in"):
+            affine_disjoint(big, AffineMap("y", 1, 0), 1 << 12)
+
+
+class TestFitAffine:
+    def test_recovers_engine_folds(self):
+        from repro.core.byzantine import STREAM_GOSSIP, stream_fold
+        from repro.core.hps import hps_stream_fold
+        from repro.core.social import STREAM_SIGNAL, social_stream_fold
+
+        m = fit_affine(lambda t: stream_fold(t, STREAM_GOSSIP), "bg")
+        assert (m.a, m.b) == (3, 1)
+        m = fit_affine(lambda t: social_stream_fold(t, STREAM_SIGNAL), "ss")
+        assert (m.a, m.b) == (2, 1)
+        m = fit_affine(hps_stream_fold, "hl")
+        assert (m.a, m.b) == (-1, -1)
+
+    def test_rejects_non_affine(self):
+        with pytest.raises(ValueError, match="not affine"):
+            fit_affine(lambda t: t * t, "sq")
+
+
+# ---------------------------------------------------------------------------
+# Would-have-caught: the three shipped PRNG aliasing bugs
+# ---------------------------------------------------------------------------
+
+class TestHistoricalPRNGBugs:
+    """Each scheme below SHIPPED in an earlier PR and was fixed after the
+    fact. The analyzer must flag every one with a valid witness — and pass
+    the current schemes."""
+
+    def test_byzantine_legacy_scheme_caught_with_witness(self):
+        # pre-PR-3: signal t, gossip 2t+1, fusion 2t+2
+        findings = check_streams(LEGACY_BUGGY_STREAMS["byzantine"], 1 << 20)
+        msgs = [f.message for f in findings]
+        assert len(findings) == 2
+        assert any("signal@t=1 == gossip@t=0 (both fold 1)" in m
+                   for m in msgs), msgs
+        assert any("signal@t=2 == fusion@t=0 (both fold 2)" in m
+                   for m in msgs), msgs
+
+    def test_social_legacy_scheme_caught_at_origin(self):
+        # pre-PR-4: link and signal both folded plain t
+        findings = check_streams(LEGACY_BUGGY_STREAMS["social"], 1 << 20)
+        assert len(findings) == 1
+        assert "link@t=0 == signal@t=0 (both fold 0)" in findings[0].message
+
+    def test_hps_legacy_collides_with_social_link(self):
+        # pre-PR-5: hps folded plain t; social's link stream is 2t+0, so a
+        # shared experiment seed aliased the two schedules at every even t
+        _ensure_engines_imported()
+        social_c = contracts.get("social")
+        social_maps = [fit_affine(s.fold, f"social.{s.name}")
+                       for s in social_c.streams]
+        legacy_hps = LEGACY_BUGGY_STREAMS["hps"][0]
+        disjoint, wit = affine_disjoint(legacy_hps, social_maps[0], 1 << 20)
+        assert not disjoint and wit == (0, 0, 0)
+
+    def test_current_schemes_all_disjoint(self):
+        _ensure_engines_imported()
+        for c in contracts.all_contracts():
+            maps = [fit_affine(s.fold, s.name) for s in c.streams]
+            assert check_streams(maps, c.horizon, where=c.name) == []
+        # cross-engine: the declared shared-seed pairs
+        hps_c = contracts.get("hps")
+        hps_map = fit_affine(hps_c.streams[0].fold, "hps.link")
+        for other in hps_c.shares_seed_with:
+            for s in contracts.get(other).streams:
+                disjoint, _ = affine_disjoint(
+                    hps_map, fit_affine(s.fold, s.name), hps_c.horizon)
+                assert disjoint, (other, s.name)
+
+    def test_hps_shared_seed_declarations_present(self):
+        """The PR-5 bug class is only covered if hps actually DECLARES the
+        engines it may share a seed with."""
+        _ensure_engines_imported()
+        assert set(contracts.get("hps").shares_seed_with) == \
+            {"social", "byzantine"}
+
+
+# ---------------------------------------------------------------------------
+# Dense-intermediate linter + subnormal constants
+# ---------------------------------------------------------------------------
+
+class TestDenseLinter:
+    def test_synthetic_dense_injection_caught(self):
+        N, d = 11, 2
+
+        def bad(w):
+            return (jnp.ones((N, N), w.dtype) / N) @ w
+
+        closed = jax.make_jaxpr(bad)(jnp.zeros((N, d), jnp.float32))
+        found = dense.find_forbidden(
+            closed, {"N": N, "d": d}, (("N", "N"),), where="synthetic")
+        assert found and all("('N', 'N')" in f.message for f in found)
+
+    def test_real_sparse_engine_clean(self):
+        from repro.core.graphs import edge_list, random_strongly_connected
+        from repro.core.pushsum import run_pushsum_sparse
+
+        rng = np.random.default_rng(0)
+        el = edge_list(random_strongly_connected(11, 0.3, rng))
+        w = rng.normal(size=(11, 2)).astype(np.float32)
+        closed = walk.trace(
+            lambda w_, k_: run_pushsum_sparse(
+                w_, el.src, el.dst, T=7, drop_prob=0.1, B=2, key=k_,
+                backend="xla"),
+            w, jax.random.PRNGKey(0))
+        assert dense.assert_nonempty(closed) == []
+        assert dense.find_forbidden(
+            closed, {"N": 11, "d": 2, "T": 7, "E": int(el.E)},
+            (("N", "N"),)) == []
+
+    def test_empty_program_guard(self):
+        closed = jax.make_jaxpr(lambda x: x)(jnp.ones(3))
+        found = dense.assert_nonempty(closed, where="identity")
+        assert found and "no values" in found[0].message
+
+    def test_subnormal_literal_caught(self):
+        # the PR-4 belief floor: 1e-38 < fp32 tiny -> FTZ reads 0 -> log(0)
+        def bad(mu):
+            return jnp.log(jnp.maximum(mu, 1e-38))
+
+        closed = jax.make_jaxpr(bad)(jnp.ones((4, 3), jnp.float32))
+        found = dense.find_subnormal_consts(closed, where="belief-floor")
+        assert found and "flush-to-zero" in found[0].message
+
+    def test_normal_floor_clean(self):
+        from repro.core.social import _MU_FLOOR
+
+        def good(mu):
+            return jnp.log(jnp.maximum(mu, _MU_FLOOR))
+
+        closed = jax.make_jaxpr(good)(jnp.ones((4, 3), jnp.float32))
+        assert dense.find_subnormal_consts(closed) == []
+
+    def test_real_social_engine_free_of_subnormals(self):
+        from repro.core.graphs import make_hierarchy
+        from repro.core.hps import HPSConfig
+        from repro.core.signals import make_confused_model
+        from repro.core.social import make_social_runtime, run_social_runtime
+
+        topo = make_hierarchy([6, 6, 6], topology="complete", seed=2)
+        model = make_confused_model(N=18, m=3, truth=1, confusion=0.5,
+                                    seed=0)
+        rt = make_social_runtime(
+            HPSConfig(topo=topo, gamma_period=4, B=2, drop_prob=0.3))
+        closed = walk.trace(
+            lambda rt_: run_social_runtime(model, rt_, M=3, T=9,
+                                           backend="xla", store="final"),
+            rt)
+        assert dense.find_subnormal_consts(closed) == []
+
+
+# ---------------------------------------------------------------------------
+# Retrace sentinel
+# ---------------------------------------------------------------------------
+
+class TestRetraceSentinel:
+    def test_repeat_sweep_hits_caches(self):
+        _ensure_engines_imported()
+        from repro.core.graphs import make_hierarchy
+        from repro.core.hps import HPSConfig
+        from repro.core.sweeps import run_hps_sweep
+
+        topo = make_hierarchy([5, 5, 5], topology="complete", seed=0)
+        cfg = HPSConfig(topo=topo, gamma_period=2, B=2, drop_prob=0.0)
+        w = np.random.default_rng(0).normal(size=(15, 2)).astype(np.float32)
+        found = retrace.check_idempotent(
+            lambda: run_hps_sweep(w, cfg, T=4, drop_probs=[0.0, 0.3],
+                                  seeds=[0], backend="xla", store="gap"),
+            where="run_hps_sweep")
+        assert found == [], [str(f) for f in found]
+
+    def test_unstable_cache_key_caught(self):
+        grower = {}
+        calls = [0]
+
+        def thunk():
+            calls[0] += 1
+            grower[calls[0]] = object()   # a key that never repeats
+
+        retrace.register_cache("test.unstable", grower)
+        try:
+            found = retrace.check_idempotent(thunk, where="unstable")
+            assert len(found) == 1
+            assert "test.unstable" in found[0].message
+            assert "grew by 1" in found[0].message
+        finally:
+            del retrace.CACHE_REGISTRY["test.unstable"]
+
+    def test_watch_reports_deltas(self):
+        c = {}
+        retrace.register_cache("test.watch", c)
+        try:
+            with retrace.CacheWatch(strict=True, where="w") as watch:
+                c["k"] = 1
+            assert watch.deltas == {"test.watch": 1}
+            assert len(watch.findings()) == 1
+            with retrace.CacheWatch(allowed={"test.watch": 1},
+                                    strict=True) as watch:
+                c["k2"] = 2
+            assert watch.findings() == []
+        finally:
+            del retrace.CACHE_REGISTRY["test.watch"]
+
+
+# ---------------------------------------------------------------------------
+# Static memory budgeter
+# ---------------------------------------------------------------------------
+
+class TestMemoryBudget:
+    def test_committed_bench_rows_fit_budget(self):
+        found = memory.validate_bench(REPO_ROOT / "results")
+        assert found == [], [str(f) for f in found]
+
+    def test_missing_artifacts_is_loud(self, tmp_path):
+        found = memory.validate_bench(tmp_path)
+        assert found and "no BENCH rows" in found[0].message
+
+    def test_dense_reference_infeasible_at_benchmark_scale(self):
+        # the N=4096 dense-oracle row the benchmarks stop at: >0.5 GB per
+        # round, vs a few hundred KB for the sparse core at the same scale
+        assert memory.byz_dense_bytes(4096, 3) > 0.5e9
+        assert memory.byz_sparse_step_bytes(4096, 8, 3) < 5e6
+
+    def test_sparse_models_scale_linearly_in_E(self):
+        one = memory.pushsum_step_bytes(1024, 3102)
+        two = memory.pushsum_step_bytes(1024, 6204)
+        # doubling E grows traffic but less than 2x: the node-state term
+        # (sigma, weights) is E-independent
+        assert one < two < 2 * one
+
+    def test_step_floor_wired_through_roofline(self):
+        floor = memory.step_floor(819e9)   # exactly one second of HBM bw
+        assert floor["dominant"] == "memory"
+        assert floor["bound_step_time_s"] == pytest.approx(1.0)
+
+    def test_impossible_edge_count_flagged(self, tmp_path):
+        (tmp_path / "BENCH_x.json").write_text(json.dumps({
+            "pushsum_sparse_N8": {"us_per_call": 1.0, "derived": "E=999"},
+        }))
+        found = memory.validate_bench(tmp_path)
+        assert found and "impossible" in found[0].message
+
+
+# ---------------------------------------------------------------------------
+# benchmarks/run.py --check: the vacuous-pass fix
+# ---------------------------------------------------------------------------
+
+def _load_bench_run():
+    # benchmarks/ is a package with relative imports: import it as one
+    if str(REPO_ROOT) not in sys.path:
+        sys.path.insert(0, str(REPO_ROOT))
+    import benchmarks.run
+    return benchmarks.run
+
+
+class TestBenchCheckVacuousPass:
+    def test_disjoint_name_sets_fail_loudly(self, capsys):
+        run = _load_bench_run()
+        bad = run._check_regressions(
+            "base.json",
+            {"old_name": {"us_per_call": 1.0}},
+            {"new_name": (1.0, "")})
+        assert bad == 1
+        assert "NONE match" in capsys.readouterr().out
+
+    def test_overlapping_names_still_gate(self, capsys):
+        run = _load_bench_run()
+        assert run._check_regressions(
+            "base.json", {"a": {"us_per_call": 1.0}}, {"a": (1.01, "")}) == 0
+        assert run._check_regressions(
+            "base.json", {"a": {"us_per_call": 1.0}}, {"a": (99.0, "")}) == 1
+
+    def test_interpret_rows_skip_without_tripping_guard(self, capsys):
+        # overlap exists but every overlapping row is interpret-mode: the
+        # gate must PASS with 0 checked rows (the CPU CI lane), not fail
+        run = _load_bench_run()
+        assert run._check_regressions(
+            "base.json", {"a": {"us_per_call": 1.0}},
+            {"a": (99.0, "mode=interpret")}) == 0
+
+
+# ---------------------------------------------------------------------------
+# CLI end-to-end
+# ---------------------------------------------------------------------------
+
+def _run_cli(*args, cwd=REPO_ROOT):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.statics", *args],
+        capture_output=True, text=True, cwd=cwd,
+        env={"PYTHONPATH": str(REPO_ROOT / "src"), "JAX_PLATFORMS": "cpu",
+             "PATH": "/usr/bin:/bin:/usr/local/bin", "HOME": "/tmp"},
+    )
+
+
+class TestCLI:
+    def test_lint_passes_and_caches(self, tmp_path):
+        cache = tmp_path / "cache"
+        first = _run_cli("lint", "--skip-exec", "--cache-dir", str(cache))
+        assert first.returncode == 0, first.stderr
+        assert "PASS" in first.stdout
+        verdict = json.loads((cache / "lint-verdict.json").read_text())
+        assert verdict["ok"] is True
+        second = _run_cli("lint", "--skip-exec", "--cache-dir", str(cache))
+        assert second.returncode == 0
+        assert "cached PASS" in second.stdout
+
+    def test_lint_catches_legacy_byzantine_scheme(self):
+        r = _run_cli("lint", "--skip-exec", "--no-cache",
+                     "--inject-legacy-streams", "byzantine")
+        assert r.returncode == 1
+        assert "signal@t=1 == gossip@t=0 (both fold 1)" in r.stderr
+
+    def test_lint_catches_legacy_social_scheme(self):
+        r = _run_cli("lint", "--skip-exec", "--no-cache",
+                     "--inject-legacy-streams", "social")
+        assert r.returncode == 1
+        assert "link@t=0 == signal@t=0 (both fold 0)" in r.stderr
+
+    def test_lint_catches_legacy_hps_scheme_cross_engine(self):
+        r = _run_cli("lint", "--skip-exec", "--no-cache",
+                     "--inject-legacy-streams", "hps")
+        assert r.returncode == 1
+        assert "hps x social" in r.stderr
+
+    def test_lint_catches_dense_injection(self):
+        r = _run_cli("lint", "--skip-exec", "--no-cache", "--inject-dense")
+        assert r.returncode == 1
+        assert "dense-intermediate" in r.stderr
+        assert "('N', 'N')" in r.stderr
+
+    def test_budget_runs(self):
+        r = _run_cli("budget")
+        assert r.returncode == 0, r.stderr
+        assert "byz-DENSE" in r.stdout
+
+    def test_list_shows_contracts_and_caches(self):
+        r = _run_cli("list")
+        assert r.returncode == 0, r.stderr
+        for name in ("pushsum", "social", "hps", "byzantine"):
+            assert name in r.stdout
+        assert "byz.compiled" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# Contracts registry
+# ---------------------------------------------------------------------------
+
+class TestContracts:
+    def test_all_engines_registered(self):
+        _ensure_engines_imported()
+        assert {"pushsum", "social", "hps", "byzantine"} <= \
+            set(contracts.REGISTRY)
+
+    def test_forbidden_for_merges_star_and_store(self):
+        c = contracts.EngineContract(
+            name="x",
+            forbidden={"*": (("N", "N"),), "final": (("T", "*"),)})
+        assert c.forbidden_for(None) == (("N", "N"),)
+        assert set(c.forbidden_for("final")) == {("N", "N"), ("T", "*")}
+
+    def test_decorator_is_transparent_and_attaches(self):
+        @contracts.contract(name="_tmp_test_contract",
+                            streams=(("s", lambda t: t),))
+        def fn(x):
+            return x + 1
+
+        try:
+            assert fn(1) == 2
+            assert fn.__statics_contract__.name == "_tmp_test_contract"
+            assert contracts.get("_tmp_test_contract").n_prng_sites == 1
+        finally:
+            del contracts.REGISTRY["_tmp_test_contract"]
+
+    def test_engine_caches_are_registered(self):
+        _ensure_engines_imported()
+        registered = set(retrace.CACHE_REGISTRY)
+        for c in contracts.all_contracts():
+            missing = set(c.caches) - registered
+            assert not missing, (c.name, missing)
