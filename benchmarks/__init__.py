@@ -10,13 +10,24 @@ def merge_bench_json(path: str, rows) -> None:
     invocation are preserved, and NaN rows (a failed sub-benchmark's
     degraded placeholder) are dropped rather than serialized — bare ``NaN``
     is not RFC-8259 JSON and breaks strict parsers of the perf-trajectory
-    artifact. The single shared writer for run.py --json-dir and the
-    standalone module __main__ blocks."""
+    artifact.
+
+    Exception: rows whose ``derived`` starts with ``skipped=`` are an
+    *explicit* skip (e.g. a sharded benchmark on a single-device host) and
+    are kept with ``us_per_call: null`` — the artifact then records WHY the
+    row is unmeasured instead of silently losing it, and downstream
+    consumers (``bench_table``, ``run.py --check``,
+    ``repro.statics.memory.validate_bench``) all understand the marker.
+    The single shared writer for run.py --json-dir and the standalone
+    module __main__ blocks."""
     merged = {}
     if os.path.exists(path):
         with open(path) as f:
             merged = json.load(f)
-    merged.update({name: {"us_per_call": us, "derived": derived}
-                   for name, us, derived in rows if us == us})
+    merged.update({
+        name: {"us_per_call": us if us == us else None, "derived": derived}
+        for name, us, derived in rows
+        if us == us or str(derived).startswith("skipped=")
+    })
     with open(path, "w") as f:
         json.dump(merged, f, indent=1, allow_nan=False)

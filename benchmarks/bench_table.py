@@ -33,7 +33,11 @@ def tables(only=None):
         for name in sorted(rows):
             r = rows[name]
             notes = r["derived"].replace("|", "\\|")
-            lines.append(f"| `{name}` | {r['us_per_call']:.1f} | {notes} |")
+            us = r["us_per_call"]
+            # explicitly-skipped rows (derived starts "skipped=") carry
+            # us_per_call null — render an em dash, not a crash
+            cell = "—" if us is None else f"{us:.1f}"
+            lines.append(f"| `{name}` | {cell} | {notes} |")
         out.append("\n".join(lines))
     return out
 

@@ -13,6 +13,11 @@ Claims pinned:
    program, vmapped on a single device AND shard_map-sharded over a
    multi-device ``data`` mesh axis (`repro.core.sweeps.run_pushsum_sweep`),
    with identical results;
+ * the edge-partitioned 2-D (data x graph) mesh mode
+   (``graph_shards=``) runs a SINGLE N >= 1e6 scenario by cutting the
+   edge list itself into per-device dst-contiguous shards and psum-ing
+   boundary partials over the ``graph`` axis — per-step walls recorded,
+   bit-identical to the single-device vmap emulation of the same cut;
  * consensus error decays in every scenario (Theorem 1 across the grid).
 
 Emits name,us_per_call,derived rows via :func:`rows`; ``rows(smoke=True)``
@@ -246,12 +251,151 @@ def _bench_sharded_sweep(n=128, d=3, T=100, devices=4, seed=0):
     }
 
 
+def _bench_edge_sharded(n=1 << 20, d=1, T=4, devices=8, extra=1.0, seed=0):
+    """ONE million-agent scenario on the 2-D (data x graph) mesh.
+
+    The graph (E ~ 2e6 edges) is cut into ``devices`` dst-contiguous edge
+    shards (`graphs.partition_edge_list`); each fake CPU device runs the
+    unchanged per-shard step and boundary-node receiver partials are
+    psum'd over the mesh ``graph`` axis. Same subprocess pattern as
+    :func:`_bench_sharded_sweep` so the forced device count doesn't leak.
+    The subprocess also pins the bit-identity contract at small N: the
+    shard_map mesh run must match the single-device
+    ``vmap(axis_name=)`` emulation of the same cut EXACTLY (same psum
+    order on every device — see sweeps.run_pushsum_sweep's docstring).
+    Fake devices share one CPU, so the wall pins semantics + per-device
+    memory shape, not a speedup.
+    """
+    prog = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
+        import json, time
+        import numpy as np
+        import jax
+        from repro.core.graphs import random_strongly_connected_edge_list
+        from repro.core.sweeps import run_pushsum_sweep
+        from repro.distributed.sharding import sweep_mesh
+
+        mesh = sweep_mesh(1, {devices})      # (data=1, graph={devices})
+
+        # small-N identity: 2-D mesh shard_map vs single-device emulation
+        rng = np.random.default_rng({seed})
+        el_s = random_strongly_connected_edge_list(256, 2.0, rng)
+        w_s = rng.normal(size=(256, {d})).astype(np.float32)
+        kw = dict(drop_probs=[0.0, 0.3], seeds=[0, 1], B=4,
+                  graph_shards={devices})
+        r_emu = run_pushsum_sweep(w_s, el_s, 30, **kw)
+        r_mesh = run_pushsum_sweep(w_s, el_s, 30, mesh=mesh, **kw)
+        ident = float(np.abs(
+            np.asarray(r_mesh.err) - np.asarray(r_emu.err)).max())
+
+        # the N >= 1e6 scenario
+        rng = np.random.default_rng({seed})
+        el = random_strongly_connected_edge_list({n}, {extra}, rng)
+        w = rng.normal(size=({n}, {d})).astype(np.float32)
+
+        def once():
+            t0 = time.perf_counter()
+            r = run_pushsum_sweep(w, el, {T}, drop_probs=[0.2], seeds=[0],
+                                  B=4, mesh=mesh, graph_shards={devices})
+            r.err.block_until_ready()
+            return r, time.perf_counter() - t0
+
+        r, compile_s = once()                # trace + compile + run
+        r, wall = once()                     # steady state
+        err = np.asarray(r.err)
+        gap = float(np.abs(np.asarray(r.mass_gap)).max())
+        print(json.dumps({{
+            "E": int(el.E), "wall_s": wall, "compile_s": compile_s,
+            "err_final": float(err[:, -1].max()),
+            "mass_gap": gap,
+            "mesh_vs_emul_err": ident,
+        }}))
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    try:
+        out = subprocess.run([sys.executable, "-c", prog],
+                             capture_output=True, text=True, timeout=900,
+                             env=env, cwd=REPO)
+        failure = out.stderr.strip()[-160:] if out.returncode else None
+    except subprocess.TimeoutExpired:
+        failure = "timeout_900s"
+    name = f"pushsum_edge_sharded_N{n}"
+    if failure is not None:
+        return {
+            "name": name,
+            "us_per_call": float("nan"),
+            "derived": "subprocess_failed;" + failure,
+        }
+    res = json.loads(
+        [l for l in out.stdout.splitlines() if l.startswith("{")][-1]
+    )
+    return {
+        "name": name,
+        "us_per_call": res["wall_s"] / T * 1e6,   # per-step cost
+        "derived": f"E={res['E']};shards={devices};d={d};T={T};"
+                   f"devices={devices};mesh=1x{devices};"
+                   f"mesh_vs_emul_err={res['mesh_vs_emul_err']:.1e};"
+                   f"err_final={res['err_final']:.2e};"
+                   f"mass_gap={res['mass_gap']:.1e};"
+                   f"compile_s={res['compile_s']:.1f}",
+    }
+
+
+def _bench_edge_sharded_smoke(n=256, d=2, T=50, seed=0):
+    """In-process 2-shard smoke of the edge-partitioned mode.
+
+    Only meaningful when the HOST exposes >= 2 devices (the multidevice CI
+    lane forces 8 fake CPU devices); a single-device host emits an explicit
+    ``skipped=`` row — kept in the JSON artifact as ``us_per_call: null``
+    and announced by run.py --check as ``# SKIP`` — instead of silently
+    measuring nothing or crashing on mesh construction.
+    """
+    n_dev = jax.device_count()
+    name = f"pushsum_edge_smoke_N{n}"
+    if n_dev < 2:
+        return {
+            "name": name,
+            "us_per_call": float("nan"),
+            "derived": f"skipped=single_device_host;devices={n_dev}",
+        }
+    from repro.distributed.sharding import sweep_mesh
+
+    S = 2
+    rng = np.random.default_rng(seed)
+    el = random_strongly_connected_edge_list(n, 2.0, rng)
+    w = rng.normal(size=(n, d)).astype(np.float32)
+    mesh = sweep_mesh(1, S, devices=jax.devices()[:S])
+    kw = dict(drop_probs=[0.0, 0.4], seeds=[0, 1], B=4, graph_shards=S)
+    r_emu = run_pushsum_sweep(w, el, T, **kw)
+    t0 = time.perf_counter()
+    r_mesh = run_pushsum_sweep(w, el, T, mesh=mesh, **kw)
+    r_mesh.err.block_until_ready()
+    compile_wall = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    r_mesh = run_pushsum_sweep(w, el, T, mesh=mesh, **kw)
+    r_mesh.err.block_until_ready()
+    step_us = (time.perf_counter() - t0) / T * 1e6
+    ident = float(np.abs(
+        np.asarray(r_mesh.err) - np.asarray(r_emu.err)).max())
+    return {
+        "name": name,
+        "us_per_call": step_us,
+        "derived": f"E={el.E};shards={S};d={d};T={T};devices={n_dev};"
+                   f"mesh_vs_emul_err={ident:.1e};"
+                   f"err_final={np.asarray(r_mesh.err)[:, -1].max():.2e};"
+                   f"compile_s={compile_wall:.1f}",
+    }
+
+
 def rows(smoke: bool = False):
     if smoke:
         recs = [
             _bench_large_sparse(),
             _bench_step_backend(1024, "xla"),
             _bench_step_backend(1024, "pallas"),
+            _bench_edge_sharded_smoke(),
         ]
     else:
         recs = [_bench_large_sparse()]
@@ -260,6 +404,7 @@ def rows(smoke: bool = False):
             recs.append(_bench_step_backend(n, "pallas"))
         recs.append(_bench_sweep())
         recs.append(_bench_sharded_sweep())
+        recs.append(_bench_edge_sharded())
     return [(r["name"], r["us_per_call"], r["derived"]) for r in recs]
 
 

@@ -59,7 +59,9 @@ def _check_regressions(baseline_path: str, baseline: dict,
     """Compare measured us_per_call against the recorded baseline; return
     the number of >factor regressions (default the 25% gate). Skipped:
     names absent from either side (new benchmarks are not regressions),
-    NaN rows, and rows whose derived tag says ``mode=interpret`` —
+    NaN rows, explicitly-skipped rows (``derived`` starting ``skipped=``,
+    announced with a ``# SKIP`` line so the gate output shows what was not
+    measured and why), and rows whose derived tag says ``mode=interpret`` —
     interpreter timings measure the Pallas interpreter, not the kernel,
     and jitter far beyond the gate budget.
 
@@ -77,6 +79,11 @@ def _check_regressions(baseline_path: str, baseline: dict,
         return 1
     bad = checked = 0
     for name, (us, derived) in measured.items():
+        if derived.startswith("skipped="):
+            # explicit skip (e.g. sharded bench on a single-device host):
+            # say so rather than silently dropping the row from the gate
+            print(f"# SKIP {name}: {derived}")
+            continue
         old = baseline.get(name, {}).get("us_per_call")
         if old is None or not (old == old) or not (us == us):  # skip NaN
             continue

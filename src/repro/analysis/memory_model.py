@@ -22,7 +22,7 @@ from __future__ import annotations
 
 from repro.configs.base import ArchConfig, InputShape
 
-__all__ = ["train_memory_gb", "serve_memory_gb"]
+__all__ = ["train_memory_gb", "serve_memory_gb", "pushsum_device_memory_gb"]
 
 
 def _shards(mesh_shape: dict, fsdp: bool) -> tuple[int, int]:
@@ -62,6 +62,49 @@ def train_memory_gb(
         "residuals_gb": round(resid_b / 1e9, 3),
         "logits_gb": round(logits_b / 1e9, 3),
         "total_gb": round(total / 1e9, 3),
+        "fits_16gb": bool(total < 16e9),
+    }
+
+
+def pushsum_device_memory_gb(
+    N: int, E: int, d: int = 1, n_shards: int = 1,
+    scenarios_per_device: int = 1,
+) -> dict:
+    """Per-device residency of the (edge-partitioned) sparse push-sum.
+
+    Terms, all f32, per scenario resident on this device
+    (:class:`repro.core.pushsum.SparsePushSumState` plus the per-round
+    transients of the sharded step):
+
+        node state      N (2d + 2) * 4     z/sigma (N, d) + m/sigma_m (N,)
+                                           — REPLICATED across graph shards
+        edge state      ceil(E / S) (d+1) * 4    rho + rho_m, shard-local
+        mask draw       S * ceil(E / S)          full (E_pad,) Bernoulli
+                                           bits (bit-identity contract of
+                                           shard_edge_mask) as bool
+        halo operand    N (d + 1) * 4      the psum'd recv/recv_m pair
+        transient slack 25% of the above
+
+    Multiply by ``scenarios_per_device`` for the 2-D mesh (a data-axis row
+    holds a scenario batch). This is the analytic prediction
+    ``repro.statics.memory.validate_bench`` checks the measured sharded
+    BENCH rows against; the unpartitioned mode is ``n_shards=1`` (where
+    the halo term drops — no collective exists).
+    """
+    S = max(int(n_shards), 1)
+    e_shard = -(-E // S)
+    node_b = N * (2 * d + 2) * 4
+    edge_b = e_shard * (d + 1) * 4
+    mask_b = S * e_shard
+    halo_b = N * (d + 1) * 4 if S > 1 else 0.0
+    per_scenario = node_b + edge_b + mask_b + halo_b
+    total = 1.25 * per_scenario * max(int(scenarios_per_device), 1)
+    return {
+        "node_state_gb": round(node_b / 1e9, 6),
+        "edge_state_gb": round(edge_b / 1e9, 6),
+        "mask_draw_gb": round(mask_b / 1e9, 6),
+        "halo_gb": round(halo_b / 1e9, 6),
+        "total_gb": round(total / 1e9, 6),
         "fits_16gb": bool(total < 16e9),
     }
 

@@ -31,7 +31,10 @@ import dataclasses
 import re
 from typing import Any
 
-__all__ = ["HW", "parse_collectives", "roofline_terms", "model_flops"]
+__all__ = [
+    "HW", "parse_collectives", "roofline_terms", "model_flops",
+    "pushsum_halo_wire_bytes",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -148,6 +151,23 @@ def model_flops(arch, shape) -> float:
     if shape.kind == "prefill":
         return 2.0 * n * shape.global_batch * shape.seq_len
     return 2.0 * n * shape.global_batch
+
+
+def pushsum_halo_wire_bytes(N: int, d: int, n_shards: int) -> float:
+    """Per-device wire bytes of one edge-partitioned push-sum round.
+
+    The halo combine of :func:`repro.core.pushsum.sparse_pushsum_step`
+    (``graph_axis=``) is two psums over the graph axis — ``recv`` (N, d)
+    f32 and ``recv_m`` (N,) f32, i.e. N (d+1) * 4 operand bytes — costed
+    with the same ring all-reduce factor ``2 (n-1)/n`` as
+    :func:`parse_collectives`. The per-round out-degree psum is hoisted out
+    of the scan, so it does not appear in the steady-state per-step budget.
+    ``n_shards <= 1`` is the unpartitioned mode: no collective, 0 bytes.
+    """
+    if n_shards <= 1:
+        return 0.0
+    operand = N * (d + 1) * 4
+    return 2.0 * (n_shards - 1) / n_shards * operand
 
 
 def roofline_terms(

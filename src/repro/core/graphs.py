@@ -41,6 +41,8 @@ __all__ = [
     "stack_edge_lists",
     "edge_masks",
     "sort_by_dst",
+    "EdgeShards",
+    "partition_edge_list",
     "block_complete_edge_list",
     "hier_edge_list",
     "random_strongly_connected_edge_list",
@@ -474,7 +476,7 @@ def stack_edge_lists(adjs: Sequence[np.ndarray]) -> EdgeList:
     return EdgeList(src=src, dst=dst, n=n, valid=valid)
 
 
-def sort_by_dst(el: EdgeList) -> tuple[EdgeList, np.ndarray, np.ndarray]:
+def sort_by_dst(el: EdgeList, return_offsets: bool = False):
     """Stable-sort the edge index by receiver -> (sorted, perm, inv).
 
     The fused Pallas edge-scatter kernel (:mod:`repro.kernels.pushsum_edge`)
@@ -489,6 +491,18 @@ def sort_by_dst(el: EdgeList) -> tuple[EdgeList, np.ndarray, np.ndarray]:
     * ``inv``   (E,) int32 — original edge index -> sorted position
       (``inv[perm[i]] == i``), so per-edge state computed in the sorted
       layout maps back via ``rho_sorted[..., inv, :]``.
+
+    With ``return_offsets=True`` a fourth value is returned: CSR-style
+    per-destination segment offsets, (..., N+1) int32 with
+    ``offsets[..., v] : offsets[..., v + 1]`` the contiguous run of sorted
+    edges whose receiver is ``v`` (``offsets[..., 0] == 0``,
+    ``offsets[..., N] == E``). The edge partitioner
+    (:func:`partition_edge_list`) cuts the sorted index against these runs,
+    and the downstream lowerings pass ``indices_are_sorted=True`` to the
+    per-receiver ``segment_sum`` so pre-sorted inputs skip one argsort.
+    Offsets on batched edge lists count padding edges inside the ``dst == 0``
+    run (padding keeps ``dst = 0``); the core's ``mask & valid`` guard is
+    what silences them, exactly as for ``perm``/``inv``.
 
     Batched edge lists sort every topology draw independently (perm/inv are
     then (G, E)); padding edges keep ``valid=False`` and simply sort in with
@@ -512,7 +526,140 @@ def sort_by_dst(el: EdgeList) -> tuple[EdgeList, np.ndarray, np.ndarray]:
             n=el.n,
             valid=np.take_along_axis(el.valid, perm, axis=1),
         )
-    return sorted_el, perm, inv
+    if not return_offsets:
+        return sorted_el, perm, inv
+    offsets = _dst_offsets(np.asarray(sorted_el.dst), el.n)
+    return sorted_el, perm, inv, offsets
+
+
+def _dst_offsets(sorted_dst: np.ndarray, n: int) -> np.ndarray:
+    """(..., N+1) int32 CSR offsets of a dst-sorted edge index."""
+    grid = np.arange(n + 1)
+    if sorted_dst.ndim == 1:
+        return np.searchsorted(sorted_dst, grid, side="left").astype(np.int32)
+    return np.stack([
+        np.searchsorted(row, grid, side="left") for row in sorted_dst
+    ]).astype(np.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeShards:
+    """A dst-sorted edge index cut into contiguous capacity-padded shards.
+
+    The device-parallel layout of the edge-partitioned push-sum: shard ``k``
+    owns the sorted edge slots ``[k * e_shard, (k + 1) * e_shard)`` — a
+    contiguous run of destinations, so each receiver's in-edges live on at
+    most two *adjacent* shards. Per-edge state (``rho``/``rho_m``) is
+    (E_shard, ...) per device; node state stays replicated and per-step
+    receiver partials are combined with a ``psum`` over the mesh ``graph``
+    axis (:func:`repro.core.pushsum.sparse_pushsum_step` with
+    ``graph_axis=``).
+
+    Shard tails are padded to the common capacity ``e_shard`` with inert
+    edges (``valid=False``) that keep ``dst`` equal to the shard's last real
+    receiver, so every shard stays dst-sorted and the sorted-segment fast
+    path (``indices_are_sorted=True``) remains legal.
+
+    ``boundary`` is the halo index: ``boundary[..., v]`` is True iff
+    receiver ``v``'s in-edge run is split across a shard cut — the only
+    nodes whose per-step ``recv`` is a genuine multi-shard sum (interior
+    nodes add exact ``+0.0`` partials from foreign shards), i.e. the only
+    nodes where the combined result can differ from the single-device
+    reference by floating-point reduce order.
+
+    Fields carry a leading graph axis (G, S, E_shard) when built from a
+    batched :class:`EdgeList`, else (S, E_shard); ``boundary`` is
+    correspondingly (G, N) or (N,).
+    """
+
+    src: np.ndarray       # (..., S, E_shard) int32
+    dst: np.ndarray       # (..., S, E_shard) int32
+    valid: np.ndarray     # (..., S, E_shard) bool — False on padding
+    n: int                # node count
+    e_total: int          # edge count of the (padded) source EdgeList
+    boundary: np.ndarray  # (..., N) bool halo index — receivers split by cuts
+
+    @property
+    def n_shards(self) -> int:
+        return int(self.src.shape[-2])
+
+    @property
+    def e_shard(self) -> int:
+        """Per-shard edge capacity."""
+        return int(self.src.shape[-1])
+
+    @property
+    def e_pad(self) -> int:
+        """Total padded edge count ``n_shards * e_shard`` — the edge count
+        of the bit-exact single-device reference program."""
+        return self.n_shards * self.e_shard
+
+    @property
+    def is_batched(self) -> bool:
+        return self.src.ndim == 3
+
+    def padded_edge_list(self) -> EdgeList:
+        """Concatenate the shards back into one (..., E_pad) EdgeList.
+
+        This — not the original pre-partition edge list — is the
+        single-device program the sharded run is bit-identical to: the
+        per-round (E_pad,) Bernoulli mask each device draws (and windows
+        into) indexes the *padded* slots, and jax's counter-based bits have
+        no prefix property, so the original unpadded list only matches when
+        ``e_pad == E`` or ``drop_prob == 0``.
+        """
+        flat = lambda a: a.reshape(*a.shape[:-2], -1)
+        return EdgeList(src=flat(self.src), dst=flat(self.dst), n=self.n,
+                        valid=flat(self.valid))
+
+
+def partition_edge_list(el: EdgeList, n_shards: int) -> EdgeShards:
+    """Cut an edge list into ``n_shards`` dst-contiguous, capacity-padded
+    shards for the edge-partitioned (graph-axis) execution mode.
+
+    The index is (re-)sorted by destination, cut at the balanced positions
+    ``k * ceil(E / n_shards)`` (cuts may fall mid-segment — the receivers
+    split that way are recorded in the ``boundary`` halo index), and each
+    shard's tail is padded with inert dst-sorted edges up to the common
+    capacity. Batched edge lists partition every topology draw
+    independently under one shared capacity, so a whole scenario grid rides
+    a single (G, S, E_shard) layout.
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+
+    def one(src, dst, valid):
+        (s_el, _, _) = sort_by_dst(
+            EdgeList(src=src, dst=dst, n=el.n, valid=valid))[:3]
+        E = s_el.E
+        e_shard = max(-(-E // n_shards), 1)
+        src_s = np.zeros((n_shards, e_shard), np.int32)
+        dst_s = np.zeros((n_shards, e_shard), np.int32)
+        val_s = np.zeros((n_shards, e_shard), bool)
+        bnd = np.zeros(el.n, bool)
+        for k in range(n_shards):
+            lo, hi = k * e_shard, min((k + 1) * e_shard, E)
+            w = max(hi - lo, 0)
+            if w:
+                src_s[k, :w] = s_el.src[lo:hi]
+                dst_s[k, :w] = s_el.dst[lo:hi]
+                val_s[k, :w] = s_el.valid[lo:hi]
+                # tail padding keeps the shard's last real dst so the
+                # shard stays sorted; src 0 / valid False keep it inert
+                dst_s[k, w:] = s_el.dst[hi - 1]
+            # a cut strictly inside a receiver's run marks it boundary
+            if 0 < lo < E and s_el.dst[lo - 1] == s_el.dst[lo]:
+                bnd[s_el.dst[lo]] = True
+        return src_s, dst_s, val_s, bnd
+
+    if el.is_batched:
+        parts = [one(el.src[g], el.dst[g], el.valid[g])
+                 for g in range(el.src.shape[0])]
+        src_s, dst_s, val_s, bnd = (np.stack(x) for x in zip(*parts))
+    else:
+        src_s, dst_s, val_s, bnd = one(el.src, el.dst, el.valid)
+    return EdgeShards(src=src_s, dst=dst_s, valid=val_s, n=el.n,
+                      e_total=el.E, boundary=bnd)
 
 
 def random_strongly_connected_edge_list(

@@ -77,6 +77,7 @@ from .pushsum import (
     init_state,
     pushsum_step,
     ratios,
+    shard_edge_mask,
     sparse_ratios,
     sparse_pushsum_step,
     step_edge_mask,
@@ -363,28 +364,52 @@ def _hps_scan_core(
     store: str,
     backend: str,
     F: int = 0,
+    graph_axis: str | None = None,
+    n_shards: int = 1,
 ) -> tuple[SparsePushSumState, tuple[jnp.ndarray, jnp.ndarray]]:
     """Algorithm 1's scan, parameterized over the per-scenario runtime
     arrays (vmappable for batched grids).
 
     Returns ``(final_state, (ratio, gap))`` with the store-dependent shapes
     of :class:`HPSResult`.
+
+    With ``graph_axis``/``n_shards`` the consensus half runs
+    edge-partitioned: the runtime's edge arrays carry this device's
+    (E_shard,) slice of a :func:`graphs.partition_edge_list` layout, link
+    masks are this shard's window of the full padded draw
+    (:func:`pushsum.shard_edge_mask` — same ``hps_stream_fold`` domain),
+    and out-degrees / receiver partials / the mass bookkeeping are psum'd
+    over the mesh graph axis. Node state — and hence the PS fusion half,
+    which only touches (N, d) — stays replicated, so the fusion step needs
+    no changes at all. Both kwargs are trace statics: thread them through
+    ``static_argnames`` alongside ``backend``.
     """
     N = w.shape[0]
     E = rt.src.shape[0]
     state0 = init_sparse_state(w, E)
     # loop invariants of the fixed edge index / inputs, hoisted out of the
     # scan: out-degree share factors and the consensus target mean(w)
-    share = 1.0 / (_out_degree(rt.src, rt.valid, N, w.dtype) + 1.0)
+    d_out = _out_degree(rt.src, rt.valid, N, w.dtype)
+    if graph_axis is not None:
+        d_out = jax.lax.psum(d_out, graph_axis)
+    share = 1.0 / (d_out + 1.0)
     target = w.mean(axis=0)
 
     def body(state, t):
         # --- consensus (Alg. 1 lines 3-12) ---
-        mask = step_edge_mask(
-            key, t, E, rt.drop_prob, rt.B, fold_t=hps_stream_fold(t)
-        )
+        if graph_axis is not None:
+            mask = shard_edge_mask(
+                key, t, E, rt.drop_prob, rt.B,
+                graph_axis=graph_axis, n_shards=n_shards,
+                fold_t=hps_stream_fold(t),
+            )
+        else:
+            mask = step_edge_mask(
+                key, t, E, rt.drop_prob, rt.B, fold_t=hps_stream_fold(t)
+            )
         st = sparse_pushsum_step(
-            state, mask, rt.src, rt.dst, rt.valid, backend, share=share
+            state, mask, rt.src, rt.dst, rt.valid, backend, share=share,
+            graph_axis=graph_axis,
         )
         # --- PS fusion every Γ (lines 13-21) ---
         z_f, m_f = hps_fusion(st.z, st.m, rt.rep_mask, rt.M, F)
@@ -413,7 +438,8 @@ def _hps_scan_core(
 # Module-level jit so repeated runs with the same shapes/statics hit the
 # compilation cache instead of retracing a fresh closure per call.
 _hps_compiled = functools.partial(
-    jax.jit, static_argnames=("T", "store", "backend", "F")
+    jax.jit,
+    static_argnames=("T", "store", "backend", "F", "graph_axis", "n_shards"),
 )(_hps_scan_core)
 register_statics_cache("hps.jit", _hps_compiled._cache_size)
 

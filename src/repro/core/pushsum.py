@@ -78,6 +78,7 @@ __all__ = [
     "sparse_mass_invariant",
     "run_pushsum_sparse",
     "step_edge_mask",
+    "shard_edge_mask",
 ]
 
 
@@ -224,6 +225,8 @@ def sparse_pushsum_step(
     backend: str = "auto",
     *,
     share: jnp.ndarray | None = None,
+    graph_axis: str | None = None,
+    dst_sorted: bool = False,
 ) -> SparsePushSumState:
     """One fast-robust-push-sum iteration on edge-list state.
 
@@ -241,14 +244,35 @@ def sparse_pushsum_step(
     factors — a loop invariant of the fixed edge index that scan-heavy
     callers (:mod:`repro.core.social`) hoist once instead of re-deriving
     the segment-sum out-degree every iteration. It must equal
-    ``1 / (_out_degree(src, valid, N) + 1)``.
+    ``1 / (_out_degree(src, valid, N) + 1)`` — computed over the *global*
+    edge set when running edge-partitioned (below).
+
+    **Edge-partitioned mode** (``graph_axis=``): inside a
+    ``compat.shard_map`` (or an emulating ``vmap(axis_name=...)``) over a
+    mesh graph axis, ``src``/``dst``/``valid``/``mask`` and the per-edge
+    state carry only this device's (E_shard,) slice of a
+    :func:`repro.core.graphs.partition_edge_list` layout while node state
+    stays replicated. Each shard computes its local receiver partials and
+    the halo combine is one ``lax.psum`` pair over ``graph_axis`` —
+    interior receivers (all in-edges on one shard) get exact ``+0.0``
+    contributions from foreign shards; only boundary receivers (in-edge
+    runs split by a shard cut) see a genuine multi-operand sum, which is
+    where reduce-order fp differences vs. the single-device reference can
+    appear. When ``share`` is not supplied the local out-degree is psum'd
+    the same way before the reciprocal.
+
+    ``dst_sorted=True`` asserts the edge index is dst-sorted (the
+    partitioner's layout, or :func:`graphs.sort_by_dst` output) and lets
+    the XLA lowering's ``segment_sum`` skip its internal sort.
     """
     from repro.kernels.pushsum_edge import edge_scatter, resolve_backend
 
     z, m, sigma, sigma_m, rho, rho_m = state
     n = z.shape[0]
     if share is None:
-        d_out = _out_degree(src, valid, n, z.dtype)   # (N,)
+        d_out = _out_degree(src, valid, n, z.dtype)   # (N,) local
+        if graph_axis is not None:
+            d_out = jax.lax.psum(d_out, graph_axis)   # (N,) global
         share = 1.0 / (d_out + 1.0)
 
     # --- first half: stage cumulative send ---
@@ -262,15 +286,26 @@ def sparse_pushsum_step(
         sigma_cat = jnp.concatenate([sigma_p, sigma_m_p[:, None]], axis=1)
         rho_cat = jnp.concatenate([rho, rho_m[:, None]], axis=1)
         rho_cat_new, recv_cat = edge_scatter(
-            sigma_cat, rho_cat, live, src, dst, backend="pallas"
+            sigma_cat, rho_cat, live, src, dst, backend="pallas",
+            indices_sorted=dst_sorted,
         )
         rho_new, rho_m_new = rho_cat_new[:, :-1], rho_cat_new[:, -1]
         recv, recv_m = recv_cat[:, :-1], recv_cat[:, -1]
     else:
         rho_new = jnp.where(live[:, None], sigma_p[src], rho)
         rho_m_new = jnp.where(live, sigma_m_p[src], rho_m)
-        recv = jax.ops.segment_sum(rho_new - rho, dst, num_segments=n)
-        recv_m = jax.ops.segment_sum(rho_m_new - rho_m, dst, num_segments=n)
+        recv = jax.ops.segment_sum(
+            rho_new - rho, dst, num_segments=n, indices_are_sorted=dst_sorted
+        )
+        recv_m = jax.ops.segment_sum(
+            rho_m_new - rho_m, dst, num_segments=n,
+            indices_are_sorted=dst_sorted,
+        )
+    if graph_axis is not None:
+        # halo combine: interior receivers add exact +0.0 partials, boundary
+        # receivers (see EdgeShards.boundary) sum their split in-edge runs
+        recv = jax.lax.psum(recv, graph_axis)
+        recv_m = jax.lax.psum(recv_m, graph_axis)
 
     # --- integrate ---
     z_p = z * share[:, None] + recv
@@ -294,10 +329,18 @@ def sparse_mass_invariant(
     state: SparsePushSumState,
     src: jnp.ndarray,
     valid: jnp.ndarray,
+    *,
+    graph_axis: str | None = None,
 ) -> jnp.ndarray:
-    """sum_j z_j + sum_{e valid} (sigma[src[e]] - rho[e]) == sum_j w_j, (d,)."""
+    """sum_j z_j + sum_{e valid} (sigma[src[e]] - rho[e]) == sum_j w_j, (d,).
+
+    Under edge partitioning (``graph_axis=``) the per-edge in-flight term is
+    psum'd over the shards while the replicated node sum is counted once.
+    """
     vf = valid.astype(state.z.dtype)
     in_flight = ((state.sigma[src] - state.rho) * vf[:, None]).sum(axis=0)
+    if graph_axis is not None:
+        in_flight = jax.lax.psum(in_flight, graph_axis)
     return state.z.sum(axis=0) + in_flight
 
 
@@ -324,6 +367,37 @@ def step_edge_mask(
     kt = jax.random.fold_in(key, t if fold_t is None else fold_t)
     up = jax.random.uniform(kt, (n_edges,)) >= drop_prob
     return up | ((t % B) == (B - 1))
+
+
+def shard_edge_mask(
+    key: jnp.ndarray,
+    t: jnp.ndarray,
+    e_shard: int,
+    drop_prob,
+    B,
+    *,
+    graph_axis: str,
+    n_shards: int,
+    fold_t=None,
+) -> jnp.ndarray:
+    """This device's (E_shard,) window of the round-t operational mask.
+
+    Bit-identity anchor of the edge-partitioned mode: every shard draws the
+    *full* (n_shards * e_shard,) Bernoulli vector — threefry bits are a
+    function of (key, counter position), so there is no per-slice shortcut
+    that reproduces a window of a longer draw — then dynamically slices its
+    own window at ``axis_index(graph_axis) * e_shard``. The result equals
+    ``step_edge_mask(key, t, e_pad, ...)`` restricted to this shard's slots
+    exactly, which is what makes the sharded run bit-comparable to the
+    single-device reference over ``EdgeShards.padded_edge_list()``. The
+    full draw is O(e_pad) *bytes* per device per round — accounted in
+    :func:`repro.statics.memory.pushsum_sharded_step_bytes` — but carries
+    no (E_pad, d) payload.
+    """
+    full = step_edge_mask(key, t, n_shards * e_shard, drop_prob, B,
+                          fold_t=fold_t)
+    start = jax.lax.axis_index(graph_axis) * e_shard
+    return jax.lax.dynamic_slice(full, (start,), (e_shard,))
 
 
 @statics_contract(

@@ -66,6 +66,7 @@ from .pushsum import (
     SparsePushSumState,
     _out_degree,
     init_sparse_state,
+    shard_edge_mask,
     sparse_pushsum_step,
     step_edge_mask,
 )
@@ -245,12 +246,22 @@ def _social_scan_core(
     T: int,
     store: str,
     backend: str,
+    graph_axis: str | None = None,
+    n_shards: int = 1,
 ) -> tuple[SparsePushSumState, tuple[jnp.ndarray, jnp.ndarray]]:
     """Algorithm 3's scan, parameterized over the per-scenario runtime
     arrays (vmappable for batched grids).
 
     Returns ``(final_state, (beliefs, log_ratio))`` with the store-dependent
     shapes of :class:`SocialLearningResult`.
+
+    ``graph_axis``/``n_shards`` run the consensus half edge-partitioned
+    exactly as in :func:`repro.core.hps._hps_scan_core`: the runtime's edge
+    arrays carry a per-device (E_shard,) shard, the link-mask stream is
+    windowed from the full padded draw on the same fold-in domain, and the
+    out-degree / receiver partials are psum'd over the mesh graph axis.
+    The innovation and fusion halves touch only replicated (N, ...) node
+    state and need no changes. Both kwargs are trace statics.
     """
     from repro.kernels.social_innov import innovation_step
 
@@ -259,7 +270,10 @@ def _social_scan_core(
     # z accumulates per-hypothesis log-likelihood sums; init 0 (Alg. 3 line 1)
     state0 = init_sparse_state(jnp.zeros((N, m), jnp.float32), E)
     # loop invariants of the fixed edge index, hoisted out of the scan
-    share = 1.0 / (_out_degree(rt.src, rt.valid, N, jnp.float32) + 1.0)
+    d_out = _out_degree(rt.src, rt.valid, N, jnp.float32)
+    if graph_axis is not None:
+        d_out = jax.lax.psum(d_out, graph_axis)
+    share = 1.0 / (d_out + 1.0)
 
     # the trajectory store emits every belief through ys, so only the other
     # stores need the final mu threaded through the carry
@@ -268,12 +282,20 @@ def _social_scan_core(
     def body(carry, t):
         state = carry[0]
         # --- consensus (lines 4-12) ---
-        mask = step_edge_mask(
-            mask_key, t, E, rt.drop_prob, rt.B,
-            fold_t=social_stream_fold(t, STREAM_LINK),
-        )
+        if graph_axis is not None:
+            mask = shard_edge_mask(
+                mask_key, t, E, rt.drop_prob, rt.B,
+                graph_axis=graph_axis, n_shards=n_shards,
+                fold_t=social_stream_fold(t, STREAM_LINK),
+            )
+        else:
+            mask = step_edge_mask(
+                mask_key, t, E, rt.drop_prob, rt.B,
+                fold_t=social_stream_fold(t, STREAM_LINK),
+            )
         st = sparse_pushsum_step(
-            state, mask, rt.src, rt.dst, rt.valid, backend, share=share
+            state, mask, rt.src, rt.dst, rt.valid, backend, share=share,
+            graph_axis=graph_axis,
         )
         # --- innovation + belief (lines 13-16), one fused pass ---
         sk = jax.random.fold_in(sig_key, social_stream_fold(t, STREAM_SIGNAL))
@@ -315,7 +337,9 @@ def _social_scan_core(
 # Module-level jit so repeated runs with the same shapes/statics hit the
 # compilation cache instead of retracing a fresh closure per call.
 _social_compiled = functools.partial(
-    jax.jit, static_argnames=("truth", "M", "T", "store", "backend")
+    jax.jit,
+    static_argnames=("truth", "M", "T", "store", "backend", "graph_axis",
+                     "n_shards"),
 )(_social_scan_core)
 register_statics_cache("social.jit", _social_compiled._cache_size)
 

@@ -74,9 +74,11 @@ from .byzantine import (
     make_byzantine_runtime,
     make_byzantine_scan,
 )
-from .graphs import EdgeList
+from .graphs import EdgeList, EdgeShards, partition_edge_list
 from .pushsum import (
+    _out_degree,
     init_sparse_state,
+    shard_edge_mask,
     sparse_mass_invariant,
     sparse_pushsum_step,
     sparse_ratios,
@@ -91,6 +93,7 @@ from .hps import (
 )
 from .signals import SignalModel
 from .social import SOCIAL_STORES, SocialRuntime, _social_scan_core, make_social_runtime
+from repro.statics.contracts import contract as statics_contract
 from repro.statics.retrace import register_cache as register_statics_cache
 
 __all__ = [
@@ -219,6 +222,132 @@ def _sweep_sharded(mesh: Mesh, data_axis: str, T: int, B: int, backend: str):
     return jax.jit(sharded)
 
 
+@statics_contract(
+    name="pushsum_sharded",
+    # Per-device law of the edge-partitioned mode: nothing dense-N^2, and
+    # no rank>=2 value over the GLOBAL padded edge axis may exist on a
+    # device — per-shard (E_shard, d) state is the budget; gathering the
+    # full (E_pad, d) rho back onto one device defeats the partitioning.
+    # (The rank-1 (E_pad,) Bernoulli draw of shard_edge_mask is exempt by
+    # construction: the anchored patterns below are all rank >= 2.)
+    forbidden={"*": (("N", "N"), ("E", "*"))},
+    streams=(("link", lambda t: t),),
+    caches=("pushsum.sweep2d-jit",),
+)
+def _sweep_edge_sharded_body(w, src_sh, dst_sh, valid_sh, drop_b, seed_b, *,
+                             T, B, backend, graph_axis, n_shards):
+    """Per-device scenario batch of the edge-partitioned (2-D mesh) sweep.
+
+    Runs under ``shard_map`` over (``data_axis``, ``graph_axis``) — or under
+    a ``jax.vmap(axis_name=graph_axis)`` emulation on one device — with
+    ``w`` replicated, the edge arrays carrying this device's
+    (Kb, 1, E_shard) slice of a :func:`graphs.partition_edge_list` layout,
+    and the scenario coordinates (Kb,) sharded over data only. Node state
+    is replicated over the graph axis; each round's receiver partials (and
+    the hoisted out-degree / final mass invariant) are combined with psum
+    inside :func:`sparse_pushsum_step`, so every graph-shard device holds
+    identical node state and the outputs are graph-replicated.
+    """
+    e_shard = src_sh.shape[-1]
+    # (Kb, 1, Es) under shard_map, (Kb, Es) under the vmap emulation
+    src_sh = src_sh.reshape(src_sh.shape[0], e_shard)
+    dst_sh = dst_sh.reshape(dst_sh.shape[0], e_shard)
+    valid_sh = valid_sh.reshape(valid_sh.shape[0], e_shard)
+    target = w.mean(axis=0)
+    w_sum = w.sum(axis=0)
+    n = w.shape[0]
+
+    def single(src, dst, valid, drop, seed):
+        key = jax.random.PRNGKey(seed)
+        state0 = init_sparse_state(w, e_shard)
+        # loop invariant: global out-degree = psum of shard-local counts
+        d_out = jax.lax.psum(
+            _out_degree(src, valid, n, w.dtype), graph_axis
+        )
+        share = 1.0 / (d_out + 1.0)
+
+        def body(state, t):
+            mask = shard_edge_mask(
+                key, t, e_shard, drop, B,
+                graph_axis=graph_axis, n_shards=n_shards,
+            )
+            new = sparse_pushsum_step(
+                state, mask, src, dst, valid, backend,
+                share=share, graph_axis=graph_axis, dst_sorted=True,
+            )
+            err = jnp.abs(sparse_ratios(new) - target).max()
+            return new, err
+
+        final, errs = jax.lax.scan(
+            body, state0, jnp.arange(T, dtype=jnp.uint32)
+        )
+        gap = sparse_mass_invariant(
+            final, src, valid, graph_axis=graph_axis
+        ) - w_sum
+        return errs, sparse_ratios(final), gap
+
+    return jax.vmap(single, in_axes=(0, 0, 0, 0, 0))(
+        src_sh, dst_sh, valid_sh, drop_b, seed_b
+    )
+
+
+def _sweep2d_emulated(w, src_k, dst_k, valid_k, drop_b, seed_b, *,
+                      T, B, backend, graph_axis, n_shards):
+    """Single-device oracle of the 2-D mesh program: ``vmap(axis_name=)``
+    over the shard axis of the same per-device body, so every collective
+    resolves identically. The psum of S operands lowers to the same
+    reduction either way, making this path the bit-identity reference the
+    mesh path is tested against (and the traceable the statics fixture
+    lints). Outputs are shard-replicated; the leading S axis is dropped."""
+    errs, finals, gaps = jax.vmap(
+        functools.partial(
+            _sweep_edge_sharded_body,
+            T=T, B=B, backend=backend,
+            graph_axis=graph_axis, n_shards=n_shards,
+        ),
+        in_axes=(None, 1, 1, 1, None, None),
+        out_axes=0,
+        axis_name=graph_axis,
+    )(w, src_k, dst_k, valid_k, drop_b, seed_b)
+    return errs[0], finals[0], gaps[0]
+
+
+_sweep2d_compiled = functools.partial(
+    jax.jit,
+    static_argnames=("T", "B", "backend", "graph_axis", "n_shards"),
+)(_sweep2d_emulated)
+
+
+@functools.lru_cache(maxsize=None)
+def _sweep_sharded_2d(mesh: Mesh, data_axis: str, graph_axis: str,
+                      T: int, B: int, backend: str):
+    """Jitted 2-D (data x graph) shard_map sweep: scenarios split over
+    ``data_axis`` exactly as in :func:`_sweep_sharded`, while the edge
+    arrays' shard axis splits over ``graph_axis`` — one edge shard per
+    graph-device, combined per round by the psum inside the body. Outputs
+    are graph-replicated, so their specs name only the data axis."""
+    from repro.distributed.sharding import sweep_specs
+    from repro.launch import compat
+
+    specs = sweep_specs(data_axis, graph_axis)
+    n_shards = int(mesh.shape[graph_axis])
+    body = functools.partial(
+        _sweep_edge_sharded_body, T=T, B=B, backend=backend,
+        graph_axis=graph_axis, n_shards=n_shards,
+    )
+    sharded = compat.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(specs["replicated"], specs["edge_shards"],
+                  specs["edge_shards"], specs["edge_shards"],
+                  specs["scenario"], specs["scenario"]),
+        out_specs=(specs["out"], specs["out"], specs["out"]),
+        axis_names=frozenset({data_axis, graph_axis}),
+        check_vma=False,
+    )
+    return jax.jit(sharded)
+
+
 def run_pushsum_sweep(
     w: jnp.ndarray,            # (N, d) initial values, shared by scenarios
     el: EdgeList,              # single graph or stacked draws (leading G axis)
@@ -230,6 +359,8 @@ def run_pushsum_sweep(
     backend: str = "auto",
     mesh: Mesh | None = None,
     data_axis: str = "data",
+    graph_axis: str = "graph",
+    graph_shards: int | None = None,
 ) -> PushSumSweepResult:
     """Run the full scenario grid in ONE jitted, vmapped scan.
 
@@ -247,8 +378,69 @@ def run_pushsum_sweep(
     the last scenario up to a multiple of the axis size (one scenario batch
     per device; the pad rows are sliced off the result), so grids in the
     thousands still run as a single program.
+
+    **Edge-partitioned mode** (``graph_shards=S``): the graph itself is
+    additionally split into S dst-contiguous edge shards
+    (:func:`graphs.partition_edge_list` — ``el`` may be an
+    :class:`graphs.EdgeShards` already), per-edge state drops to
+    O(E/S d) per device, and per-round receiver partials are psum'd over
+    the mesh ``graph_axis`` — the 2-D (scenarios x graph) program that
+    takes single scenarios past N ~ 1e5. With ``mesh`` given its
+    ``graph_axis`` extent must equal S; without a mesh the shard axis runs
+    as a single-device ``vmap(axis_name=)`` emulation — the bit-identity
+    oracle of the mesh path. Either way results are bit-identical to the
+    plain path on ``EdgeShards.padded_edge_list()`` up to boundary-node
+    reduce order (see :class:`graphs.EdgeShards`); when ``S * e_shard``
+    exceeds E the padded mask draw re-indexes edge slots, so compare
+    against the padded list, not the original (threefry bits have no
+    prefix property).
     """
     w = jnp.asarray(w)
+    if graph_shards is not None or isinstance(el, EdgeShards):
+        shards = (el if isinstance(el, EdgeShards)
+                  else partition_edge_list(el, graph_shards))
+        if graph_shards is not None and shards.n_shards != graph_shards:
+            raise ValueError(
+                f"EdgeShards has {shards.n_shards} shards, "
+                f"graph_shards={graph_shards}"
+            )
+        S = shards.n_shards
+        src = shards.src if shards.is_batched else shards.src[None]
+        dst = shards.dst if shards.is_batched else shards.dst[None]
+        valid = shards.valid if shards.is_batched else shards.valid[None]
+        G = src.shape[0]                     # (G, S, Es)
+        gi, dp, sd = _scenario_grid(G, drop_probs, seeds)
+        K = gi.shape[0]
+        if mesh is not None:
+            if int(mesh.shape[graph_axis]) != S:
+                raise ValueError(
+                    f"mesh {graph_axis} axis has {mesh.shape[graph_axis]} "
+                    f"devices but the edge list is cut into {S} shards"
+                )
+            pad = (-K) % int(mesh.shape[data_axis])
+            if pad:
+                fill = np.full(pad, K - 1)
+                gi = np.concatenate([gi, gi[fill]])
+                dp = np.concatenate([dp, dp[fill]])
+                sd = np.concatenate([sd, sd[fill]])
+        drop_b = jnp.asarray(dp)
+        seed_b = jnp.asarray(sd)
+        args = (w, jnp.asarray(src[gi]), jnp.asarray(dst[gi]),
+                jnp.asarray(valid[gi]), drop_b, seed_b)
+        if mesh is None:
+            errs, finals, gaps = _sweep2d_compiled(
+                *args, T=T, B=B, backend=backend,
+                graph_axis=graph_axis, n_shards=S,
+            )
+        else:
+            errs, finals, gaps = _sweep_sharded_2d(
+                mesh, data_axis, graph_axis, T, B, backend
+            )(*args)
+        return PushSumSweepResult(
+            err=errs[:K], final_ratio=finals[:K], mass_gap=gaps[:K],
+            drop_prob=drop_b[:K], seed=seed_b[:K], graph=jnp.asarray(gi[:K]),
+        )
+
     src = np.atleast_2d(el.src)      # (G, E)
     dst = np.atleast_2d(el.dst)
     valid = np.atleast_2d(el.valid)
@@ -1009,6 +1201,7 @@ def run_hps_sweep(
 # sweep calls with unchanged configs never recompile.
 # ---------------------------------------------------------------------------
 register_statics_cache("pushsum.sweep-jit", _sweep_compiled._cache_size)
+register_statics_cache("pushsum.sweep2d-jit", _sweep2d_compiled._cache_size)
 register_statics_cache("byz.compiled", _BYZ_COMPILED)
 register_statics_cache("byz.grid", _BYZ_GRID_COMPILED)
 register_statics_cache("byz.runtime", _BYZ_RUNTIME_CACHE)

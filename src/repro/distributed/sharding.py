@@ -179,3 +179,50 @@ def to_shardings(spec_tree: Params, mesh: Mesh) -> Params:
         lambda s: NamedSharding(mesh, s), spec_tree,
         is_leaf=lambda x: isinstance(x, P),
     )
+
+
+# ---------------------------------------------------------------------------
+# Scenario-sweep meshes: the 2-D (data x graph) layout of the edge-
+# partitioned push-sum engines (repro.core.sweeps)
+# ---------------------------------------------------------------------------
+
+def sweep_mesh(
+    n_data: int,
+    n_graph: int = 1,
+    *,
+    data_axis: str = "data",
+    graph_axis: str = "graph",
+    devices=None,
+):
+    """Mesh for the scenario-sweep engines: ``data_axis`` shards the K
+    scenario axis (one scenario batch per device row), ``graph_axis``
+    shards the edge index of each scenario into ``n_graph`` dst-contiguous
+    shards (:func:`repro.core.graphs.partition_edge_list`). ``n_data *
+    n_graph`` must not exceed the available device count. Built through
+    :func:`repro.launch.compat.make_mesh` so the same call works across the
+    jax versions the repo supports.
+    """
+    from repro.launch import compat
+
+    return compat.make_mesh(
+        (n_data, n_graph), (data_axis, graph_axis), devices=devices
+    )
+
+
+def sweep_specs(data_axis: str = "data", graph_axis: str = "graph"):
+    """PartitionSpecs of the 2-D sweep program's four argument roles.
+
+    * ``"replicated"``  — w and any other every-device value,
+    * ``"scenario"``    — (K,) per-scenario coordinates (drop, seed): data
+      axis only, every graph-shard device sees its row's full batch,
+    * ``"edge_shards"`` — (K, S, E_shard) partitioned edge arrays: scenario
+      rows over data, the shard axis over graph,
+    * ``"out"``         — results: node state is graph-replicated after the
+      per-round psum combine, so outputs name only the data axis.
+    """
+    return {
+        "replicated": P(),
+        "scenario": P(data_axis),
+        "edge_shards": P(data_axis, graph_axis),
+        "out": P(data_axis),
+    }

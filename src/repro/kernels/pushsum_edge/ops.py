@@ -35,13 +35,17 @@ def edge_scatter(
     *,
     block_e: int = 4096,
     interpret: bool | None = None,
+    indices_sorted: bool = False,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Fused mask-latch + per-receiver increment sum; see package docstring.
 
-    Returns ``(rho_new (E, D), recv (N, D))``.
+    Returns ``(rho_new (E, D), recv (N, D))``. ``indices_sorted=True``
+    promises a dst-sorted edge index, letting the XLA lowering drop one
+    argsort (the Pallas kernel already streams in dst order and ignores it).
     """
     if resolve_backend(backend) == "xla":
-        return edge_scatter_ref(sigma, rho, live, src, dst)
+        return edge_scatter_ref(sigma, rho, live, src, dst,
+                                indices_sorted=indices_sorted)
     return edge_scatter_pallas(
         sigma, rho, live, src, dst, block_e=block_e, interpret=interpret
     )

@@ -24,9 +24,16 @@ def edge_scatter_ref(
     live: jnp.ndarray,    # (E,) bool — operational AND valid this round
     src: jnp.ndarray,     # (E,) int32
     dst: jnp.ndarray,     # (E,) int32
+    *,
+    indices_sorted: bool = False,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Returns ``(rho_new (E, D), recv (N, D))``. Any edge order is legal."""
+    """Returns ``(rho_new (E, D), recv (N, D))``. Any edge order is legal;
+    ``indices_sorted=True`` asserts ``dst`` is non-decreasing (the
+    :func:`repro.core.graphs.sort_by_dst` / ``partition_edge_list`` layout)
+    so the segment reduction skips its internal argsort."""
     n = sigma.shape[0]
     rho_new = jnp.where(live[:, None], sigma[src], rho)
-    recv = jax.ops.segment_sum(rho_new - rho, dst, num_segments=n)
+    recv = jax.ops.segment_sum(
+        rho_new - rho, dst, num_segments=n, indices_are_sorted=indices_sorted
+    )
     return rho_new, recv

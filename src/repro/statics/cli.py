@@ -147,8 +147,45 @@ def _byz_fixture():
     return dims, STORES, make
 
 
+def _pushsum_sharded_fixture():
+    from repro.core.graphs import (
+        partition_edge_list,
+        random_strongly_connected_edge_list,
+    )
+    from repro.core.sweeps import _sweep2d_emulated
+
+    rng = np.random.default_rng(5)
+    el = random_strongly_connected_edge_list(11, 0.25, rng, sort=False)
+    sh = partition_edge_list(el, 2)
+    w = rng.normal(size=(11, 3)).astype(np.float32)
+    # (K=2, S, Es) scenario-gathered shards, exactly what the sweep feeds
+    # the vmap(axis_name=) emulation — the single-device twin of the 2-D
+    # mesh program (same traced collectives), so linting it lints both
+    src_k = np.broadcast_to(sh.src[None], (2,) + sh.src.shape).copy()
+    dst_k = np.broadcast_to(sh.dst[None], (2,) + sh.dst.shape).copy()
+    val_k = np.broadcast_to(sh.valid[None], (2,) + sh.valid.shape).copy()
+    drop_b = np.array([0.1, 0.3], np.float32)
+    seed_b = np.array([0, 1], np.uint32)
+    dims = {"N": 11, "d": 3, "T": 5, "S": sh.n_shards,
+            "E": sh.e_pad, "Es": sh.e_shard}
+    assert len(set(dims.values())) == len(dims), dims
+
+    def make(backend, store):
+        return walk.trace(
+            lambda w_, s_, d_, v_, dp_, sd_: _sweep2d_emulated(
+                w_, s_, d_, v_, dp_, sd_,
+                T=5, B=2, backend=backend,
+                graph_axis="shardlint", n_shards=sh.n_shards,
+            ),
+            w, src_k, dst_k, val_k, drop_b, seed_b,
+        )
+
+    return dims, (None,), make
+
+
 _FIXTURES = {
     "pushsum": _pushsum_fixture,
+    "pushsum_sharded": _pushsum_sharded_fixture,
     "social": _social_fixture,
     "hps": _hps_fixture,
     "byzantine": _byz_fixture,
@@ -195,6 +232,9 @@ def _retrace_thunks():
         "run_pushsum_sweep": lambda: run_pushsum_sweep(
             w16, el, T=5, drop_probs=[0.0, 0.5], seeds=[0, 1], B=2,
             backend="xla"),
+        "run_pushsum_sweep_sharded": lambda: run_pushsum_sweep(
+            w16, el, T=5, drop_probs=[0.0, 0.5], seeds=[0, 1], B=2,
+            backend="xla", graph_shards=2),
         "run_byzantine_sweep": lambda: run_byzantine_sweep(
             model, bcfgs[1], T=3, seeds=[0, 1], backend="xla",
             store="final"),
@@ -413,6 +453,9 @@ def _cmd_lint(args) -> int:
 
 
 def _cmd_budget(args) -> int:
+    from repro.analysis.memory_model import pushsum_device_memory_gb
+    from repro.analysis.roofline import pushsum_halo_wire_bytes
+
     retrace.register_default_caches()
     print("analytic per-round step bytes and TPU-v5e roofline floors:")
     cases = [
@@ -429,6 +472,22 @@ def _cmd_budget(args) -> int:
         print(f"  {label:28s} {b / 1e6:10.3f} MB  "
               f"floor {floor['bound_step_time_s'] * 1e6:8.3f} us  "
               f"({floor['dominant']}-bound)")
+
+    print("edge-partitioned per-DEVICE budgets (graph axis, halo psum "
+          "on the collective term):")
+    for Ns, Es, ds, Ss in ((1 << 20, 1 << 21, 1, 8),
+                           (1 << 20, 1 << 21, 1, 1)):
+        b = memory.pushsum_sharded_step_bytes(Ns, Es, d=ds, n_shards=Ss)
+        wire = pushsum_halo_wire_bytes(Ns, ds, Ss)
+        floor = memory.step_floor(b, wire_bytes=wire, n_devices=Ss)
+        resid = pushsum_device_memory_gb(Ns, Es, d=ds, n_shards=Ss)
+        label = f"pushsum-2d N={Ns} E={Es} d={ds} S={Ss}"
+        print(f"  {label:38s} {b / 1e6:10.3f} MB/step  "
+              f"halo {wire / 1e6:7.3f} MB  "
+              f"floor {floor['bound_step_time_s'] * 1e6:8.3f} us  "
+              f"({floor['dominant']}-bound)  "
+              f"resident {resid['total_gb']} GB "
+              f"fits_16gb={resid['fits_16gb']}")
 
     print("traced footprints:")
     for name in sorted(contracts.REGISTRY):

@@ -37,6 +37,7 @@ __all__ = [
     "jaxpr_footprint",
     "step_floor",
     "pushsum_step_bytes",
+    "pushsum_sharded_step_bytes",
     "social_step_bytes",
     "hps_step_bytes",
     "byz_sparse_step_bytes",
@@ -64,18 +65,21 @@ def jaxpr_footprint(closed, dims: dict[str, int] | None = None) -> dict:
     }
 
 
-def step_floor(step_bytes: float, step_flops: float = 0.0, hw: HW = HW()) -> dict:
+def step_floor(step_bytes: float, step_flops: float = 0.0, hw: HW = HW(),
+               *, wire_bytes: float = 0.0, n_devices: int = 1) -> dict:
     """Roofline lower bound for one engine iteration on the TPU target.
 
     Reuses :func:`repro.analysis.roofline.roofline_terms` with the
-    analytic byte/FLOP counts standing in for ``cost_analysis`` (single
-    device, no collectives): ``bound_step_time_s`` is the max of the
-    memory and compute terms.
+    analytic byte/FLOP counts standing in for ``cost_analysis``:
+    ``bound_step_time_s`` is the max of the memory, compute and (with
+    ``wire_bytes`` > 0 — the edge-partitioned mode's per-round halo psum,
+    see :func:`repro.analysis.roofline.pushsum_halo_wire_bytes`)
+    collective terms.
     """
     return roofline_terms(
         {"flops": float(step_flops), "bytes accessed": float(step_bytes)},
-        {"wire_bytes_per_device": 0.0},
-        n_devices=1,
+        {"wire_bytes_per_device": float(wire_bytes)},
+        n_devices=n_devices,
         mf=0.0,
         hw=hw,
     )
@@ -93,6 +97,27 @@ def pushsum_step_bytes(N: int, E: int, d: int = 1) -> int:
     edge = E * (2 * d + 2) * _F32          # gathered values+mass, src/dst ids
     node = N * (2 * d + 2) * _F32          # read state, write state
     mask = E * _F32                        # per-edge Bernoulli keep mask
+    return edge + node + mask
+
+
+def pushsum_sharded_step_bytes(N: int, E: int, d: int = 1,
+                               n_shards: int = 1) -> int:
+    """Per-DEVICE HBM traffic of one edge-partitioned push-sum round.
+
+    Edge traffic drops to the shard-local ceil(E / S) slice; node traffic
+    stays full (state is replicated across graph shards); the mask term is
+    the FULL padded (S * ceil(E/S),) draw — the price of
+    :func:`repro.core.pushsum.shard_edge_mask`'s bit-identity contract,
+    every device generates the whole Bernoulli vector and windows it. The
+    halo psum's wire cost is separate
+    (:func:`repro.analysis.roofline.pushsum_halo_wire_bytes`) — it rides
+    the collective term of :func:`step_floor`, not HBM.
+    """
+    S = max(int(n_shards), 1)
+    e_shard = -(-E // S)
+    edge = e_shard * (2 * d + 2) * _F32
+    node = N * (2 * d + 2) * _F32
+    mask = S * e_shard * _F32
     return edge + node + mask
 
 
@@ -134,11 +159,25 @@ def byz_dense_bytes(N: int, m: int = 3) -> int:
 
 _NAME_N_RE = re.compile(r"_N(\d+)")
 _DERIVED_E_RE = re.compile(r"(?:^|;)E=(\d+)")
+_DERIVED_SHARDS_RE = re.compile(r"(?:^|;)shards=(\d+)")
+_DERIVED_D_RE = re.compile(r"(?:^|;)d=(\d+)")
 
 
 def validate_bench(results_dir: str | Path, hw: HW = HW()) -> list[Finding]:
     """Check every committed BENCH row's configuration against the
-    analytic memory models (structure only — never wall-clock)."""
+    analytic memory models (structure only — never wall-clock).
+
+    Rows whose ``derived`` carries ``shards=S`` (the edge-partitioned 2-D
+    mesh benchmarks) are budgeted per DEVICE: shard-local edge traffic
+    (:func:`pushsum_sharded_step_bytes`) and the
+    :func:`repro.analysis.memory_model.pushsum_device_memory_gb` residency
+    prediction must both fit the per-chip HBM — that is the whole point of
+    partitioning, so a sharded row that only fits in aggregate is a
+    failure. Explicitly skipped rows (``derived`` starting ``skipped=``,
+    written by single-device bench hosts) are ignored.
+    """
+    from repro.analysis.memory_model import pushsum_device_memory_gb
+
     results_dir = Path(results_dir)
     out: list[Finding] = []
     rows = 0
@@ -146,12 +185,18 @@ def validate_bench(results_dir: str | Path, hw: HW = HW()) -> list[Finding]:
         data = json.loads(path.read_text())
         for name, row in data.items():
             derived = str(row.get("derived", ""))
+            if derived.startswith("skipped="):
+                continue
             m = _NAME_N_RE.search(name)
             if not m:
                 continue
             N = int(m.group(1))
             e_m = _DERIVED_E_RE.search(derived)
             E = int(e_m.group(1)) if e_m else 4 * N
+            s_m = _DERIVED_SHARDS_RE.search(derived)
+            S = int(s_m.group(1)) if s_m else 1
+            d_m = _DERIVED_D_RE.search(derived)
+            d = int(d_m.group(1)) if d_m else 1
             rows += 1
             if not (0 < E <= N * (N - 1)):
                 out.append(Finding(
@@ -159,7 +204,20 @@ def validate_bench(results_dir: str | Path, hw: HW = HW()) -> list[Finding]:
                     message=f"derived edge count E={E} impossible for N={N}",
                 ))
                 continue
-            step = pushsum_step_bytes(N, E)
+            if S > 1:
+                step = pushsum_sharded_step_bytes(N, E, d=d, n_shards=S)
+                resid = pushsum_device_memory_gb(N, E, d=d, n_shards=S)
+                if not resid["fits_16gb"]:
+                    out.append(Finding(
+                        check="memory-budget", where=f"{path.name}:{name}",
+                        message=(
+                            f"per-device residency {resid['total_gb']} GB at "
+                            f"N={N}, E={E}, d={d}, shards={S} — the "
+                            "edge-partitioned row does not fit one chip"
+                        ),
+                    ))
+            else:
+                step = pushsum_step_bytes(N, E, d=d)
             if step >= hw.hbm_bytes:
                 out.append(Finding(
                     check="memory-budget", where=f"{path.name}:{name}",

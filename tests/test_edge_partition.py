@@ -1,0 +1,413 @@
+"""Edge-partitioned push-sum (the 2-D graph x data mesh mode).
+
+Covers: the partitioner's layout invariants, the CSR offsets extension of
+``sort_by_dst``, bit-identity of the sharded sweep against its single-device
+references (vmap emulation in-process; the real 2-D mesh in a subprocess,
+with RAGGED padding on both mesh axes — K not divisible by the data axis, E
+not divisible by the graph axis), the engine-level (HPS) threading, the
+dense-intermediate budget semantics the linter applies to per-shard values,
+and the explicit-skip benchmark rows single-device hosts emit.
+
+Subprocess tests follow tests/test_distributed.py: fake devices via
+``--xla_force_host_platform_device_count`` in a fresh interpreter so the
+forced device count never leaks into this process's jax runtime. They are
+additionally marked ``multidevice`` so the dedicated CI lane can select
+them (they still run in the plain tier-1 suite — the child process forces
+its own devices).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.graphs import (
+    EdgeList,
+    EdgeShards,
+    edge_list,
+    partition_edge_list,
+    random_strongly_connected,
+    random_strongly_connected_edge_list,
+    sort_by_dst,
+    stack_edge_lists,
+)
+from repro.core.sweeps import run_pushsum_sweep
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _edge_multiset(src, dst, valid):
+    return sorted(zip(np.asarray(src)[np.asarray(valid)].tolist(),
+                      np.asarray(dst)[np.asarray(valid)].tolist()))
+
+
+class TestPartitioner:
+    @pytest.mark.parametrize("n_shards", [1, 2, 3, 5])
+    def test_shards_sorted_padded_and_lossless(self, n_shards):
+        rng = np.random.default_rng(0)
+        el = random_strongly_connected_edge_list(23, 1.5, rng, sort=False)
+        sh = partition_edge_list(el, n_shards)
+        assert sh.n_shards == n_shards
+        assert sh.e_shard == max(-(-el.E // n_shards), 1)
+        # every shard individually dst-sorted (incl. the padded tail), so
+        # the concatenation is globally dst-sorted too
+        flat = sh.padded_edge_list()
+        assert (np.diff(flat.dst) >= 0).all()
+        for k in range(n_shards):
+            assert (np.diff(sh.dst[k]) >= 0).all()
+        # padding is inert and the valid multiset is exactly the input's
+        assert int(sh.valid.sum()) == el.E
+        assert _edge_multiset(flat.src, flat.dst, flat.valid) == \
+            _edge_multiset(el.src, el.dst, el.valid)
+
+    def test_boundary_marks_split_runs_only(self):
+        # dst runs: node 0 x3, node 1 x2, node 2 x1 (E = 6)
+        el = EdgeList(src=np.array([1, 2, 3, 0, 2, 0], np.int32),
+                      dst=np.array([0, 0, 0, 1, 1, 2], np.int32), n=4,
+                      valid=np.ones(6, bool))
+        # S=2 cuts at 3: exactly between the node-0 and node-1 runs
+        assert not partition_edge_list(el, 2).boundary.any()
+        # S=3 cuts at 2 and 4: splits node 0's and node 1's runs
+        sh = partition_edge_list(el, 3)
+        np.testing.assert_array_equal(sh.boundary,
+                                      [True, True, False, False])
+
+    def test_batched_partition(self):
+        rng = np.random.default_rng(1)
+        adjs = [random_strongly_connected(12, 0.1, rng) for _ in range(2)]
+        el, _, _ = sort_by_dst(stack_edge_lists(adjs))
+        sh = partition_edge_list(el, 3)
+        assert sh.is_batched
+        assert sh.src.shape == (2, 3, sh.e_shard)
+        assert sh.boundary.shape == (2, 12)
+        flat = sh.padded_edge_list()
+        for g in range(2):
+            assert _edge_multiset(flat.src[g], flat.dst[g], flat.valid[g]) \
+                == _edge_multiset(el.src[g], el.dst[g], el.valid[g])
+
+    def test_sort_by_dst_offsets(self):
+        rng = np.random.default_rng(2)
+        el = random_strongly_connected_edge_list(17, 1.0, rng, sort=False)
+        s_el, _, _, off = sort_by_dst(el, return_offsets=True)
+        assert off.shape == (18,) and off.dtype == np.int32
+        assert off[0] == 0 and off[-1] == el.E
+        counts = np.bincount(np.asarray(el.dst), minlength=17)
+        np.testing.assert_array_equal(np.diff(off), counts)
+        for v in range(17):
+            assert (s_el.dst[off[v]:off[v + 1]] == v).all()
+        # batched: per-row offsets
+        adjs = [random_strongly_connected(9, 0.2, rng) for _ in range(2)]
+        bel = stack_edge_lists(adjs)
+        s_bel, _, _, boff = sort_by_dst(bel, return_offsets=True)
+        assert boff.shape == (2, 10)
+        for g in range(2):
+            np.testing.assert_array_equal(
+                np.diff(boff[g]),
+                np.bincount(np.asarray(s_bel.dst[g]), minlength=9))
+
+
+def _boundary_free_el(n=6, in_deg=4, seed=3):
+    """Every node gets exactly ``in_deg`` in-edges, so any shard count
+    dividing E at run boundaries produces an empty halo index."""
+    rng = np.random.default_rng(seed)
+    src, dst = [], []
+    for v in range(n):
+        senders = rng.choice([u for u in range(n) if u != v], size=in_deg,
+                             replace=False)
+        src += senders.tolist()
+        dst += [v] * in_deg
+    return EdgeList(src=np.array(src, np.int32),
+                    dst=np.array(dst, np.int32), n=n,
+                    valid=np.ones(n * in_deg, bool))
+
+
+class TestShardedSweepIdentity:
+    """Single-process checks via the ``vmap(axis_name=)`` emulation — the
+    bit-exact twin of the mesh path (same psum order on every device)."""
+
+    def test_boundary_free_cut_is_bit_exact(self):
+        el = _boundary_free_el(n=6, in_deg=4)       # E = 24
+        rng = np.random.default_rng(0)
+        w = rng.normal(size=(6, 3)).astype(np.float32)
+        kw = dict(drop_probs=[0.0, 0.4], seeds=[0, 1], B=3)
+        for S in (2, 3, 6):    # e_shard in {12, 8, 4}: cuts on run bounds
+            sh = partition_edge_list(el, S)
+            assert not sh.boundary.any()
+            assert sh.e_pad == el.E                 # no padding either
+            ref = run_pushsum_sweep(w, sh.padded_edge_list(), 12, **kw)
+            two_d = run_pushsum_sweep(w, el, 12, graph_shards=S, **kw)
+            np.testing.assert_array_equal(np.asarray(two_d.err),
+                                          np.asarray(ref.err))
+            np.testing.assert_array_equal(np.asarray(two_d.final_ratio),
+                                          np.asarray(ref.final_ratio))
+
+    def test_random_graph_matches_to_reduce_order(self):
+        """With boundary nodes the halo psum reassociates those receivers'
+        sums — equality up to fp reduce order, as documented."""
+        rng = np.random.default_rng(4)
+        el = random_strongly_connected_edge_list(24, 1.5, rng, sort=False)
+        w = rng.normal(size=(24, 2)).astype(np.float32)
+        kw = dict(drop_probs=[0.0, 0.3], seeds=[0, 1], B=3)
+        sh = partition_edge_list(el, 3)
+        assert sh.boundary.any()                    # the interesting case
+        ref = run_pushsum_sweep(w, sh.padded_edge_list(), 15, **kw)
+        two_d = run_pushsum_sweep(w, sh, 15, graph_shards=3, **kw)
+        np.testing.assert_allclose(np.asarray(two_d.err),
+                                   np.asarray(ref.err), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(two_d.final_ratio),
+                                   np.asarray(ref.final_ratio), atol=1e-5)
+        assert np.abs(np.asarray(two_d.mass_gap)).max() < 1e-3
+
+    def test_edge_shards_input_and_shard_count_mismatch(self):
+        rng = np.random.default_rng(5)
+        el = random_strongly_connected_edge_list(10, 1.0, rng, sort=False)
+        sh = partition_edge_list(el, 2)
+        res = run_pushsum_sweep(np.ones((10, 2), np.float32), sh, 5,
+                                drop_probs=[0.2], seeds=[0])
+        assert res.err.shape == (1, 5)
+        with pytest.raises(ValueError, match="shards"):
+            run_pushsum_sweep(np.ones((10, 2), np.float32), sh, 5,
+                              graph_shards=4)
+
+    def test_hps_engine_sharded_emulation_matches_plain(self):
+        """The HPS scan core with graph_axis/n_shards under a
+        vmap(axis_name=) over shard-sliced runtimes: node-state outputs are
+        shard-replicated and match the plain core on the padded list."""
+        from repro.core.hps import (
+            HPSRuntime, _hps_compiled, hps_runtime_from_edge_list,
+        )
+
+        el = _boundary_free_el(n=6, in_deg=4)       # exactness guaranteed
+        sh = partition_edge_list(el, 2)
+        rep = np.zeros(6, bool)
+        rep[::3] = True
+        rt = hps_runtime_from_edge_list(
+            sh.padded_edge_list(), rep, drop_prob=0.3, gamma_period=4, B=2)
+        rng = np.random.default_rng(6)
+        w = rng.normal(size=(6, 2)).astype(np.float32)
+        key = jax.random.PRNGKey(0)
+
+        final_p, (ratio_p, gap_p) = _hps_compiled(
+            key, rt, w, T=9, store="trajectory", backend="xla")
+
+        rt_sh = rt._replace(src=jnp.asarray(sh.src),
+                            dst=jnp.asarray(sh.dst),
+                            valid=jnp.asarray(sh.valid))
+        in_rt = HPSRuntime(src=0, dst=0, valid=0, rep_mask=None,
+                           drop_prob=None, gamma=None, B=None, M=None)
+        final_s, (ratio_s, gap_s) = jax.vmap(
+            lambda r: _hps_compiled(
+                key, r, w, T=9, store="trajectory", backend="xla",
+                graph_axis="hpslint", n_shards=2),
+            in_axes=(in_rt,), axis_name="hpslint",
+        )(rt_sh)
+
+        ratio_s, gap_s = np.asarray(ratio_s), np.asarray(gap_s)
+        # shard-replicated node outputs: every shard returns the same thing
+        assert (ratio_s[0] == ratio_s[1]).all()
+        np.testing.assert_array_equal(ratio_s[0], np.asarray(ratio_p))
+        np.testing.assert_array_equal(gap_s[0], np.asarray(gap_p))
+        # edge state really is per-shard: (S, e_shard, d) not (S, E, d)
+        assert final_s.rho.shape == (2, sh.e_shard, 2)
+
+
+@pytest.mark.multidevice
+class TestMesh2D:
+    def test_mesh_matches_emulation_ragged_both_axes(self):
+        """shard_map on a real (data=2, graph=4) mesh vs the single-device
+        emulation, bit-exact, with ragged padding exercised on BOTH mesh
+        axes: K=5 scenarios over a 2-device data axis (pad 1) and an edge
+        count not divisible by 4 shards (padded tails)."""
+        res = _run_subprocess("""
+            from repro.core.graphs import (
+                partition_edge_list, random_strongly_connected_edge_list)
+            from repro.core.sweeps import run_pushsum_sweep
+            from repro.distributed.sharding import sweep_mesh
+
+            rng = np.random.default_rng(7)
+            el = random_strongly_connected_edge_list(30, 1.3, rng,
+                                                     sort=False)
+            assert el.E % 4 != 0, el.E        # ragged over the graph axis
+            w = rng.normal(size=(30, 2)).astype(np.float32)
+            kw = dict(drop_probs=[0.0, 0.2, 0.5, 0.7, 0.9], seeds=[0],
+                      B=3, graph_shards=4)    # K = 5, ragged over data=2
+            emu = run_pushsum_sweep(w, el, 20, **kw)
+            mesh = sweep_mesh(2, 4)
+            msh = run_pushsum_sweep(w, el, 20, mesh=mesh, **kw)
+            sh = partition_edge_list(el, 4)
+            ref = run_pushsum_sweep(w, sh.padded_edge_list(), 20,
+                                    drop_probs=kw["drop_probs"],
+                                    seeds=[0], B=3)
+            print(json.dumps({
+                "K": int(msh.K),
+                "mesh_vs_emul": float(np.abs(
+                    np.asarray(msh.err) - np.asarray(emu.err)).max()),
+                "mesh_vs_ref": float(np.abs(
+                    np.asarray(msh.err) - np.asarray(ref.err)).max()),
+                "final_vs_emul": float(np.abs(
+                    np.asarray(msh.final_ratio)
+                    - np.asarray(emu.final_ratio)).max()),
+                "gap": float(np.abs(np.asarray(msh.mass_gap)).max()),
+            }))
+        """)
+        assert res["K"] == 5                       # pad rows sliced off
+        assert res["mesh_vs_emul"] == 0.0          # bit-exact twin
+        assert res["final_vs_emul"] == 0.0
+        assert res["mesh_vs_ref"] < 1e-5           # reduce order only
+        assert res["gap"] < 1e-3
+
+    def test_data_axis_ragged_k_unchanged(self):
+        """Satellite regression: the plain 1-D data-sharded path still
+        pads ragged K (5 scenarios over 8 devices) bit-identically."""
+        res = _run_subprocess("""
+            from repro.core.graphs import random_strongly_connected_edge_list
+            from repro.core.sweeps import run_pushsum_sweep
+            from repro.distributed.sharding import sweep_mesh
+
+            rng = np.random.default_rng(8)
+            el = random_strongly_connected_edge_list(20, 1.0, rng)
+            w = rng.normal(size=(20, 2)).astype(np.float32)
+            kw = dict(drop_probs=[0.0, 0.3, 0.5, 0.7, 0.9], seeds=[0], B=3)
+            ref = run_pushsum_sweep(w, el, 20, **kw)
+            msh = run_pushsum_sweep(w, el, 20, mesh=sweep_mesh(8), **kw)
+            print(json.dumps({
+                "K": int(msh.K),
+                "err": float(np.abs(
+                    np.asarray(msh.err) - np.asarray(ref.err)).max()),
+            }))
+        """)
+        assert res["K"] == 5
+        assert res["err"] == 0.0
+
+
+def _run_subprocess(body: str, devices: int = 8, timeout: int = 420) -> dict:
+    """tests/test_distributed.py's fresh-interpreter fake-device runner."""
+    prog = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
+        import json
+        import numpy as np
+        import jax, jax.numpy as jnp
+        {textwrap.indent(textwrap.dedent(body), '        ').strip()}
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    for attempt in range(2):
+        out = subprocess.run(
+            [sys.executable, "-c", prog], capture_output=True, text=True,
+            timeout=timeout, env=env, cwd=REPO,
+        )
+        if out.returncode == 0:
+            break
+        if "rendezvous" not in out.stderr.lower():
+            break
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    line = [l for l in out.stdout.strip().splitlines() if l.startswith("{")][-1]
+    return json.loads(line)
+
+
+class TestStaticsBudgetTeaching:
+    """The dense-intermediate linter must treat per-shard (E_shard, d)
+    values as in-budget while any gathered full-E superset is a failure —
+    using the REGISTERED pushsum_sharded contract's own patterns."""
+
+    def _patterns(self):
+        import repro.core.sweeps  # noqa: F401  (registers the contract)
+        from repro.statics.contracts import get
+        return get("pushsum_sharded").forbidden_for(None)
+
+    def test_per_shard_values_in_budget(self):
+        from repro.statics import dense, walk
+
+        pats = self._patterns()
+        assert ("E", "*") in pats and ("N", "N") in pats
+        dims = {"N": 11, "d": 3, "S": 2, "Es": 4, "E": 8}
+
+        def per_shard_step(rho, w):          # (Es, d), (N, d)
+            upd = rho * 2.0 + 1.0            # (Es, d) — shard-local
+            recv = jnp.zeros_like(w).at[:4].add(upd)
+            return upd, recv
+
+        closed = walk.trace(per_shard_step,
+                            jnp.zeros((4, 3)), jnp.zeros((11, 3)))
+        assert dense.find_forbidden(closed, dims, pats) == []
+
+    def test_gathered_full_e_flagged(self):
+        from repro.statics import dense, walk
+
+        pats = self._patterns()
+        dims = {"N": 11, "d": 3, "S": 2, "Es": 4, "E": 8}
+
+        def gathered(rho_sh):                # (S, Es, d) -> (E, d) gather
+            return rho_sh.reshape(8, 3) + 1.0
+
+        finds = dense.find_forbidden(
+            walk.trace(gathered, jnp.zeros((2, 4, 3))), dims, pats)
+        assert finds, "a full-E gather must be a lint failure"
+        assert all(f.check == "dense-intermediate" for f in finds)
+
+    def test_registered_fixture_traces_clean(self):
+        """The CLI fixture for the contract (the exact program `statics
+        lint` walks) has no forbidden intermediates."""
+        from repro.statics import dense
+        from repro.statics.cli import _FIXTURES
+
+        dims, stores, make = _FIXTURES["pushsum_sharded"]()
+        pats = self._patterns()
+        for store in stores:
+            closed = make("xla", store)
+            assert dense.find_forbidden(closed, dims, pats) == []
+
+
+class TestBenchSkipRows:
+    def test_merge_keeps_explicit_skips_drops_plain_nan(self, tmp_path):
+        from benchmarks import merge_bench_json
+
+        p = str(tmp_path / "BENCH_x.json")
+        merge_bench_json(p, [
+            ("ok_N16", 1.5, "E=32"),
+            ("failed_N16", float("nan"), "subprocess_failed;boom"),
+            ("gated_N16", float("nan"), "skipped=single_device_host;devices=1"),
+        ])
+        text = open(p).read()
+        assert "NaN" not in text             # strict RFC-8259 artifact
+        data = json.loads(text)
+        assert "failed_N16" not in data      # degraded rows still dropped
+        assert data["gated_N16"]["us_per_call"] is None
+        assert data["gated_N16"]["derived"].startswith("skipped=")
+
+    def test_check_announces_skip_and_table_renders_dash(self, tmp_path,
+                                                         capsys, monkeypatch):
+        from benchmarks import bench_table, merge_bench_json
+        from benchmarks.run import _check_regressions
+
+        bad = _check_regressions(
+            "b.json", {"ok_N16": {"us_per_call": 1.0}},
+            {"ok_N16": (1.1, "E=32"),
+             "gated_N16": (float("nan"), "skipped=single_device_host")})
+        assert bad == 0
+        out = capsys.readouterr().out
+        assert "# SKIP gated_N16: skipped=single_device_host" in out
+
+        merge_bench_json(str(tmp_path / "BENCH_t.json"), [
+            ("gated_N16", float("nan"), "skipped=single_device_host"),
+        ])
+        monkeypatch.setattr(bench_table, "RESULTS", str(tmp_path))
+        (table,) = bench_table.tables()
+        assert "| `gated_N16` | — |" in table
+
+    def test_smoke_rows_skip_or_measure_by_device_count(self):
+        from benchmarks.pushsum_sweep import _bench_edge_sharded_smoke
+
+        r = _bench_edge_sharded_smoke(n=64, T=10)
+        if jax.device_count() < 2:
+            assert r["us_per_call"] != r["us_per_call"]      # NaN
+            assert r["derived"].startswith("skipped=")
+        else:
+            assert r["us_per_call"] == r["us_per_call"]
+            assert "shards=2" in r["derived"]
