@@ -6,6 +6,19 @@ artifact — the generator behind README.md's benchmark section:
 
     PYTHONPATH=src python -m benchmarks.bench_table [--only NAME ...]
 
+Rows that record compiled byte traffic get two extra columns:
+
+* **bytes/step** — the ``bytes_per_step=`` tag: XLA ``cost_analysis``
+  "bytes accessed" of the compiled program, divided by the scan length;
+* **roofline** — ``bytes_per_step / budget_bytes=``: the fraction of the
+  analytic per-step byte budget (:mod:`repro.statics.memory`,
+  policy-aware) the compiled program actually moves. The model is an
+  upper bound — every state leaf read and written once per round, no
+  fusion credit — so the fraction sits at or below 1.0; XLA's loop
+  fusion typically lands ~0.3–0.6. A fraction above 1 means the program
+  blew its budget; ``repro.statics budget`` validates the same pair of
+  numbers and fails CI on that.
+
 Interpreter-mode Pallas rows are kept but labeled: on CPU they measure the
 Pallas interpreter (equivalence testing), not the kernel, so they are not
 comparable to the compiled XLA rows next to them.
@@ -14,9 +27,29 @@ import argparse
 import glob
 import json
 import os
+import re
 
 RESULTS = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                        "..", "results")
+
+_BYTES_RE = re.compile(r"(?:^|;)bytes_per_step=([0-9.eE+-]+)")
+_BUDGET_RE = re.compile(r"(?:^|;)budget_bytes=([0-9.eE+-]+)")
+
+
+def _byte_cells(derived: str) -> tuple[str, str]:
+    """(bytes/step, roofline-fraction) cells from a derived tag — em
+    dashes when the row doesn't record byte traffic."""
+    b_m = _BYTES_RE.search(derived)
+    g_m = _BUDGET_RE.search(derived)
+    if not b_m:
+        return "—", "—"
+    bps = float(b_m.group(1))
+    if bps != bps:          # NaN: backend didn't report cost_analysis
+        return "n/a", "—"
+    cell = f"{bps / 1e6:.2f} MB"
+    if not g_m:
+        return cell, "—"
+    return cell, f"{bps / float(g_m.group(1)):.2f}"
 
 
 def tables(only=None):
@@ -28,8 +61,8 @@ def tables(only=None):
         with open(path) as f:
             rows = json.load(f)
         lines = [f"### {tag}", "",
-                 "| benchmark | us/call | notes |",
-                 "|---|---:|---|"]
+                 "| benchmark | us/call | bytes/step | roofline | notes |",
+                 "|---|---:|---:|---:|---|"]
         for name in sorted(rows):
             r = rows[name]
             notes = r["derived"].replace("|", "\\|")
@@ -37,7 +70,8 @@ def tables(only=None):
             # explicitly-skipped rows (derived starts "skipped=") carry
             # us_per_call null — render an em dash, not a crash
             cell = "—" if us is None else f"{us:.1f}"
-            lines.append(f"| `{name}` | {cell} | {notes} |")
+            bps, roof = _byte_cells(r["derived"])
+            lines.append(f"| `{name}` | {cell} | {bps} | {roof} | {notes} |")
         out.append("\n".join(lines))
     return out
 

@@ -86,14 +86,39 @@ def _bench_large_sparse(n=1024, d=8, T=64, extra_edge_prob=0.002, seed=0):
     }
 
 
-def _bench_step_backend(n, backend, d=4, extra=2.0, seed=0, T=None):
+def _bytes_per_call(lowered, calls: int) -> float:
+    """Per-call 'bytes accessed' from the compiled executable's
+    cost_analysis (a dict on current jax, a [dict] on older builds);
+    NaN when the backend doesn't report it."""
+    try:
+        cost = lowered.compile().cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        return float(cost["bytes accessed"]) / calls
+    except Exception:
+        return float("nan")
+
+
+def _bench_step_backend(n, backend, d=4, extra=2.0, seed=0, T=None,
+                        policy=None):
     """Per-step cost of one backend at scale N (dst-sorted edge index).
 
     The graph is built directly as a sparse edge list — at N=131072 the
     dense adjacency alone would be 17 GB. On CPU the Pallas backend runs
     ``interpret=True`` (the equivalence mode CI tests), so its numbers
     measure the interpreter, not the kernel; on TPU the same call compiles.
+
+    ``policy`` ("bf16") switches the scan-carried state to the reduced
+    storage dtype (:mod:`repro.core.precision`) and suffixes the row name;
+    every row also records the compiled program's per-step traffic
+    (``bytes_per_step``, from ``cost_analysis`` — on CPU this includes the
+    fp32 in-body accumulator transients XLA would fuse away on the TPU
+    target) and the analytic persistent-state budget (``budget_bytes``,
+    :func:`repro.statics.memory.pushsum_step_bytes` at the policy's
+    storage width) so the storage-bandwidth claim is checked on the
+    artifact against the same model ``repro.statics budget`` proves.
     """
+    from repro.statics.memory import pushsum_step_bytes
     rng = np.random.default_rng(seed)
     el = random_strongly_connected_edge_list(n, extra, rng)   # sorted by dst
     w = rng.normal(size=(n, d)).astype(np.float32)
@@ -102,7 +127,7 @@ def _bench_step_backend(n, backend, d=4, extra=2.0, seed=0, T=None):
 
     run = jax.jit(lambda w_, src_, dst_: run_pushsum_sparse(
         w_, src_, dst_, T, drop_prob=0.2, B=4, record_every=T,
-        backend=backend,
+        backend=backend, policy=policy, dst_sorted=True,
     ))
 
     def go():
@@ -113,6 +138,7 @@ def _bench_step_backend(n, backend, d=4, extra=2.0, seed=0, T=None):
     t0 = time.perf_counter()
     final = go()
     compile_wall = time.perf_counter() - t0
+    bytes_step = _bytes_per_call(run.lower(w, el.src, el.dst), T)
     t0 = time.perf_counter()
     final = go()
     step_us = (time.perf_counter() - t0) / T * 1e6
@@ -120,10 +146,15 @@ def _bench_step_backend(n, backend, d=4, extra=2.0, seed=0, T=None):
         sparse_mass_invariant(final, el.src, el.valid)) - w.sum(0)).max())
     mode = ("interpret" if backend == "pallas"
             and jax.default_backend() != "tpu" else "compiled")
+    tag = "" if policy is None else f"_{policy}"
+    pol = "" if policy is None else f"policy={policy};"
+    budget = pushsum_step_bytes(n, int(el.E), d=d, policy=policy)
     return {
-        "name": f"pushsum_step_{backend}_N{n}",
+        "name": f"pushsum_step_{backend}{tag}_N{n}",
         "us_per_call": step_us,
-        "derived": f"E={el.E};T={T};backend={backend};mode={mode};"
+        "derived": f"E={el.E};d={d};T={T};backend={backend};mode={mode};"
+                   f"{pol}bytes_per_step={bytes_step:.0f};"
+                   f"budget_bytes={budget};"
                    f"mass_gap={gap:.1e};compile_s={compile_wall:.1f}",
     }
 
@@ -251,7 +282,8 @@ def _bench_sharded_sweep(n=128, d=3, T=100, devices=4, seed=0):
     }
 
 
-def _bench_edge_sharded(n=1 << 20, d=1, T=4, devices=8, extra=1.0, seed=0):
+def _bench_edge_sharded(n=1 << 20, d=1, T=4, devices=8, extra=1.0, seed=0,
+                        policy=None, halo="psum"):
     """ONE million-agent scenario on the 2-D (data x graph) mesh.
 
     The graph (E ~ 2e6 edges) is cut into ``devices`` dst-contiguous edge
@@ -265,6 +297,11 @@ def _bench_edge_sharded(n=1 << 20, d=1, T=4, devices=8, extra=1.0, seed=0):
     order on every device — see sweeps.run_pushsum_sweep's docstring).
     Fake devices share one CPU, so the wall pins semantics + per-device
     memory shape, not a speedup.
+
+    ``policy``/``halo`` thread the storage dtype and the halo-collective
+    lowering through (``policy="bf16", halo="scatter"`` is the
+    bandwidth-optimized configuration: bf16 state + reduce-scatter/
+    all-gather halo whose re-broadcast leg rides the storage dtype).
     """
     prog = textwrap.dedent(f"""
         import os
@@ -277,13 +314,14 @@ def _bench_edge_sharded(n=1 << 20, d=1, T=4, devices=8, extra=1.0, seed=0):
         from repro.distributed.sharding import sweep_mesh
 
         mesh = sweep_mesh(1, {devices})      # (data=1, graph={devices})
+        pol = dict(policy={policy!r}, halo={halo!r})
 
         # small-N identity: 2-D mesh shard_map vs single-device emulation
         rng = np.random.default_rng({seed})
         el_s = random_strongly_connected_edge_list(256, 2.0, rng)
         w_s = rng.normal(size=(256, {d})).astype(np.float32)
         kw = dict(drop_probs=[0.0, 0.3], seeds=[0, 1], B=4,
-                  graph_shards={devices})
+                  graph_shards={devices}, **pol)
         r_emu = run_pushsum_sweep(w_s, el_s, 30, **kw)
         r_mesh = run_pushsum_sweep(w_s, el_s, 30, mesh=mesh, **kw)
         ident = float(np.abs(
@@ -297,7 +335,8 @@ def _bench_edge_sharded(n=1 << 20, d=1, T=4, devices=8, extra=1.0, seed=0):
         def once():
             t0 = time.perf_counter()
             r = run_pushsum_sweep(w, el, {T}, drop_probs=[0.2], seeds=[0],
-                                  B=4, mesh=mesh, graph_shards={devices})
+                                  B=4, mesh=mesh, graph_shards={devices},
+                                  **pol)
             r.err.block_until_ready()
             return r, time.perf_counter() - t0
 
@@ -321,7 +360,8 @@ def _bench_edge_sharded(n=1 << 20, d=1, T=4, devices=8, extra=1.0, seed=0):
         failure = out.stderr.strip()[-160:] if out.returncode else None
     except subprocess.TimeoutExpired:
         failure = "timeout_900s"
-    name = f"pushsum_edge_sharded_N{n}"
+    tag = "" if policy is None else f"_{policy}"
+    name = f"pushsum_edge_sharded{tag}_N{n}"
     if failure is not None:
         return {
             "name": name,
@@ -331,11 +371,22 @@ def _bench_edge_sharded(n=1 << 20, d=1, T=4, devices=8, extra=1.0, seed=0):
     res = json.loads(
         [l for l in out.stdout.splitlines() if l.startswith("{")][-1]
     )
+    from repro.analysis.roofline import pushsum_halo_wire_bytes
+    from repro.core.precision import resolve_policy
+    from repro.statics.memory import pushsum_sharded_step_bytes
+
+    budget = pushsum_sharded_step_bytes(n, res["E"], d=d, n_shards=devices,
+                                        policy=policy)
+    sb = 4 if policy is None else resolve_policy(policy).storage_bytes
+    wire = pushsum_halo_wire_bytes(n, d, devices, variant=halo,
+                                   storage_bytes=sb)
+    pol = "" if policy is None else f"policy={policy};halo={halo};"
     return {
         "name": name,
         "us_per_call": res["wall_s"] / T * 1e6,   # per-step cost
         "derived": f"E={res['E']};shards={devices};d={d};T={T};"
-                   f"devices={devices};mesh=1x{devices};"
+                   f"devices={devices};mesh=1x{devices};{pol}"
+                   f"budget_bytes={budget};halo_wire_bytes={wire:.0f};"
                    f"mesh_vs_emul_err={res['mesh_vs_emul_err']:.1e};"
                    f"err_final={res['err_final']:.2e};"
                    f"mass_gap={res['mass_gap']:.1e};"
@@ -343,17 +394,23 @@ def _bench_edge_sharded(n=1 << 20, d=1, T=4, devices=8, extra=1.0, seed=0):
     }
 
 
-def _bench_edge_sharded_smoke(n=256, d=2, T=50, seed=0):
+def _bench_edge_sharded_smoke(n=256, d=2, T=50, seed=0,
+                              policy=None, halo="psum"):
     """In-process 2-shard smoke of the edge-partitioned mode.
 
     Only meaningful when the HOST exposes >= 2 devices (the multidevice CI
     lane forces 8 fake CPU devices); a single-device host emits an explicit
     ``skipped=`` row — kept in the JSON artifact as ``us_per_call: null``
     and announced by run.py --check as ``# SKIP`` — instead of silently
-    measuring nothing or crashing on mesh construction.
+    measuring nothing or crashing on mesh construction. ``policy``/``halo``
+    select the storage policy and halo collective, like the full-size
+    sharded bench — the bf16+scatter smoke row is what the multidevice CI
+    lane asserts on (mesh == emulation must hold bit-exactly under the
+    reduced-precision state too).
     """
     n_dev = jax.device_count()
-    name = f"pushsum_edge_smoke_N{n}"
+    tag = "" if policy is None else f"_{policy}"
+    name = f"pushsum_edge_smoke{tag}_N{n}"
     if n_dev < 2:
         return {
             "name": name,
@@ -367,7 +424,8 @@ def _bench_edge_sharded_smoke(n=256, d=2, T=50, seed=0):
     el = random_strongly_connected_edge_list(n, 2.0, rng)
     w = rng.normal(size=(n, d)).astype(np.float32)
     mesh = sweep_mesh(1, S, devices=jax.devices()[:S])
-    kw = dict(drop_probs=[0.0, 0.4], seeds=[0, 1], B=4, graph_shards=S)
+    kw = dict(drop_probs=[0.0, 0.4], seeds=[0, 1], B=4, graph_shards=S,
+              policy=policy, halo=halo)
     r_emu = run_pushsum_sweep(w, el, T, **kw)
     t0 = time.perf_counter()
     r_mesh = run_pushsum_sweep(w, el, T, mesh=mesh, **kw)
@@ -379,10 +437,12 @@ def _bench_edge_sharded_smoke(n=256, d=2, T=50, seed=0):
     step_us = (time.perf_counter() - t0) / T * 1e6
     ident = float(np.abs(
         np.asarray(r_mesh.err) - np.asarray(r_emu.err)).max())
+    pol_tag = "" if policy is None else f"policy={policy};halo={halo};"
     return {
         "name": name,
         "us_per_call": step_us,
         "derived": f"E={el.E};shards={S};d={d};T={T};devices={n_dev};"
+                   f"{pol_tag}"
                    f"mesh_vs_emul_err={ident:.1e};"
                    f"err_final={np.asarray(r_mesh.err)[:, -1].max():.2e};"
                    f"compile_s={compile_wall:.1f}",
@@ -394,17 +454,21 @@ def rows(smoke: bool = False):
         recs = [
             _bench_large_sparse(),
             _bench_step_backend(1024, "xla"),
+            _bench_step_backend(1024, "xla", policy="bf16"),
             _bench_step_backend(1024, "pallas"),
             _bench_edge_sharded_smoke(),
+            _bench_edge_sharded_smoke(policy="bf16", halo="scatter"),
         ]
     else:
         recs = [_bench_large_sparse()]
         for n in (1024, 16384, 131072):
             recs.append(_bench_step_backend(n, "xla"))
             recs.append(_bench_step_backend(n, "pallas"))
+        recs.append(_bench_step_backend(131072, "xla", policy="bf16"))
         recs.append(_bench_sweep())
         recs.append(_bench_sharded_sweep())
         recs.append(_bench_edge_sharded())
+        recs.append(_bench_edge_sharded(policy="bf16", halo="scatter"))
     return [(r["name"], r["us_per_call"], r["derived"]) for r in recs]
 
 

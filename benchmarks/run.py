@@ -31,7 +31,7 @@ import os
 import sys
 
 from . import hps_bench, social_learning, byzantine_bench, gamma_sweep
-from . import aggregators_bench, pushsum_sweep
+from . import aggregators_bench, pushsum_sweep, compile_cache
 from . import merge_bench_json
 
 MODULES = [
@@ -41,6 +41,9 @@ MODULES = [
     ("remark3", gamma_sweep),
     ("aggregators", aggregators_bench),
     ("pushsum_sweep", pushsum_sweep),
+    # last: its jax.clear_caches() must not cost the other modules their
+    # warm jits mid-run
+    ("compile", compile_cache),
 ]
 
 REGRESSION_FACTOR = 1.25
@@ -89,6 +92,10 @@ def _check_regressions(baseline_path: str, baseline: dict,
             continue
         if "mode=interpret" in derived:
             continue
+        if "gate=off" in derived:
+            # compile-time rows: XLA + disk wall, jitters beyond any
+            # reasonable gate budget
+            continue
         checked += 1
         if us > old * factor:
             print(f"# REGRESSION {name}: {us:.1f}us > "
@@ -118,7 +125,13 @@ def main() -> None:
                     help="regression threshold for --check as a ratio "
                          "(default %(default)s = the 25%% gate; CI lanes "
                          "on noisy shared runners pass a looser value)")
+    ap.add_argument("--compile-cache", default=None, metavar="DIR",
+                    help="enable jax's persistent compilation cache rooted "
+                         "here (the CI bench lane persists this directory "
+                         "across runs; see benchmarks/compile_cache.py)")
     args = ap.parse_args()
+    if args.compile_cache:
+        compile_cache.enable(args.compile_cache)
     if args.only and args.only not in {t for t, _ in MODULES}:
         # a typo'd tag must fail loudly, not run zero modules and let a
         # --check gate pass green on an empty measurement set

@@ -62,31 +62,69 @@ def _step_setup(N):
     return model, rt, N // 8
 
 
-def _time_run(model, rt, M, T, backend):
+def _time_run(model, rt, M, T, backend, policy=None):
     t0 = time.perf_counter()
     jax.block_until_ready(run_social_runtime(
-        model, rt, M, T, seed=0, backend=backend, store="final"
+        model, rt, M, T, seed=0, backend=backend, store="final",
+        policy=policy,
     ).beliefs)
     compile_wall = time.perf_counter() - t0
     t0 = time.perf_counter()
     jax.block_until_ready(run_social_runtime(
-        model, rt, M, T, seed=0, backend=backend, store="final"
+        model, rt, M, T, seed=0, backend=backend, store="final",
+        policy=policy,
     ).beliefs)
     return (time.perf_counter() - t0) / T * 1e6, compile_wall
 
 
+def _bytes_per_step(model, rt, M, T, backend, policy=None) -> float:
+    """Compiled per-step 'bytes accessed' of the fused engine — the number
+    the precision policy halves (cost_analysis over an explicit jit of the
+    same call; NaN when the backend doesn't report it)."""
+    fn = jax.jit(lambda rt_: run_social_runtime(
+        model, rt_, M, T, seed=0, backend=backend, store="final",
+        policy=policy,
+    ).beliefs)
+    try:
+        cost = fn.lower(rt).compile().cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        return float(cost["bytes accessed"]) / T
+    except Exception:
+        return float("nan")
+
+
 def _step_rows(smoke: bool):
-    """social_step_{xla,pallas}_N{1024,16384}: fused-engine per-step cost."""
+    """social_step_{xla,pallas}_N{...}: fused-engine per-step cost, plus a
+    ``social_step_xla_bf16_N{...}`` row with the bf16 storage policy
+    (:mod:`repro.core.precision`) — both xla rows record compiled
+    bytes_per_step so the bandwidth claim rides the artifact."""
     out = []
     sizes = (1024,) if smoke else (1024, 16384)
+    from repro.statics.memory import social_step_bytes
+
     for N in sizes:
         model, rt, M = _step_setup(N)
         E = int(rt.src.shape[0])
         xla_us, compile_s = _time_run(model, rt, M, T=30, backend="xla")
+        bps = _bytes_per_step(model, rt, M, 30, "xla")
+        budget = social_step_bytes(N, E, 3)
         out.append((
             f"social_step_xla_N{N}", xla_us,
             f"E={E};m=3;Gamma=8;drop=0.1;store=final;"
+            f"bytes_per_step={bps:.0f};budget_bytes={budget};"
             f"compile_s={compile_s:.1f}",
+        ))
+        bf_us, bf_compile_s = _time_run(model, rt, M, T=30, backend="xla",
+                                        policy="bf16")
+        bf_bps = _bytes_per_step(model, rt, M, 30, "xla", policy="bf16")
+        bf_budget = social_step_bytes(N, E, 3, policy="bf16")
+        out.append((
+            f"social_step_xla_bf16_N{N}", bf_us,
+            f"E={E};m=3;Gamma=8;drop=0.1;store=final;policy=bf16;"
+            f"bytes_per_step={bf_bps:.0f};budget_bytes={bf_budget};"
+            f"budget_vs_fp32={bf_budget / budget:.3f};"
+            f"compile_s={bf_compile_s:.1f}",
         ))
         mode = "interpret" if jax.default_backend() != "tpu" else "compiled"
         T_p = 4 if mode == "interpret" else 30

@@ -153,21 +153,42 @@ def model_flops(arch, shape) -> float:
     return 2.0 * n * shape.global_batch
 
 
-def pushsum_halo_wire_bytes(N: int, d: int, n_shards: int) -> float:
+def pushsum_halo_wire_bytes(N: int, d: int, n_shards: int, *,
+                            variant: str = "psum",
+                            storage_bytes: int = 4) -> float:
     """Per-device wire bytes of one edge-partitioned push-sum round.
 
     The halo combine of :func:`repro.core.pushsum.sparse_pushsum_step`
-    (``graph_axis=``) is two psums over the graph axis — ``recv`` (N, d)
-    f32 and ``recv_m`` (N,) f32, i.e. N (d+1) * 4 operand bytes — costed
-    with the same ring all-reduce factor ``2 (n-1)/n`` as
-    :func:`parse_collectives`. The per-round out-degree psum is hoisted out
-    of the scan, so it does not appear in the steady-state per-step budget.
-    ``n_shards <= 1`` is the unpartitioned mode: no collective, 0 bytes.
+    (``graph_axis=``) merges ``recv`` (N, d) and ``recv_m`` (N,) partials
+    — an N (d+1) element operand in the accum dtype (fp32) — across the
+    graph axis. Two lowerings, selected by the step's ``halo=`` argument:
+
+    ``variant="psum"``
+        two all-reduces over the fp32 operand; ring factor
+        ``2 (n-1)/n * N (d+1) * 4`` as in :func:`parse_collectives`.
+    ``variant="scatter"``
+        ``psum_scatter`` + ``all_gather``: the reduce-scatter leg moves the
+        fp32 partials at ``(n-1)/n * N (d+1) * 4``, and the re-broadcast
+        gather leg moves the result AFTER the downcast to the policy's
+        storage dtype — ``(n-1)/n * N (d+1) * storage_bytes``. Under bf16
+        storage (``storage_bytes=2``) the wire total drops to 3/4 of the
+        psum variant; under fp32 the two variants move identical bytes
+        (the split only changes reduce order).
+
+    The per-round out-degree psum is hoisted out of the scan, so it does
+    not appear in the steady-state per-step budget. ``n_shards <= 1`` is
+    the unpartitioned mode: no collective, 0 bytes.
     """
     if n_shards <= 1:
         return 0.0
-    operand = N * (d + 1) * 4
-    return 2.0 * (n_shards - 1) / n_shards * operand
+    if variant not in ("psum", "scatter"):
+        raise ValueError(
+            f"variant must be 'psum' or 'scatter', got {variant!r}")
+    elems = N * (d + 1)
+    ring = (n_shards - 1) / n_shards
+    if variant == "psum":
+        return 2.0 * ring * elems * 4
+    return ring * elems * (4 + float(storage_bytes))
 
 
 def roofline_terms(

@@ -55,6 +55,7 @@ import numpy as np
 
 from .attacks import Attack
 from .graphs import HierTopology, check_assumption3, neighbor_lists
+from .precision import Policy, resolve_policy
 from .signals import SignalModel
 from repro.statics.contracts import contract as statics_contract
 
@@ -318,7 +319,7 @@ def make_byzantine_runtime(
 # ---------------------------------------------------------------------------
 
 def _sparse_gossip(key, t, r, rt: ByzRuntime, F, *, attack: Attack,
-                   mode: str, backend: str):
+                   mode: str, backend: str, accum_dtype=None):
     """Neighbor-list trim-gather -> (trimmed_sum (N, *pair), kept (N,))."""
     from repro.kernels.byz_trim import trim_gather_pairs
 
@@ -340,14 +341,19 @@ def _sparse_gossip(key, t, r, rt: ByzRuntime, F, *, attack: Attack,
             picked, rt.nbr_idx.shape + pair
         ).astype(r.dtype)
     byz_nbr = rt.byz_mask[rt.nbr_idx]
+    # indices_sorted stays False: the row-major flattening of the padded
+    # neighbor-list gather is not dst-monotone
     return trim_gather_pairs(
-        r, rt.nbr_idx, rt.nbr_valid, bmsg, byz_nbr, F, backend
+        r, rt.nbr_idx, rt.nbr_valid, bmsg, byz_nbr, F, backend,
+        accum_dtype=accum_dtype,
     )
 
 
 def _dense_gossip(key, t, r, rt: ByzRuntime, F, *, attack: Attack,
-                  mode: str, adj: jnp.ndarray):
+                  mode: str, adj: jnp.ndarray, accum_dtype=None):
     """(N, N) broadcast + sort oracle -> (trimmed_sum, kept)."""
+    if accum_dtype is not None:
+        r = r.astype(accum_dtype)
     n = r.shape[0]
     pair = r.shape[1:]
     honest = jnp.broadcast_to(r[:, None], (n, n) + pair)
@@ -389,7 +395,7 @@ def _select_reps(key, rt: ByzRuntime, extra_reps):
 
 
 def _fusion(key, t, r_in, rt: ByzRuntime, F, *, n_reps: int, extra_reps,
-            attack: Attack):
+            attack: Attack, accum_dtype=None):
     """PS fusion round: query reps, trim F from each end, push w_tilde back.
 
     The trimmed-pool average is :func:`repro.core.hps.ps_trimmed_pool` —
@@ -413,10 +419,12 @@ def _fusion(key, t, r_in, rt: ByzRuntime, F, *, n_reps: int, extra_reps,
     else:
         reply = rep_vals        # no sparse reply defined: state is replayed
     rep_vals = jnp.where(rt.byz_mask[reps][sl], reply, rep_vals)
-    w = ps_trimmed_pool(rep_vals, jnp.ones((n_reps,), bool), F)
-    # queried reps outside C adopt w_tilde (lines 20-22)
+    w = ps_trimmed_pool(rep_vals, jnp.ones((n_reps,), bool), F,
+                        accum_dtype=accum_dtype)
+    # queried reps outside C adopt w_tilde (lines 20-22); the pooled value
+    # comes back in the accum slot — downcast so the carry dtype is stable
     adopt = jnp.zeros((r_in.shape[0],), bool).at[reps].set(True) & (~rt.in_C)
-    return jnp.where(adopt[sl], w[None], r_in)
+    return jnp.where(adopt[sl], w[None].astype(r_in.dtype), r_in)
 
 
 # ---------------------------------------------------------------------------
@@ -437,9 +445,19 @@ def _scan_core(
     static_F: int | None,
     extra_reps,
     n_reps: int,
+    policy: Policy | None = None,
 ) -> ByzantineResult:
     """Algorithm 2's scan, parameterized over the gossip lowering and the
-    per-scenario runtime arrays (vmappable for batched grids)."""
+    per-scenario runtime arrays (vmappable for batched grids).
+
+    ``policy`` (a resolved :class:`repro.core.precision.Policy` or None)
+    sets the dtype of the persistent (N, *pair) carries — the pairwise
+    statistic r and the cumulative LLR — with the gossip trim, fusion
+    pool, and innovation arithmetic running in the accum slot. ``None``
+    keeps the historical all-fp32 program bit-identical.
+    """
+    st_dt = jnp.float32 if policy is None else policy.storage_dtype
+    ac_dt = jnp.float32 if policy is None else policy.accum_dtype
     N = rt.byz_mask.shape[0]
     m = log_tables.shape[1]
     pair = (m, m) if mode == "pairwise" else (m,)
@@ -452,7 +470,16 @@ def _scan_core(
         """One private signal per agent -> per-pair statistic increment."""
         key = jax.random.fold_in(base_key, stream_fold(t, STREAM_SIGNAL))
         u = jax.random.uniform(key, (N,))
-        sig = (u[:, None] > cdf).sum(axis=-1)
+        # searchsorted(side="left") over the inclusive cumsum counts the
+        # entries strictly below u — bit-identical to the old compare+reduce
+        # but O(log S) per agent and gather-free under vmap
+        s_max = cdf.shape[-1] - 1
+        sig = jnp.minimum(
+            jax.vmap(lambda c, uu: jnp.searchsorted(c, uu, side="left"))(
+                cdf, u
+            ),
+            s_max,
+        )
         ll = jnp.take_along_axis(
             log_tables, sig[:, None, None].astype(jnp.int32), axis=2
         )[:, :, 0]                                   # (N, m)
@@ -465,19 +492,25 @@ def _scan_core(
         r, cum_llr = carry
 
         # ---- innovation accumulator (cumulative LLR of all signals so far)
-        cum_llr = cum_llr + innovation(t)
+        # accumulate in the accum slot, carry in storage (every cast below
+        # is a traced no-op under the default fp32 policy)
+        cum_llr = (cum_llr.astype(ac_dt) + innovation(t)).astype(st_dt)
 
         # ---- intra-C gossip with trimming (lines 6-9)
         gk = jax.random.fold_in(base_key, stream_fold(t, STREAM_GOSSIP))
         tsum, kept = gossip(gk, t, r, rt, F)
-        r_gossip = (tsum + r) / (kept[sl] + 1.0) + cum_llr
-        r_new = jnp.where(rt.active[sl], r_gossip, r)
+        r_gossip = ((tsum + r.astype(ac_dt)) / (kept[sl] + 1.0)
+                    + cum_llr.astype(ac_dt))
+        r_new = jnp.where(rt.active[sl], r_gossip, r.astype(ac_dt))
+        r_new = r_new.astype(st_dt)
 
         # ---- PS fusion every Γ (lines 10-22)
         def fuse(r_in):
             fk = jax.random.fold_in(base_key, stream_fold(t, STREAM_FUSION))
             return _fusion(fk, t, r_in, rt, F, n_reps=n_reps,
-                           extra_reps=extra_reps, attack=attack)
+                           extra_reps=extra_reps, attack=attack,
+                           accum_dtype=None if policy is None
+                           else policy.accum)
 
         is_fusion = (t + 1) % rt.gamma.astype(t.dtype) == 0
         r_new = jax.lax.cond(is_fusion, fuse, lambda x: x, r_new)
@@ -494,17 +527,20 @@ def _scan_core(
             ys = None
         return (r_new, cum_llr), ys
 
-    zeros = jnp.zeros((N,) + pair, jnp.float32)
+    zeros = jnp.zeros((N,) + pair, st_dt)
     (r_fin, _), ys = jax.lax.scan(
         body, (zeros, zeros), jnp.arange(T, dtype=jnp.uint32)
     )
+    # diagnostics leave the engine in fp32 whatever the storage policy
+    up = (lambda x: x.astype(jnp.float32)) if st_dt != jnp.float32 else (
+        lambda x: x)
     tail = (lambda x: x[..., None]) if mode == "ovr" else (lambda x: x)
     if store == "trajectory":
-        return ByzantineResult(r=tail(ys[0]), decisions=ys[1])
+        return ByzantineResult(r=tail(up(ys[0])), decisions=ys[1])
     if store == "decisions":
-        return ByzantineResult(r=tail(r_fin), decisions=ys)
+        return ByzantineResult(r=tail(up(r_fin)), decisions=ys)
     dec_fin = decide(r_fin) if mode == "pairwise" else r_fin.argmax(axis=-1)
-    return ByzantineResult(r=tail(r_fin), decisions=dec_fin)
+    return ByzantineResult(r=tail(up(r_fin)), decisions=dec_fin)
 
 
 @statics_contract(
@@ -530,6 +566,7 @@ def make_byzantine_scan(
     core: str = "sparse",
     backend: str = "auto",
     store: str = "trajectory",
+    policy: Policy | str | None = None,
 ):
     """Build Algorithm 2's scan for a fixed (model, cfg, T).
 
@@ -544,7 +581,9 @@ def make_byzantine_scan(
     ablation; ``core`` the sparse neighbor-list trim (production) or the
     dense broadcast oracle; ``backend`` the sparse trim lowering
     (:mod:`repro.kernels.byz_trim`); ``store`` what the scan materializes
-    (see :class:`ByzantineResult`).
+    (see :class:`ByzantineResult`); ``policy`` the precision policy of the
+    persistent carries (:mod:`repro.core.precision`; ``None`` keeps the
+    bit-identical all-fp32 program).
     """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
@@ -552,15 +591,18 @@ def make_byzantine_scan(
         raise ValueError(f"core must be one of {CORES}, got {core!r}")
     if store not in STORES:
         raise ValueError(f"store must be one of {STORES}, got {store!r}")
+    pol = None if policy is None else resolve_policy(policy)
+    accum_name = None if pol is None else pol.accum
     rt, extra_reps, n_reps, gossip_adj = make_byzantine_runtime(model, cfg)
     if core == "sparse":
         gossip = functools.partial(
-            _sparse_gossip, attack=cfg.attack, mode=mode, backend=backend
+            _sparse_gossip, attack=cfg.attack, mode=mode, backend=backend,
+            accum_dtype=accum_name,
         )
     else:
         gossip = functools.partial(
             _dense_gossip, attack=cfg.attack, mode=mode,
-            adj=jnp.asarray(gossip_adj),
+            adj=jnp.asarray(gossip_adj), accum_dtype=accum_name,
         )
     run = functools.partial(
         _scan_core,
@@ -575,6 +617,7 @@ def make_byzantine_scan(
         static_F=cfg.F,
         extra_reps=extra_reps,
         n_reps=n_reps,
+        policy=pol,
     )
     return run
 
@@ -588,8 +631,8 @@ def run_byzantine_learning(
 ) -> ByzantineResult:
     """Run Algorithm 2 for T iterations (single scenario).
 
-    Keyword arguments (``mode``, ``core``, ``backend``, ``store``) pass
-    through to :func:`make_byzantine_scan`.
+    Keyword arguments (``mode``, ``core``, ``backend``, ``store``,
+    ``policy``) pass through to :func:`make_byzantine_scan`.
     """
     return make_byzantine_scan(model, cfg, T, **scan_kwargs)(
         jax.random.PRNGKey(seed)

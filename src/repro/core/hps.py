@@ -67,6 +67,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .graphs import EdgeList, HierTopology
+from .precision import Policy, resolve_policy
 from repro.statics.contracts import contract as statics_contract
 from repro.statics.retrace import register_cache as register_statics_cache
 from .pushsum import (
@@ -154,6 +155,8 @@ def ps_trimmed_pool(
     pool: jnp.ndarray,    # (R, *coord) candidate values at the PS
     valid: jnp.ndarray,   # (R,) bool — pool membership mask
     F,                    # trim count; Python int or traced scalar
+    *,
+    accum_dtype: str | None = None,
 ) -> jnp.ndarray:
     """Trimmed mean over the parameter server's candidate pool, (*coord,).
 
@@ -180,12 +183,18 @@ def ps_trimmed_pool(
         jnp.zeros((1,) + r.shape, r.dtype),               # no substitution
         jnp.zeros((1, pool.shape[0]), bool),
         F,
+        # the single index row IS an arange — the one call site where the
+        # sorted-gather promise is globally true (general neighbor lists
+        # in the Byzantine core are not row-major monotone and keep False)
+        indices_sorted=True,
+        accum_dtype=accum_dtype,
     )
     return (tsum[0] / jnp.maximum(kept[0], 1.0)).reshape(pool.shape[1:])
 
 
 def hps_fusion(
-    z: jnp.ndarray, m: jnp.ndarray, rep_mask: jnp.ndarray, M, F=0
+    z: jnp.ndarray, m: jnp.ndarray, rep_mask: jnp.ndarray, M, F=0,
+    *, accum_dtype: str | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Apply the hierarchical fusion matrix F to (z, m) at the reps.
 
@@ -199,17 +208,27 @@ def hps_fusion(
     rep-pool mean — the Byzantine-resilient gossiping-type PS rule. The
     trimmed rule needs ``M >= 2F + 1`` surviving reps and is not
     average-preserving (module docstring).
+
+    ``accum_dtype`` names the dtype the pooled sums run in (the precision
+    policy's accum slot); the returned (z, m) stay in the input dtype —
+    persistent values keep the storage dtype. ``None`` keeps the input
+    dtype, the pre-policy program.
     """
-    repf = rep_mask.astype(z.dtype)
+    ad = z.dtype if accum_dtype is None else jnp.dtype(accum_dtype)
+    repf = rep_mask.astype(ad)
+    z_a = z.astype(ad)
+    m_a = m.astype(ad)
     if isinstance(F, int) and F == 0:
-        pooled_z = (z * repf[:, None]).sum(axis=0) / (2.0 * M)   # (d,)
-        pooled_m = (m * repf).sum() / (2.0 * M)
+        pooled_z = (z_a * repf[:, None]).sum(axis=0) / (2.0 * M)   # (d,)
+        pooled_m = (m_a * repf).sum() / (2.0 * M)
     else:
-        cat = jnp.concatenate([z, m[:, None]], axis=1)           # (N, d+1)
-        pooled = 0.5 * ps_trimmed_pool(cat, rep_mask, F)         # (d+1,)
+        cat = jnp.concatenate([z, m[:, None]], axis=1)             # (N, d+1)
+        pooled = 0.5 * ps_trimmed_pool(cat, rep_mask, F,
+                                       accum_dtype=accum_dtype)    # (d+1,)
         pooled_z, pooled_m = pooled[:-1], pooled[-1]
-    z_new = jnp.where(rep_mask[:, None], 0.5 * z + pooled_z[None, :], z)
-    m_new = jnp.where(rep_mask, 0.5 * m + pooled_m, m)
+    z_new = jnp.where(rep_mask[:, None],
+                      0.5 * z_a + pooled_z[None, :], z_a).astype(z.dtype)
+    m_new = jnp.where(rep_mask, 0.5 * m_a + pooled_m, m_a).astype(m.dtype)
     return z_new, m_new
 
 
@@ -366,6 +385,9 @@ def _hps_scan_core(
     F: int = 0,
     graph_axis: str | None = None,
     n_shards: int = 1,
+    policy: Policy | str | None = None,
+    dst_sorted: bool = False,
+    halo: str = "psum",
 ) -> tuple[SparsePushSumState, tuple[jnp.ndarray, jnp.ndarray]]:
     """Algorithm 1's scan, parameterized over the per-scenario runtime
     arrays (vmappable for batched grids).
@@ -379,14 +401,24 @@ def _hps_scan_core(
     masks are this shard's window of the full padded draw
     (:func:`pushsum.shard_edge_mask` — same ``hps_stream_fold`` domain),
     and out-degrees / receiver partials / the mass bookkeeping are psum'd
-    over the mesh graph axis. Node state — and hence the PS fusion half,
-    which only touches (N, d) — stays replicated, so the fusion step needs
-    no changes at all. Both kwargs are trace statics: thread them through
-    ``static_argnames`` alongside ``backend``.
+    over the mesh graph axis (``halo="scatter"`` opts into the
+    reduce-scatter + quantize + all-gather combine). Node state — and hence
+    the PS fusion half, which only touches (N, d) — stays replicated, so
+    the fusion step needs no changes at all.
+
+    ``policy`` (:mod:`repro.core.precision`) keeps every persistent scan
+    value in the storage dtype with fusion pools and receiver reductions in
+    the accum dtype; the emitted ratio/gap diagnostics stay fp32.
+    ``dst_sorted=True`` asserts the runtime's edge index is dst-sorted
+    (true for ``HPSConfig.edge_index()`` products). All kwargs here are
+    trace statics: thread them through ``static_argnames`` alongside
+    ``backend``.
     """
+    pol = None if policy is None else resolve_policy(policy)
+    accum_name = None if pol is None else pol.accum
     N = w.shape[0]
     E = rt.src.shape[0]
-    state0 = init_sparse_state(w, E)
+    state0 = init_sparse_state(w, E, policy=policy)
     # loop invariants of the fixed edge index / inputs, hoisted out of the
     # scan: out-degree share factors and the consensus target mean(w)
     d_out = _out_degree(rt.src, rt.valid, N, w.dtype)
@@ -409,10 +441,12 @@ def _hps_scan_core(
             )
         st = sparse_pushsum_step(
             state, mask, rt.src, rt.dst, rt.valid, backend, share=share,
-            graph_axis=graph_axis,
+            graph_axis=graph_axis, dst_sorted=dst_sorted, policy=policy,
+            halo=halo, n_shards=n_shards,
         )
         # --- PS fusion every Γ (lines 13-21) ---
-        z_f, m_f = hps_fusion(st.z, st.m, rt.rep_mask, rt.M, F)
+        z_f, m_f = hps_fusion(st.z, st.m, rt.rep_mask, rt.M, F,
+                              accum_dtype=accum_name)
         do_fusion = (t + 1) % rt.gamma == 0
         new = st._replace(
             z=jnp.where(do_fusion, z_f, st.z),
@@ -439,7 +473,8 @@ def _hps_scan_core(
 # compilation cache instead of retracing a fresh closure per call.
 _hps_compiled = functools.partial(
     jax.jit,
-    static_argnames=("T", "store", "backend", "F", "graph_axis", "n_shards"),
+    static_argnames=("T", "store", "backend", "F", "graph_axis", "n_shards",
+                     "policy", "dst_sorted", "halo"),
 )(_hps_scan_core)
 register_statics_cache("hps.jit", _hps_compiled._cache_size)
 
@@ -453,6 +488,8 @@ def run_hps_runtime(
     backend: str = "auto",
     store: str = "trajectory",
     F: int = 0,
+    policy: Policy | str | None = None,
+    dst_sorted: bool = False,
 ) -> HPSResult:
     """Run Algorithm 1 on a prebuilt :class:`HPSRuntime`.
 
@@ -461,13 +498,18 @@ def run_hps_runtime(
     drives the per-round link-mask stream on the ``hps_stream_fold``
     domain; ``backend`` selects the consensus delivery lowering; ``store``
     what the scan materializes (:class:`HPSResult`); ``F > 0`` swaps the PS
-    average for the trimmed-pool resilient rule.
+    average for the trimmed-pool resilient rule; ``policy`` the
+    storage/compute/accum dtype split. ``dst_sorted`` defaults to False
+    because a user-built runtime may carry any edge order; the config-
+    driven wrappers pass True.
     """
     if store not in HPS_STORES:
         raise ValueError(f"store must be one of {HPS_STORES}, got {store!r}")
     final, (ratio, gap) = _hps_compiled(
         jax.random.PRNGKey(seed), rt, jnp.asarray(w),
         T=T, store=store, backend=backend, F=F,
+        policy=None if policy is None else resolve_policy(policy),
+        dst_sorted=dst_sorted,
     )
     return HPSResult(ratio=ratio, final_state=final, gap=gap)
 
@@ -481,6 +523,7 @@ def run_hps(
     backend: str = "auto",
     store: str = "trajectory",
     F: int = 0,
+    policy: Policy | str | None = None,
 ) -> HPSResult:
     """Run HPS for T iterations (single scenario) on the fused engine.
 
@@ -491,7 +534,7 @@ def run_hps(
     """
     return run_hps_runtime(
         w, make_hps_runtime(cfg), T, seed=seed,
-        backend=backend, store=store, F=F,
+        backend=backend, store=store, F=F, policy=policy, dst_sorted=True,
     )
 
 

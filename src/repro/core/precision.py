@@ -1,0 +1,142 @@
+"""Repo-wide mixed-precision storage policy.
+
+Every fused engine is memory-bandwidth-bound: per-step cost is dominated by
+streaming the (E, d) relay state and the (N, d) node state out of HBM
+(see ``repro.statics.memory`` / ``repro.analysis.roofline``). The paper's
+algorithms only need full precision in the *accumulations* — push-sum
+mass/ratio sums, the KL/dual-averaging log-space updates, the trimmed-mean
+partial sums — so storage can drop to bf16 while every reduction stays
+fp32, roughly halving bytes moved on the hot paths.
+
+:class:`Policy` is the single knob: a hashable NamedTuple of *dtype names*
+(strings, so it can ride ``jax.jit`` static arguments and LRU-cache keys
+without canonicalization surprises) threaded as ``policy=`` through
+
+* :func:`repro.core.pushsum.sparse_pushsum_step` and the scan cores
+  (``_hps_scan_core`` / ``_social_scan_core`` / byzantine ``_scan_core``),
+* the kernel ops/refs (``pushsum_edge`` / ``byz_trim`` / ``social_innov``)
+  — casts happen at kernel block boundaries, accumulators inside stay
+  ``accum`` (fp32),
+* the batched sweeps (:mod:`repro.core.sweeps` ``run_*_{sweep,grid}``).
+
+The contract:
+
+* ``storage`` — dtype of every *persistent* value: scan carries, the
+  (E, d) relay latches, the (N, d) node state, wire payloads. This is the
+  bandwidth knob.
+* ``compute`` — dtype elementwise work runs in. Values are upcast
+  storage -> compute at block entry.
+* ``accum`` — dtype of reductions (segment-sums, trimmed-pool sums, psum
+  halos' integration). Never below fp32.
+
+The default :data:`FP32` policy is all-fp32 and **bit-identical** to the
+pre-policy engines: ``convert_element_type`` to the same dtype is a traced
+no-op in JAX, so the emitted program is unchanged (regression-tested per
+engine in ``tests/test_precision_policy.py``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Policy",
+    "FP32",
+    "BF16",
+    "resolve_policy",
+]
+
+# dtype names accepted for each slot; accum is deliberately locked to
+# full-precision floats (the whole point of the split is that reductions
+# never degrade)
+_STORAGE_DTYPES = ("float32", "bfloat16", "float16")
+_COMPUTE_DTYPES = ("float32", "bfloat16", "float16")
+_ACCUM_DTYPES = ("float32", "float64")
+
+
+class Policy(NamedTuple):
+    """Storage/compute/accumulation dtype split, as dtype *names*.
+
+    String fields keep the tuple hashable and stable as a ``jax.jit``
+    static argument / LRU-cache key component; use the ``*_dtype``
+    properties for the actual ``jnp`` dtypes at trace time.
+    """
+
+    storage: str = "float32"
+    compute: str = "float32"
+    accum: str = "float32"
+
+    @property
+    def storage_dtype(self):
+        return jnp.dtype(self.storage)
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.compute)
+
+    @property
+    def accum_dtype(self):
+        return jnp.dtype(self.accum)
+
+    @property
+    def storage_bytes(self) -> int:
+        """Bytes per element of the storage dtype — what the analytic
+        memory budgets (:mod:`repro.statics.memory`) charge per streamed
+        state element."""
+        return int(np.dtype(self.storage).itemsize)
+
+    @property
+    def is_default(self) -> bool:
+        """True iff this policy emits the byte-identical pre-policy
+        program (every cast is a same-dtype no-op)."""
+        return self == FP32
+
+    def validate(self) -> "Policy":
+        if self.storage not in _STORAGE_DTYPES:
+            raise ValueError(
+                f"policy storage dtype {self.storage!r} not in "
+                f"{_STORAGE_DTYPES}")
+        if self.compute not in _COMPUTE_DTYPES:
+            raise ValueError(
+                f"policy compute dtype {self.compute!r} not in "
+                f"{_COMPUTE_DTYPES}")
+        if self.accum not in _ACCUM_DTYPES:
+            raise ValueError(
+                f"policy accum dtype {self.accum!r} must be a "
+                f"full-precision float {_ACCUM_DTYPES} — reductions never "
+                "run below fp32")
+        return self
+
+    def tag(self) -> str:
+        """Short name for bench rows / budget tables: ``fp32``, ``bf16``,
+        or the explicit triple for anything non-standard."""
+        for name, pol in _NAMED.items():
+            if self == pol:
+                return name
+        return f"{self.storage}/{self.compute}/{self.accum}"
+
+
+FP32 = Policy()
+BF16 = Policy(storage="bfloat16")
+
+_NAMED = {"fp32": FP32, "bf16": BF16}
+
+
+def resolve_policy(policy) -> Policy:
+    """Normalize ``None`` (default fp32), a name (``"fp32"``/``"bf16"``),
+    or a :class:`Policy` to a validated :class:`Policy`."""
+    if policy is None:
+        return FP32
+    if isinstance(policy, str):
+        try:
+            return _NAMED[policy]
+        except KeyError:
+            raise ValueError(
+                f"unknown policy name {policy!r}; choose from "
+                f"{sorted(_NAMED)} or pass a Policy(...)") from None
+    if isinstance(policy, Policy):
+        return policy.validate()
+    raise TypeError(
+        f"policy must be None, a name, or a Policy; got {type(policy)!r}")

@@ -62,7 +62,9 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.precision import Policy, resolve_policy
 from repro.statics.contracts import contract as statics_contract
+from repro.statics.retrace import register_cache as register_statics_cache
 
 __all__ = [
     "PushSumState",
@@ -74,12 +76,15 @@ __all__ = [
     "SparsePushSumState",
     "init_sparse_state",
     "sparse_pushsum_step",
+    "sparse_pushsum_step_jit",
     "sparse_ratios",
     "sparse_mass_invariant",
     "run_pushsum_sparse",
     "step_edge_mask",
     "shard_edge_mask",
 ]
+
+HALO_VARIANTS = ("psum", "scatter")
 
 
 # ---------------------------------------------------------------------------
@@ -196,16 +201,24 @@ class SparsePushSumState(NamedTuple):
     rho_m: jnp.ndarray    # (E,)
 
 
-def init_sparse_state(w: jnp.ndarray, n_edges: int) -> SparsePushSumState:
-    """w: (N, d) initial values; ``n_edges`` the (padded) edge count E."""
+def init_sparse_state(
+    w: jnp.ndarray, n_edges: int, policy: Policy | str | None = None
+) -> SparsePushSumState:
+    """w: (N, d) initial values; ``n_edges`` the (padded) edge count E.
+
+    ``policy`` (a :class:`repro.core.precision.Policy`, a name, or ``None``)
+    selects the *storage* dtype of every persistent field — the bandwidth
+    knob. ``None`` keeps ``w.dtype`` exactly (the pre-policy behavior,
+    including float64 states under x64 mode)."""
     n, d = w.shape
+    dt = w.dtype if policy is None else resolve_policy(policy).storage_dtype
     return SparsePushSumState(
-        z=w,
-        m=jnp.ones((n,), w.dtype),
-        sigma=jnp.zeros((n, d), w.dtype),
-        sigma_m=jnp.zeros((n,), w.dtype),
-        rho=jnp.zeros((n_edges, d), w.dtype),
-        rho_m=jnp.zeros((n_edges,), w.dtype),
+        z=w.astype(dt),
+        m=jnp.ones((n,), dt),
+        sigma=jnp.zeros((n, d), dt),
+        sigma_m=jnp.zeros((n,), dt),
+        rho=jnp.zeros((n_edges, d), dt),
+        rho_m=jnp.zeros((n_edges,), dt),
     )
 
 
@@ -227,6 +240,9 @@ def sparse_pushsum_step(
     share: jnp.ndarray | None = None,
     graph_axis: str | None = None,
     dst_sorted: bool = False,
+    policy: Policy | str | None = None,
+    halo: str = "psum",
+    n_shards: int = 1,
 ) -> SparsePushSumState:
     """One fast-robust-push-sum iteration on edge-list state.
 
@@ -264,65 +280,138 @@ def sparse_pushsum_step(
     ``dst_sorted=True`` asserts the edge index is dst-sorted (the
     partitioner's layout, or :func:`graphs.sort_by_dst` output) and lets
     the XLA lowering's ``segment_sum`` skip its internal sort.
+
+    **Precision policy** (``policy=``, see :mod:`repro.core.precision`):
+    persistent state stays in the storage dtype, elementwise staging runs
+    in the compute dtype, and every reduction (the per-receiver segment
+    sum, the halo combine) runs in the accum dtype. The staged cumulative
+    is quantized to storage *before* delivery, and the re-stage reads the
+    quantized value back — so receivers latch exactly the value the sender
+    persists and the telescoping sums ``rho_new - rho_old`` self-correct:
+    quantization error never compounds across rounds, it is re-measured
+    against the stored cumulative each time. ``policy=None`` (default) is
+    dtype-transparent and emits the bit-identical pre-policy program.
+
+    **Halo variant** (``halo=``, edge-partitioned mode only): ``"psum"``
+    all-reduces the full (N, d+1) partials — each device moves
+    ``2 (n-1)/n * N (d+1)`` accum-dtype elements per round. ``"scatter"``
+    reduce-scatters the partials so each device owns an N/n_shards row
+    block, quantizes the *reduced* block to the storage dtype, and
+    all-gathers it — ``(n-1)/n * N (d+1)`` accum elements in plus the same
+    count of *storage* elements out, i.e. ~25% less wire even at fp32 and
+    ~44% less under bf16 storage (modeled in
+    :func:`repro.analysis.roofline.pushsum_halo_wire_bytes`). Reduce order
+    differs from ``"psum"``, so ``"scatter"`` is opt-in, not bit-identical.
+    ``n_shards`` (the graph-axis extent) must be given for ``"scatter"``.
     """
     from repro.kernels.pushsum_edge import edge_scatter, resolve_backend
 
+    if halo not in HALO_VARIANTS:
+        raise ValueError(f"halo={halo!r} not in {HALO_VARIANTS}")
+    pol = None if policy is None else resolve_policy(policy)
     z, m, sigma, sigma_m, rho, rho_m = state
     n = z.shape[0]
+    if pol is None:
+        st_dt = cp_dt = z.dtype
+        ac_dt = z.dtype
+        accum_name = None
+    else:
+        st_dt = pol.storage_dtype
+        cp_dt = pol.compute_dtype
+        ac_dt = pol.accum_dtype
+        accum_name = pol.accum
     if share is None:
-        d_out = _out_degree(src, valid, n, z.dtype)   # (N,) local
+        d_out = _out_degree(src, valid, n, cp_dt)     # (N,) local
         if graph_axis is not None:
             d_out = jax.lax.psum(d_out, graph_axis)   # (N,) global
         share = 1.0 / (d_out + 1.0)
+    share = share.astype(cp_dt)
 
-    # --- first half: stage cumulative send ---
-    sigma_p = sigma + z * share[:, None]
-    sigma_m_p = sigma_m + m * share
+    # --- first half: stage cumulative send (compute dtype), then quantize
+    # to storage — the quantized value is what gets delivered AND re-staged,
+    # so relay state and receivers agree exactly ---
+    sigma_p = sigma.astype(cp_dt) + z.astype(cp_dt) * share[:, None]
+    sigma_m_p = sigma_m.astype(cp_dt) + m.astype(cp_dt) * share
+    sigma_p_s = sigma_p.astype(st_dt)
+    sigma_m_p_s = sigma_m_p.astype(st_dt)
 
     # --- delivery: operational edges latch the sender's new cumulative ---
     live = mask & valid
     if resolve_backend(backend) == "pallas":
         # value + mass columns in one (·, d+1) pass through the kernel
-        sigma_cat = jnp.concatenate([sigma_p, sigma_m_p[:, None]], axis=1)
+        sigma_cat = jnp.concatenate([sigma_p_s, sigma_m_p_s[:, None]], axis=1)
         rho_cat = jnp.concatenate([rho, rho_m[:, None]], axis=1)
         rho_cat_new, recv_cat = edge_scatter(
             sigma_cat, rho_cat, live, src, dst, backend="pallas",
-            indices_sorted=dst_sorted,
+            indices_sorted=dst_sorted, accum_dtype=accum_name,
         )
         rho_new, rho_m_new = rho_cat_new[:, :-1], rho_cat_new[:, -1]
         recv, recv_m = recv_cat[:, :-1], recv_cat[:, -1]
     else:
-        rho_new = jnp.where(live[:, None], sigma_p[src], rho)
-        rho_m_new = jnp.where(live, sigma_m_p[src], rho_m)
+        rho_new = jnp.where(live[:, None], sigma_p_s[src], rho)
+        rho_m_new = jnp.where(live, sigma_m_p_s[src], rho_m)
         recv = jax.ops.segment_sum(
-            rho_new - rho, dst, num_segments=n, indices_are_sorted=dst_sorted
-        )
-        recv_m = jax.ops.segment_sum(
-            rho_m_new - rho_m, dst, num_segments=n,
+            rho_new.astype(ac_dt) - rho.astype(ac_dt), dst, num_segments=n,
             indices_are_sorted=dst_sorted,
         )
+        recv_m = jax.ops.segment_sum(
+            rho_m_new.astype(ac_dt) - rho_m.astype(ac_dt), dst,
+            num_segments=n, indices_are_sorted=dst_sorted,
+        )
     if graph_axis is not None:
-        # halo combine: interior receivers add exact +0.0 partials, boundary
-        # receivers (see EdgeShards.boundary) sum their split in-edge runs
-        recv = jax.lax.psum(recv, graph_axis)
-        recv_m = jax.lax.psum(recv_m, graph_axis)
+        if halo == "scatter":
+            # reduce-scatter + quantize + all-gather: each device reduces
+            # its own N/n_shards row block, so the gathered payload can ride
+            # the storage dtype (the reduction already happened in accum)
+            cat = jnp.concatenate([recv, recv_m[:, None]], axis=1)
+            pad_n = (-n) % n_shards
+            if pad_n:
+                cat = jnp.pad(cat, ((0, pad_n), (0, 0)))
+            part = jax.lax.psum_scatter(
+                cat, graph_axis, scatter_dimension=0, tiled=True
+            )
+            cat = jax.lax.all_gather(
+                part.astype(st_dt), graph_axis, axis=0, tiled=True
+            ).astype(ac_dt)
+            if pad_n:
+                cat = cat[:n]
+            recv, recv_m = cat[:, :-1], cat[:, -1]
+        else:
+            # halo combine: interior receivers add exact +0.0 partials,
+            # boundary receivers (see EdgeShards.boundary) sum their split
+            # in-edge runs
+            recv = jax.lax.psum(recv, graph_axis)
+            recv_m = jax.lax.psum(recv_m, graph_axis)
 
-    # --- integrate ---
-    z_p = z * share[:, None] + recv
-    m_p = m * share + recv_m
+    # --- integrate (accum dtype) ---
+    z_p = (z.astype(cp_dt) * share[:, None]).astype(ac_dt) + recv
+    m_p = (m.astype(cp_dt) * share).astype(ac_dt) + recv_m
 
-    # --- second half: immediately re-stage ---
-    sigma_n = sigma_p + z_p * share[:, None]
-    sigma_m_n = sigma_m_p + m_p * share
-    z_n = z_p * share[:, None]
-    m_n = m_p * share
+    # --- second half: immediately re-stage, downcast to storage ---
+    z_pc = z_p.astype(cp_dt)
+    m_pc = m_p.astype(cp_dt)
+    sigma_n = (sigma_p_s.astype(cp_dt) + z_pc * share[:, None]).astype(st_dt)
+    sigma_m_n = (sigma_m_p_s.astype(cp_dt) + m_pc * share).astype(st_dt)
+    z_n = (z_pc * share[:, None]).astype(st_dt)
+    m_n = (m_pc * share).astype(st_dt)
 
     return SparsePushSumState(z_n, m_n, sigma_n, sigma_m_n, rho_new, rho_m_new)
 
 
+_HALF_DTYPES = (jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float16))
+
+
 def sparse_ratios(state: SparsePushSumState) -> jnp.ndarray:
-    """The push-sum estimate z/m per agent, (N, d)."""
-    return state.z / jnp.maximum(state.m, 1e-30)[:, None]
+    """The push-sum estimate z/m per agent, (N, d).
+
+    Half-precision storage states are upcast to fp32 for the division —
+    the 1e-30 mass floor underflows to zero in bf16/fp16, and the ratio is
+    a diagnostic, not a persistent value (a static dtype check, so fp32 and
+    fp64 states keep the bit-identical pre-policy program)."""
+    z, m = state.z, state.m
+    if z.dtype in _HALF_DTYPES:
+        z, m = z.astype(jnp.float32), m.astype(jnp.float32)
+    return z / jnp.maximum(m, 1e-30)[:, None]
 
 
 def sparse_mass_invariant(
@@ -336,12 +425,90 @@ def sparse_mass_invariant(
 
     Under edge partitioning (``graph_axis=``) the per-edge in-flight term is
     psum'd over the shards while the replicated node sum is counted once.
+    Half-precision storage states are upcast to fp32 before the O(E) sums
+    (same static-dtype rule as :func:`sparse_ratios`).
     """
-    vf = valid.astype(state.z.dtype)
-    in_flight = ((state.sigma[src] - state.rho) * vf[:, None]).sum(axis=0)
+    z, sigma, rho = state.z, state.sigma, state.rho
+    if z.dtype in _HALF_DTYPES:
+        z = z.astype(jnp.float32)
+        sigma = sigma.astype(jnp.float32)
+        rho = rho.astype(jnp.float32)
+    vf = valid.astype(z.dtype)
+    in_flight = ((sigma[src] - rho) * vf[:, None]).sum(axis=0)
     if graph_axis is not None:
         in_flight = jax.lax.psum(in_flight, graph_axis)
-    return state.z.sum(axis=0) + in_flight
+    return z.sum(axis=0) + in_flight
+
+
+# Compiled step entry points, keyed by their static arguments. Donation is
+# the point: ``state`` in and ``state`` out have identical avals leaf-for-
+# leaf, so donating argument 0 lets XLA alias every output buffer onto its
+# input — the (E, d) relay state, the dominant allocation, is updated
+# in-place instead of double-buffered. The statics lint's donation check
+# asserts the compiled executable actually reports the aliasing
+# (``repro.statics.cli``). Keyed dict rather than functools.lru_cache so
+# the retrace sentinel can sum the inner jit cache sizes.
+_STEP_JIT: dict = {}
+
+
+def _step_jit_entries() -> int:
+    return sum(f._cache_size() for f in _STEP_JIT.values())
+
+
+register_statics_cache("pushsum.step-jit", _step_jit_entries)
+
+
+def sparse_pushsum_step_jit(
+    state: SparsePushSumState,
+    mask: jnp.ndarray,
+    src: jnp.ndarray,
+    dst: jnp.ndarray,
+    valid: jnp.ndarray,
+    backend: str = "auto",
+    *,
+    share: jnp.ndarray | None = None,
+    dst_sorted: bool = False,
+    policy: Policy | str | None = None,
+) -> SparsePushSumState:
+    """Jitted :func:`sparse_pushsum_step` with the input state *donated*.
+
+    The returned state reuses the argument's buffers, so the caller must
+    not touch ``state`` afterwards — standard donation semantics. Use this
+    for step-at-a-time driving (benchmarks, interactive loops); inside a
+    ``lax.scan`` the carry is already double-buffer-free, and the sweep
+    bodies have no aval-matched input/output pairs to donate (their inputs
+    are (K,)-batched scenarios, their outputs reductions), which is why
+    donation lives on the step entry and not the sweep jits.
+
+    Values match calling :func:`sparse_pushsum_step` op-by-op up to XLA's
+    whole-function fusion (FMA contraction), ~1 ulp on the value columns.
+
+    ``graph_axis`` mode is excluded: collectives need a surrounding
+    ``shard_map``, whose jit owns the donation decision there.
+    """
+    pol = None if policy is None else resolve_policy(policy)
+    return _get_step_jit(backend, dst_sorted, pol)(
+        state, mask, src, dst, valid, share)
+
+
+def _get_step_jit(backend: str, dst_sorted: bool, pol: Policy | None):
+    """Build-or-fetch the donating jitted step for one static key. Split
+    from :func:`sparse_pushsum_step_jit` so :mod:`repro.statics.precision`
+    can ``.lower()`` the exact shipped callable (proving the compiled
+    executable aliases the donated state buffers) without executing it."""
+    key = (backend, dst_sorted, pol)
+    fn = _STEP_JIT.get(key)
+    if fn is None:
+        def _step(state, mask, src, dst, valid, share,
+                  _backend=backend, _sorted=dst_sorted, _pol=pol):
+            return sparse_pushsum_step(
+                state, mask, src, dst, valid, _backend,
+                share=share, dst_sorted=_sorted, policy=_pol,
+            )
+
+        fn = jax.jit(_step, donate_argnums=(0,))
+        _STEP_JIT[key] = fn
+    return fn
 
 
 def step_edge_mask(
@@ -423,6 +590,8 @@ def run_pushsum_sparse(
     masks: jnp.ndarray | None = None,   # optional explicit (T, E) schedule
     record_every: int = 1,
     backend: str = "auto",
+    policy: Policy | str | None = None,
+    dst_sorted: bool = False,
 ) -> tuple[SparsePushSumState, jnp.ndarray]:
     """Run T iterations of the edge-list core.
 
@@ -431,7 +600,11 @@ def run_pushsum_sparse(
     explicit ``masks`` (T, E) schedule instead to reproduce a dense run
     bit-for-bit (see :func:`graphs.edge_masks`); its length must equal T.
     ``backend`` selects the per-round delivery lowering (module docstring);
-    ``"pallas"`` expects a dst-sorted edge index.
+    ``"pallas"`` expects a dst-sorted edge index. ``policy`` selects the
+    storage dtype of the scan-carried state (:mod:`repro.core.precision`;
+    ``None`` = dtype-transparent fp32 default, bit-identical to the
+    pre-policy engine); ``dst_sorted`` declares the edge index sorted by
+    receiver so the integration scatter gets the sorted-segments hint.
 
     Returns the final state and the ratio trajectory recorded at rounds
     ``record_every - 1, 2*record_every - 1, ...`` — i.e. the *end* of each
@@ -449,7 +622,7 @@ def run_pushsum_sparse(
         valid = jnp.ones((E,), bool)
     else:
         valid = jnp.asarray(valid, bool)
-    state0 = init_sparse_state(w, E)
+    state0 = init_sparse_state(w, E, policy=policy)
     k = record_every
 
     if masks is not None:
@@ -460,7 +633,8 @@ def run_pushsum_sparse(
             )
 
         def body(state, mask):
-            new = sparse_pushsum_step(state, mask, src, dst, valid, backend)
+            new = sparse_pushsum_step(state, mask, src, dst, valid, backend,
+                                      policy=policy, dst_sorted=dst_sorted)
             return new, sparse_ratios(new)
 
         final, traj = jax.lax.scan(body, state0, masks)
@@ -474,7 +648,9 @@ def run_pushsum_sparse(
         def window(state, t0):
             def inner(i, st):
                 mask = step_edge_mask(key, t0 + jnp.uint32(i), E, drop_prob, B)
-                return sparse_pushsum_step(st, mask, src, dst, valid, backend)
+                return sparse_pushsum_step(st, mask, src, dst, valid, backend,
+                                           policy=policy,
+                                           dst_sorted=dst_sorted)
 
             new = jax.lax.fori_loop(0, k, inner, state)
             return new, sparse_ratios(new)
@@ -486,7 +662,8 @@ def run_pushsum_sparse(
 
     def body(state, t):
         mask = step_edge_mask(key, t, E, drop_prob, B)
-        new = sparse_pushsum_step(state, mask, src, dst, valid, backend)
+        new = sparse_pushsum_step(state, mask, src, dst, valid, backend,
+                                  policy=policy, dst_sorted=dst_sorted)
         return new, sparse_ratios(new)
 
     final, traj = jax.lax.scan(body, state0, jnp.arange(T, dtype=jnp.uint32))

@@ -62,6 +62,7 @@ import numpy as np
 
 from .graphs import EdgeList
 from .hps import HPSConfig, hps_fusion
+from .precision import Policy, resolve_policy
 from .pushsum import (
     SparsePushSumState,
     _out_degree,
@@ -248,6 +249,9 @@ def _social_scan_core(
     backend: str,
     graph_axis: str | None = None,
     n_shards: int = 1,
+    policy: Policy | str | None = None,
+    dst_sorted: bool = False,
+    halo: str = "psum",
 ) -> tuple[SparsePushSumState, tuple[jnp.ndarray, jnp.ndarray]]:
     """Algorithm 3's scan, parameterized over the per-scenario runtime
     arrays (vmappable for batched grids).
@@ -259,16 +263,30 @@ def _social_scan_core(
     exactly as in :func:`repro.core.hps._hps_scan_core`: the runtime's edge
     arrays carry a per-device (E_shard,) shard, the link-mask stream is
     windowed from the full padded draw on the same fold-in domain, and the
-    out-degree / receiver partials are psum'd over the mesh graph axis.
-    The innovation and fusion halves touch only replicated (N, ...) node
-    state and need no changes. Both kwargs are trace statics.
+    out-degree / receiver partials are psum'd over the mesh graph axis
+    (``halo="scatter"`` swaps the psum pair for the reduce-scatter +
+    quantize + all-gather combine of :func:`sparse_pushsum_step`). The
+    innovation and fusion halves touch only replicated (N, ...) node state
+    and need no changes.
+
+    ``policy`` (:mod:`repro.core.precision`) puts every persistent scan
+    value — the push-sum state AND the final-belief carry — in the storage
+    dtype while the innovation accumulation, fusion pools, and belief
+    softmax run in the accum dtype. ``dst_sorted=True`` asserts the
+    runtime's edge index is dst-sorted (true for everything built from
+    ``HPSConfig.edge_index()``; user-supplied runtimes default to False).
+    All of these kwargs are trace statics.
     """
     from repro.kernels.social_innov import innovation_step
 
+    pol = None if policy is None else resolve_policy(policy)
+    st_dt = jnp.float32 if pol is None else pol.storage_dtype
+    accum_name = None if pol is None else pol.accum
     N, m = log_tables.shape[0], log_tables.shape[1]
     E = rt.src.shape[0]
     # z accumulates per-hypothesis log-likelihood sums; init 0 (Alg. 3 line 1)
-    state0 = init_sparse_state(jnp.zeros((N, m), jnp.float32), E)
+    state0 = init_sparse_state(jnp.zeros((N, m), jnp.float32), E,
+                               policy=policy)
     # loop invariants of the fixed edge index, hoisted out of the scan
     d_out = _out_degree(rt.src, rt.valid, N, jnp.float32)
     if graph_axis is not None:
@@ -276,7 +294,8 @@ def _social_scan_core(
     share = 1.0 / (d_out + 1.0)
 
     # the trajectory store emits every belief through ys, so only the other
-    # stores need the final mu threaded through the carry
+    # stores need the final mu threaded through the carry (storage dtype —
+    # under a bf16 policy no fp32 (N, m) value may persist across rounds)
     carry_mu = store != "trajectory"
 
     def body(carry, t):
@@ -295,14 +314,17 @@ def _social_scan_core(
             )
         st = sparse_pushsum_step(
             state, mask, rt.src, rt.dst, rt.valid, backend, share=share,
-            graph_axis=graph_axis,
+            graph_axis=graph_axis, dst_sorted=dst_sorted, policy=policy,
+            halo=halo, n_shards=n_shards,
         )
         # --- innovation + belief (lines 13-16), one fused pass ---
         sk = jax.random.fold_in(sig_key, social_stream_fold(t, STREAM_SIGNAL))
         u = jax.random.uniform(sk, (N,))
-        z, mu = innovation_step(st.z, st.m, u, cdf, log_tables, backend)
+        z, mu = innovation_step(st.z, st.m, u, cdf, log_tables, backend,
+                                accum_dtype=accum_name)
         # --- PS fusion every Γ (lines 17-22), applied post-innovation ---
-        z_f, m_f = hps_fusion(z, st.m, rt.rep_mask, M)
+        z_f, m_f = hps_fusion(z, st.m, rt.rep_mask, M,
+                              accum_dtype=accum_name)
         do_fusion = (t + 1) % rt.gamma == 0
         new = st._replace(
             z=jnp.where(do_fusion, z_f, z),
@@ -317,9 +339,9 @@ def _social_scan_core(
             ys = wrong.max()          # () worst wrong-hypothesis log ratio
         else:
             ys = None
-        return ((new, mu) if carry_mu else (new,)), ys
+        return ((new, mu.astype(st_dt)) if carry_mu else (new,)), ys
 
-    carry0 = ((state0, jnp.zeros((N, m), jnp.float32)) if carry_mu
+    carry0 = ((state0, jnp.zeros((N, m), st_dt)) if carry_mu
               else (state0,))
     (final, *rest), ys = jax.lax.scan(
         body, carry0, jnp.arange(T, dtype=jnp.int32)
@@ -328,6 +350,8 @@ def _social_scan_core(
         log_mu = jnp.log(jnp.maximum(ys, _MU_FLOOR))
         return final, (ys, log_mu - log_mu[:, :, truth : truth + 1])
     mu_fin = rest[0]
+    if mu_fin.dtype != jnp.float32:
+        mu_fin = mu_fin.astype(jnp.float32)   # diagnostics stay full width
     if store == "log_ratio":
         return final, (mu_fin, ys)
     log_mu = jnp.log(jnp.maximum(mu_fin, _MU_FLOOR))
@@ -339,7 +363,7 @@ def _social_scan_core(
 _social_compiled = functools.partial(
     jax.jit,
     static_argnames=("truth", "M", "T", "store", "backend", "graph_axis",
-                     "n_shards"),
+                     "n_shards", "policy", "dst_sorted", "halo"),
 )(_social_scan_core)
 register_statics_cache("social.jit", _social_compiled._cache_size)
 
@@ -354,6 +378,8 @@ def run_social_runtime(
     *,
     backend: str = "auto",
     store: str = "trajectory",
+    policy: Policy | str | None = None,
+    dst_sorted: bool = False,
 ) -> SocialLearningResult:
     """Run Algorithm 3 on a prebuilt :class:`SocialRuntime`.
 
@@ -362,7 +388,9 @@ def run_social_runtime(
     convenience wrapper. ``signal_seed`` defaults to ``seed`` — the two
     streams stay independent either way thanks to the disjoint fold-in
     domains, and the batched sweeps drive both streams from one
-    per-scenario seed.
+    per-scenario seed. ``dst_sorted`` defaults to False because a
+    user-built runtime may carry any edge order; the config-driven wrappers
+    pass True (``HPSConfig.edge_index()`` is always dst-sorted).
     """
     if store not in SOCIAL_STORES:
         raise ValueError(f"store must be one of {SOCIAL_STORES}, got {store!r}")
@@ -378,6 +406,8 @@ def run_social_runtime(
         T=T,
         store=store,
         backend=backend,
+        policy=None if policy is None else resolve_policy(policy),
+        dst_sorted=dst_sorted,
     )
     return SocialLearningResult(
         beliefs=beliefs, final_state=final, log_ratio=log_ratio
@@ -393,6 +423,7 @@ def run_social_learning(
     *,
     backend: str = "auto",
     store: str = "trajectory",
+    policy: Policy | str | None = None,
 ) -> SocialLearningResult:
     """Run Algorithm 3 for T iterations (single scenario).
 
@@ -403,11 +434,13 @@ def run_social_learning(
     signal_seed) pair — including equal values — yields independent masks
     and signals. ``backend`` selects the consensus + innovation lowerings
     (module docstring); ``store`` what the scan materializes
-    (:class:`SocialLearningResult`).
+    (:class:`SocialLearningResult`); ``policy`` the storage/compute/accum
+    dtype split (:mod:`repro.core.precision`).
     """
     return run_social_runtime(
         model, make_social_runtime(cfg), cfg.topo.M, T,
         seed=seed, signal_seed=signal_seed, backend=backend, store=store,
+        policy=policy, dst_sorted=True,
     )
 
 

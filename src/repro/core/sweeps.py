@@ -75,6 +75,7 @@ from .byzantine import (
     make_byzantine_scan,
 )
 from .graphs import EdgeList, EdgeShards, partition_edge_list
+from .precision import Policy, resolve_policy
 from .pushsum import (
     _out_degree,
     init_sparse_state,
@@ -101,6 +102,9 @@ __all__ = [
     "ByzantineGridResult",
     "HPSSweepResult",
     "SocialSweepResult",
+    "CacheHandle",
+    "CacheInfo",
+    "cache_registry",
     "run_pushsum_sweep",
     "run_byzantine_sweep",
     "run_byzantine_grid",
@@ -166,7 +170,8 @@ def _scenario_grid(n_graphs: int, drop_probs, seeds):
     return g.ravel(), d.ravel(), s.ravel()
 
 
-def _sweep_body(w, src_b, dst_b, valid_b, drop_b, seed_b, *, T, B, backend):
+def _sweep_body(w, src_b, dst_b, valid_b, drop_b, seed_b, *, T, B, backend,
+                policy=None, dst_sorted=False):
     """Vmapped scenario batch: the shared traced program of both the
     single-device and the shard_map-per-device sweep paths."""
     E = src_b.shape[1]
@@ -175,11 +180,14 @@ def _sweep_body(w, src_b, dst_b, valid_b, drop_b, seed_b, *, T, B, backend):
 
     def single(src, dst, valid, drop, seed):
         key = jax.random.PRNGKey(seed)
-        state0 = init_sparse_state(w, E)
+        state0 = init_sparse_state(w, E, policy=policy)
 
         def body(state, t):
             mask = step_edge_mask(key, t, E, drop, B)
-            new = sparse_pushsum_step(state, mask, src, dst, valid, backend)
+            new = sparse_pushsum_step(
+                state, mask, src, dst, valid, backend,
+                dst_sorted=dst_sorted, policy=policy,
+            )
             err = jnp.abs(sparse_ratios(new) - target).max()
             return new, err
 
@@ -195,12 +203,13 @@ def _sweep_body(w, src_b, dst_b, valid_b, drop_b, seed_b, *, T, B, backend):
 # Module-level jit so repeated sweeps with the same shapes/statics hit the
 # compilation cache instead of retracing a fresh closure per call.
 _sweep_compiled = functools.partial(
-    jax.jit, static_argnames=("T", "B", "backend")
+    jax.jit, static_argnames=("T", "B", "backend", "policy", "dst_sorted")
 )(_sweep_body)
 
 
 @functools.lru_cache(maxsize=None)
-def _sweep_sharded(mesh: Mesh, data_axis: str, T: int, B: int, backend: str):
+def _sweep_sharded(mesh: Mesh, data_axis: str, T: int, B: int, backend: str,
+                   policy: Policy | None = None, dst_sorted: bool = False):
     """Jitted shard_map sweep for one (mesh, axis, statics) combo: the
     scenario axis of every batched argument is split over ``data_axis``,
     one contiguous scenario block per device, and each device runs the
@@ -209,7 +218,8 @@ def _sweep_sharded(mesh: Mesh, data_axis: str, T: int, B: int, backend: str):
     retrace-free behaviour."""
     from repro.launch import compat
 
-    body = functools.partial(_sweep_body, T=T, B=B, backend=backend)
+    body = functools.partial(_sweep_body, T=T, B=B, backend=backend,
+                             policy=policy, dst_sorted=dst_sorted)
     sharded = compat.shard_map(
         body,
         mesh=mesh,
@@ -235,7 +245,8 @@ def _sweep_sharded(mesh: Mesh, data_axis: str, T: int, B: int, backend: str):
     caches=("pushsum.sweep2d-jit",),
 )
 def _sweep_edge_sharded_body(w, src_sh, dst_sh, valid_sh, drop_b, seed_b, *,
-                             T, B, backend, graph_axis, n_shards):
+                             T, B, backend, graph_axis, n_shards,
+                             policy=None, halo="psum"):
     """Per-device scenario batch of the edge-partitioned (2-D mesh) sweep.
 
     Runs under ``shard_map`` over (``data_axis``, ``graph_axis``) — or under
@@ -259,7 +270,7 @@ def _sweep_edge_sharded_body(w, src_sh, dst_sh, valid_sh, drop_b, seed_b, *,
 
     def single(src, dst, valid, drop, seed):
         key = jax.random.PRNGKey(seed)
-        state0 = init_sparse_state(w, e_shard)
+        state0 = init_sparse_state(w, e_shard, policy=policy)
         # loop invariant: global out-degree = psum of shard-local counts
         d_out = jax.lax.psum(
             _out_degree(src, valid, n, w.dtype), graph_axis
@@ -274,6 +285,7 @@ def _sweep_edge_sharded_body(w, src_sh, dst_sh, valid_sh, drop_b, seed_b, *,
             new = sparse_pushsum_step(
                 state, mask, src, dst, valid, backend,
                 share=share, graph_axis=graph_axis, dst_sorted=True,
+                policy=policy, halo=halo, n_shards=n_shards,
             )
             err = jnp.abs(sparse_ratios(new) - target).max()
             return new, err
@@ -292,7 +304,8 @@ def _sweep_edge_sharded_body(w, src_sh, dst_sh, valid_sh, drop_b, seed_b, *,
 
 
 def _sweep2d_emulated(w, src_k, dst_k, valid_k, drop_b, seed_b, *,
-                      T, B, backend, graph_axis, n_shards):
+                      T, B, backend, graph_axis, n_shards,
+                      policy=None, halo="psum"):
     """Single-device oracle of the 2-D mesh program: ``vmap(axis_name=)``
     over the shard axis of the same per-device body, so every collective
     resolves identically. The psum of S operands lowers to the same
@@ -304,6 +317,7 @@ def _sweep2d_emulated(w, src_k, dst_k, valid_k, drop_b, seed_b, *,
             _sweep_edge_sharded_body,
             T=T, B=B, backend=backend,
             graph_axis=graph_axis, n_shards=n_shards,
+            policy=policy, halo=halo,
         ),
         in_axes=(None, 1, 1, 1, None, None),
         out_axes=0,
@@ -314,13 +328,15 @@ def _sweep2d_emulated(w, src_k, dst_k, valid_k, drop_b, seed_b, *,
 
 _sweep2d_compiled = functools.partial(
     jax.jit,
-    static_argnames=("T", "B", "backend", "graph_axis", "n_shards"),
+    static_argnames=("T", "B", "backend", "graph_axis", "n_shards",
+                     "policy", "halo"),
 )(_sweep2d_emulated)
 
 
 @functools.lru_cache(maxsize=None)
 def _sweep_sharded_2d(mesh: Mesh, data_axis: str, graph_axis: str,
-                      T: int, B: int, backend: str):
+                      T: int, B: int, backend: str,
+                      policy: Policy | None = None, halo: str = "psum"):
     """Jitted 2-D (data x graph) shard_map sweep: scenarios split over
     ``data_axis`` exactly as in :func:`_sweep_sharded`, while the edge
     arrays' shard axis splits over ``graph_axis`` — one edge shard per
@@ -334,6 +350,7 @@ def _sweep_sharded_2d(mesh: Mesh, data_axis: str, graph_axis: str,
     body = functools.partial(
         _sweep_edge_sharded_body, T=T, B=B, backend=backend,
         graph_axis=graph_axis, n_shards=n_shards,
+        policy=policy, halo=halo,
     )
     sharded = compat.shard_map(
         body,
@@ -361,6 +378,9 @@ def run_pushsum_sweep(
     data_axis: str = "data",
     graph_axis: str = "graph",
     graph_shards: int | None = None,
+    policy: Policy | str | None = None,
+    dst_sorted: bool = False,
+    halo: str = "psum",
 ) -> PushSumSweepResult:
     """Run the full scenario grid in ONE jitted, vmapped scan.
 
@@ -394,8 +414,21 @@ def run_pushsum_sweep(
     exceeds E the padded mask draw re-indexes edge slots, so compare
     against the padded list, not the original (threefry bits have no
     prefix property).
+
+    ``policy`` selects the precision policy
+    (:mod:`repro.core.precision`; name, :class:`Policy`, or ``None`` for
+    the dtype-transparent fp32 default — bit-identical to the pre-policy
+    sweeps). ``dst_sorted`` asserts the edge lists are dst-sorted so the
+    delivery segment-sums skip the scatter sort (the edge-partitioned
+    mode always sorts per shard and ignores this flag). ``halo`` picks
+    the graph-axis combine of the edge-partitioned mode:
+    ``"psum"`` (default, bit-identical to the single-device oracle) or
+    ``"scatter"``, the psum_scatter/all_gather form whose gather leg
+    moves storage-width bytes (see
+    :func:`repro.analysis.roofline.pushsum_halo_wire_bytes`).
     """
     w = jnp.asarray(w)
+    pol = None if policy is None else resolve_policy(policy)
     if graph_shards is not None or isinstance(el, EdgeShards):
         shards = (el if isinstance(el, EdgeShards)
                   else partition_edge_list(el, graph_shards))
@@ -431,10 +464,11 @@ def run_pushsum_sweep(
             errs, finals, gaps = _sweep2d_compiled(
                 *args, T=T, B=B, backend=backend,
                 graph_axis=graph_axis, n_shards=S,
+                policy=pol, halo=halo,
             )
         else:
             errs, finals, gaps = _sweep_sharded_2d(
-                mesh, data_axis, graph_axis, T, B, backend
+                mesh, data_axis, graph_axis, T, B, backend, pol, halo
             )(*args)
         return PushSumSweepResult(
             err=errs[:K], final_ratio=finals[:K], mass_gap=gaps[:K],
@@ -464,10 +498,13 @@ def run_pushsum_sweep(
     args = (w, jnp.asarray(src[gi]), jnp.asarray(dst[gi]),
             jnp.asarray(valid[gi]), drop_b, seed_b)
     if mesh is None:
-        errs, finals, gaps = _sweep_compiled(*args, T=T, B=B, backend=backend)
+        errs, finals, gaps = _sweep_compiled(
+            *args, T=T, B=B, backend=backend,
+            policy=pol, dst_sorted=dst_sorted,
+        )
     else:
         errs, finals, gaps = _sweep_sharded(
-            mesh, data_axis, T, B, backend
+            mesh, data_axis, T, B, backend, pol, dst_sorted
         )(*args)
     return PushSumSweepResult(
         err=errs[:K], final_ratio=finals[:K], mass_gap=gaps[:K],
@@ -491,14 +528,14 @@ _BYZ_GRID_COMPILED = _LRUCache(maxsize=8)
 def _byz_sweep_key(
     model: SignalModel, cfg: ByzantineConfig, T: int,
     mode: str = "pairwise", core: str = "sparse", backend: str = "auto",
-    store: str = "trajectory",
+    store: str = "trajectory", policy: Policy | None = None,
 ) -> tuple:
     topo = cfg.topo
     return (
         np.asarray(model.tables).tobytes(), model.truth,
         topo.adj.tobytes(), topo.sizes, topo.offsets, topo.reps,
         cfg.F, cfg.byz, cfg.gamma_period, cfg.attack, T,
-        mode, core, backend, store,
+        mode, core, backend, store, policy,
     )
 
 
@@ -513,6 +550,7 @@ def run_byzantine_sweep(
     core: str = "sparse",
     backend: str = "auto",
     store: str = "trajectory",
+    policy: Policy | str | None = None,
 ) -> dict[str, ByzantineResult]:
     """Algorithm 2 over a seed batch per attack type.
 
@@ -533,17 +571,19 @@ def run_byzantine_sweep(
     and the jitted scan is reused from ``_BYZ_COMPILED`` (``Attack`` is a
     frozen dataclass, so the same attack object keys the same entry).
     """
+    pol = None if policy is None else resolve_policy(policy)
     seeds_j = jnp.asarray(np.asarray(seeds, np.uint32))
     keys = jax.vmap(jax.random.PRNGKey)(seeds_j)
     out: dict[str, ByzantineResult] = {}
     for atk in attacks if attacks is not None else [cfg.attack]:
         c = dataclasses.replace(cfg, attack=atk)
-        cache_key = _byz_sweep_key(model, c, T, mode, core, backend, store)
+        cache_key = _byz_sweep_key(model, c, T, mode, core, backend, store,
+                                   pol)
         fn = _BYZ_COMPILED.get(cache_key)
         if fn is None:
             run = make_byzantine_scan(
                 model, c, T, mode=mode, core=core, backend=backend,
-                store=store,
+                store=store, policy=pol,
             )
             fn = _BYZ_COMPILED[cache_key] = jax.jit(jax.vmap(run))
         out[atk.name] = fn(keys)
@@ -583,11 +623,11 @@ def _cfgs_fingerprint(model, cfgs, atk) -> tuple:
 
 
 def _byz_grid_key(model, cfgs, T, atk, mode, backend, store,
-                  mesh, data_axis) -> tuple:
+                  mesh, data_axis, policy=None) -> tuple:
     """``backend`` must be the *effective* lowering (post ``resolve_backend``
     and the dynamic-F downgrade), so the key names the traced program."""
     return _cfgs_fingerprint(model, cfgs, atk) + (
-        T, mode, backend, store, mesh, data_axis,
+        T, mode, backend, store, mesh, data_axis, policy,
     )
 
 
@@ -610,6 +650,7 @@ def run_byzantine_grid(
     store: str = "decisions",
     mesh: Mesh | None = None,
     data_axis: str = "data",
+    policy: Policy | str | None = None,
 ) -> ByzantineGridResult:
     """Batched (topology, F) x seed grid as ONE compiled vmapped scan.
 
@@ -695,14 +736,16 @@ def run_byzantine_grid(
             gi = np.concatenate([gi, gi[fill]])
             sd = np.concatenate([sd, sd[fill]])
 
+    pol = None if policy is None else resolve_policy(policy)
     cache_key = _byz_grid_key(model, cfgs, T, atk, mode, backend, store,
-                              mesh, data_axis)
+                              mesh, data_axis, pol)
     fn = _BYZ_GRID_COMPILED.get(cache_key)
     if fn is None:
         single = functools.partial(
             _scan_core,
             gossip=functools.partial(
-                _sparse_gossip, attack=atk, mode=mode, backend=backend
+                _sparse_gossip, attack=atk, mode=mode, backend=backend,
+                accum_dtype=None if pol is None else pol.accum,
             ),
             log_tables=model.log_tables().astype(jnp.float32),
             truth_probs=model.tables[:, model.truth, :].astype(jnp.float32),
@@ -713,6 +756,7 @@ def run_byzantine_grid(
             static_F=static_F,
             extra_reps=None,
             n_reps=M,
+            policy=pol,
         )
         batched = jax.vmap(single)
         if mesh is not None:
@@ -780,17 +824,21 @@ _SOCIAL_COMPILED = _LRUCache(maxsize=16)
 _SOCIAL_RUNTIME_CACHE = _LRUCache(maxsize=16)
 
 
-def _social_sweep_fn(mesh, data_axis, *, truth, M, T, store, backend):
-    key = (mesh, data_axis, truth, M, T, store, backend)
+def _social_sweep_fn(mesh, data_axis, *, truth, M, T, store, backend,
+                     policy=None):
+    key = (mesh, data_axis, truth, M, T, store, backend, policy)
     fn = _SOCIAL_COMPILED.get(key)
     if fn is not None:
         return fn
 
     def body(keys, rt_batch, log_tables, cdf):
         def single(k, rt):
+            # grid runtimes come from make_social_runtime: dst-sorted
+            # edge index, e_max pad rows at dst = N - 1 keep it sorted
             _, outs = _social_scan_core(
                 k, k, rt, log_tables, cdf,
                 truth=truth, M=M, T=T, store=store, backend=backend,
+                policy=policy, dst_sorted=True,
             )
             return outs
 
@@ -842,6 +890,7 @@ def run_social_grid(
     backend: str = "auto",
     mesh: Mesh | None = None,
     data_axis: str = "data",
+    policy: Policy | str | None = None,
 ) -> SocialSweepResult:
     """Batched (topology, drop_prob, Gamma) x seed grid as ONE compiled
     vmapped scan of the fused Algorithm 3 engine.
@@ -920,6 +969,7 @@ def run_social_grid(
     fn = _social_sweep_fn(
         mesh, data_axis, truth=model.truth, M=M, T=T, store=store,
         backend=resolve_backend(backend),
+        policy=None if policy is None else resolve_policy(policy),
     )
     keys = jax.vmap(jax.random.PRNGKey)(jnp.asarray(sd))
     rt_batch = jax.tree_util.tree_map(lambda x: x[jnp.asarray(gi)], stacked)
@@ -951,6 +1001,7 @@ def run_social_sweep(
     backend: str = "auto",
     mesh: Mesh | None = None,
     data_axis: str = "data",
+    policy: Policy | str | None = None,
 ) -> SocialSweepResult:
     """Cross-product (topology x drop_prob x Gamma x seed) Algorithm 3 sweep.
 
@@ -979,6 +1030,7 @@ def run_social_sweep(
     return run_social_grid(
         model, expanded, T, seeds,
         store=store, backend=backend, mesh=mesh, data_axis=data_axis,
+        policy=policy,
     )
 
 
@@ -1024,16 +1076,19 @@ _HPS_COMPILED = _LRUCache(maxsize=16)
 _HPS_RUNTIME_CACHE = _LRUCache(maxsize=16)
 
 
-def _hps_sweep_fn(mesh, data_axis, *, T, store, backend):
-    key = (mesh, data_axis, T, store, backend)
+def _hps_sweep_fn(mesh, data_axis, *, T, store, backend, policy=None):
+    key = (mesh, data_axis, T, store, backend, policy)
     fn = _HPS_COMPILED.get(key)
     if fn is not None:
         return fn
 
     def body(keys, rt_batch, w):
         def single(k, rt):
+            # grid runtimes come from make_hps_runtime: dst-sorted edge
+            # index, e_max pad rows at dst = N - 1 keep it sorted
             _, outs = _hps_scan_core(
                 k, rt, w, T=T, store=store, backend=backend,
+                policy=policy, dst_sorted=True,
             )
             return outs
 
@@ -1069,6 +1124,7 @@ def run_hps_grid(
     backend: str = "auto",
     mesh: Mesh | None = None,
     data_axis: str = "data",
+    policy: Policy | str | None = None,
 ) -> HPSSweepResult:
     """Batched (topology, M, Gamma, drop) x seed grid as ONE compiled
     vmapped scan of the fused Algorithm 1 engine.
@@ -1137,6 +1193,7 @@ def run_hps_grid(
 
     fn = _hps_sweep_fn(
         mesh, data_axis, T=T, store=store, backend=resolve_backend(backend),
+        policy=None if policy is None else resolve_policy(policy),
     )
     keys = jax.vmap(jax.random.PRNGKey)(jnp.asarray(sd))
     rt_batch = jax.tree_util.tree_map(lambda x: x[jnp.asarray(gi)], stacked)
@@ -1165,6 +1222,7 @@ def run_hps_sweep(
     backend: str = "auto",
     mesh: Mesh | None = None,
     data_axis: str = "data",
+    policy: Policy | str | None = None,
 ) -> HPSSweepResult:
     """Cross-product (topology x M x drop_prob x Gamma x seed) HPS sweep.
 
@@ -1193,7 +1251,85 @@ def run_hps_sweep(
     return run_hps_grid(
         w, expanded, T, seeds,
         store=store, backend=backend, mesh=mesh, data_axis=data_axis,
+        policy=policy,
     )
+
+# ---------------------------------------------------------------------------
+# Cache registry: the one front door to every compiled/runtime cache the
+# sweep engines (and the jitted push-sum step) own. Tests and operational
+# tooling go through here instead of importing the private module globals —
+# the globals stay (they ARE the caches), but their names are no longer an
+# API surface.
+# ---------------------------------------------------------------------------
+
+class CacheInfo(NamedTuple):
+    """``cache_info()`` payload: entries held now / eviction bound
+    (``None`` = unbounded, e.g. the jit wrappers' own tracing caches)."""
+
+    currsize: int
+    maxsize: int | None
+
+
+class CacheHandle(NamedTuple):
+    """Uniform view of one cache: ``cache_info()`` + ``clear()``.
+
+    Wraps the three cache shapes the engines use — :class:`_LRUCache`
+    mappings, ``jax.jit`` wrappers (``_cache_size``/``clear_cache``), and
+    ``functools.lru_cache`` factories — behind one interface.
+    """
+
+    name: str
+    size_fn: object
+    max_size: int | None
+    clear_fn: object
+
+    def cache_info(self) -> CacheInfo:
+        return CacheInfo(currsize=int(self.size_fn()), maxsize=self.max_size)
+
+    def clear(self) -> None:
+        self.clear_fn()
+
+
+def cache_registry() -> dict[str, CacheHandle]:
+    """Live handles to every sweep-layer cache, keyed by the same names
+    the retrace sentinel (:mod:`repro.statics.retrace`) registers.
+
+    Built fresh per call (handles close over the module globals, so a
+    handle stays valid across clears); ``clear()`` empties the underlying
+    cache — compiled executables, stacked runtimes, or jit tracing caches —
+    which is what retrace-sensitive tests use to reset between cases.
+    """
+    from .pushsum import _STEP_JIT, _step_jit_entries
+
+    def _lru(name: str, c: _LRUCache) -> CacheHandle:
+        return CacheHandle(name, lambda: len(c), c.maxsize, c.clear)
+
+    def _jit(name: str, f) -> CacheHandle:
+        return CacheHandle(name, f._cache_size, None, f.clear_cache)
+
+    def _factory(name: str, f) -> CacheHandle:
+        return CacheHandle(
+            name, lambda: f.cache_info().currsize, None, f.cache_clear
+        )
+
+    handles = [
+        _jit("pushsum.sweep-jit", _sweep_compiled),
+        _jit("pushsum.sweep2d-jit", _sweep2d_compiled),
+        _factory("pushsum.sweep-sharded", _sweep_sharded),
+        _factory("pushsum.sweep2d-sharded", _sweep_sharded_2d),
+        CacheHandle(
+            "pushsum.step-jit", _step_jit_entries, None, _STEP_JIT.clear
+        ),
+        _lru("byz.compiled", _BYZ_COMPILED),
+        _lru("byz.grid", _BYZ_GRID_COMPILED),
+        _lru("byz.runtime", _BYZ_RUNTIME_CACHE),
+        _lru("social.compiled", _SOCIAL_COMPILED),
+        _lru("social.runtime", _SOCIAL_RUNTIME_CACHE),
+        _lru("hps.compiled", _HPS_COMPILED),
+        _lru("hps.runtime", _HPS_RUNTIME_CACHE),
+    ]
+    return {h.name: h for h in handles}
+
 
 # ---------------------------------------------------------------------------
 # Retrace-sentinel registrations: every compiled cache this module owns is

@@ -85,7 +85,9 @@ def _kernel(r_ref, idx_ref, valid_ref, bmsg_ref, bnbr_ref,
     tsum_ref[...] = tsum.astype(tsum_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("F", "block_n", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("F", "block_n", "interpret", "accum_dtype")
+)
 def trim_gather_pallas(
     r: jnp.ndarray,         # (N, P) current statistics
     nbr_idx: jnp.ndarray,   # (N, deg_max) int32
@@ -96,15 +98,20 @@ def trim_gather_pallas(
     *,
     block_n: int = 1024,
     interpret: bool | None = None,
+    accum_dtype: str | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Fused trim-gather -> ``(trimmed_sum (N, P), kept (N,))``.
 
     Matches :func:`repro.kernels.byz_trim.ref.trim_gather_ref` to fp32
     reduction order. N is padded to a multiple of ``block_n`` with
-    all-invalid receiver rows; the pad rows are sliced off.
+    all-invalid receiver rows; the pad rows are sliced off. The kernel
+    already runs its trim/sum in fp32 internally; ``accum_dtype`` names the
+    dtype the survivor sum is *emitted* in (the precision policy's accum
+    slot) — ``None`` keeps ``r.dtype``, the pre-policy program.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    acc = r.dtype if accum_dtype is None else jnp.dtype(accum_dtype)
     n, p = r.shape
     dm = nbr_idx.shape[1]
     block_n = min(block_n, max(n, 1))
@@ -131,8 +138,8 @@ def trim_gather_pallas(
             pl.BlockSpec((block_n,), lambda i: (i,)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((n_pad, p), r.dtype),
-            jax.ShapeDtypeStruct((n_pad,), r.dtype),
+            jax.ShapeDtypeStruct((n_pad, p), acc),
+            jax.ShapeDtypeStruct((n_pad,), acc),
         ],
         interpret=interpret,
     )(r, nbr_idx, nbr_valid, byz_msgs, byz_nbr)

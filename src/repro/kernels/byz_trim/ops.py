@@ -36,13 +36,21 @@ def trim_gather(
     *,
     block_n: int = 1024,
     interpret: bool | None = None,
+    indices_sorted: bool = False,
+    accum_dtype: str | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Fused gather + Byzantine substitution + 2F trim; see package docstring.
 
-    Returns ``(trimmed_sum (N, P), kept (N,))``.
+    Returns ``(trimmed_sum (N, P), kept (N,))``. ``indices_sorted=True``
+    promises the flattened ``nbr_idx`` traversal is non-decreasing (only the
+    single-row pool layout of ``ps_trimmed_pool`` qualifies — general
+    neighbor lists do not). ``accum_dtype`` names the survivor-sum dtype
+    (the precision policy's accum slot); ``None`` keeps ``r.dtype``.
     """
     if resolve_backend(backend) == "xla":
-        return trim_gather_ref(r, nbr_idx, nbr_valid, byz_msgs, byz_nbr, F)
+        return trim_gather_ref(r, nbr_idx, nbr_valid, byz_msgs, byz_nbr, F,
+                               indices_sorted=indices_sorted,
+                               accum_dtype=accum_dtype)
     if not isinstance(F, int):
         raise ValueError(
             "backend='pallas' needs a static int F (the extraction loop "
@@ -50,7 +58,7 @@ def trim_gather(
         )
     return trim_gather_pallas(
         r, nbr_idx, nbr_valid, byz_msgs, byz_nbr, F,
-        block_n=block_n, interpret=interpret,
+        block_n=block_n, interpret=interpret, accum_dtype=accum_dtype,
     )
 
 
@@ -62,6 +70,9 @@ def trim_gather_pairs(
     byz_nbr: jnp.ndarray,
     F,
     backend: str = "auto",
+    *,
+    indices_sorted: bool = False,
+    accum_dtype: str | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Pair-shaped wrapper: flattens the trailing pair axes into the kernel's
     coordinate axis and restores them on the way out."""
@@ -71,5 +82,6 @@ def trim_gather_pairs(
     tsum, kept = trim_gather(
         r.reshape(n, -1), nbr_idx, nbr_valid,
         byz_msgs.reshape(n, dm, -1), byz_nbr, F, backend,
+        indices_sorted=indices_sorted, accum_dtype=accum_dtype,
     )
     return tsum.reshape((n,) + pair), kept

@@ -34,16 +34,34 @@ def trim_gather_ref(
     byz_msgs: jnp.ndarray,  # (N, deg_max, P) attack values per slot
     byz_nbr: jnp.ndarray,   # (N, deg_max) bool — slot's sender is Byzantine
     F,
+    *,
+    indices_sorted: bool = False,
+    accum_dtype: str | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Returns ``(trimmed_sum (N, P), kept (N,) float)``."""
+    """Returns ``(trimmed_sum (N, P), kept (N,) float)``.
+
+    ``indices_sorted=True`` promises the flattened ``nbr_idx`` traversal is
+    non-decreasing — true for the single-row pool layout of
+    :func:`repro.core.hps.ps_trimmed_pool` (an ``arange``), NOT for general
+    per-receiver neighbor lists — letting the gather lowering skip its sort
+    bookkeeping. The gather always runs under ``promise_in_bounds``:
+    neighbor slots are constructed in-range (padding slots carry index 0),
+    so the out-of-bounds fill machinery of the default indexing mode is
+    dead weight. ``accum_dtype`` names the dtype of the survivor sum and
+    kept count (the precision policy's accum slot); ``None`` keeps
+    ``r.dtype`` — the pre-policy program, byte-identical for fp32 inputs.
+    """
+    ad = r.dtype if accum_dtype is None else jnp.dtype(accum_dtype)
     big = jnp.asarray(jnp.finfo(r.dtype).max / 4, r.dtype)
-    gathered = r[nbr_idx]                                  # (N, deg_max, P)
+    gathered = r.at[nbr_idx].get(
+        mode="promise_in_bounds", indices_are_sorted=indices_sorted
+    )                                                      # (N, deg_max, P)
     vals = jnp.where(byz_nbr[:, :, None], byz_msgs, gathered)
     masked = jnp.where(nbr_valid[:, :, None], vals, big)   # pads sort high
     s = jnp.sort(masked, axis=1)
     deg = nbr_valid.sum(axis=1).astype(jnp.int32)          # (N,)
     ranks = jnp.arange(masked.shape[1])[None, :, None]
     keep = (ranks >= F) & (ranks < (deg[:, None, None] - F))
-    tsum = (s * keep.astype(s.dtype)).sum(axis=1)
-    kept = jnp.maximum(deg - 2 * F, 0).astype(r.dtype)
+    tsum = (s.astype(ad) * keep.astype(ad)).sum(axis=1)
+    kept = jnp.maximum(deg - 2 * F, 0).astype(ad)
     return tsum, kept

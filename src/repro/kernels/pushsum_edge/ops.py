@@ -36,16 +36,22 @@ def edge_scatter(
     block_e: int = 4096,
     interpret: bool | None = None,
     indices_sorted: bool = False,
+    accum_dtype: str | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Fused mask-latch + per-receiver increment sum; see package docstring.
 
     Returns ``(rho_new (E, D), recv (N, D))``. ``indices_sorted=True``
     promises a dst-sorted edge index, letting the XLA lowering drop one
     argsort (the Pallas kernel already streams in dst order and ignores it).
+    ``accum_dtype`` names the dtype of the ``recv`` reduction (the
+    precision policy's accum slot — see :mod:`repro.core.precision`);
+    ``None`` keeps the input dtype.
     """
     if resolve_backend(backend) == "xla":
         return edge_scatter_ref(sigma, rho, live, src, dst,
-                                indices_sorted=indices_sorted)
+                                indices_sorted=indices_sorted,
+                                accum_dtype=accum_dtype)
     return edge_scatter_pallas(
-        sigma, rho, live, src, dst, block_e=block_e, interpret=interpret
+        sigma, rho, live, src, dst, block_e=block_e, interpret=interpret,
+        accum_dtype=accum_dtype,
     )

@@ -95,7 +95,10 @@ def _kernel(sigma_ref, rho_ref, live_ref, src_ref, dst_ref,
     rho_out_ref[...] = rho_new
 
     # --- per-receiver segment sum of increments via sorted runs ---
-    delta = rho_new - rho                       # zero on dead/padding edges
+    # the accumulator dtype is recv's (the policy's accum slot): latched
+    # state streams at storage precision, the reduction runs full-precision
+    acc = recv_ref.dtype
+    delta = rho_new.astype(acc) - rho.astype(acc)  # zero on dead/pad edges
     change = dst[1:] != dst[:-1]                # (BE-1,) run boundaries
     one = jnp.ones((1,), jnp.bool_)
     is_end = jnp.concatenate([change, one])     # last edge of each run
@@ -105,7 +108,9 @@ def _kernel(sigma_ref, rho_ref, live_ref, src_ref, dst_ref,
     recv_ref[...] = recv_ref[...].at[dst].add(upd)
 
 
-@functools.partial(jax.jit, static_argnames=("block_e", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("block_e", "interpret", "accum_dtype")
+)
 def edge_scatter_pallas(
     sigma: jnp.ndarray,   # (N, D) staged cumulative send per node
     rho: jnp.ndarray,     # (E, D) last heard cumulative per edge
@@ -115,15 +120,20 @@ def edge_scatter_pallas(
     *,
     block_e: int = 4096,
     interpret: bool | None = None,
+    accum_dtype: str | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Fused edge scatter -> ``(rho_new (E, D), recv (N, D))``.
 
     Matches :func:`repro.kernels.pushsum_edge.ref.edge_scatter_ref` to fp32
     reduction order. E is padded to a multiple of ``block_e`` with inert
-    edges; the pad rows are sliced off ``rho_new``.
+    edges; the pad rows are sliced off ``rho_new``. ``accum_dtype`` names
+    the dtype of the ``recv`` accumulator (the precision policy's accum
+    slot; casts happen at the kernel block boundary) — ``None`` keeps the
+    input dtype, the pre-policy program.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    acc = sigma.dtype if accum_dtype is None else jnp.dtype(accum_dtype)
     n, D = sigma.shape
     E = rho.shape[0]
     pad = (-E) % block_e
@@ -150,7 +160,7 @@ def edge_scatter_pallas(
         ],
         out_shape=[
             jax.ShapeDtypeStruct((Ep, D), rho.dtype),
-            jax.ShapeDtypeStruct((n, D), sigma.dtype),
+            jax.ShapeDtypeStruct((n, D), acc),
         ],
         interpret=interpret,
     )(sigma, rho, live, src, dst)

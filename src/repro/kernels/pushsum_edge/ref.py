@@ -26,14 +26,24 @@ def edge_scatter_ref(
     dst: jnp.ndarray,     # (E,) int32
     *,
     indices_sorted: bool = False,
+    accum_dtype: str | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Returns ``(rho_new (E, D), recv (N, D))``. Any edge order is legal;
     ``indices_sorted=True`` asserts ``dst`` is non-decreasing (the
     :func:`repro.core.graphs.sort_by_dst` / ``partition_edge_list`` layout)
-    so the segment reduction skips its internal argsort."""
+    so the segment reduction skips its internal argsort.
+
+    ``accum_dtype`` names the dtype of the increment reduction — the
+    precision-policy split (:mod:`repro.core.precision`): the latched
+    ``rho_new`` stays in the storage dtype (the bandwidth knob) while the
+    per-receiver segment sum runs full-precision. ``None`` keeps the
+    input dtype (the pre-policy program, byte-identical for fp32 inputs
+    because a same-dtype cast is a traced no-op)."""
     n = sigma.shape[0]
+    ad = rho.dtype if accum_dtype is None else jnp.dtype(accum_dtype)
     rho_new = jnp.where(live[:, None], sigma[src], rho)
     recv = jax.ops.segment_sum(
-        rho_new - rho, dst, num_segments=n, indices_are_sorted=indices_sorted
+        rho_new.astype(ad) - rho.astype(ad), dst, num_segments=n,
+        indices_are_sorted=indices_sorted,
     )
     return rho_new, recv

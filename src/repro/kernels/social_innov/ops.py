@@ -34,13 +34,18 @@ def innovation_step(
     *,
     block_n: int = 4096,
     interpret: bool | None = None,
+    accum_dtype: str | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Fused sample + gather + accumulate + belief; see package docstring.
 
-    Returns ``(z_new (N, m), mu (N, m))``.
+    Returns ``(z_new (N, m), mu (N, m))`` — ``z_new`` in ``z.dtype`` (the
+    persistent value), ``mu`` in ``accum_dtype`` (the precision policy's
+    accum slot; ``None`` keeps ``z.dtype``).
     """
     if resolve_backend(backend) == "xla":
-        return innovation_ref(z, mass, u, cdf, log_tables)
+        return innovation_ref(z, mass, u, cdf, log_tables,
+                              accum_dtype=accum_dtype)
     return innovation_pallas(
-        z, mass, u, cdf, log_tables, block_n=block_n, interpret=interpret
+        z, mass, u, cdf, log_tables, block_n=block_n, interpret=interpret,
+        accum_dtype=accum_dtype,
     )

@@ -33,15 +33,33 @@ def innovation_ref(
     u: jnp.ndarray,           # (N,)  uniforms for this iteration
     cdf: jnp.ndarray,         # (N, S) inclusive cumsum of truth-row probs
     log_tables: jnp.ndarray,  # (N, m, S) log l_j(s | theta_k)
+    *,
+    accum_dtype: str | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Returns ``(z_new (N, m), mu (N, m))``."""
+    """Returns ``(z_new (N, m), mu (N, m))``.
+
+    ``z_new`` is emitted in ``z.dtype`` (the persistent/storage value);
+    ``accum_dtype`` names the dtype the accumulation and belief softmax run
+    in (the precision policy's accum slot) and the dtype ``mu`` is emitted
+    in — ``None`` keeps ``z.dtype``, the pre-policy program.
+    """
+    ad = z.dtype if accum_dtype is None else jnp.dtype(accum_dtype)
     S = cdf.shape[1]
+    # inverse-CDF sample: cdf is an inclusive cumsum of non-negative probs,
+    # hence non-decreasing per row, so a binary-search lowering is legal and
+    # bit-identical to the (u > cdf) compare/reduce it replaces.
     # clamp: an fp32 cumsum can end below 1.0, so u >= cdf[:, -1] would
     # index past the alphabet (NaN gather fill poisoning z forever)
-    sig = jnp.minimum((u[:, None] > cdf).sum(axis=-1), S - 1)    # (N,) int
+    sig = jax.vmap(
+        lambda c, uu: jnp.searchsorted(c, uu, side="left")
+    )(cdf, u)
+    sig = jnp.minimum(sig, S - 1)                        # (N,) int
     loglik = jnp.take_along_axis(
         log_tables, sig[:, None, None].astype(jnp.int32), axis=2
     )[:, :, 0]                                           # (N, m)
-    z_new = z + loglik
-    mu = jax.nn.softmax(z_new / jnp.maximum(mass, 1e-30)[:, None], axis=-1)
+    z_acc = z.astype(ad) + loglik.astype(ad)
+    z_new = z_acc.astype(z.dtype)
+    mu = jax.nn.softmax(
+        z_acc / jnp.maximum(mass.astype(ad), 1e-30)[:, None], axis=-1
+    )
     return z_new, mu

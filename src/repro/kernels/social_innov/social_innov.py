@@ -55,18 +55,23 @@ def _kernel(z_ref, mass_ref, u_ref, cdf_ref, lt_ref, z_out_ref, mu_ref):
     # --- (m,) log-likelihood row gather as a one-hot contraction over S ---
     s_iota = jax.lax.broadcasted_iota(jnp.int32, lt.shape, 2)
     onehot = s_iota == sig[:, None, None]
-    loglik = jnp.where(onehot, lt, 0.0).sum(axis=-1)          # (BN, m)
+    acc = mu_ref.dtype                           # the policy accum slot
+    loglik = jnp.where(onehot, lt.astype(acc), 0.0).sum(axis=-1)  # (BN, m)
 
     # --- dual accumulation + KL-proximal belief (softmax of z/m) ---
-    z_new = z + loglik
-    z_out_ref[...] = z_new
-    ratio = z_new / jnp.maximum(mass, 1e-30)[:, None]
+    # the accumulation and softmax run in the accum slot; z_new is downcast
+    # to the persistent storage dtype on the way out
+    z_new = z.astype(acc) + loglik
+    z_out_ref[...] = z_new.astype(z_out_ref.dtype)
+    ratio = z_new / jnp.maximum(mass.astype(acc), 1e-30)[:, None]
     shifted = ratio - ratio.max(axis=-1, keepdims=True)
     e = jnp.exp(shifted)
     mu_ref[...] = e / e.sum(axis=-1, keepdims=True)
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "interpret", "accum_dtype")
+)
 def innovation_pallas(
     z: jnp.ndarray,           # (N, m) log-likelihood accumulator
     mass: jnp.ndarray,        # (N,)  push-sum mass
@@ -76,16 +81,20 @@ def innovation_pallas(
     *,
     block_n: int = 4096,
     interpret: bool | None = None,
+    accum_dtype: str | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Fused innovation step -> ``(z_new (N, m), mu (N, m))``.
 
     Matches :func:`repro.kernels.social_innov.ref.innovation_ref` to fp32
     rounding (the softmax applies the max-subtraction the XLA lowering also
     performs). N is padded to a multiple of ``block_n`` with inert rows; the
-    pad rows are sliced off.
+    pad rows are sliced off. ``z_new`` is emitted in ``z.dtype``;
+    ``accum_dtype`` names the dtype the accumulation/softmax run in and
+    ``mu`` is emitted in (``None`` keeps ``z.dtype``).
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    acc = z.dtype if accum_dtype is None else jnp.dtype(accum_dtype)
     n, m = z.shape
     S = cdf.shape[1]
     block_n = min(block_n, max(n, 1))
@@ -114,7 +123,7 @@ def innovation_pallas(
         ],
         out_shape=[
             jax.ShapeDtypeStruct((n_pad, m), z.dtype),
-            jax.ShapeDtypeStruct((n_pad, m), z.dtype),
+            jax.ShapeDtypeStruct((n_pad, m), acc),
         ],
         interpret=interpret,
     )(z, mass, u, cdf, log_tables)

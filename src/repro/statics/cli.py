@@ -7,11 +7,14 @@ Subcommands:
   subnormal-constant scan, PRNG stream-domain disjointness proofs (within
   each engine and across engines that may share one experiment seed), the
   per-trace PRNG-site lower bound, the retrace sentinel (tiny XLA runs,
-  executed twice — the second call must compile nothing), and the static
-  memory-budget validation of the committed BENCH artifacts. Exit 0 iff no
-  findings.
+  executed twice — the second call must compile nothing), the static
+  memory-budget validation of the committed BENCH artifacts, and the
+  precision-policy proofs (the donating step entry must alias every state
+  buffer in its lowered module; no engine scan may carry persistent fp32
+  per-edge/per-node state under the bf16 policy). Exit 0 iff no findings.
 * ``budget`` — print the analytic per-engine step-byte models, their
-  TPU-v5e roofline floors, and the traced-footprint accounting.
+  TPU-v5e roofline floors, the per-policy budgets (fp32 vs bf16 storage),
+  and the traced-footprint accounting.
 * ``list``   — show the registered contracts and compiled caches.
 
 A passing lint verdict is cached in ``--cache-dir`` keyed on the sha256 of
@@ -34,7 +37,7 @@ from pathlib import Path
 
 import numpy as np
 
-from . import contracts, dense, memory, retrace, streams, walk
+from . import contracts, dense, memory, precision, retrace, streams, walk
 from .dense import Finding
 
 _REPO_ROOT = Path(__file__).resolve().parents[3]
@@ -375,6 +378,83 @@ def _retrace_findings() -> list[Finding]:
     return out
 
 
+def _precision_findings() -> list[Finding]:
+    """Precision-policy proofs (trace/lower only, nothing executes):
+    donation aliasing on the step entry for both policies, and the
+    bf16-carry contract over every engine's scan."""
+    import jax
+
+    from repro.core import attacks
+    from repro.core.byzantine import ByzantineConfig, make_byzantine_scan
+    from repro.core.graphs import edge_list, make_hierarchy, \
+        random_strongly_connected
+    from repro.core.hps import HPSConfig, make_hps_runtime, run_hps
+    from repro.core.signals import make_confused_model
+    from repro.core.social import make_social_runtime, run_social_runtime
+    from repro.core.sweeps import _sweep_body
+
+    out: list[Finding] = []
+    out += precision.step_donation_findings("xla", None)
+    out += precision.step_donation_findings("xla", "bf16")
+
+    # pushsum sweep body, K=2 scenario batch, bf16 storage
+    rng = np.random.default_rng(7)
+    el = edge_list(random_strongly_connected(11, 0.3, rng))
+    w11 = rng.normal(size=(11, 3)).astype(np.float32)
+    src_b = np.broadcast_to(el.src[None], (2, el.E)).copy()
+    dst_b = np.broadcast_to(el.dst[None], (2, el.E)).copy()
+    val_b = np.ones((2, el.E), bool)
+    drop_b = np.array([0.1, 0.4], np.float32)
+    seed_b = np.array([0, 1], np.uint32)
+    closed = walk.trace(
+        lambda *a: _sweep_body(*a, T=5, B=2, backend="xla", policy="bf16"),
+        w11, src_b, dst_b, val_b, drop_b, seed_b)
+    out += precision.find_fp32_scan_state(
+        closed, {"N": 11, "d": 3, "T": 5, "E": int(el.E), "K": 2},
+        where="pushsum[policy=bf16]")
+
+    # social + hps share the [6,6,6]/[5,5,5] hierarchy fixtures
+    topo = make_hierarchy([6, 6, 6], topology="complete", seed=2)
+    model = make_confused_model(N=topo.N, m=3, truth=1, confusion=0.5,
+                                seed=0)
+    cfg = HPSConfig(topo=topo, gamma_period=4, B=2, drop_prob=0.3)
+    rt = make_social_runtime(cfg)
+    closed = walk.trace(
+        lambda rt_: run_social_runtime(
+            model, rt_, M=len(topo.sizes), T=37,
+            backend="xla", store="log_ratio", policy="bf16"),
+        rt)
+    out += precision.find_fp32_scan_state(
+        closed,
+        {"N": 18, "m": 3, "T": 37, "E": int(np.asarray(rt.src).shape[0])},
+        where="social[policy=bf16]")
+
+    topo5 = make_hierarchy([5, 5, 5], topology="complete", seed=0)
+    hcfg = HPSConfig(topo=topo5, gamma_period=4, B=2, drop_prob=0.2)
+    hrt = make_hps_runtime(hcfg)
+    w15 = rng.normal(size=(15, 2)).astype(np.float32)
+    closed = walk.trace(
+        lambda w_: run_hps(w_, hcfg, T=31, seed=0, backend="xla",
+                           store="gap", policy="bf16"),
+        w15)
+    out += precision.find_fp32_scan_state(
+        closed,
+        {"N": 15, "d": 2, "T": 31, "E": int(np.asarray(hrt.src).shape[0])},
+        where="hps[policy=bf16]")
+
+    topo8 = make_hierarchy([8] * 8, topology="complete", seed=0)   # N = 64
+    bmodel = make_confused_model(N=64, m=3, truth=0, confusion=0.0, seed=1)
+    bcfg = ByzantineConfig(topo=topo8, F=2, byz=(2, 9), gamma_period=4,
+                           attack=attacks.sign_flip())
+    run = make_byzantine_scan(bmodel, bcfg, T=5, core="sparse",
+                              backend="xla", store="final", policy="bf16")
+    closed = walk.trace(run, jax.random.PRNGKey(0))
+    out += precision.find_fp32_scan_state(
+        closed, {"N": 64, "m": 3, "T": 5},
+        where="byzantine[policy=bf16]")
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Verdict cache
 # ---------------------------------------------------------------------------
@@ -431,6 +511,7 @@ def _cmd_lint(args) -> int:
     findings += _stream_findings(engines, override)
     if not args.skip_exec:
         findings += _retrace_findings()
+    findings += _precision_findings()
     findings += memory.validate_bench(_REPO_ROOT / "results")
 
     for f in findings:
@@ -488,6 +569,35 @@ def _cmd_budget(args) -> int:
               f"({floor['dominant']}-bound)  "
               f"resident {resid['total_gb']} GB "
               f"fits_16gb={resid['fits_16gb']}")
+
+    print("per-policy step budgets (storage dtype is the bandwidth knob; "
+          "masks, PRNG draws, sort keys and ids stay fp32/int32, so bf16 "
+          "lands near — not exactly at — half):")
+    pol_cases = [
+        ("pushsum    N=131072 E=524288 d=1",
+         lambda p: memory.pushsum_step_bytes(131072, 524288, 1, policy=p)),
+        ("pushsum-2d N=1048576 E=2097152 S=8",
+         lambda p: memory.pushsum_sharded_step_bytes(
+             1 << 20, 1 << 21, d=1, n_shards=8, policy=p)),
+        ("social     N=16384 E=65536 m=3",
+         lambda p: memory.social_step_bytes(16384, 65536, 3, policy=p)),
+        ("hps        N=15 E=62 d=2",
+         lambda p: memory.hps_step_bytes(15, 62, 2, policy=p)),
+        ("byz-sparse N=64 deg=8 m=3",
+         lambda p: memory.byz_sparse_step_bytes(64, 8, 3, policy=p)),
+    ]
+    for label, fn in pol_cases:
+        f32, b16 = fn(None), fn("bf16")
+        print(f"  {label:36s} fp32 {f32 / 1e6:10.3f} MB  "
+              f"bf16 {b16 / 1e6:10.3f} MB  ratio {b16 / f32:.3f}")
+    print("halo wire bytes per round per device (N=1048576 d=1 S=8), "
+          "psum vs scatter+gather:")
+    for sb, tag in ((4, "fp32"), (2, "bf16")):
+        wp = pushsum_halo_wire_bytes(1 << 20, 1, 8)
+        ws = pushsum_halo_wire_bytes(1 << 20, 1, 8, variant="scatter",
+                                     storage_bytes=sb)
+        print(f"  storage={tag}: psum {wp / 1e6:8.3f} MB  "
+              f"scatter {ws / 1e6:8.3f} MB  ratio {ws / wp:.3f}")
 
     print("traced footprints:")
     for name in sorted(contracts.REGISTRY):

@@ -45,7 +45,20 @@ __all__ = [
     "validate_bench",
 ]
 
-_F32 = 4  # every engine runs fp32 state; indices are int32 — same width
+_F32 = 4  # accum/index width: reductions, PRNG draws, int32 ids stay 4 B
+
+
+def _storage_bytes(policy) -> int:
+    """Bytes per element of the policy's *storage* dtype — what persistent
+    engine state (scan carries, relay latches, wire payloads) is charged
+    at. ``None`` = the default fp32 policy (4 B). Lazy import: statics
+    modules must stay importable without dragging in repro.core."""
+    if policy is None:
+        return _F32
+    if isinstance(policy, str):
+        from repro.core.precision import resolve_policy
+        return resolve_policy(policy).storage_bytes
+    return int(policy.storage_bytes)
 
 
 def jaxpr_footprint(closed, dims: dict[str, int] | None = None) -> dict:
@@ -87,21 +100,25 @@ def step_floor(step_bytes: float, step_flops: float = 0.0, hw: HW = HW(),
 
 # ---------------------------------------------------------------------------
 # Analytic per-iteration HBM traffic. Each counts the reads+writes of the
-# engine's scan body at fp32/int32 width; constants are small and checked
-# by the structural tests against the traced footprints, not hand-tuned.
+# engine's scan body; persistent state is charged at the precision policy's
+# storage width (``policy=None`` = fp32, reproducing the historical
+# numbers), while PRNG draws, sort keys, and int32 ids stay 4 B. Constants
+# are small and checked by the structural tests against the traced
+# footprints, not hand-tuned.
 # ---------------------------------------------------------------------------
 
-def pushsum_step_bytes(N: int, E: int, d: int = 1) -> int:
+def pushsum_step_bytes(N: int, E: int, d: int = 1, *, policy=None) -> int:
     """Sparse push-sum round: gather E edge contributions of (value, mass),
     segment-sum into N nodes, plus the edge mask draw."""
-    edge = E * (2 * d + 2) * _F32          # gathered values+mass, src/dst ids
-    node = N * (2 * d + 2) * _F32          # read state, write state
+    sb = _storage_bytes(policy)
+    edge = E * (2 * d + 2) * sb            # relay (rho, rho_m) read + write
+    node = N * (2 * d + 2) * sb            # read state, write state
     mask = E * _F32                        # per-edge Bernoulli keep mask
     return edge + node + mask
 
 
 def pushsum_sharded_step_bytes(N: int, E: int, d: int = 1,
-                               n_shards: int = 1) -> int:
+                               n_shards: int = 1, *, policy=None) -> int:
     """Per-DEVICE HBM traffic of one edge-partitioned push-sum round.
 
     Edge traffic drops to the shard-local ceil(E / S) slice; node traffic
@@ -114,34 +131,40 @@ def pushsum_sharded_step_bytes(N: int, E: int, d: int = 1,
     the collective term of :func:`step_floor`, not HBM.
     """
     S = max(int(n_shards), 1)
+    sb = _storage_bytes(policy)
     e_shard = -(-E // S)
-    edge = e_shard * (2 * d + 2) * _F32
-    node = N * (2 * d + 2) * _F32
+    edge = e_shard * (2 * d + 2) * sb
+    node = N * (2 * d + 2) * sb
     mask = S * e_shard * _F32
     return edge + node + mask
 
 
-def social_step_bytes(N: int, E: int, m: int, M: int = 1) -> int:
+def social_step_bytes(N: int, E: int, m: int, M: int = 1, *,
+                      policy=None) -> int:
     """Algorithm 3 round: edge-gathered belief exchange (E x m), private
     Bayesian update (N x m likelihood row), per-edge drop mask."""
-    edge = E * (m + 2) * _F32
-    node = 2 * N * m * _F32 + N * m * _F32   # beliefs rw + likelihood row
+    sb = _storage_bytes(policy)
+    edge = E * (m + 2) * sb
+    # beliefs rw at storage width + the fp32 likelihood-table row
+    node = 2 * N * m * sb + N * m * _F32
     mask = E * _F32
     return (edge + node + mask) * max(M, 1)
 
 
-def hps_step_bytes(N: int, E: int, d: int = 1) -> int:
+def hps_step_bytes(N: int, E: int, d: int = 1, *, policy=None) -> int:
     """Hierarchical push-sum round — push-sum traffic plus the fusion-layer
     trimmed pool touching every node value once more."""
-    return pushsum_step_bytes(N, E, d) + 2 * N * d * _F32
+    sb = _storage_bytes(policy)
+    return pushsum_step_bytes(N, E, d, policy=policy) + 2 * N * d * sb
 
 
-def byz_sparse_step_bytes(N: int, deg: int, m: int) -> int:
+def byz_sparse_step_bytes(N: int, deg: int, m: int, *, policy=None) -> int:
     """Sparse Byzantine round: per-node neighbor gather (deg x m), trimmed
     reduce, belief rw."""
-    gather = N * deg * m * _F32
+    sb = _storage_bytes(policy)
+    gather = N * deg * m * sb
     trim = 2 * N * deg * m * _F32          # sort keys + gathered survivors
-    node = 2 * N * m * _F32
+    node = 2 * N * m * sb
     return gather + trim + node
 
 
@@ -161,6 +184,8 @@ _NAME_N_RE = re.compile(r"_N(\d+)")
 _DERIVED_E_RE = re.compile(r"(?:^|;)E=(\d+)")
 _DERIVED_SHARDS_RE = re.compile(r"(?:^|;)shards=(\d+)")
 _DERIVED_D_RE = re.compile(r"(?:^|;)d=(\d+)")
+_DERIVED_POLICY_RE = re.compile(r"(?:^|;)policy=([\w/]+)")
+_DERIVED_BYTES_RE = re.compile(r"(?:^|;)bytes_per_step=([0-9.eE+-]+|nan)")
 
 
 def validate_bench(results_dir: str | Path, hw: HW = HW()) -> list[Finding]:
@@ -173,8 +198,11 @@ def validate_bench(results_dir: str | Path, hw: HW = HW()) -> list[Finding]:
     :func:`repro.analysis.memory_model.pushsum_device_memory_gb` residency
     prediction must both fit the per-chip HBM — that is the whole point of
     partitioning, so a sharded row that only fits in aggregate is a
-    failure. Explicitly skipped rows (``derived`` starting ``skipped=``,
-    written by single-device bench hosts) are ignored.
+    failure. Rows tagged ``policy=<tag>`` (e.g. ``policy=bf16``) are
+    budgeted at that policy's storage width, so the reduced-precision
+    benchmarks are held to their correspondingly smaller analytic budget.
+    Explicitly skipped rows (``derived`` starting ``skipped=``, written by
+    single-device bench hosts) are ignored.
     """
     from repro.analysis.memory_model import pushsum_device_memory_gb
 
@@ -197,6 +225,8 @@ def validate_bench(results_dir: str | Path, hw: HW = HW()) -> list[Finding]:
             S = int(s_m.group(1)) if s_m else 1
             d_m = _DERIVED_D_RE.search(derived)
             d = int(d_m.group(1)) if d_m else 1
+            p_m = _DERIVED_POLICY_RE.search(derived)
+            policy = p_m.group(1) if p_m else None
             rows += 1
             if not (0 < E <= N * (N - 1)):
                 out.append(Finding(
@@ -205,7 +235,8 @@ def validate_bench(results_dir: str | Path, hw: HW = HW()) -> list[Finding]:
                 ))
                 continue
             if S > 1:
-                step = pushsum_sharded_step_bytes(N, E, d=d, n_shards=S)
+                step = pushsum_sharded_step_bytes(N, E, d=d, n_shards=S,
+                                                  policy=policy)
                 resid = pushsum_device_memory_gb(N, E, d=d, n_shards=S)
                 if not resid["fits_16gb"]:
                     out.append(Finding(
@@ -217,7 +248,28 @@ def validate_bench(results_dir: str | Path, hw: HW = HW()) -> list[Finding]:
                         ),
                     ))
             else:
-                step = pushsum_step_bytes(N, E, d=d)
+                step = pushsum_step_bytes(N, E, d=d, policy=policy)
+            b_m = _DERIVED_BYTES_RE.search(derived)
+            if b_m and "mode=interpret" not in derived:
+                # the row recorded its compiled per-step traffic: hold it
+                # to the analytic budget. The model upper-bounds a round
+                # (every leaf read+written, no fusion credit), so measured
+                # above budget means the model no longer covers the
+                # program — e.g. a policy change that stopped shrinking
+                # the stored state while the budget still assumes it did.
+                # mode=interpret rows are exempt: they cost the Pallas
+                # interpreter's Python-level traffic, not the kernel's.
+                measured = float(b_m.group(1))
+                if measured == measured and measured > step:
+                    out.append(Finding(
+                        check="memory-budget", where=f"{path.name}:{name}",
+                        message=(
+                            f"measured bytes_per_step={measured:.0f} exceeds "
+                            f"the analytic budget {step} "
+                            f"(policy={policy or 'fp32'}) — the model no "
+                            "longer upper-bounds the compiled program"
+                        ),
+                    ))
             if step >= hw.hbm_bytes:
                 out.append(Finding(
                     check="memory-budget", where=f"{path.name}:{name}",

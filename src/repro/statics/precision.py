@@ -1,0 +1,157 @@
+"""Precision-policy statics — two compile-time proofs for the bandwidth
+work:
+
+* :func:`step_donation_findings` — lower (never execute) the shipped
+  donating step entry (:func:`repro.core.pushsum.sparse_pushsum_step_jit`)
+  and assert the compiled module actually aliases every donated state
+  buffer (``tf.aliasing_output`` on the StableHLO arguments). Donation
+  that silently degrades to a copy (shape/dtype mismatch between the
+  donated input and any output, or an accidental second use of the donated
+  value) is invisible at the Python layer — the program still computes the
+  right numbers, it just doubles the state's HBM footprint. This check
+  turns that regression into a lint failure.
+* :func:`find_fp32_scan_state` — the reduced-precision carry contract:
+  under a bf16 storage policy, no scan may carry persistent per-edge /
+  per-node float32 state. A single fp32 ``(E, d)`` relay latch or
+  ``(N, d)`` value column smuggled through the carry silently forfeits the
+  storage-bandwidth win the policy exists for (the scan re-reads and
+  re-writes it every round at full width). Accumulators are *supposed* to
+  be fp32 — but they live inside the scan body as transients, not in the
+  carry, which is exactly the structural line this check draws.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .dense import Finding
+from .walk import iter_eqns, symbolize
+
+__all__ = [
+    "step_donation_findings",
+    "find_fp32_scan_state",
+    "count_aliased_outputs",
+]
+
+# One donated SparsePushSumState = 6 array leaves (z, m, sigma, sigma_m,
+# rho, rho_m); each must surface as an input->output alias in the lowered
+# module.
+_STATE_LEAVES = 6
+
+
+def count_aliased_outputs(lowered_text: str) -> int:
+    """Number of argument buffers the compiled module aliases to outputs
+    (the StableHLO rendering of XLA's ``input_output_alias``)."""
+    return lowered_text.count("tf.aliasing_output")
+
+
+def step_donation_findings(
+    backend: str = "xla",
+    policy=None,
+    *,
+    dst_sorted: bool = False,
+    where: str | None = None,
+) -> list[Finding]:
+    """Prove the donating step entry aliases all six state leaves.
+
+    Lowers the exact cached callable ``sparse_pushsum_step_jit`` dispatches
+    to, on a tiny (N=7, E=11, d=2) fixture — abstract lowering only,
+    nothing executes and nothing is donated for real.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.precision import resolve_policy
+    from repro.core.pushsum import _get_step_jit, init_sparse_state
+
+    pol = None if policy is None else resolve_policy(policy)
+    tag = "fp32" if pol is None else pol.tag()
+    where = where or f"pushsum.step-jit[backend={backend}, policy={tag}]"
+
+    n, e, d = 7, 11, 2
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    state = init_sparse_state(w, e, policy=pol)
+    mask = jnp.ones((e,), bool)
+    src = jnp.asarray(rng.integers(0, n, size=e).astype(np.int32))
+    dst = jnp.sort(jnp.asarray(rng.integers(0, n, size=e).astype(np.int32)))
+    valid = jnp.ones((e,), bool)
+
+    fn = _get_step_jit(backend, dst_sorted, pol)
+    try:
+        text = fn.lower(state, mask, src, dst, valid, None).as_text()
+    except Exception as exc:  # lowering itself must not break
+        return [Finding(
+            check="buffer-donation", where=where,
+            message=f"lowering the donating step failed: "
+                    f"{type(exc).__name__}: {exc}",
+        )]
+    n_alias = count_aliased_outputs(text)
+    if n_alias < _STATE_LEAVES:
+        return [Finding(
+            check="buffer-donation", where=where,
+            message=(
+                f"compiled step aliases only {n_alias} of the "
+                f"{_STATE_LEAVES} donated state buffers — donation is "
+                "silently copying (aval mismatch between the donated "
+                "input state and the returned state?)"
+            ),
+        )]
+    return []
+
+
+def _scan_carry_avals(eqn):
+    """Carry avals of one ``scan`` equation: body invars between the
+    hoisted consts and the per-iteration xs slices."""
+    body = eqn.params["jaxpr"]
+    nc = int(eqn.params["num_consts"])
+    nk = int(eqn.params["num_carry"])
+    return [v.aval for v in body.jaxpr.invars[nc:nc + nk]]
+
+
+def find_fp32_scan_state(
+    closed,
+    dims: dict[str, int],
+    *,
+    axes: tuple[str, ...] = ("N", "E"),
+    where: str = "",
+) -> list[Finding]:
+    """Report scan carries holding wide-float per-edge/per-node state.
+
+    ``dims`` is the fixture's symbol table (as everywhere in statics);
+    ``axes`` names the "population" dims — a floating carry of itemsize
+    >= 4 with ANY dimension of one of those sizes is persistent engine
+    state stored at full width, which a reduced-precision policy forbids
+    (any-dim, not leading-dim: vmapped sweeps prepend the scenario batch
+    axis to every carry). Integer/bool/key carries (iteration counters,
+    PRNG keys, decision flags) and scalar floats pass; so do fp32
+    *transients* inside the body — only the carry, the state that survives
+    rounds, is held to the storage dtype.
+    """
+    pop_sizes = {int(dims[a]) for a in axes if a in dims}
+    out: list[Finding] = []
+    for path, eqn in iter_eqns(closed):
+        if eqn.primitive.name != "scan":
+            continue
+        for aval in _scan_carry_avals(eqn):
+            dtype = getattr(aval, "dtype", None)
+            shape = tuple(getattr(aval, "shape", ()))
+            if dtype is None or not shape:
+                continue
+            if not np.issubdtype(np.dtype(dtype), np.floating):
+                continue
+            if np.dtype(dtype).itemsize < 4:
+                continue
+            if not any(int(s) in pop_sizes for s in shape):
+                continue
+            sym = symbolize(shape, dims)
+            loc = "/".join(path + ("scan",)) or "scan"
+            out.append(Finding(
+                check="fp32-carry", where=where or loc,
+                message=(
+                    f"scan at {loc} carries persistent "
+                    f"{np.dtype(dtype).name} state of shape {sym} under a "
+                    "reduced-precision storage policy — the carry must be "
+                    "in the policy's storage dtype (fp32 belongs to "
+                    "in-body accumulators only)"
+                ),
+            ))
+    return out

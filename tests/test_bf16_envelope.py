@@ -1,0 +1,181 @@
+"""Property tests: the bf16 storage policy's error envelope vs fp32.
+
+Satellite of the precision-policy PR. The bf16 policy
+(:mod:`repro.core.precision`) stores the scan-carried push-sum state —
+including the *cumulative* relay counters sigma/rho — in bfloat16. With 8
+mantissa bits, a per-round increment rounds to nothing once the counter
+is ~2^8x its size, so the quantization error of every Theorem-1/2
+quantity grows with the horizon T: bf16 is a bandwidth optimization for
+the **short-window regime** (large N, bounded rounds per compiled
+window), not a drop-in for long trajectories. These tests pin that down
+with explicit envelopes:
+
+* mass invariant drift  <= ``C_MASS * EPS_BF16 * T``   (linear in T);
+* consensus-gap perturbation <= ``C_GAP * EPS_BF16`` of the input spread
+  at T=32 — within Theorem 1's tolerance, whose gamma^t contraction
+  floor at that horizon is far above the envelope;
+* Theorem-2 worst-case log-ratio within ``C_LR * EPS_BF16`` of fp32
+  (relative, +1 absolute floor) at T=16;
+* and — so nobody widens the envelope by raising T — an explicit
+  *horizon* test asserting the short-T envelope genuinely fails by
+  T=200: the cliff is a property of the cumulative relay in bf16, and
+  this suite documents it rather than hiding it.
+
+No ``hypothesis`` in the image: scenarios are drawn over
+(drop, Gamma, topology, seed) by a seeded ``numpy.random.Generator`` —
+deterministic, but exercising the full grid the sweeps run.
+
+Envelope constants are calibrated empirically (worst case over the
+sampled scenarios, then doubled) — they are claims about THIS engine's
+bf16 build, not generic bf16 folklore; a regression that loosens the
+rounding behavior trips them.
+"""
+import numpy as np
+import pytest
+
+from repro.core.graphs import make_hierarchy
+from repro.core.hps import HPSConfig, make_hps_runtime, run_hps
+from repro.core.pushsum import sparse_mass_invariant
+from repro.core.signals import make_confused_model
+from repro.core.social import run_social_learning
+
+EPS_BF16 = 2.0 ** -8          # bfloat16 unit roundoff (8 mantissa bits)
+TOPOLOGIES = ("ring", "complete", "ring+")
+
+# calibrated worst-case-x2 margins (see module docstring)
+C_MASS = 2.0                  # mass drift slope: measured ~0.8*EPS*T @T=32
+C_GAP = 32.0                  # gap diff / spread @T=32: measured ~14*EPS
+C_LR = 1280.0                 # Thm-2 log-ratio rel diff @T=16: measured ~606*EPS
+                              # (worst case is Gamma=16 on a ring — the
+                              # slowest-mixing scenario, no fusion before
+                              # t=15, where mass quantization bites hardest)
+
+
+def _scenarios(k: int, seed: int):
+    """k (drop, Gamma, topology, seed) draws from one seeded generator."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(k):
+        out.append((
+            float(rng.uniform(0.0, 0.6)),
+            int(rng.choice([2, 4, 8, 16])),
+            TOPOLOGIES[int(rng.integers(len(TOPOLOGIES)))],
+            int(rng.integers(1000)),
+        ))
+    return out
+
+
+def _hps_pair(drop, gamma, topology, seed, T):
+    """(fp32 run, bf16 run, runtime, inputs) for one scenario."""
+    topo = make_hierarchy([5, 5, 5], topology=topology, seed=seed)
+    cfg = HPSConfig(topo=topo, gamma_period=gamma, B=4, drop_prob=drop)
+    w = (np.random.default_rng(seed)
+         .normal(size=(topo.N, 3)).astype(np.float32))
+    rt = make_hps_runtime(cfg)
+    r32 = run_hps(w, cfg, T=T, seed=seed, store="gap")
+    r16 = run_hps(w, cfg, T=T, seed=seed, store="gap", policy="bf16")
+    return r32, r16, rt, w
+
+
+def _mass_rel_drift(res, rt, w):
+    """Worst relative drift of sum_j z_j + in-flight from sum_j w_j."""
+    mi = np.asarray(sparse_mass_invariant(res.final_state, rt.src, rt.valid))
+    ref = np.asarray(w).sum(axis=0)
+    tot = np.abs(np.asarray(w)).sum(axis=0)
+    return float(np.max(np.abs(mi - ref) / np.maximum(tot, 1e-6)))
+
+
+class TestTheorem1Envelope:
+    T = 32
+
+    def test_mass_invariant_drift_linear_in_T(self):
+        """bf16 mass drift <= C_MASS * EPS * T; fp32 stays at roundoff.
+
+        Theorem 1 rides the augmented-graph mass-preservation property;
+        in bf16 the cumulative sigma/rho relay quantizes each round's
+        delivery, so the telescoping identity drifts by O(EPS) per round
+        — linear in T, NOT a fixed floor."""
+        env = C_MASS * EPS_BF16 * self.T
+        for drop, gamma, topology, seed in _scenarios(10, seed=7):
+            r32, r16, rt, w = _hps_pair(drop, gamma, topology, seed, self.T)
+            d32 = _mass_rel_drift(r32, rt, w)
+            d16 = _mass_rel_drift(r16, rt, w)
+            assert d32 <= 1e-5, (drop, gamma, topology, seed, d32)
+            assert d16 <= env, (drop, gamma, topology, seed, d16, env)
+
+    def test_consensus_gap_perturbation(self):
+        """|gap_bf16 - gap_fp32| <= C_GAP * EPS * spread(w) at T=32.
+
+        The consensus gap is Theorem 1's LHS; at this horizon the bf16
+        perturbation sits well inside the theorem's tolerance (the
+        gamma^t floor is still O(spread) here, ~10x the envelope)."""
+        for drop, gamma, topology, seed in _scenarios(10, seed=11):
+            r32, r16, _, w = _hps_pair(drop, gamma, topology, seed, self.T)
+            spread = float(np.ptp(np.asarray(w)))
+            diff = abs(float(r16.gap[-1]) - float(r32.gap[-1]))
+            assert diff <= C_GAP * EPS_BF16 * spread, (
+                drop, gamma, topology, seed, diff, spread)
+
+
+class TestTheorem2Envelope:
+    T = 16
+
+    def _pair(self, drop, gamma, topology, seed, T):
+        topo = make_hierarchy([5, 5, 5], topology=topology, seed=seed)
+        model = make_confused_model(N=topo.N, m=3, truth=1,
+                                    confusion=0.4, seed=seed)
+        cfg = HPSConfig(topo=topo, gamma_period=gamma, B=4, drop_prob=drop)
+        r32 = run_social_learning(model, cfg, T=T, seed=seed,
+                                  store="log_ratio")
+        r16 = run_social_learning(model, cfg, T=T, seed=seed,
+                                  store="log_ratio", policy="bf16")
+        return (np.asarray(r32.log_ratio), np.asarray(r16.log_ratio))
+
+    def test_log_ratio_envelope(self):
+        """Thm-2 worst-case log-ratio: bf16 within C_LR*EPS of fp32.
+
+        Relative with a +1 absolute floor (the curve crosses zero). The
+        log-belief magnitudes grow ~t, so the stored-state rounding is
+        amplified through the exponential belief dynamics — hence the
+        short T: this is the window where the envelope is meaningfully
+        tight (measured worst ~2.4 vs the 5.0 bound — the ~2.4 scenario
+        is Gamma=16 on a ring, see C_LR's comment)."""
+        env = C_LR * EPS_BF16
+        for drop, gamma, topology, seed in _scenarios(8, seed=13):
+            lr32, lr16 = self._pair(drop, gamma, topology, seed, self.T)
+            rel = float(np.max(np.abs(lr16 - lr32) / (np.abs(lr32) + 1.0)))
+            assert rel <= env, (drop, gamma, topology, seed, rel, env)
+            assert np.isfinite(lr16).all()
+
+
+class TestHorizonCliff:
+    """The envelopes above are horizon-limited BY CONSTRUCTION — assert
+    the cliff exists so a future edit cannot quietly stretch the same
+    constants over long trajectories."""
+
+    def test_mass_envelope_fails_by_T200(self):
+        """At T=200 at least one sampled scenario must blow through the
+        T=32 mass envelope: once sigma_m is ~2^8x a round's mass
+        increment, deliveries round to zero while senders keep halving
+        their mass — the relay starves and z/m diverges. If this ever
+        PASSES at T=200, the storage layout changed (e.g. the relay went
+        back to fp32) and the budget models/statics contract must be
+        revisited together with these constants."""
+        env = C_MASS * EPS_BF16 * 32     # the short-horizon envelope
+        worst = 0.0
+        for drop, gamma, topology, seed in _scenarios(6, seed=7):
+            _, r16, rt, w = _hps_pair(drop, gamma, topology, seed, T=200)
+            worst = max(worst, _mass_rel_drift(r16, rt, w))
+        assert worst > env, worst
+
+    def test_fp32_policy_has_no_cliff(self):
+        """The cliff is a bf16-storage property, not an engine property:
+        the fp32 policy at T=200 keeps the invariant at roundoff."""
+        drop, gamma, topology, seed = _scenarios(1, seed=7)[0]
+        topo = make_hierarchy([5, 5, 5], topology=topology, seed=seed)
+        cfg = HPSConfig(topo=topo, gamma_period=gamma, B=4, drop_prob=drop)
+        w = (np.random.default_rng(seed)
+             .normal(size=(topo.N, 3)).astype(np.float32))
+        rt = make_hps_runtime(cfg)
+        res = run_hps(w, cfg, T=200, seed=seed, store="gap", policy="fp32")
+        assert _mass_rel_drift(res, rt, w) <= 1e-4

@@ -400,22 +400,20 @@ class TestByzantineGrid:
     def test_topology_F_seed_grid_single_trace(self):
         """Acceptance: 3 topologies x 2 F x 8 seeds as ONE compiled program
         — one jit cache entry, no retrace on a second seed batch."""
-        from repro.core.sweeps import (
-            _BYZ_GRID_COMPILED, _byz_grid_key, run_byzantine_grid,
-        )
+        from repro.core.sweeps import cache_registry, run_byzantine_grid
 
         model, cfgs, atk = _grid_fixture()
+        reg = cache_registry()["byz.grid"]
+        reg.clear()
         res = run_byzantine_grid(model, cfgs, T=30, seeds=list(range(8)))
         assert res.K == 48
         assert res.decisions.shape == (48, 30, 15)
         # heterogeneous F (0 and 1) forces the sort lowering on every
         # platform, so the effective backend in the cache key is "xla"
-        fn = _BYZ_GRID_COMPILED[_byz_grid_key(
-            model, cfgs, 30, atk, "pairwise", "xla", "decisions",
-            None, "data")]
-        assert fn._cache_size() == 1
+        # and the second seed batch reuses the one compiled entry
+        assert reg.cache_info().currsize == 1
         res2 = run_byzantine_grid(model, cfgs, T=30, seeds=list(range(8, 16)))
-        assert fn._cache_size() == 1          # same shapes -> no retrace
+        assert reg.cache_info().currsize == 1
         assert res2.K == 48
 
     def test_grid_matches_single_runs(self):
@@ -559,20 +557,23 @@ class TestLRUCaches:
         assert len(c) == 3               # bounded forever
 
     def test_compiled_caches_are_bounded(self):
-        from repro.core.sweeps import _BYZ_COMPILED, _BYZ_GRID_COMPILED
+        from repro.core.sweeps import cache_registry
 
-        assert isinstance(_BYZ_COMPILED.maxsize, int)
-        assert 0 < _BYZ_COMPILED.maxsize <= 64
-        assert 0 < _BYZ_GRID_COMPILED.maxsize <= 64
+        reg = cache_registry()
+        assert isinstance(reg["byz.compiled"].cache_info().maxsize, int)
+        assert 0 < reg["byz.compiled"].cache_info().maxsize <= 64
+        assert 0 < reg["byz.grid"].cache_info().maxsize <= 64
 
     def test_sweep_cache_evicts_under_churn(self):
         """Churning more fingerprints than maxsize through the sweep cache
         keeps it bounded (the satellite's 'long parameter study')."""
-        from repro.core.sweeps import _BYZ_COMPILED, run_byzantine_sweep
+        from repro.core.sweeps import cache_registry, run_byzantine_sweep
 
+        reg = cache_registry()["byz.compiled"]
         topo, model = _byz_setup(M_nets=3, n=4)
         cfg = ByzantineConfig(topo=topo, F=1, byz=(1,), gamma_period=4,
                               attack=attacks.large_value())
-        for T in range(5, 5 + _BYZ_COMPILED.maxsize + 3):
+        bound = reg.cache_info().maxsize
+        for T in range(5, 5 + bound + 3):
             run_byzantine_sweep(model, cfg, T=T, seeds=[0])
-        assert len(_BYZ_COMPILED) <= _BYZ_COMPILED.maxsize
+        assert reg.cache_info().currsize <= bound

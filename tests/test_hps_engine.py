@@ -501,7 +501,7 @@ class TestHPSSweep:
         """Acceptance: 4 topologies (M in {3, 2, 6}) x 2 Γ x 2 drop x 3
         seeds = 48 scenarios as ONE compiled program — one jit cache entry,
         no retrace on a second seed batch, M traced per scenario."""
-        from repro.core.sweeps import _HPS_COMPILED, _hps_sweep_fn
+        from repro.core.sweeps import _hps_sweep_fn, cache_registry
 
         w, cfgs = _grid_fixture()
         res = run_hps_grid(w, cfgs, T=25, seeds=list(range(3)))
@@ -514,7 +514,8 @@ class TestHPSSweep:
         res2 = run_hps_grid(w, cfgs, T=25, seeds=list(range(3, 6)))
         assert fn._cache_size() == 1         # same shapes -> no retrace
         assert res2.K == 48
-        assert len(_HPS_COMPILED) <= _HPS_COMPILED.maxsize
+        info = cache_registry()["hps.compiled"].cache_info()
+        assert info.currsize <= info.maxsize
 
     def test_uniform_E_grid_matches_single_runs_bit_identical(self):
         """Traced (drop, Γ, M) on the vmap axis must reproduce each
@@ -588,11 +589,14 @@ class TestHPSSweep:
             run_hps_grid(w, [], T=5, seeds=[0])
 
     def test_compiled_cache_is_lru_bounded(self):
-        from repro.core.sweeps import _HPS_COMPILED, _HPS_RUNTIME_CACHE
+        from repro.core.sweeps import cache_registry
 
-        assert 0 < _HPS_COMPILED.maxsize <= 64
-        assert 0 < _HPS_RUNTIME_CACHE.maxsize <= 64
-        assert len(_HPS_COMPILED) <= _HPS_COMPILED.maxsize
+        reg = cache_registry()
+        compiled = reg["hps.compiled"].cache_info()
+        runtime = reg["hps.runtime"].cache_info()
+        assert 0 < compiled.maxsize <= 64
+        assert 0 < runtime.maxsize <= 64
+        assert compiled.currsize <= compiled.maxsize
 
     def test_sharded_sweep_equals_single_device(self):
         """K=12 grid over a 4-device data mesh (subprocess, fake CPU

@@ -1,0 +1,426 @@
+"""Precision-policy layer: fp32 bit-identity, bf16 storage, donation,
+halo variants, cache registry, and the policy-aware budget models.
+
+The contract under test (repro.core.precision): the DEFAULT policy (None
+or "fp32") is bit-identical to the pre-policy engines — every cast the
+policy threading inserted is a same-dtype ``astype`` that traces to a
+no-op — while "bf16" swaps only the *storage* dtype of persistent state
+(scan carries, relay latches) and keeps fp32 accumulators, so results
+stay finite and within a quantization envelope (tests in
+test_bf16_envelope.py). Donation and the sorted-gather hints must never
+change values, only buffers/lowering.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import attacks
+from repro.core.byzantine import ByzantineConfig, run_byzantine_learning
+from repro.core.graphs import (
+    edge_list,
+    make_hierarchy,
+    random_strongly_connected,
+    sort_by_dst,
+)
+from repro.core.hps import HPSConfig, run_hps
+from repro.core.precision import BF16, FP32, Policy, resolve_policy
+from repro.core.pushsum import (
+    _get_step_jit,
+    init_sparse_state,
+    run_pushsum_sparse,
+    sparse_pushsum_step,
+    sparse_pushsum_step_jit,
+)
+from repro.core.signals import make_confused_model
+from repro.core.social import run_social_learning
+from repro.core.sweeps import cache_registry, run_pushsum_sweep
+
+
+def _graph(n=12, p=0.3, seed=0):
+    rng = np.random.default_rng(seed)
+    el = edge_list(random_strongly_connected(n, p, rng))
+    w = rng.normal(size=(n, 3)).astype(np.float32)
+    return el, w
+
+
+class TestPolicy:
+    def test_default_is_fp32_and_default(self):
+        p = Policy()
+        assert p == FP32
+        assert p.is_default
+        assert p.storage_dtype == jnp.float32
+        assert p.compute_dtype == jnp.float32
+        assert p.accum_dtype == jnp.float32
+        assert p.storage_bytes == 4
+
+    def test_bf16_halves_storage_only(self):
+        assert BF16.storage_dtype == jnp.bfloat16
+        assert BF16.storage_bytes == 2
+        assert BF16.accum_dtype == jnp.float32
+        assert not BF16.is_default
+
+    def test_resolve_names_and_passthrough(self):
+        assert resolve_policy(None) == FP32
+        assert resolve_policy("fp32") == FP32
+        assert resolve_policy("bf16") == BF16
+        assert resolve_policy(BF16) is BF16
+        with pytest.raises(ValueError):
+            resolve_policy("int8")
+
+    def test_accum_must_stay_wide(self):
+        with pytest.raises(ValueError):
+            Policy(accum="bfloat16").validate()
+
+    def test_tags_are_distinct(self):
+        assert FP32.tag() != BF16.tag()
+
+
+class TestFp32BitIdentity:
+    """policy=None and policy="fp32" must be the SAME traced program —
+    asserted exactly (==), not to a tolerance, per engine."""
+
+    def test_pushsum_sweep(self):
+        el, w = _graph()
+        kw = dict(drop_probs=[0.0, 0.4], seeds=[0, 1], B=2)
+        r0 = run_pushsum_sweep(w, el, 25, **kw)
+        r1 = run_pushsum_sweep(w, el, 25, policy="fp32", **kw)
+        np.testing.assert_array_equal(np.asarray(r0.err), np.asarray(r1.err))
+
+    def test_pushsum_sparse_runtime(self):
+        el, w = _graph(seed=3)
+        f0, t0 = run_pushsum_sparse(w, el.src, el.dst, 20, drop_prob=0.3,
+                                    B=2, key=jax.random.PRNGKey(7))
+        f1, t1 = run_pushsum_sparse(w, el.src, el.dst, 20, drop_prob=0.3,
+                                    B=2, key=jax.random.PRNGKey(7),
+                                    policy="fp32")
+        np.testing.assert_array_equal(np.asarray(t0), np.asarray(t1))
+        np.testing.assert_array_equal(np.asarray(f0.z), np.asarray(f1.z))
+
+    def test_dst_sorted_hint_changes_nothing(self):
+        """indices_are_sorted is metadata: on a genuinely sorted index the
+        hinted program must produce identical values."""
+        el, w = _graph(seed=5)
+        el_s, _, _ = sort_by_dst(el)
+        f0, t0 = run_pushsum_sparse(w, el_s.src, el_s.dst, 20, drop_prob=0.2,
+                                    B=2, key=jax.random.PRNGKey(1))
+        f1, t1 = run_pushsum_sparse(w, el_s.src, el_s.dst, 20, drop_prob=0.2,
+                                    B=2, key=jax.random.PRNGKey(1),
+                                    dst_sorted=True)
+        np.testing.assert_array_equal(np.asarray(t0), np.asarray(t1))
+
+    def test_social(self):
+        topo = make_hierarchy([6, 6, 6], topology="complete", seed=2)
+        model = make_confused_model(N=topo.N, m=3, truth=1, confusion=0.5,
+                                    seed=0)
+        cfg = HPSConfig(topo=topo, gamma_period=4, B=2, drop_prob=0.3)
+        r0 = run_social_learning(model, cfg, T=25, seed=0)
+        r1 = run_social_learning(model, cfg, T=25, seed=0, policy="fp32")
+        np.testing.assert_array_equal(np.asarray(r0.beliefs),
+                                      np.asarray(r1.beliefs))
+
+    def test_hps(self):
+        topo = make_hierarchy([5, 5, 5], topology="complete", seed=0)
+        cfg = HPSConfig(topo=topo, gamma_period=4, B=2, drop_prob=0.2)
+        w = np.random.default_rng(3).normal(size=(15, 2)).astype(np.float32)
+        r0 = run_hps(w, cfg, T=20, seed=0)
+        r1 = run_hps(w, cfg, T=20, seed=0, policy="fp32")
+        np.testing.assert_array_equal(np.asarray(r0.ratio),
+                                      np.asarray(r1.ratio))
+        np.testing.assert_array_equal(np.asarray(r0.gap),
+                                      np.asarray(r1.gap))
+
+    def test_byzantine(self):
+        topo = make_hierarchy([7] * 4, topology="complete", seed=0)
+        model = make_confused_model(N=topo.N, m=3, truth=0, confusion=0.0,
+                                    seed=1)
+        cfg = ByzantineConfig(topo=topo, F=1, byz=(2,), gamma_period=4,
+                              attack=attacks.sign_flip())
+        r0 = run_byzantine_learning(model, cfg, T=10, seed=0, core="sparse")
+        r1 = run_byzantine_learning(model, cfg, T=10, seed=0, core="sparse",
+                                    policy="fp32")
+        np.testing.assert_array_equal(np.asarray(r0.r), np.asarray(r1.r))
+        np.testing.assert_array_equal(np.asarray(r0.decisions),
+                                      np.asarray(r1.decisions))
+
+
+class TestBf16Storage:
+    def test_init_state_dtype(self):
+        _, w = _graph()
+        st = init_sparse_state(jnp.asarray(w), 40, policy="bf16")
+        for leaf in st:
+            assert leaf.dtype == jnp.bfloat16
+        st32 = init_sparse_state(jnp.asarray(w), 40)
+        for leaf in st32:
+            assert leaf.dtype == jnp.float32
+
+    def test_step_carries_storage_outputs(self):
+        el, w = _graph()
+        st = init_sparse_state(jnp.asarray(w), int(el.E), policy=BF16)
+        mask = jnp.ones((int(el.E),), bool)
+        out = sparse_pushsum_step(st, mask, el.src, el.dst, el.valid,
+                                  "xla", policy=BF16)
+        for leaf in out:
+            assert leaf.dtype == jnp.bfloat16
+
+    def test_sweep_runs_finite_and_decays(self):
+        el, w = _graph()
+        r = run_pushsum_sweep(w, el, 40, drop_probs=[0.0, 0.3],
+                              seeds=[0, 1], B=2, policy="bf16")
+        err = np.asarray(r.err, np.float32)
+        assert np.isfinite(err).all()
+        assert (err[:, -1] <= err[:, 0] + 1e-3).all()
+
+    def test_social_beliefs_stay_float32(self):
+        """Outputs are upcast after the scan: user-facing arrays are fp32
+        regardless of the storage policy."""
+        topo = make_hierarchy([6, 6, 6], topology="complete", seed=2)
+        model = make_confused_model(N=topo.N, m=3, truth=1, confusion=0.5,
+                                    seed=0)
+        cfg = HPSConfig(topo=topo, gamma_period=4, B=2, drop_prob=0.3)
+        r = run_social_learning(model, cfg, T=15, seed=0, policy="bf16")
+        assert np.asarray(r.beliefs).dtype == np.float32
+        assert np.isfinite(np.asarray(r.beliefs)).all()
+
+
+class TestDonation:
+    def test_lowered_step_aliases_all_state_buffers(self):
+        text = _get_step_jit("xla", False, None).lower(
+            *_tiny_step_args(None)).as_text()
+        assert text.count("tf.aliasing_output") == 6
+
+    def test_lowered_step_aliases_under_bf16(self):
+        text = _get_step_jit("xla", False, BF16).lower(
+            *_tiny_step_args(BF16)).as_text()
+        assert text.count("tf.aliasing_output") == 6
+
+    def test_jit_step_matches_eager(self):
+        el, w = _graph(seed=9)
+        st = init_sparse_state(jnp.asarray(w), int(el.E))
+        mask = jnp.ones((int(el.E),), bool)
+        eager = sparse_pushsum_step(st, mask, el.src, el.dst, el.valid,
+                                    "xla")
+        jitted = sparse_pushsum_step_jit(st, mask, el.src, el.dst, el.valid,
+                                         "xla")
+        for a, b in zip(eager, jitted):
+            # whole-function jit may contract FMAs: ~1 ulp, not bitwise
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, atol=1e-6)
+
+    def test_statics_donation_check_passes(self):
+        from repro.statics.precision import step_donation_findings
+
+        assert step_donation_findings("xla", None) == []
+        assert step_donation_findings("xla", "bf16") == []
+
+
+def _tiny_step_args(pol):
+    rng = np.random.default_rng(0)
+    n, e, d = 7, 11, 2
+    w = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    state = init_sparse_state(w, e, policy=pol)
+    mask = jnp.ones((e,), bool)
+    src = jnp.asarray(rng.integers(0, n, size=e).astype(np.int32))
+    dst = jnp.asarray(np.sort(rng.integers(0, n, size=e)).astype(np.int32))
+    valid = jnp.ones((e,), bool)
+    return state, mask, src, dst, valid, None
+
+
+class TestHaloVariants:
+    def test_scatter_matches_psum_exactly_on_emulation(self):
+        """halo="scatter" reorders the collective into reduce-scatter +
+        all-gather; under fp32 it must move the same values — asserted
+        exactly on the single-device emulation path."""
+        rng = np.random.default_rng(4)
+        el = edge_list(random_strongly_connected(32, 0.2, rng))
+        w = rng.normal(size=(32, 2)).astype(np.float32)
+        kw = dict(drop_probs=[0.0, 0.3], seeds=[0, 1], B=2, graph_shards=2)
+        r_p = run_pushsum_sweep(w, el, 20, halo="psum", **kw)
+        r_s = run_pushsum_sweep(w, el, 20, halo="scatter", **kw)
+        np.testing.assert_array_equal(np.asarray(r_p.err),
+                                      np.asarray(r_s.err))
+
+    def test_bf16_scatter_finite(self):
+        rng = np.random.default_rng(4)
+        el = edge_list(random_strongly_connected(32, 0.2, rng))
+        w = rng.normal(size=(32, 2)).astype(np.float32)
+        r = run_pushsum_sweep(w, el, 20, drop_probs=[0.2], seeds=[0], B=2,
+                              graph_shards=2, policy="bf16", halo="scatter")
+        assert np.isfinite(np.asarray(r.err, np.float32)).all()
+
+    def test_bad_halo_rejected(self):
+        el, w = _graph()
+        with pytest.raises(ValueError):
+            run_pushsum_sweep(w, el, 5, drop_probs=[0.0], seeds=[0], B=2,
+                              graph_shards=2, halo="ring")
+
+
+class TestCacheRegistry:
+    def test_registry_lists_every_engine_cache(self):
+        reg = cache_registry()
+        for name in (
+            "pushsum.sweep-jit", "pushsum.sweep2d-jit", "pushsum.step-jit",
+            "byz.compiled", "byz.grid", "byz.runtime",
+            "social.compiled", "social.runtime",
+            "hps.compiled", "hps.runtime",
+        ):
+            assert name in reg, name
+
+    def test_cache_info_counts_and_clear(self):
+        el, w = _graph()
+        h = cache_registry()["pushsum.sweep-jit"]
+        h.clear()
+        assert h.cache_info().currsize == 0
+        run_pushsum_sweep(w, el, 5, drop_probs=[0.0], seeds=[0], B=2)
+        assert h.cache_info().currsize >= 1
+        h.clear()
+        assert h.cache_info().currsize == 0
+
+
+class TestPolicyBudgets:
+    def test_default_reproduces_historical_numbers(self):
+        from repro.statics.memory import (
+            pushsum_step_bytes,
+            social_step_bytes,
+        )
+
+        # the seed-era fp32 constants, unchanged by the policy refactor
+        assert pushsum_step_bytes(1024, 3102, 1) == \
+            3102 * 4 * 4 + 1024 * 4 * 4 + 3102 * 4
+        assert social_step_bytes(18, 90, 3) == \
+            90 * 5 * 4 + 2 * 18 * 3 * 4 + 18 * 3 * 4 + 90 * 4
+
+    def test_bf16_roughly_halves_state_traffic(self):
+        from repro.statics.memory import (
+            pushsum_sharded_step_bytes,
+            pushsum_step_bytes,
+            social_step_bytes,
+        )
+
+        for f32, b16 in (
+            (pushsum_step_bytes(131072, 524288, 4),
+             pushsum_step_bytes(131072, 524288, 4, policy="bf16")),
+            (social_step_bytes(16384, 114688, 3),
+             social_step_bytes(16384, 114688, 3, policy="bf16")),
+            (pushsum_sharded_step_bytes(1 << 20, 1 << 21, n_shards=8),
+             pushsum_sharded_step_bytes(1 << 20, 1 << 21, n_shards=8,
+                                        policy="bf16")),
+        ):
+            assert b16 < f32
+            # masks/ids stay 4 B, so the ratio lands above exactly-half
+            assert 0.5 <= b16 / f32 <= 0.7
+
+    def test_acceptance_rows_hit_40pct_budget_reduction(self):
+        """The two acceptance benchmarks' budget-model bytes drop >= 40%
+        under bf16 (the committed BENCH rows carry the same numbers)."""
+        from repro.statics.memory import pushsum_step_bytes, \
+            social_step_bytes
+
+        ps32 = pushsum_step_bytes(131072, 393216, 4)
+        ps16 = pushsum_step_bytes(131072, 393216, 4, policy="bf16")
+        so32 = social_step_bytes(16384, 114688, 3)
+        so16 = social_step_bytes(16384, 114688, 3, policy="bf16")
+        assert ps16 <= 0.6 * ps32
+        assert so16 <= 0.6 * so32
+
+    def test_halo_wire_model(self):
+        from repro.analysis.roofline import pushsum_halo_wire_bytes
+
+        n, d, s = 1 << 20, 1, 8
+        psum = pushsum_halo_wire_bytes(n, d, s)
+        scat32 = pushsum_halo_wire_bytes(n, d, s, variant="scatter")
+        scat16 = pushsum_halo_wire_bytes(n, d, s, variant="scatter",
+                                         storage_bytes=2)
+        assert psum == scat32            # fp32: same bytes, different order
+        assert scat16 == pytest.approx(0.75 * psum)
+        assert pushsum_halo_wire_bytes(n, d, 1) == 0.0
+        with pytest.raises(ValueError):
+            pushsum_halo_wire_bytes(n, d, s, variant="tree")
+
+    def test_validate_bench_reads_policy_tag(self, tmp_path):
+        import json
+
+        from repro.statics.memory import validate_bench
+
+        # a bf16 row whose config would bust the fp32 budget but fits at
+        # storage width 2 — the policy tag must be what makes it pass
+        N = 1 << 28
+        E = 4 * N
+        row = {"us_per_call": 1.0,
+               "derived": f"E={E};d=1;policy=bf16"}
+        (tmp_path / "BENCH_t.json").write_text(
+            json.dumps({f"x_N{N}": row}))
+        bf = validate_bench(tmp_path)
+        row32 = {"us_per_call": 1.0, "derived": f"E={E};d=1"}
+        (tmp_path / "BENCH_t.json").write_text(
+            json.dumps({f"x_N{N}": row32}))
+        f32 = validate_bench(tmp_path)
+        assert len(f32) == 1 and "exceeds" in f32[0].message
+        assert bf == []
+
+    def test_validate_bench_measured_over_budget(self, tmp_path):
+        import json
+
+        from repro.statics.memory import validate_bench
+
+        # a row whose recorded compiled traffic exceeds its analytic
+        # budget must be a finding: the model claims to upper-bound the
+        # program (the bench_table roofline column relies on it)
+        row = {"us_per_call": 1.0,
+               "derived": "E=3068;d=4;bytes_per_step=999999999"}
+        (tmp_path / "BENCH_t.json").write_text(
+            json.dumps({"x_N1024": row}))
+        fs = validate_bench(tmp_path)
+        assert len(fs) == 1
+        assert "no longer upper-bounds" in fs[0].message
+        # NaN traffic (backend without cost_analysis) is not a finding
+        row["derived"] = "E=3068;d=4;bytes_per_step=nan"
+        (tmp_path / "BENCH_t.json").write_text(
+            json.dumps({"x_N1024": row}))
+        assert validate_bench(tmp_path) == []
+
+
+class TestFp32CarryContract:
+    def test_flags_synthetic_fp32_carry(self):
+        from repro.statics.precision import find_fp32_scan_state
+        from repro.statics.walk import trace
+
+        def bad(w):
+            def body(c, t):
+                return c * 0.5, c.sum()
+            return jax.lax.scan(body, w, jnp.arange(5))
+
+        closed = trace(bad, np.zeros((13, 3), np.float32))
+        fs = find_fp32_scan_state(closed, {"N": 13, "d": 3, "T": 5})
+        assert len(fs) == 1
+        assert fs[0].check == "fp32-carry"
+
+    def test_bf16_engines_pass(self):
+        """The shipped engines under policy="bf16" carry no fp32
+        per-edge/per-node state (the full-fixture version runs in the
+        repro.statics lint)."""
+        from repro.statics.precision import find_fp32_scan_state
+        from repro.statics.walk import trace
+
+        el, w = _graph()
+        closed = trace(
+            lambda w_: run_pushsum_sparse(
+                w_, el.src, el.dst, 5, drop_prob=0.2, B=2,
+                policy="bf16")[0].z,
+            w)
+        assert find_fp32_scan_state(
+            closed, {"N": 12, "d": 3, "E": int(el.E)}) == []
+
+    def test_bf16_carry_allows_fp32_accum_transients(self):
+        from repro.statics.precision import find_fp32_scan_state
+        from repro.statics.walk import trace
+
+        def good(w):
+            def body(c, t):
+                acc = c.astype(jnp.float32) * 2.0    # in-body accum: fine
+                return acc.astype(jnp.bfloat16), acc.sum()
+            return jax.lax.scan(body, w.astype(jnp.bfloat16),
+                                jnp.arange(5))
+
+        closed = trace(good, np.zeros((13, 3), np.float32))
+        assert find_fp32_scan_state(closed, {"N": 13, "d": 3, "T": 5}) == []

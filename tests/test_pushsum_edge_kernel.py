@@ -329,20 +329,19 @@ class TestByzantineSweepNoRetrace:
         from repro.core.byzantine import ByzantineConfig
         from repro.core.graphs import make_hierarchy
         from repro.core.signals import make_confused_model
-        from repro.core.sweeps import (
-            _BYZ_COMPILED, _byz_sweep_key, run_byzantine_sweep,
-        )
+        from repro.core.sweeps import cache_registry, run_byzantine_sweep
 
         topo = make_hierarchy([4, 4, 4], topology="complete", seed=0)
         model = make_confused_model(topo.N, 3, confusion=0.0, seed=0)
         cfg = ByzantineConfig(topo=topo, F=1, byz=(1,), gamma_period=4,
                               attack=attacks.large_value())
+        reg = cache_registry()["byz.compiled"]
+        reg.clear()
         r1 = run_byzantine_sweep(model, cfg, T=12, seeds=[0, 1])
-        fn = _BYZ_COMPILED[_byz_sweep_key(model, cfg, T=12)]
-        assert fn._cache_size() == 1
+        assert reg.cache_info().currsize == 1
         r2 = run_byzantine_sweep(model, cfg, T=12, seeds=[2, 3])
-        assert _BYZ_COMPILED[_byz_sweep_key(model, cfg, T=12)] is fn
-        assert fn._cache_size() == 1     # same shapes -> no retrace
+        # same fingerprint -> same compiled entry, no second compile
+        assert reg.cache_info().currsize == 1
         assert r1["large_value"].r.shape == r2["large_value"].r.shape
         # host-side C-set lattice memoized too
         from repro.core.byzantine import _C_SET_LATTICE
@@ -353,20 +352,17 @@ class TestByzantineSweepNoRetrace:
         from repro.core.byzantine import ByzantineConfig
         from repro.core.graphs import make_hierarchy
         from repro.core.signals import make_confused_model
-        from repro.core.sweeps import (
-            _BYZ_COMPILED, _byz_sweep_key, run_byzantine_sweep,
-        )
+        from repro.core.sweeps import cache_registry, run_byzantine_sweep
 
         topo = make_hierarchy([4, 4, 4], topology="complete", seed=0)
         model = make_confused_model(topo.N, 3, confusion=0.0, seed=0)
         cfg = ByzantineConfig(topo=topo, F=1, byz=(1,), gamma_period=4,
                               attack=attacks.large_value())
-        key13 = _byz_sweep_key(model, cfg, 13)
-        assert key13 not in _BYZ_COMPILED
+        reg = cache_registry()["byz.compiled"]
+        reg.clear()
+        run_byzantine_sweep(model, cfg, T=12, seeds=[0])
         run_byzantine_sweep(model, cfg, T=13, seeds=[0])
-        # a distinct horizon gets its own entry (the cache is LRU-bounded,
-        # so total length may stay flat when an older entry is evicted)
-        assert key13 in _BYZ_COMPILED
-        assert _BYZ_COMPILED[key13] is not _BYZ_COMPILED.get(
-            _byz_sweep_key(model, cfg, 12))
-        assert len(_BYZ_COMPILED) <= _BYZ_COMPILED.maxsize
+        # a distinct horizon gets its own entry, within the LRU bound
+        info = reg.cache_info()
+        assert info.currsize == 2
+        assert info.currsize <= info.maxsize

@@ -363,7 +363,7 @@ class TestSocialSweep:
         """Acceptance: 2 topologies x 3 drops x 2 Γ x 4 seeds = 48
         scenarios as ONE compiled program — one jit cache entry, no retrace
         on a second seed batch."""
-        from repro.core.sweeps import _SOCIAL_COMPILED, _social_sweep_fn
+        from repro.core.sweeps import _social_sweep_fn, cache_registry
 
         model, cfgs = _grid_fixture()
         res = run_social_grid(model, cfgs, T=25, seeds=list(range(4)))
@@ -376,7 +376,8 @@ class TestSocialSweep:
         res2 = run_social_grid(model, cfgs, T=25, seeds=list(range(4, 8)))
         assert fn._cache_size() == 1         # same shapes -> no retrace
         assert res2.K == 48
-        assert len(_SOCIAL_COMPILED) <= _SOCIAL_COMPILED.maxsize
+        info = cache_registry()["social.compiled"].cache_info()
+        assert info.currsize <= info.maxsize
 
     def test_uniform_E_grid_matches_single_runs_bit_identical(self):
         """Acceptance: traced (drop, Γ) on the vmap axis must reproduce
@@ -458,11 +459,14 @@ class TestSocialSweep:
             run_social_grid(model, [], T=5, seeds=[0])
 
     def test_compiled_cache_is_lru_bounded(self):
-        from repro.core.sweeps import _SOCIAL_COMPILED, _SOCIAL_RUNTIME_CACHE
+        from repro.core.sweeps import cache_registry
 
-        assert 0 < _SOCIAL_COMPILED.maxsize <= 64
-        assert 0 < _SOCIAL_RUNTIME_CACHE.maxsize <= 64
-        assert len(_SOCIAL_COMPILED) <= _SOCIAL_COMPILED.maxsize
+        reg = cache_registry()
+        compiled = reg["social.compiled"].cache_info()
+        runtime = reg["social.runtime"].cache_info()
+        assert 0 < compiled.maxsize <= 64
+        assert 0 < runtime.maxsize <= 64
+        assert compiled.currsize <= compiled.maxsize
 
     def test_sharded_sweep_equals_single_device(self):
         """K=12 grid over a 4-device data mesh (subprocess, fake CPU
