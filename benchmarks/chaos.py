@@ -1,0 +1,144 @@
+"""Chaos lane: high-burst x high-churn fault-grid smoke over all four engines.
+
+This is the nightly/label-gated stress companion to the unified fault
+plane (:mod:`repro.core.faults`). It runs every engine's sweep entry
+under a grid of SEVERE fault models — long Gilbert-Elliott bursts (mean
+8 and 32 rounds at a 50% stationary bad fraction), heavy churn (10% and
+30% per-round leave probability) and a coin-flip parameter server — and
+asserts the engines' graceful-degradation contracts instead of timing
+anything:
+
+* every output stays finite (no NaN/Inf escapes the scan under any
+  fault severity);
+* push-sum conserves the mass invariant through churn (dead agents
+  freeze with their mass; rejoiners pick up stale but mass-consistent
+  state);
+* the whole fault grid runs as ONE compiled program per engine (the
+  fault axis rides the vmap scenario axis — compiling per severity
+  would be the retrace bug the statics lint exists to catch).
+
+Exit code is non-zero on any violated contract, so the CI chaos job can
+gate on it directly: ``python -m benchmarks.chaos`` (``--quick`` for a
+laptop-sized run).
+"""
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.core import attacks
+from repro.core.byzantine import ByzantineConfig
+from repro.core.faults import gilbert_elliott_model
+from repro.core.graphs import (
+    make_hierarchy,
+    random_strongly_connected_edge_list,
+)
+from repro.core.hps import HPSConfig
+from repro.core.pushsum import sparse_mass_invariant
+from repro.core.signals import make_confused_model
+from repro.core.sweeps import (
+    run_byzantine_sweep,
+    run_hps_sweep,
+    run_pushsum_sweep,
+    run_social_sweep,
+)
+
+# the severity grid: burst length x churn rate, everything else pinned
+# harsh (50% stationary bad fraction, coin-flip PS, 25% rejoin rate)
+BURSTS = (8.0, 32.0)
+CHURNS = (0.1, 0.3)
+
+
+def fault_grid():
+    return [
+        gilbert_elliott_model(L, 0.5, leave_prob=c, join_prob=0.25,
+                              ps_crash_prob=0.5)
+        for L in BURSTS for c in CHURNS
+    ]
+
+
+def _finite(name, *arrays):
+    bad = [a for a in arrays if not np.isfinite(np.asarray(a)).all()]
+    if bad:
+        print(f"FAIL {name}: non-finite output under chaos grid")
+        return 1
+    print(f"ok   {name}: all outputs finite")
+    return 0
+
+
+def chaos_pushsum(quick):
+    n, t = (64, 40) if quick else (512, 120)
+    rng = np.random.default_rng(0)
+    el = random_strongly_connected_edge_list(n, 2.0, rng)
+    w = rng.normal(size=(n, 3)).astype(np.float32)
+    res = run_pushsum_sweep(w, el, t, drop_probs=[0.2, 0.6], seeds=[0, 1],
+                            B=4, faults=fault_grid())
+    fails = _finite(f"pushsum  K={res.err.shape[0]}", res.err, res.mass_gap)
+    gap = float(np.abs(np.asarray(res.mass_gap)).max())
+    if gap > 1e-2:
+        print(f"FAIL pushsum: mass invariant broken under churn "
+              f"(gap {gap:.2e})")
+        fails += 1
+    else:
+        print(f"ok   pushsum: mass conserved through churn "
+              f"(gap {gap:.2e})")
+    return fails
+
+
+def chaos_social(quick):
+    topo = make_hierarchy([6, 6, 6], topology="complete", seed=0)
+    model = make_confused_model(N=topo.N, m=3, truth=1, confusion=0.5,
+                               seed=0)
+    cfg = HPSConfig(topo=topo, gamma_period=4, B=4, drop_prob=0.4)
+    t = 40 if quick else 150
+    res = run_social_sweep(model, cfg, t, seeds=[0, 1],
+                           faults=fault_grid())
+    return _finite(f"social   K={res.K}", res.beliefs, res.log_ratio)
+
+
+def chaos_hps(quick):
+    topo = make_hierarchy([6, 6, 6], topology="complete", seed=1)
+    w = np.random.default_rng(2).normal(size=(18, 3)).astype(np.float32)
+    cfg = HPSConfig(topo=topo, gamma_period=4, B=4, drop_prob=0.4)
+    t = 40 if quick else 150
+    res = run_hps_sweep(w, cfg, t, seeds=[0, 1], faults=fault_grid())
+    return _finite(f"hps      K={res.gap.shape[0]}", res.ratio, res.gap)
+
+
+def chaos_byzantine(quick):
+    topo = make_hierarchy([7] * 4, topology="complete", seed=0)
+    model = make_confused_model(N=28, m=3, truth=0, confusion=0.3, seed=1)
+    cfg = ByzantineConfig(topo=topo, F=1, byz=(2,), gamma_period=4,
+                          attack=attacks.large_value())
+    t = 20 if quick else 60
+    fails = 0
+    # the byzantine sweep bakes fault scalars per compile: iterate the
+    # grid explicitly (cache keyed on the fault fingerprint)
+    for fm in fault_grid():
+        res = run_byzantine_sweep(model, cfg, t, seeds=[0, 1],
+                                  store="final", faults=fm)
+        for tag, r in res.items():
+            fails += _finite(f"byzantine[{tag}]", r.r)
+    return fails
+
+
+def main(argv=None) -> int:
+    quick = "--quick" in (argv if argv is not None else sys.argv[1:])
+    grid = fault_grid()
+    print(f"# chaos grid: {len(grid)} fault models "
+          f"(bursts {BURSTS} x churn {CHURNS}, bad_frac=0.5, "
+          f"ps_crash=0.5), quick={quick}")
+    t0 = time.perf_counter()
+    fails = 0
+    fails += chaos_pushsum(quick)
+    fails += chaos_social(quick)
+    fails += chaos_hps(quick)
+    fails += chaos_byzantine(quick)
+    print(f"# chaos lane: {fails} failures in "
+          f"{time.perf_counter() - t0:.1f}s")
+    return 1 if fails else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -449,6 +449,51 @@ def _bench_edge_sharded_smoke(n=256, d=2, T=50, seed=0,
     }
 
 
+def _bench_burst_sweep(smoke: bool = False):
+    """Burst-length axis of the unified fault plane: a Gilbert-Elliott
+    ladder (mean burst 1, 4, 16 rounds at a fixed 30% stationary bad
+    fraction) rides the sweep's fault dimension — one compiled program,
+    fault realizations crossed fault-minor against (drop x seed). The
+    derived string records the final consensus error per burst length
+    next to the degenerate (no-fault) reference rows, which must match
+    the plain sweep (regression-tested in tests/test_faults.py)."""
+    from repro.core.faults import gilbert_elliott_model, make_fault_model
+
+    n, d, T = (256, 3, 120) if smoke else (1024, 4, 300)
+    bursts = (1, 4, 16)
+    rng = np.random.default_rng(0)
+    el = random_strongly_connected_edge_list(n, 2.0, rng)
+    w = rng.normal(size=(n, d)).astype(np.float32)
+    faults = [make_fault_model()] + [
+        gilbert_elliott_model(float(L), 0.3) for L in bursts]
+    nf = len(faults)
+    kw = dict(drop_probs=[0.1, 0.4], seeds=[0, 1], B=4, faults=faults)
+
+    def go():
+        res = run_pushsum_sweep(w, el, T, **kw)
+        jax.block_until_ready(res.err)
+        return res
+
+    t0 = time.perf_counter()
+    res = go()
+    compile_wall = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res = go()
+    wall = time.perf_counter() - t0
+    k = res.err.shape[0]
+    final = np.asarray(res.err)[:, -1]
+    per_fault = [float(final[i::nf].max()) for i in range(nf)]
+    tags = ";".join(f"err_L{L}={e:.2e}"
+                    for L, e in zip((0,) + bursts, per_fault))
+    return {
+        "name": "pushsum_sweep_burst",
+        "us_per_call": wall / k * 1e6,
+        "derived": f"E={el.E};scenarios={k};T={T};bad_frac=0.3;"
+                   f"bursts=0,{','.join(map(str, bursts))};{tags};"
+                   f"compile_s={compile_wall:.1f}",
+    }
+
+
 def rows(smoke: bool = False):
     if smoke:
         recs = [
@@ -458,6 +503,7 @@ def rows(smoke: bool = False):
             _bench_step_backend(1024, "pallas"),
             _bench_edge_sharded_smoke(),
             _bench_edge_sharded_smoke(policy="bf16", halo="scatter"),
+            _bench_burst_sweep(smoke=True),
         ]
     else:
         recs = [_bench_large_sparse()]
@@ -469,6 +515,7 @@ def rows(smoke: bool = False):
         recs.append(_bench_sharded_sweep())
         recs.append(_bench_edge_sharded())
         recs.append(_bench_edge_sharded(policy="bf16", halo="scatter"))
+        recs.append(_bench_burst_sweep())
     return [(r["name"], r["us_per_call"], r["derived"]) for r in recs]
 
 

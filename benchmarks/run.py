@@ -60,8 +60,12 @@ def _check_regressions(baseline_path: str, baseline: dict,
                        measured: dict[str, tuple[float, str]],
                        factor: float = REGRESSION_FACTOR) -> int:
     """Compare measured us_per_call against the recorded baseline; return
-    the number of >factor regressions (default the 25% gate). Skipped:
-    names absent from either side (new benchmarks are not regressions),
+    the number of >factor regressions (default the 25% gate). Rows present
+    in the run but absent from the baseline are announced with a ``# NEW``
+    line (so a fault-axis or other freshly-added row is visible in the gate
+    output the first time it appears) but never counted as regressions.
+    Skipped silently:
+    names absent from the measured side,
     NaN rows, explicitly-skipped rows (``derived`` starting ``skipped=``,
     announced with a ``# SKIP`` line so the gate output shows what was not
     measured and why), and rows whose derived tag says ``mode=interpret`` —
@@ -87,7 +91,10 @@ def _check_regressions(baseline_path: str, baseline: dict,
             # say so rather than silently dropping the row from the gate
             print(f"# SKIP {name}: {derived}")
             continue
-        old = baseline.get(name, {}).get("us_per_call")
+        if name not in baseline:
+            print(f"# NEW {name}: {us:.1f}us (no baseline row)")
+            continue
+        old = baseline[name].get("us_per_call")
         if old is None or not (old == old) or not (us == us):  # skip NaN
             continue
         if "mode=interpret" in derived:

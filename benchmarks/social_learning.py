@@ -169,8 +169,53 @@ def _sweep_row(smoke: bool):
     )
 
 
+def _churn_row(smoke: bool):
+    """Churn-rate axis of the unified fault plane: per-round leave
+    probabilities 0, 2%, 10% (rejoin at 30%) ride the sweep's fault
+    dimension in ONE compiled program. The derived string records the
+    worst final belief in theta* per churn rate — the paper's convergence
+    claim degrading gracefully as agents leave and rejoin with stale
+    state (churn=0 is the degenerate model, regression-tested equal to
+    the fault-free engine in tests/test_faults.py)."""
+    from repro.core.faults import make_fault_model
+
+    topo = make_hierarchy([6, 6, 6], topology="complete", seed=0)
+    model = make_confused_model(N=topo.N, m=3, truth=1, confusion=0.5,
+                                seed=0)
+    cfg = HPSConfig(topo=topo, gamma_period=8, B=4, drop_prob=0.3)
+    churns = (0.0, 0.02, 0.1)
+    faults = [make_fault_model(leave_prob=c, join_prob=0.3)
+              for c in churns]
+    T = 60 if smoke else 400
+    seeds = list(range(2 if smoke else 4))
+
+    def go():
+        res = run_social_sweep(model, cfg, T, seeds=seeds, faults=faults)
+        jax.block_until_ready(res.beliefs)
+        return res
+
+    t0 = time.perf_counter()
+    res = go()
+    compile_wall = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res = go()
+    wall = time.perf_counter() - t0
+    nf = len(faults)
+    final = np.asarray(res.beliefs)[:, :, model.truth]   # (K, N)
+    mins = [float(final[i::nf].min()) for i in range(nf)]
+    tags = ";".join(f"belief_min_churn{c}={m:.3f}"
+                    for c, m in zip(churns, mins))
+    return (
+        "social_conv_churn", wall / res.K * 1e6,
+        f"scenarios={res.K};churns={','.join(map(str, churns))};"
+        f"join=0.3;T={T};single_jit=true;{tags};"
+        f"compile_s={compile_wall:.1f}",
+    )
+
+
 def rows(smoke: bool = False):
     out = [] if smoke else _conv_rows()
     out.extend(_step_rows(smoke))
     out.append(_sweep_row(smoke))
+    out.append(_churn_row(smoke))
     return out

@@ -54,6 +54,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from .attacks import Attack
+from .faults import (
+    ENGINE_BYZANTINE,
+    FaultModel,
+    init_fault_state,
+    ps_alive,
+    step_faults_nbr,
+)
 from .graphs import HierTopology, check_assumption3, neighbor_lists
 from .precision import Policy, resolve_policy
 from .signals import SignalModel
@@ -395,7 +402,7 @@ def _select_reps(key, rt: ByzRuntime, extra_reps):
 
 
 def _fusion(key, t, r_in, rt: ByzRuntime, F, *, n_reps: int, extra_reps,
-            attack: Attack, accum_dtype=None):
+            attack: Attack, accum_dtype=None, live=None):
     """PS fusion round: query reps, trim F from each end, push w_tilde back.
 
     The trimmed-pool average is :func:`repro.core.hps.ps_trimmed_pool` —
@@ -403,6 +410,11 @@ def _fusion(key, t, r_in, rt: ByzRuntime, F, *, n_reps: int, extra_reps,
     :func:`~repro.core.hps.hps_fusion` lowers through, so the two PS-side
     fusion rules share one implementation (accepting a traced F for the
     batched (topology, F) grids).
+
+    ``live`` (an (N,) churn mask, :mod:`repro.core.faults`) degrades the
+    round gracefully: dead representatives neither answer the PS query
+    (their pool slots are masked out of the trimmed mean) nor adopt the
+    pushed-back value. ``live=None`` is the pre-fault program.
     """
     from .hps import ps_trimmed_pool
 
@@ -419,11 +431,14 @@ def _fusion(key, t, r_in, rt: ByzRuntime, F, *, n_reps: int, extra_reps,
     else:
         reply = rep_vals        # no sparse reply defined: state is replayed
     rep_vals = jnp.where(rt.byz_mask[reps][sl], reply, rep_vals)
-    w = ps_trimmed_pool(rep_vals, jnp.ones((n_reps,), bool), F,
-                        accum_dtype=accum_dtype)
+    pool_valid = (jnp.ones((n_reps,), bool) if live is None
+                  else live[reps])
+    w = ps_trimmed_pool(rep_vals, pool_valid, F, accum_dtype=accum_dtype)
     # queried reps outside C adopt w_tilde (lines 20-22); the pooled value
     # comes back in the accum slot — downcast so the carry dtype is stable
     adopt = jnp.zeros((r_in.shape[0],), bool).at[reps].set(True) & (~rt.in_C)
+    if live is not None:
+        adopt = adopt & live
     return jnp.where(adopt[sl], w[None].astype(r_in.dtype), r_in)
 
 
@@ -446,6 +461,7 @@ def _scan_core(
     extra_reps,
     n_reps: int,
     policy: Policy | None = None,
+    faults: FaultModel | None = None,
 ) -> ByzantineResult:
     """Algorithm 2's scan, parameterized over the gossip lowering and the
     per-scenario runtime arrays (vmappable for batched grids).
@@ -455,6 +471,17 @@ def _scan_core(
     statistic r and the cumulative LLR — with the gossip trim, fusion
     pool, and innovation arithmetic running in the accum slot. ``None``
     keeps the historical all-fp32 program bit-identical.
+
+    ``faults`` (a traced :class:`repro.core.faults.FaultModel` pytree, or
+    None for the bit-identical pre-fault program) layers the unified
+    fault plane on top of the Byzantine adversary: Gilbert-Elliott bursts
+    on the padded neighbor slots (a bad slot drops its gossip message at
+    ``drop_bad``), churn (dead agents neither gossip, observe signals,
+    nor answer PS queries — r and the cumulative LLR freeze until
+    rejoin), and PS crash (fusion rounds skipped while the coordinator
+    is down). Fault draws live on their own negative fold-in domain
+    (``fault_stream_fold``), provably disjoint from the signal / gossip /
+    fusion streams sharing ``base_key``.
     """
     st_dt = jnp.float32 if policy is None else policy.storage_dtype
     ac_dt = jnp.float32 if policy is None else policy.accum_dtype
@@ -489,20 +516,39 @@ def _scan_core(
         return ll - rest.max(axis=-1)                # (N, m) one-vs-rest
 
     def body(carry, t):
-        r, cum_llr = carry
+        r, cum_llr = carry[0], carry[1]
+        if faults is not None:
+            fs, drop = step_faults_nbr(base_key, t, faults, carry[2],
+                                       engine=ENGINE_BYZANTINE)
+            live = fs.node_live
+            # a dropped/bursty slot or a dead endpoint silences the slot;
+            # the trim denominator (kept) shrinks with it, so gossip
+            # degrades to averaging over whoever actually delivered
+            rt_t = rt._replace(
+                nbr_valid=(rt.nbr_valid & ~drop
+                           & live[rt.nbr_idx] & live[:, None]))
+        else:
+            rt_t = rt
 
         # ---- innovation accumulator (cumulative LLR of all signals so far)
         # accumulate in the accum slot, carry in storage (every cast below
         # is a traced no-op under the default fp32 policy)
-        cum_llr = (cum_llr.astype(ac_dt) + innovation(t)).astype(st_dt)
+        cum_new = (cum_llr.astype(ac_dt) + innovation(t)).astype(st_dt)
+        if faults is not None:
+            # dead agents observe no signals — the accumulator freezes
+            cum_new = jnp.where(live[sl], cum_new, cum_llr)
+        cum_llr = cum_new
 
         # ---- intra-C gossip with trimming (lines 6-9)
         gk = jax.random.fold_in(base_key, stream_fold(t, STREAM_GOSSIP))
-        tsum, kept = gossip(gk, t, r, rt, F)
+        tsum, kept = gossip(gk, t, r, rt_t, F)
         r_gossip = ((tsum + r.astype(ac_dt)) / (kept[sl] + 1.0)
                     + cum_llr.astype(ac_dt))
         r_new = jnp.where(rt.active[sl], r_gossip, r.astype(ac_dt))
         r_new = r_new.astype(st_dt)
+        if faults is not None:
+            # dead agents neither gossip nor update — stale-state rejoin
+            r_new = jnp.where(live[sl], r_new, r)
 
         # ---- PS fusion every Γ (lines 10-22)
         def fuse(r_in):
@@ -510,9 +556,15 @@ def _scan_core(
             return _fusion(fk, t, r_in, rt, F, n_reps=n_reps,
                            extra_reps=extra_reps, attack=attack,
                            accum_dtype=None if policy is None
-                           else policy.accum)
+                           else policy.accum,
+                           live=None if faults is None else live)
 
         is_fusion = (t + 1) % rt.gamma.astype(t.dtype) == 0
+        if faults is not None:
+            # PS crash: the whole fusion round is skipped — degrade to
+            # intra-network consensus instead of pooling through a dead PS
+            is_fusion = is_fusion & ps_alive(base_key, t, faults,
+                                             engine=ENGINE_BYZANTINE)
         r_new = jax.lax.cond(is_fusion, fuse, lambda x: x, r_new)
 
         # Byzantine agents' own state is meaningless; keep it at 0.
@@ -525,11 +577,15 @@ def _scan_core(
             ys = dec
         else:
             ys = None
-        return (r_new, cum_llr), ys
+        out = (r_new, cum_llr) + (() if faults is None else (fs,))
+        return out, ys
 
     zeros = jnp.zeros((N,) + pair, st_dt)
-    (r_fin, _), ys = jax.lax.scan(
-        body, (zeros, zeros), jnp.arange(T, dtype=jnp.uint32)
+    carry0 = (zeros, zeros) + (
+        () if faults is None
+        else (init_fault_state(N, rt.nbr_idx.shape),))
+    (r_fin, *_), ys = jax.lax.scan(
+        body, carry0, jnp.arange(T, dtype=jnp.uint32)
     )
     # diagnostics leave the engine in fp32 whatever the storage policy
     up = (lambda x: x.astype(jnp.float32)) if st_dt != jnp.float32 else (
@@ -567,6 +623,7 @@ def make_byzantine_scan(
     backend: str = "auto",
     store: str = "trajectory",
     policy: Policy | str | None = None,
+    faults: FaultModel | None = None,
 ):
     """Build Algorithm 2's scan for a fixed (model, cfg, T).
 
@@ -583,7 +640,10 @@ def make_byzantine_scan(
     (:mod:`repro.kernels.byz_trim`); ``store`` what the scan materializes
     (see :class:`ByzantineResult`); ``policy`` the precision policy of the
     persistent carries (:mod:`repro.core.precision`; ``None`` keeps the
-    bit-identical all-fp32 program).
+    bit-identical all-fp32 program); ``faults`` the unified fault plane
+    (:mod:`repro.core.faults` — a traced pytree, so fault severity can
+    ride the vmap scenario axis; ``None`` keeps the bit-identical
+    pre-fault program).
     """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
@@ -591,6 +651,10 @@ def make_byzantine_scan(
         raise ValueError(f"core must be one of {CORES}, got {core!r}")
     if store not in STORES:
         raise ValueError(f"store must be one of {STORES}, got {store!r}")
+    if faults is not None and core == "dense":
+        # the dense oracle gossips through a static (N, N) adjacency and
+        # cannot see per-round fault-silenced neighbor slots
+        raise ValueError("faults= requires core='sparse'")
     pol = None if policy is None else resolve_policy(policy)
     accum_name = None if pol is None else pol.accum
     rt, extra_reps, n_reps, gossip_adj = make_byzantine_runtime(model, cfg)
@@ -618,6 +682,7 @@ def make_byzantine_scan(
         extra_reps=extra_reps,
         n_reps=n_reps,
         policy=pol,
+        faults=faults,
     )
     return run
 

@@ -1,0 +1,362 @@
+"""Unified fault plane — bursty links, agent churn, PS crash/recovery.
+
+The paper's fault model is i.i.d. Bernoulli packet loss: every engine
+draws one ``(E,)`` mask per round (:func:`repro.core.pushsum.step_edge_mask`)
+and the B-window assumption does the rest. Real hierarchical networks
+fail in *correlated* ways, and this module generalizes the link draw in
+three directions while keeping the degenerate case bit-identical:
+
+* **Bursty drops** — a per-edge two-state Gilbert-Elliott Markov chain.
+  Each edge carries one bit of state (``good``/``bad``); a good edge
+  drops with the engine's baseline ``drop_prob``, a bad edge with
+  ``drop_bad``, and the state evolves with transition probabilities
+  ``p_gb``/``p_bg`` (mean burst length ``1/p_bg`` rounds). The B-window
+  forcing that backs the paper's Assumption 2 is *suppressed while an
+  edge is bad* — bursts are exactly the violations of the B-window the
+  robustness claims must survive. ``p_gb = 0`` never leaves the good
+  state and recovers today's i.i.d. Bernoulli mask bit-for-bit (the
+  drop uniform is drawn on the engine's existing link stream).
+
+* **Churn** — a capacity-padded ``(N,)`` node liveness mask. A dead
+  agent's edges are masked in both directions and its node state is
+  frozen (``where(live, new, old)``), so it rejoins with stale state
+  and the push-sum mass invariant is conserved exactly through
+  leave/rejoin: frozen nodes contribute unchanged terms to
+  ``z.sum(0) + ((sigma[src] - rho) * valid).sum(0)`` and the live rest
+  sees an ordinary drop round. The cumulative-sum relay then self-heals
+  the stale edges on the first live round after rejoin.
+
+* **PS crash/recovery** — a scalar per-round coin for the parameter
+  server (or the representative uplink). While the PS is down, the
+  gamma-period fusion is skipped entirely: the hierarchy degrades to
+  plain local consensus instead of pooling through a dead coordinator.
+
+All runtime numbers live in :class:`FaultModel`, a pytree of scalar
+arrays, so fault severity rides the existing vmap scenario axis without
+retracing; the per-round realization state is :class:`FaultState`, an
+O(E) + O(N) carry (never a ``(T, E)`` or ``(T, N, N)`` schedule — the
+registered ``*_faults`` statics contracts pin this).
+
+PRNG discipline: fault draws get their own fold-in domain,
+``fault_stream_fold``, an affine map into the *negative* integers below
+``-2^21`` — strictly below the HPS ``~t`` domain ``[-2^20, -1]`` and
+disjoint from every nonnegative engine stream, with the per-engine /
+per-stream slots pairwise disjoint by stride-12 congruence. The maps
+are registered with the :mod:`repro.statics.streams` lattice prover via
+the four ``*_faults`` contracts below, so a future collision is a lint
+failure, not a silent correlation.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.statics import contracts as _contracts
+
+__all__ = [
+    "ENGINE_PUSHSUM",
+    "ENGINE_SOCIAL",
+    "ENGINE_HPS",
+    "ENGINE_BYZANTINE",
+    "FAULT_EDGE",
+    "FAULT_CHURN",
+    "FAULT_PS",
+    "FAULT_DOMAIN_BASE",
+    "FaultModel",
+    "FaultState",
+    "fault_stream_fold",
+    "make_fault_model",
+    "gilbert_elliott_model",
+    "init_fault_state",
+    "edge_uniforms",
+    "step_faults",
+    "step_faults_nbr",
+    "faulty_edge_mask",
+    "ps_alive",
+    "freeze",
+]
+
+# One engine slot per scan core that folds fault streams into its base
+# key; one stream slot per independent fault draw. The affine fold-in
+# map below separates (engine, stream) pairs by congruence class mod
+# N_ENGINES * N_FAULT_STREAMS.
+N_ENGINES = 4
+ENGINE_PUSHSUM, ENGINE_SOCIAL, ENGINE_HPS, ENGINE_BYZANTINE = range(N_ENGINES)
+
+N_FAULT_STREAMS = 3
+FAULT_EDGE, FAULT_CHURN, FAULT_PS = range(N_FAULT_STREAMS)
+
+# The fault domain starts below -2^21: strictly below the HPS ~t domain
+# [-2^20, -1], and every existing engine stream (t, 2t+s, 3t+s) is
+# nonnegative, so the whole plane is disjoint from every shipped stream
+# by sign alone. Images stay within +-2^31 over the statics horizon
+# (12 * 2^20 + 2^21 + 11 < 2^31), keeping the lattice proof sound.
+FAULT_DOMAIN_BASE = 1 << 21
+
+_STRIDE = N_ENGINES * N_FAULT_STREAMS
+
+
+def fault_stream_fold(t, engine: int, stream: int):
+    """Fold-in value for fault ``stream`` of ``engine`` at iteration ``t``.
+
+    ``t -> -(STRIDE * t + 3 * engine + stream) - 2^21`` — affine, so the
+    statics lattice prover certifies disjointness exactly. Python ints
+    are pinned to ``np.int32`` (the ``hps_stream_fold`` convention) so
+    host-side probing and the traced uint32/int32 scan index agree bit
+    for bit mod 2^32.
+    """
+    slot = int(engine) * N_FAULT_STREAMS + int(stream)
+    if isinstance(t, (int, np.integer)):
+        return np.int32(-(int(t) * _STRIDE + slot) - FAULT_DOMAIN_BASE)
+    return -(t * _STRIDE + slot) - FAULT_DOMAIN_BASE
+
+
+class FaultModel(NamedTuple):
+    """Scalar fault-severity knobs; a pytree that rides the vmap scenario
+    axis (stack models leaf-wise to sweep fault axes without retracing).
+
+    The defaults of :func:`make_fault_model` are fully degenerate: no
+    edge ever turns bad, no agent ever leaves, the PS never crashes —
+    and the realized masks equal today's Bernoulli draw bit-for-bit.
+    """
+
+    p_gb: jnp.ndarray        # () P(good -> bad) per edge per round
+    p_bg: jnp.ndarray        # () P(bad -> good); mean burst = 1/p_bg
+    drop_bad: jnp.ndarray    # () drop probability while bad
+    leave_prob: jnp.ndarray  # () P(live agent leaves) per round
+    join_prob: jnp.ndarray   # () P(dead agent rejoins) per round
+    ps_crash_prob: jnp.ndarray  # () P(parameter server down) per round
+
+
+def make_fault_model(
+    *,
+    p_gb=0.0,
+    p_bg=1.0,
+    drop_bad=1.0,
+    leave_prob=0.0,
+    join_prob=1.0,
+    ps_crash_prob=0.0,
+) -> FaultModel:
+    f = lambda x: jnp.asarray(x, jnp.float32)  # noqa: E731
+    return FaultModel(
+        p_gb=f(p_gb), p_bg=f(p_bg), drop_bad=f(drop_bad),
+        leave_prob=f(leave_prob), join_prob=f(join_prob),
+        ps_crash_prob=f(ps_crash_prob),
+    )
+
+
+def gilbert_elliott_model(
+    mean_burst_len: float,
+    bad_frac: float,
+    *,
+    drop_bad: float = 1.0,
+    **kw,
+) -> FaultModel:
+    """Gilbert-Elliott chain parameterized by its stationary behavior:
+    bursts last ``mean_burst_len`` rounds on average and an edge spends
+    a ``bad_frac`` fraction of time in the bad state."""
+    if mean_burst_len < 1.0:
+        raise ValueError(f"mean_burst_len must be >= 1, got {mean_burst_len}")
+    if not 0.0 <= bad_frac < 1.0:
+        raise ValueError(f"bad_frac must be in [0, 1), got {bad_frac}")
+    p_bg = 1.0 / mean_burst_len
+    p_gb = bad_frac * p_bg / (1.0 - bad_frac)
+    return make_fault_model(p_gb=p_gb, p_bg=p_bg, drop_bad=drop_bad, **kw)
+
+
+class FaultState(NamedTuple):
+    """Per-round fault realization carried through the scan: O(E) + O(N)."""
+
+    edge_bad: jnp.ndarray   # (E,) bool — Gilbert-Elliott state per edge
+    node_live: jnp.ndarray  # (N,) bool — churn liveness per agent
+
+
+def init_fault_state(n_nodes: int, edge_shape) -> FaultState:
+    """All edges good, all agents live (what t=0 of every engine assumes).
+
+    ``edge_shape`` is the per-shard edge count (int) or a full slot
+    shape like the byzantine ``(N, deg_max)`` neighbor table."""
+    shape = (edge_shape,) if isinstance(edge_shape, int) else tuple(edge_shape)
+    return FaultState(
+        edge_bad=jnp.zeros(shape, bool),
+        node_live=jnp.ones((n_nodes,), bool),
+    )
+
+
+def edge_uniforms(key, fold_t, e: int, *, graph_axis=None, n_shards: int = 1):
+    """One uniform per (local) edge on ``fold_in(key, fold_t)``.
+
+    Under a graph axis this mirrors ``shard_edge_mask``'s full-draw /
+    window semantics: every shard draws the identical full
+    ``(n_shards * e,)`` vector and slices its own window, so the fault
+    realization is the same function of ``(key, t)`` at every shard
+    count (threefry has no prefix property, so per-shard keys would
+    change the realization with the partitioning).
+    """
+    kt = jax.random.fold_in(key, fold_t)
+    if graph_axis is None:
+        return jax.random.uniform(kt, (e,))
+    full = jax.random.uniform(kt, (n_shards * e,))
+    start = jax.lax.axis_index(graph_axis) * e
+    return jax.lax.dynamic_slice(full, (start,), (e,))
+
+
+def step_faults(
+    key,
+    t,
+    fm: FaultModel,
+    fs: FaultState,
+    *,
+    engine: int,
+    graph_axis=None,
+    n_shards: int = 1,
+) -> FaultState:
+    """Advance the Gilbert-Elliott edge chain and the churn liveness mask
+    one round, on the engine's FAULT_EDGE / FAULT_CHURN streams.
+
+    The (N,) churn draw is replicated (never windowed), so liveness is
+    shard-count invariant for free; the edge draw windows like the link
+    mask. Multi-dim edge state (the byzantine neighbor table) is only
+    supported unsharded.
+    """
+    if graph_axis is None:
+        ke = jax.random.fold_in(
+            key, fault_stream_fold(t, engine, FAULT_EDGE))
+        u_e = jax.random.uniform(ke, fs.edge_bad.shape)
+    else:
+        if fs.edge_bad.ndim != 1:
+            raise ValueError(
+                "sharded fault state requires 1-D edge_bad, got shape "
+                f"{fs.edge_bad.shape}")
+        u_e = edge_uniforms(
+            key, fault_stream_fold(t, engine, FAULT_EDGE),
+            fs.edge_bad.shape[0], graph_axis=graph_axis, n_shards=n_shards)
+    edge_bad = jnp.where(fs.edge_bad, u_e >= fm.p_bg, u_e < fm.p_gb)
+
+    kn = jax.random.fold_in(key, fault_stream_fold(t, engine, FAULT_CHURN))
+    u_n = jax.random.uniform(kn, fs.node_live.shape)
+    node_live = jnp.where(fs.node_live, u_n >= fm.leave_prob,
+                          u_n < fm.join_prob)
+    return FaultState(edge_bad=edge_bad, node_live=node_live)
+
+
+def step_faults_nbr(key, t, fm: FaultModel, fs: FaultState, *, engine: int):
+    """Neighbor-table variant of :func:`step_faults` -> (state, drop).
+
+    The Byzantine engine's "edges" are the padded (N, deg_max) neighbor
+    slots and its gossip has no baseline ``drop_prob`` (good slots always
+    deliver), so the chain transition AND this round's per-slot drop coin
+    both come from one ``(2, N, deg_max)`` uniform on the engine's
+    FAULT_EDGE slot: plane 0 advances the Gilbert-Elliott state, plane 1
+    decides whether a bad slot drops (``< drop_bad``). Churn draws on
+    FAULT_CHURN exactly as in :func:`step_faults`.
+    """
+    ke = jax.random.fold_in(key, fault_stream_fold(t, engine, FAULT_EDGE))
+    u2 = jax.random.uniform(ke, (2,) + fs.edge_bad.shape)
+    edge_bad = jnp.where(fs.edge_bad, u2[0] >= fm.p_bg, u2[0] < fm.p_gb)
+
+    kn = jax.random.fold_in(key, fault_stream_fold(t, engine, FAULT_CHURN))
+    u_n = jax.random.uniform(kn, fs.node_live.shape)
+    node_live = jnp.where(fs.node_live, u_n >= fm.leave_prob,
+                          u_n < fm.join_prob)
+    drop = edge_bad & (u2[1] < fm.drop_bad)
+    return FaultState(edge_bad=edge_bad, node_live=node_live), drop
+
+
+def faulty_edge_mask(u, t, fm: FaultModel, fs: FaultState, src, dst,
+                     drop_prob, B):
+    """Per-edge up/down mask under the fault plane.
+
+    ``u`` is the engine's EXISTING per-round link uniform (drawn on its
+    link stream) — with an all-good, all-live :class:`FaultState` the
+    result equals ``step_edge_mask``'s ``(u >= drop_prob) | forced``
+    bit-for-bit. Bad edges drop at ``drop_bad`` and are exempt from the
+    B-window forcing (a burst IS a B-window violation); edges touching a
+    dead endpoint are down unconditionally.
+    """
+    p_eff = jnp.where(fs.edge_bad, fm.drop_bad, drop_prob)
+    forced = ((t % B) == (B - 1)) & ~fs.edge_bad
+    mask = (u >= p_eff) | forced
+    return mask & fs.node_live[src] & fs.node_live[dst]
+
+
+def ps_alive(key, t, fm: FaultModel, *, engine: int):
+    """Scalar bool: is the parameter server up this round (FAULT_PS
+    stream)? Fusion rounds gate on this — a dead PS skips fusion, so the
+    hierarchy degrades to local consensus instead of pooling garbage."""
+    k = jax.random.fold_in(key, fault_stream_fold(t, engine, FAULT_PS))
+    return jax.random.uniform(k, ()) >= fm.ps_crash_prob
+
+
+def freeze(live, new, old):
+    """``where(live, new, old)`` for (N,) or (N, d) node state — the
+    churn semantics: a dead agent's state is carried unchanged so it
+    rejoins stale, and the global mass invariant is untouched."""
+    if new.ndim == live.ndim + 1:
+        return jnp.where(live[:, None], new, old)
+    return jnp.where(live, new, old)
+
+
+# ---------------------------------------------------------------------------
+# Statics contracts — one per engine that folds fault streams into its
+# base key. Each declares (a) the fault-state shape discipline: fault
+# arrays stay O(E) + O(N), no (N, N) and no (T, *) schedules may appear
+# in a faulted trace; and (b) the fault fold-in maps, proven pairwise
+# disjoint AND disjoint from the host engine's own streams (same base
+# key!) by the shares_seed_with cross-links. repro.statics.cli maps each
+# name to a concrete faulted fixture.
+# ---------------------------------------------------------------------------
+
+_FAULT_FORBIDDEN = {"*": (("N", "N"), ("T", "*"))}
+
+
+def _fault_streams(engine: int, *, with_ps: bool):
+    decls = [
+        _contracts.StreamDecl(
+            "fault-edge", lambda t, _e=engine: fault_stream_fold(
+                t, _e, FAULT_EDGE)),
+        _contracts.StreamDecl(
+            "fault-churn", lambda t, _e=engine: fault_stream_fold(
+                t, _e, FAULT_CHURN)),
+    ]
+    if with_ps:
+        decls.append(_contracts.StreamDecl(
+            "fault-ps", lambda t, _e=engine: fault_stream_fold(
+                t, _e, FAULT_PS)))
+    return tuple(decls)
+
+
+# pushsum has no PS/fusion, so no FAULT_PS slot is ever drawn there.
+_contracts.register(_contracts.EngineContract(
+    name="pushsum_faults",
+    forbidden=_FAULT_FORBIDDEN,
+    streams=_fault_streams(ENGINE_PUSHSUM, with_ps=False),
+    shares_seed_with=("pushsum", "pushsum_sharded"),
+))
+
+_contracts.register(_contracts.EngineContract(
+    name="social_faults",
+    forbidden=_FAULT_FORBIDDEN,
+    streams=_fault_streams(ENGINE_SOCIAL, with_ps=True),
+    shares_seed_with=("social", "hps", "byzantine",
+                      "hps_faults", "byzantine_faults"),
+))
+
+_contracts.register(_contracts.EngineContract(
+    name="hps_faults",
+    forbidden=_FAULT_FORBIDDEN,
+    streams=_fault_streams(ENGINE_HPS, with_ps=True),
+    shares_seed_with=("hps", "social", "byzantine",
+                      "social_faults", "byzantine_faults"),
+))
+
+_contracts.register(_contracts.EngineContract(
+    name="byzantine_faults",
+    forbidden=_FAULT_FORBIDDEN,
+    streams=_fault_streams(ENGINE_BYZANTINE, with_ps=True),
+    shares_seed_with=("byzantine", "social", "hps",
+                      "social_faults", "hps_faults"),
+))

@@ -66,6 +66,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .faults import (
+    ENGINE_HPS,
+    FaultModel,
+    edge_uniforms,
+    faulty_edge_mask,
+    init_fault_state,
+    ps_alive,
+    step_faults,
+)
 from .graphs import EdgeList, HierTopology
 from .precision import Policy, resolve_policy
 from repro.statics.contracts import contract as statics_contract
@@ -194,7 +203,7 @@ def ps_trimmed_pool(
 
 def hps_fusion(
     z: jnp.ndarray, m: jnp.ndarray, rep_mask: jnp.ndarray, M, F=0,
-    *, accum_dtype: str | None = None,
+    *, accum_dtype: str | None = None, live: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Apply the hierarchical fusion matrix F to (z, m) at the reps.
 
@@ -213,22 +222,38 @@ def hps_fusion(
     policy's accum slot); the returned (z, m) stay in the input dtype —
     persistent values keep the storage dtype. ``None`` keeps the input
     dtype, the pre-policy program.
+
+    ``live`` (an (N,) bool churn-liveness mask, see :mod:`repro.core.faults`)
+    degrades the fusion gracefully: only live representatives contribute to
+    the PS pool and only live representatives adopt the result, with the
+    fusion weight ``1/(2M)`` replaced by ``1/(2 * live-rep-count)`` — each
+    live rep still keeps half and receives the pool mean of the halves, so
+    the fusion stays mass-preserving over the *live* representative set
+    while dead reps are untouched (their state is frozen elsewhere).
+    ``live=None`` keeps the exact static-M pre-fault program.
     """
     ad = z.dtype if accum_dtype is None else jnp.dtype(accum_dtype)
-    repf = rep_mask.astype(ad)
+    eff = rep_mask if live is None else rep_mask & live
+    repf = eff.astype(ad)
     z_a = z.astype(ad)
     m_a = m.astype(ad)
     if isinstance(F, int) and F == 0:
-        pooled_z = (z_a * repf[:, None]).sum(axis=0) / (2.0 * M)   # (d,)
-        pooled_m = (m_a * repf).sum() / (2.0 * M)
+        if live is None:
+            denom = 2.0 * M
+        else:
+            # at least one contributor to avoid 0/0 when every rep is dead
+            # (then no rep adopts anyway — eff is all-False)
+            denom = 2.0 * jnp.maximum(repf.sum(), 1.0)
+        pooled_z = (z_a * repf[:, None]).sum(axis=0) / denom       # (d,)
+        pooled_m = (m_a * repf).sum() / denom
     else:
         cat = jnp.concatenate([z, m[:, None]], axis=1)             # (N, d+1)
-        pooled = 0.5 * ps_trimmed_pool(cat, rep_mask, F,
+        pooled = 0.5 * ps_trimmed_pool(cat, eff, F,
                                        accum_dtype=accum_dtype)    # (d+1,)
         pooled_z, pooled_m = pooled[:-1], pooled[-1]
-    z_new = jnp.where(rep_mask[:, None],
+    z_new = jnp.where(eff[:, None],
                       0.5 * z_a + pooled_z[None, :], z_a).astype(z.dtype)
-    m_new = jnp.where(rep_mask, 0.5 * m_a + pooled_m, m_a).astype(m.dtype)
+    m_new = jnp.where(eff, 0.5 * m_a + pooled_m, m_a).astype(m.dtype)
     return z_new, m_new
 
 
@@ -388,6 +413,7 @@ def _hps_scan_core(
     policy: Policy | str | None = None,
     dst_sorted: bool = False,
     halo: str = "psum",
+    faults: FaultModel | None = None,
 ) -> tuple[SparsePushSumState, tuple[jnp.ndarray, jnp.ndarray]]:
     """Algorithm 1's scan, parameterized over the per-scenario runtime
     arrays (vmappable for batched grids).
@@ -412,7 +438,15 @@ def _hps_scan_core(
     ``dst_sorted=True`` asserts the runtime's edge index is dst-sorted
     (true for ``HPSConfig.edge_index()`` products). All kwargs here are
     trace statics: thread them through ``static_argnames`` alongside
-    ``backend``.
+    ``backend`` — except ``faults``, a TRACED
+    :class:`repro.core.faults.FaultModel` pytree that rides the vmap
+    scenario axis. With faults on, the link draw generalizes to the
+    Gilbert-Elliott burst chain, churn masks edges and freezes dead
+    agents, and fusion rounds additionally gate on the FAULT_PS crash
+    coin — a down PS skips fusion entirely, degrading to local
+    consensus (plus per-rep-link degradation: dead reps drop out of the
+    pool via ``hps_fusion(live=)``). ``faults=None`` emits the
+    bit-identical pre-fault program.
     """
     pol = None if policy is None else resolve_policy(policy)
     accum_name = None if pol is None else pol.accum
@@ -427,9 +461,24 @@ def _hps_scan_core(
     share = 1.0 / (d_out + 1.0)
     target = w.mean(axis=0)
 
-    def body(state, t):
+    def body(carry, t):
+        if faults is None:
+            state = carry
+            fs = None
+        else:
+            state, fs = carry
+            fs = step_faults(key, t, faults, fs, engine=ENGINE_HPS,
+                             graph_axis=graph_axis, n_shards=n_shards)
         # --- consensus (Alg. 1 lines 3-12) ---
-        if graph_axis is not None:
+        if faults is not None:
+            # the drop uniform stays on the hps link stream (degenerate
+            # model == step_edge_mask values draw-for-draw); GE state and
+            # churn advance on the fault plane's own streams
+            u = edge_uniforms(key, hps_stream_fold(t), E,
+                              graph_axis=graph_axis, n_shards=n_shards)
+            mask = faulty_edge_mask(u, t, faults, fs, rt.src, rt.dst,
+                                    rt.drop_prob, rt.B)
+        elif graph_axis is not None:
             mask = shard_edge_mask(
                 key, t, E, rt.drop_prob, rt.B,
                 graph_axis=graph_axis, n_shards=n_shards,
@@ -442,12 +491,19 @@ def _hps_scan_core(
         st = sparse_pushsum_step(
             state, mask, rt.src, rt.dst, rt.valid, backend, share=share,
             graph_axis=graph_axis, dst_sorted=dst_sorted, policy=policy,
-            halo=halo, n_shards=n_shards,
+            halo=halo, n_shards=n_shards, faults=fs,
         )
         # --- PS fusion every Γ (lines 13-21) ---
         z_f, m_f = hps_fusion(st.z, st.m, rt.rep_mask, rt.M, F,
-                              accum_dtype=accum_name)
+                              accum_dtype=accum_name,
+                              live=None if fs is None else fs.node_live)
         do_fusion = (t + 1) % rt.gamma == 0
+        if faults is not None:
+            # PS crash: a down server skips the fusion round entirely —
+            # the hierarchy degrades to plain local consensus instead of
+            # pooling through a dead coordinator
+            do_fusion = do_fusion & ps_alive(key, t, faults,
+                                             engine=ENGINE_HPS)
         new = st._replace(
             z=jnp.where(do_fusion, z_f, st.z),
             m=jnp.where(do_fusion, m_f, st.m),
@@ -458,9 +514,14 @@ def _hps_scan_core(
             ys = jnp.abs(sparse_ratios(new) - target).max()   # () worst err
         else:
             ys = None
-        return new, ys
+        out = new if faults is None else (new, fs)
+        return out, ys
 
-    final, ys = jax.lax.scan(body, state0, jnp.arange(T, dtype=jnp.int32))
+    carry0 = state0 if faults is None else (
+        state0, init_fault_state(N, E))
+    final, ys = jax.lax.scan(body, carry0, jnp.arange(T, dtype=jnp.int32))
+    if faults is not None:
+        final = final[0]
     if store == "trajectory":
         return final, (ys, jnp.abs(ys - target[None, None, :]).max(axis=(1, 2)))
     fr = sparse_ratios(final)
@@ -490,6 +551,7 @@ def run_hps_runtime(
     F: int = 0,
     policy: Policy | str | None = None,
     dst_sorted: bool = False,
+    faults: FaultModel | None = None,
 ) -> HPSResult:
     """Run Algorithm 1 on a prebuilt :class:`HPSRuntime`.
 
@@ -501,7 +563,9 @@ def run_hps_runtime(
     average for the trimmed-pool resilient rule; ``policy`` the
     storage/compute/accum dtype split. ``dst_sorted`` defaults to False
     because a user-built runtime may carry any edge order; the config-
-    driven wrappers pass True.
+    driven wrappers pass True. ``faults`` activates the unified fault
+    plane (:mod:`repro.core.faults`): bursty links, churn, and PS
+    crash/recovery; ``None`` keeps the bit-identical pre-fault program.
     """
     if store not in HPS_STORES:
         raise ValueError(f"store must be one of {HPS_STORES}, got {store!r}")
@@ -509,7 +573,7 @@ def run_hps_runtime(
         jax.random.PRNGKey(seed), rt, jnp.asarray(w),
         T=T, store=store, backend=backend, F=F,
         policy=None if policy is None else resolve_policy(policy),
-        dst_sorted=dst_sorted,
+        dst_sorted=dst_sorted, faults=faults,
     )
     return HPSResult(ratio=ratio, final_state=final, gap=gap)
 
@@ -524,6 +588,7 @@ def run_hps(
     store: str = "trajectory",
     F: int = 0,
     policy: Policy | str | None = None,
+    faults: FaultModel | None = None,
 ) -> HPSResult:
     """Run HPS for T iterations (single scenario) on the fused engine.
 
@@ -535,6 +600,7 @@ def run_hps(
     return run_hps_runtime(
         w, make_hps_runtime(cfg), T, seed=seed,
         backend=backend, store=store, F=F, policy=policy, dst_sorted=True,
+        faults=faults,
     )
 
 

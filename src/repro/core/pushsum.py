@@ -62,6 +62,15 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.faults import (
+    ENGINE_PUSHSUM,
+    FaultModel,
+    FaultState,
+    faulty_edge_mask,
+    freeze,
+    init_fault_state,
+    step_faults,
+)
 from repro.core.precision import Policy, resolve_policy
 from repro.statics.contracts import contract as statics_contract
 from repro.statics.retrace import register_cache as register_statics_cache
@@ -243,6 +252,7 @@ def sparse_pushsum_step(
     policy: Policy | str | None = None,
     halo: str = "psum",
     n_shards: int = 1,
+    faults: FaultState | None = None,
 ) -> SparsePushSumState:
     """One fast-robust-push-sum iteration on edge-list state.
 
@@ -303,6 +313,14 @@ def sparse_pushsum_step(
     :func:`repro.analysis.roofline.pushsum_halo_wire_bytes`). Reduce order
     differs from ``"psum"``, so ``"scatter"`` is opt-in, not bit-identical.
     ``n_shards`` (the graph-axis extent) must be given for ``"scatter"``.
+
+    **Fault plane** (``faults=``, a :class:`repro.core.faults.FaultState`):
+    edges with a dead endpoint are masked in both directions and the four
+    node-state fields of a dead agent are frozen (``where(live, new, old)``)
+    so it rejoins with stale state — the churn semantics of
+    :mod:`repro.core.faults`. Per-edge relay state needs no freeze: a
+    masked edge never latches. ``faults=None`` (default) emits the
+    bit-identical pre-fault program.
     """
     from repro.kernels.pushsum_edge import edge_scatter, resolve_backend
 
@@ -336,6 +354,9 @@ def sparse_pushsum_step(
     sigma_m_p_s = sigma_m_p.astype(st_dt)
 
     # --- delivery: operational edges latch the sender's new cumulative ---
+    if faults is not None:
+        # a dead endpoint takes the edge down in both directions
+        mask = mask & faults.node_live[src] & faults.node_live[dst]
     live = mask & valid
     if resolve_backend(backend) == "pallas":
         # value + mass columns in one (·, d+1) pass through the kernel
@@ -394,6 +415,17 @@ def sparse_pushsum_step(
     sigma_m_n = (sigma_m_p_s.astype(cp_dt) + m_pc * share).astype(st_dt)
     z_n = (z_pc * share[:, None]).astype(st_dt)
     m_n = (m_pc * share).astype(st_dt)
+
+    if faults is not None:
+        # freeze dead agents: state carries unchanged through the dead
+        # rounds (stale-rejoin semantics) and every term of the global
+        # mass invariant is conserved exactly — the live rest just sees
+        # an ordinary all-edges-dropped round toward the dead agent
+        ln = faults.node_live
+        z_n = freeze(ln, z_n, z)
+        m_n = freeze(ln, m_n, m)
+        sigma_n = freeze(ln, sigma_n, sigma)
+        sigma_m_n = freeze(ln, sigma_m_n, sigma_m)
 
     return SparsePushSumState(z_n, m_n, sigma_n, sigma_m_n, rho_new, rho_m_new)
 
@@ -592,6 +624,7 @@ def run_pushsum_sparse(
     backend: str = "auto",
     policy: Policy | str | None = None,
     dst_sorted: bool = False,
+    faults: FaultModel | None = None,
 ) -> tuple[SparsePushSumState, jnp.ndarray]:
     """Run T iterations of the edge-list core.
 
@@ -613,6 +646,17 @@ def run_pushsum_sparse(
     recording happens inside the scan (a fori_loop per window), so only
     T/record_every ratio frames ever exist — at N=1024 this is what keeps
     long-horizon runs O(N d) instead of O(T N d).
+
+    ``faults`` (a :class:`repro.core.faults.FaultModel`) activates the
+    unified fault plane: the Bernoulli link draw generalizes to a
+    per-edge Gilbert-Elliott burst chain, agents churn on the liveness
+    mask (edges down, state frozen, stale rejoin), and the per-round
+    realization state — O(E) + O(N), carried in the scan — advances on
+    the fault plane's own disjoint PRNG streams. ``faults=None``
+    (default) emits the bit-identical pre-fault program, and a
+    degenerate :func:`repro.core.faults.make_fault_model` reproduces the
+    same mask values draw-for-draw. Incompatible with an explicit
+    ``masks`` schedule.
     """
     w = jnp.asarray(w)
     src = jnp.asarray(src, jnp.int32)
@@ -626,6 +670,11 @@ def run_pushsum_sparse(
     k = record_every
 
     if masks is not None:
+        if faults is not None:
+            raise ValueError(
+                "faults= requires key-driven masks; an explicit masks "
+                "schedule already fixes the link realization"
+            )
         masks = jnp.asarray(masks)
         if masks.shape[0] != T:
             raise ValueError(
@@ -642,6 +691,43 @@ def run_pushsum_sparse(
 
     if key is None:
         key = jax.random.PRNGKey(0)
+
+    if faults is not None:
+        # fault-plane scan: the carry gains the O(E) + O(N) FaultState;
+        # the link uniform is drawn on the SAME fold as step_edge_mask, so
+        # the degenerate FaultModel reproduces the Bernoulli mask values
+        # draw-for-draw while the GE/churn streams live in their own
+        # disjoint fold-in domain
+        fs0 = init_fault_state(w.shape[0], E)
+
+        def fault_round(carry, t):
+            state, fs = carry
+            fs = step_faults(key, t, faults, fs, engine=ENGINE_PUSHSUM)
+            u = jax.random.uniform(jax.random.fold_in(key, t), (E,))
+            mask = faulty_edge_mask(u, t, faults, fs, src, dst, drop_prob, B)
+            new = sparse_pushsum_step(state, mask, src, dst, valid, backend,
+                                      policy=policy, dst_sorted=dst_sorted,
+                                      faults=fs)
+            return (new, fs)
+
+        if k > 1 and T % k == 0:
+            def fwindow(carry, t0):
+                new = jax.lax.fori_loop(
+                    0, k, lambda i, c: fault_round(c, t0 + jnp.uint32(i)),
+                    carry)
+                return new, sparse_ratios(new[0])
+
+            (final, _), traj = jax.lax.scan(
+                fwindow, (state0, fs0), jnp.arange(0, T, k, dtype=jnp.uint32))
+            return final, traj
+
+        def fbody(carry, t):
+            new = fault_round(carry, t)
+            return new, sparse_ratios(new[0])
+
+        (final, _), traj = jax.lax.scan(
+            fbody, (state0, fs0), jnp.arange(T, dtype=jnp.uint32))
+        return final, traj[k - 1 :: k]
 
     if k > 1 and T % k == 0:
         # record inside the scan: one fori_loop per window, one frame out

@@ -60,6 +60,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .faults import (
+    ENGINE_SOCIAL,
+    FaultModel,
+    edge_uniforms,
+    faulty_edge_mask,
+    freeze,
+    init_fault_state,
+    ps_alive,
+    step_faults,
+)
 from .graphs import EdgeList
 from .hps import HPSConfig, hps_fusion
 from .precision import Policy, resolve_policy
@@ -252,6 +262,7 @@ def _social_scan_core(
     policy: Policy | str | None = None,
     dst_sorted: bool = False,
     halo: str = "psum",
+    faults: FaultModel | None = None,
 ) -> tuple[SparsePushSumState, tuple[jnp.ndarray, jnp.ndarray]]:
     """Algorithm 3's scan, parameterized over the per-scenario runtime
     arrays (vmappable for batched grids).
@@ -275,7 +286,13 @@ def _social_scan_core(
     softmax run in the accum dtype. ``dst_sorted=True`` asserts the
     runtime's edge index is dst-sorted (true for everything built from
     ``HPSConfig.edge_index()``; user-supplied runtimes default to False).
-    All of these kwargs are trace statics.
+    All of these kwargs are trace statics — except ``faults``, a TRACED
+    :class:`repro.core.faults.FaultModel` pytree riding the vmap scenario
+    axis: bursty Gilbert-Elliott links, churn (dead agents neither gossip
+    nor observe signals — consensus state, accumulator, and belief all
+    freeze until rejoin), and PS crash (fusion rounds skipped while the
+    coordinator is down). ``faults=None`` emits the bit-identical
+    pre-fault program.
     """
     from repro.kernels.social_innov import innovation_step
 
@@ -295,13 +312,27 @@ def _social_scan_core(
 
     # the trajectory store emits every belief through ys, so only the other
     # stores need the final mu threaded through the carry (storage dtype —
-    # under a bf16 policy no fp32 (N, m) value may persist across rounds)
-    carry_mu = store != "trajectory"
+    # under a bf16 policy no fp32 (N, m) value may persist across rounds).
+    # The fault plane always carries mu: a dead agent's belief freezes to
+    # its last live value, which must therefore survive in the carry.
+    carry_mu = store != "trajectory" or faults is not None
 
     def body(carry, t):
         state = carry[0]
+        if faults is not None:
+            fs = step_faults(mask_key, t, faults, carry[-1],
+                             engine=ENGINE_SOCIAL,
+                             graph_axis=graph_axis, n_shards=n_shards)
         # --- consensus (lines 4-12) ---
-        if graph_axis is not None:
+        if faults is not None:
+            # drop uniform stays on the social link stream (degenerate
+            # model == step_edge_mask values draw-for-draw)
+            u_e = edge_uniforms(
+                mask_key, social_stream_fold(t, STREAM_LINK), E,
+                graph_axis=graph_axis, n_shards=n_shards)
+            mask = faulty_edge_mask(u_e, t, faults, fs, rt.src, rt.dst,
+                                    rt.drop_prob, rt.B)
+        elif graph_axis is not None:
             mask = shard_edge_mask(
                 mask_key, t, E, rt.drop_prob, rt.B,
                 graph_axis=graph_axis, n_shards=n_shards,
@@ -316,16 +347,27 @@ def _social_scan_core(
             state, mask, rt.src, rt.dst, rt.valid, backend, share=share,
             graph_axis=graph_axis, dst_sorted=dst_sorted, policy=policy,
             halo=halo, n_shards=n_shards,
+            faults=None if faults is None else fs,
         )
         # --- innovation + belief (lines 13-16), one fused pass ---
         sk = jax.random.fold_in(sig_key, social_stream_fold(t, STREAM_SIGNAL))
         u = jax.random.uniform(sk, (N,))
         z, mu = innovation_step(st.z, st.m, u, cdf, log_tables, backend,
                                 accum_dtype=accum_name)
+        if faults is not None:
+            # dead agents observe nothing: the accumulator stays at its
+            # frozen post-consensus value and the belief stays stale
+            z = freeze(fs.node_live, z, st.z)
+            mu = freeze(fs.node_live, mu, carry[1].astype(mu.dtype))
         # --- PS fusion every Γ (lines 17-22), applied post-innovation ---
         z_f, m_f = hps_fusion(z, st.m, rt.rep_mask, M,
-                              accum_dtype=accum_name)
+                              accum_dtype=accum_name,
+                              live=None if faults is None else fs.node_live)
         do_fusion = (t + 1) % rt.gamma == 0
+        if faults is not None:
+            # PS crash: skip the fusion round, degrade to local consensus
+            do_fusion = do_fusion & ps_alive(mask_key, t, faults,
+                                             engine=ENGINE_SOCIAL)
         new = st._replace(
             z=jnp.where(do_fusion, z_f, z),
             m=jnp.where(do_fusion, m_f, st.m),
@@ -339,10 +381,15 @@ def _social_scan_core(
             ys = wrong.max()          # () worst wrong-hypothesis log ratio
         else:
             ys = None
-        return ((new, mu.astype(st_dt)) if carry_mu else (new,)), ys
+        out = (new,) + ((mu.astype(st_dt),) if carry_mu else ())
+        if faults is not None:
+            out = out + (fs,)
+        return out, ys
 
-    carry0 = ((state0, jnp.zeros((N, m), st_dt)) if carry_mu
-              else (state0,))
+    carry0 = (state0,) + (
+        (jnp.zeros((N, m), st_dt),) if carry_mu else ())
+    if faults is not None:
+        carry0 = carry0 + (init_fault_state(N, E),)
     (final, *rest), ys = jax.lax.scan(
         body, carry0, jnp.arange(T, dtype=jnp.int32)
     )
@@ -380,6 +427,7 @@ def run_social_runtime(
     store: str = "trajectory",
     policy: Policy | str | None = None,
     dst_sorted: bool = False,
+    faults: FaultModel | None = None,
 ) -> SocialLearningResult:
     """Run Algorithm 3 on a prebuilt :class:`SocialRuntime`.
 
@@ -408,6 +456,7 @@ def run_social_runtime(
         backend=backend,
         policy=None if policy is None else resolve_policy(policy),
         dst_sorted=dst_sorted,
+        faults=faults,
     )
     return SocialLearningResult(
         beliefs=beliefs, final_state=final, log_ratio=log_ratio
@@ -424,6 +473,7 @@ def run_social_learning(
     backend: str = "auto",
     store: str = "trajectory",
     policy: Policy | str | None = None,
+    faults: FaultModel | None = None,
 ) -> SocialLearningResult:
     """Run Algorithm 3 for T iterations (single scenario).
 
@@ -440,7 +490,7 @@ def run_social_learning(
     return run_social_runtime(
         model, make_social_runtime(cfg), cfg.topo.M, T,
         seed=seed, signal_seed=signal_seed, backend=backend, store=store,
-        policy=policy, dst_sorted=True,
+        policy=policy, dst_sorted=True, faults=faults,
     )
 
 

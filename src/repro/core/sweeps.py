@@ -65,6 +65,14 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from .attacks import Attack
+from .faults import (
+    ENGINE_PUSHSUM,
+    FaultModel,
+    edge_uniforms,
+    faulty_edge_mask,
+    init_fault_state,
+    step_faults,
+)
 from .byzantine import (
     ByzantineConfig,
     ByzantineResult,
@@ -154,6 +162,7 @@ class PushSumSweepResult(NamedTuple):
     drop_prob: jnp.ndarray    # (K,) scenario coordinates
     seed: jnp.ndarray         # (K,)
     graph: jnp.ndarray        # (K,) topology-draw index
+    fault: jnp.ndarray | None = None  # (K,) fault-model index, None = no axis
 
     @property
     def K(self) -> int:
@@ -170,34 +179,82 @@ def _scenario_grid(n_graphs: int, drop_probs, seeds):
     return g.ravel(), d.ravel(), s.ravel()
 
 
-def _sweep_body(w, src_b, dst_b, valid_b, drop_b, seed_b, *, T, B, backend,
-                policy=None, dst_sorted=False):
+def _expand_fault_axis(coords, faults):
+    """Cross a fault-model list into flattened scenario coordinates.
+
+    ``coords`` is a tuple of (K,) arrays; returns ``(coords, fi, stacked)``
+    where ``fi`` is the (K * NF,) fault-index coordinate (fault minor, so
+    existing scenario ordering is preserved) and ``stacked`` the
+    leaf-stacked FaultModel batch with (NF,) leaves — or
+    ``(coords, None, None)`` when ``faults`` is None (no fault axis, and
+    downstream emits the bit-identical pre-fault program)."""
+    if faults is None:
+        return coords, None, None
+    fl = [faults] if isinstance(faults, FaultModel) else list(faults)
+    if not fl:
+        raise ValueError("faults= needs at least one FaultModel")
+    nf = len(fl)
+    k = coords[0].shape[0]
+    coords = tuple(np.repeat(c, nf) for c in coords)
+    fi = np.tile(np.arange(nf, dtype=np.int32), k)
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *fl)
+    return coords, fi, stacked
+
+
+def _sweep_body(w, src_b, dst_b, valid_b, drop_b, seed_b, fault_b=None, *,
+                T, B, backend, policy=None, dst_sorted=False):
     """Vmapped scenario batch: the shared traced program of both the
-    single-device and the shard_map-per-device sweep paths."""
+    single-device and the shard_map-per-device sweep paths.
+
+    ``fault_b`` is an optional batched :class:`repro.core.faults.FaultModel`
+    (leaves (K,)) riding the scenario axis — fault severity is traced per
+    scenario, same executable for the whole fault grid. ``None`` emits the
+    bit-identical pre-fault program."""
     E = src_b.shape[1]
+    n = w.shape[0]
     target = w.mean(axis=0)          # (d,) true average, shared
     w_sum = w.sum(axis=0)
 
-    def single(src, dst, valid, drop, seed):
+    def single(src, dst, valid, drop, seed, fault=None):
         key = jax.random.PRNGKey(seed)
         state0 = init_sparse_state(w, E, policy=policy)
 
-        def body(state, t):
-            mask = step_edge_mask(key, t, E, drop, B)
-            new = sparse_pushsum_step(
-                state, mask, src, dst, valid, backend,
-                dst_sorted=dst_sorted, policy=policy,
-            )
-            err = jnp.abs(sparse_ratios(new) - target).max()
-            return new, err
+        if fault is None:
+            def body(state, t):
+                mask = step_edge_mask(key, t, E, drop, B)
+                new = sparse_pushsum_step(
+                    state, mask, src, dst, valid, backend,
+                    dst_sorted=dst_sorted, policy=policy,
+                )
+                err = jnp.abs(sparse_ratios(new) - target).max()
+                return new, err
 
-        final, errs = jax.lax.scan(
-            body, state0, jnp.arange(T, dtype=jnp.uint32)
-        )
+            final, errs = jax.lax.scan(
+                body, state0, jnp.arange(T, dtype=jnp.uint32)
+            )
+        else:
+            def body(carry, t):
+                state, fs = carry
+                fs = step_faults(key, t, fault, fs, engine=ENGINE_PUSHSUM)
+                u = jax.random.uniform(jax.random.fold_in(key, t), (E,))
+                mask = faulty_edge_mask(u, t, fault, fs, src, dst, drop, B)
+                new = sparse_pushsum_step(
+                    state, mask, src, dst, valid, backend,
+                    dst_sorted=dst_sorted, policy=policy, faults=fs,
+                )
+                err = jnp.abs(sparse_ratios(new) - target).max()
+                return (new, fs), err
+
+            (final, _), errs = jax.lax.scan(
+                body, (state0, init_fault_state(n, E)),
+                jnp.arange(T, dtype=jnp.uint32)
+            )
         gap = sparse_mass_invariant(final, src, valid) - w_sum
         return errs, sparse_ratios(final), gap
 
-    return jax.vmap(single)(src_b, dst_b, valid_b, drop_b, seed_b)
+    if fault_b is None:
+        return jax.vmap(single)(src_b, dst_b, valid_b, drop_b, seed_b)
+    return jax.vmap(single)(src_b, dst_b, valid_b, drop_b, seed_b, fault_b)
 
 
 # Module-level jit so repeated sweeps with the same shapes/statics hit the
@@ -209,22 +266,28 @@ _sweep_compiled = functools.partial(
 
 @functools.lru_cache(maxsize=None)
 def _sweep_sharded(mesh: Mesh, data_axis: str, T: int, B: int, backend: str,
-                   policy: Policy | None = None, dst_sorted: bool = False):
+                   policy: Policy | None = None, dst_sorted: bool = False,
+                   has_faults: bool = False):
     """Jitted shard_map sweep for one (mesh, axis, statics) combo: the
     scenario axis of every batched argument is split over ``data_axis``,
     one contiguous scenario block per device, and each device runs the
     identical vmapped scan on its block. lru_cache keeps one compiled
     executable per combo (Mesh is hashable), mirroring ``_sweep_compiled``'s
-    retrace-free behaviour."""
+    retrace-free behaviour. ``has_faults`` adds the batched FaultModel
+    argument (sharded over ``data_axis`` like every scenario coordinate)."""
     from repro.launch import compat
 
     body = functools.partial(_sweep_body, T=T, B=B, backend=backend,
                              policy=policy, dst_sorted=dst_sorted)
+    in_specs = (P(), P(data_axis), P(data_axis), P(data_axis),
+                P(data_axis), P(data_axis))
+    if has_faults:
+        in_specs += (FaultModel(
+            *([P(data_axis)] * len(FaultModel._fields))),)
     sharded = compat.shard_map(
         body,
         mesh=mesh,
-        in_specs=(P(), P(data_axis), P(data_axis), P(data_axis),
-                  P(data_axis), P(data_axis)),
+        in_specs=in_specs,
         out_specs=(P(data_axis), P(data_axis), P(data_axis)),
         axis_names=frozenset({data_axis}),
         check_vma=False,
@@ -244,7 +307,8 @@ def _sweep_sharded(mesh: Mesh, data_axis: str, T: int, B: int, backend: str,
     streams=(("link", lambda t: t),),
     caches=("pushsum.sweep2d-jit",),
 )
-def _sweep_edge_sharded_body(w, src_sh, dst_sh, valid_sh, drop_b, seed_b, *,
+def _sweep_edge_sharded_body(w, src_sh, dst_sh, valid_sh, drop_b, seed_b,
+                             fault_b=None, *,
                              T, B, backend, graph_axis, n_shards,
                              policy=None, halo="psum"):
     """Per-device scenario batch of the edge-partitioned (2-D mesh) sweep.
@@ -268,7 +332,7 @@ def _sweep_edge_sharded_body(w, src_sh, dst_sh, valid_sh, drop_b, seed_b, *,
     w_sum = w.sum(axis=0)
     n = w.shape[0]
 
-    def single(src, dst, valid, drop, seed):
+    def single(src, dst, valid, drop, seed, fault=None):
         key = jax.random.PRNGKey(seed)
         state0 = init_sparse_state(w, e_shard, policy=policy)
         # loop invariant: global out-degree = psum of shard-local counts
@@ -277,33 +341,63 @@ def _sweep_edge_sharded_body(w, src_sh, dst_sh, valid_sh, drop_b, seed_b, *,
         )
         share = 1.0 / (d_out + 1.0)
 
-        def body(state, t):
-            mask = shard_edge_mask(
-                key, t, e_shard, drop, B,
-                graph_axis=graph_axis, n_shards=n_shards,
-            )
-            new = sparse_pushsum_step(
-                state, mask, src, dst, valid, backend,
-                share=share, graph_axis=graph_axis, dst_sorted=True,
-                policy=policy, halo=halo, n_shards=n_shards,
-            )
-            err = jnp.abs(sparse_ratios(new) - target).max()
-            return new, err
+        if fault is None:
+            def body(state, t):
+                mask = shard_edge_mask(
+                    key, t, e_shard, drop, B,
+                    graph_axis=graph_axis, n_shards=n_shards,
+                )
+                new = sparse_pushsum_step(
+                    state, mask, src, dst, valid, backend,
+                    share=share, graph_axis=graph_axis, dst_sorted=True,
+                    policy=policy, halo=halo, n_shards=n_shards,
+                )
+                err = jnp.abs(sparse_ratios(new) - target).max()
+                return new, err
 
-        final, errs = jax.lax.scan(
-            body, state0, jnp.arange(T, dtype=jnp.uint32)
-        )
+            final, errs = jax.lax.scan(
+                body, state0, jnp.arange(T, dtype=jnp.uint32)
+            )
+        else:
+            def body(carry, t):
+                # fault + drop draws window the full-graph vector exactly
+                # like shard_edge_mask, so realizations are identical at
+                # every shard count
+                state, fs = carry
+                fs = step_faults(key, t, fault, fs, engine=ENGINE_PUSHSUM,
+                                 graph_axis=graph_axis, n_shards=n_shards)
+                u = edge_uniforms(key, t, e_shard,
+                                  graph_axis=graph_axis, n_shards=n_shards)
+                mask = faulty_edge_mask(u, t, fault, fs, src, dst, drop, B)
+                new = sparse_pushsum_step(
+                    state, mask, src, dst, valid, backend,
+                    share=share, graph_axis=graph_axis, dst_sorted=True,
+                    policy=policy, halo=halo, n_shards=n_shards,
+                    faults=fs,
+                )
+                err = jnp.abs(sparse_ratios(new) - target).max()
+                return (new, fs), err
+
+            (final, _), errs = jax.lax.scan(
+                body, (state0, init_fault_state(n, e_shard)),
+                jnp.arange(T, dtype=jnp.uint32)
+            )
         gap = sparse_mass_invariant(
             final, src, valid, graph_axis=graph_axis
         ) - w_sum
         return errs, sparse_ratios(final), gap
 
-    return jax.vmap(single, in_axes=(0, 0, 0, 0, 0))(
-        src_sh, dst_sh, valid_sh, drop_b, seed_b
+    if fault_b is None:
+        return jax.vmap(single, in_axes=(0, 0, 0, 0, 0))(
+            src_sh, dst_sh, valid_sh, drop_b, seed_b
+        )
+    return jax.vmap(single, in_axes=(0, 0, 0, 0, 0, 0))(
+        src_sh, dst_sh, valid_sh, drop_b, seed_b, fault_b
     )
 
 
-def _sweep2d_emulated(w, src_k, dst_k, valid_k, drop_b, seed_b, *,
+def _sweep2d_emulated(w, src_k, dst_k, valid_k, drop_b, seed_b,
+                      fault_b=None, *,
                       T, B, backend, graph_axis, n_shards,
                       policy=None, halo="psum"):
     """Single-device oracle of the 2-D mesh program: ``vmap(axis_name=)``
@@ -319,10 +413,10 @@ def _sweep2d_emulated(w, src_k, dst_k, valid_k, drop_b, seed_b, *,
             graph_axis=graph_axis, n_shards=n_shards,
             policy=policy, halo=halo,
         ),
-        in_axes=(None, 1, 1, 1, None, None),
+        in_axes=(None, 1, 1, 1, None, None, None),
         out_axes=0,
         axis_name=graph_axis,
-    )(w, src_k, dst_k, valid_k, drop_b, seed_b)
+    )(w, src_k, dst_k, valid_k, drop_b, seed_b, fault_b)
     return errs[0], finals[0], gaps[0]
 
 
@@ -336,7 +430,8 @@ _sweep2d_compiled = functools.partial(
 @functools.lru_cache(maxsize=None)
 def _sweep_sharded_2d(mesh: Mesh, data_axis: str, graph_axis: str,
                       T: int, B: int, backend: str,
-                      policy: Policy | None = None, halo: str = "psum"):
+                      policy: Policy | None = None, halo: str = "psum",
+                      has_faults: bool = False):
     """Jitted 2-D (data x graph) shard_map sweep: scenarios split over
     ``data_axis`` exactly as in :func:`_sweep_sharded`, while the edge
     arrays' shard axis splits over ``graph_axis`` — one edge shard per
@@ -352,12 +447,16 @@ def _sweep_sharded_2d(mesh: Mesh, data_axis: str, graph_axis: str,
         graph_axis=graph_axis, n_shards=n_shards,
         policy=policy, halo=halo,
     )
+    in_specs = (specs["replicated"], specs["edge_shards"],
+                specs["edge_shards"], specs["edge_shards"],
+                specs["scenario"], specs["scenario"])
+    if has_faults:
+        in_specs += (FaultModel(
+            *([specs["scenario"]] * len(FaultModel._fields))),)
     sharded = compat.shard_map(
         body,
         mesh=mesh,
-        in_specs=(specs["replicated"], specs["edge_shards"],
-                  specs["edge_shards"], specs["edge_shards"],
-                  specs["scenario"], specs["scenario"]),
+        in_specs=in_specs,
         out_specs=(specs["out"], specs["out"], specs["out"]),
         axis_names=frozenset({data_axis, graph_axis}),
         check_vma=False,
@@ -381,6 +480,7 @@ def run_pushsum_sweep(
     policy: Policy | str | None = None,
     dst_sorted: bool = False,
     halo: str = "psum",
+    faults: "FaultModel | Sequence[FaultModel] | None" = None,
 ) -> PushSumSweepResult:
     """Run the full scenario grid in ONE jitted, vmapped scan.
 
@@ -426,6 +526,15 @@ def run_pushsum_sweep(
     ``"scatter"``, the psum_scatter/all_gather form whose gather leg
     moves storage-width bytes (see
     :func:`repro.analysis.roofline.pushsum_halo_wire_bytes`).
+
+    ``faults`` (one :class:`repro.core.faults.FaultModel` or a sequence,
+    e.g. a burst-length ladder from
+    :func:`repro.core.faults.gilbert_elliott_model`) adds a FOURTH swept
+    scenario axis, fault-minor: every (graph, drop, seed) cell runs once
+    per model, severity traced per scenario — one executable for the
+    whole fault grid. The result's ``fault`` field indexes into the
+    sequence; ``faults=None`` (default) keeps the pre-fault program
+    bit-identical and ``fault=None`` in the result.
     """
     w = jnp.asarray(w)
     pol = None if policy is None else resolve_policy(policy)
@@ -443,6 +552,7 @@ def run_pushsum_sweep(
         valid = shards.valid if shards.is_batched else shards.valid[None]
         G = src.shape[0]                     # (G, S, Es)
         gi, dp, sd = _scenario_grid(G, drop_probs, seeds)
+        (gi, dp, sd), fi, fstack = _expand_fault_axis((gi, dp, sd), faults)
         K = gi.shape[0]
         if mesh is not None:
             if int(mesh.shape[graph_axis]) != S:
@@ -456,10 +566,15 @@ def run_pushsum_sweep(
                 gi = np.concatenate([gi, gi[fill]])
                 dp = np.concatenate([dp, dp[fill]])
                 sd = np.concatenate([sd, sd[fill]])
+                if fi is not None:
+                    fi = np.concatenate([fi, fi[fill]])
         drop_b = jnp.asarray(dp)
         seed_b = jnp.asarray(sd)
         args = (w, jnp.asarray(src[gi]), jnp.asarray(dst[gi]),
                 jnp.asarray(valid[gi]), drop_b, seed_b)
+        if fi is not None:
+            args += (jax.tree_util.tree_map(
+                lambda x: x[jnp.asarray(fi)], fstack),)
         if mesh is None:
             errs, finals, gaps = _sweep2d_compiled(
                 *args, T=T, B=B, backend=backend,
@@ -468,11 +583,13 @@ def run_pushsum_sweep(
             )
         else:
             errs, finals, gaps = _sweep_sharded_2d(
-                mesh, data_axis, graph_axis, T, B, backend, pol, halo
+                mesh, data_axis, graph_axis, T, B, backend, pol, halo,
+                fi is not None,
             )(*args)
         return PushSumSweepResult(
             err=errs[:K], final_ratio=finals[:K], mass_gap=gaps[:K],
             drop_prob=drop_b[:K], seed=seed_b[:K], graph=jnp.asarray(gi[:K]),
+            fault=None if fi is None else jnp.asarray(fi[:K]),
         )
 
     src = np.atleast_2d(el.src)      # (G, E)
@@ -480,6 +597,7 @@ def run_pushsum_sweep(
     valid = np.atleast_2d(el.valid)
     G, E = src.shape
     gi, dp, sd = _scenario_grid(G, drop_probs, seeds)
+    (gi, dp, sd), fi, fstack = _expand_fault_axis((gi, dp, sd), faults)
     K = gi.shape[0]
 
     if mesh is None:
@@ -492,11 +610,16 @@ def run_pushsum_sweep(
             gi = np.concatenate([gi, gi[fill]])
             dp = np.concatenate([dp, dp[fill]])
             sd = np.concatenate([sd, sd[fill]])
+            if fi is not None:
+                fi = np.concatenate([fi, fi[fill]])
 
     drop_b = jnp.asarray(dp)
     seed_b = jnp.asarray(sd)
     args = (w, jnp.asarray(src[gi]), jnp.asarray(dst[gi]),
             jnp.asarray(valid[gi]), drop_b, seed_b)
+    if fi is not None:
+        args += (jax.tree_util.tree_map(
+            lambda x: x[jnp.asarray(fi)], fstack),)
     if mesh is None:
         errs, finals, gaps = _sweep_compiled(
             *args, T=T, B=B, backend=backend,
@@ -504,11 +627,12 @@ def run_pushsum_sweep(
         )
     else:
         errs, finals, gaps = _sweep_sharded(
-            mesh, data_axis, T, B, backend, pol, dst_sorted
+            mesh, data_axis, T, B, backend, pol, dst_sorted, fi is not None
         )(*args)
     return PushSumSweepResult(
         err=errs[:K], final_ratio=finals[:K], mass_gap=gaps[:K],
         drop_prob=drop_b[:K], seed=seed_b[:K], graph=jnp.asarray(gi[:K]),
+        fault=None if fi is None else jnp.asarray(fi[:K]),
     )
 
 
@@ -525,17 +649,30 @@ _BYZ_COMPILED = _LRUCache(maxsize=32)
 _BYZ_GRID_COMPILED = _LRUCache(maxsize=8)
 
 
+def _fault_fingerprint(faults: FaultModel | None):
+    """Value fingerprint of a FaultModel for compiled-program cache keys.
+
+    The fault scalars are baked into the closure the byzantine caches jit
+    (unlike the grid engines, which trace a batched FaultModel argument),
+    so the key must name the VALUES — a has-faults flag alone would
+    silently reuse an executable compiled for different severities."""
+    if faults is None:
+        return None
+    return tuple(float(np.asarray(x)) for x in faults)
+
+
 def _byz_sweep_key(
     model: SignalModel, cfg: ByzantineConfig, T: int,
     mode: str = "pairwise", core: str = "sparse", backend: str = "auto",
     store: str = "trajectory", policy: Policy | None = None,
+    faults: FaultModel | None = None,
 ) -> tuple:
     topo = cfg.topo
     return (
         np.asarray(model.tables).tobytes(), model.truth,
         topo.adj.tobytes(), topo.sizes, topo.offsets, topo.reps,
         cfg.F, cfg.byz, cfg.gamma_period, cfg.attack, T,
-        mode, core, backend, store, policy,
+        mode, core, backend, store, policy, _fault_fingerprint(faults),
     )
 
 
@@ -551,6 +688,7 @@ def run_byzantine_sweep(
     backend: str = "auto",
     store: str = "trajectory",
     policy: Policy | str | None = None,
+    faults: FaultModel | None = None,
 ) -> dict[str, ByzantineResult]:
     """Algorithm 2 over a seed batch per attack type.
 
@@ -570,6 +708,11 @@ def run_byzantine_sweep(
     analysis: the C-set lattice is memoized in :mod:`repro.core.byzantine`
     and the jitted scan is reused from ``_BYZ_COMPILED`` (``Attack`` is a
     frozen dataclass, so the same attack object keys the same entry).
+
+    ``faults`` layers one :class:`repro.core.faults.FaultModel` over every
+    seed in the batch (the unified fault plane of
+    :func:`byzantine.make_byzantine_scan`); the compiled cache keys on the
+    fault VALUES, so sweeping severities host-side stays correct.
     """
     pol = None if policy is None else resolve_policy(policy)
     seeds_j = jnp.asarray(np.asarray(seeds, np.uint32))
@@ -578,12 +721,12 @@ def run_byzantine_sweep(
     for atk in attacks if attacks is not None else [cfg.attack]:
         c = dataclasses.replace(cfg, attack=atk)
         cache_key = _byz_sweep_key(model, c, T, mode, core, backend, store,
-                                   pol)
+                                   pol, faults)
         fn = _BYZ_COMPILED.get(cache_key)
         if fn is None:
             run = make_byzantine_scan(
                 model, c, T, mode=mode, core=core, backend=backend,
-                store=store, policy=pol,
+                store=store, policy=pol, faults=faults,
             )
             fn = _BYZ_COMPILED[cache_key] = jax.jit(jax.vmap(run))
         out[atk.name] = fn(keys)
@@ -623,11 +766,12 @@ def _cfgs_fingerprint(model, cfgs, atk) -> tuple:
 
 
 def _byz_grid_key(model, cfgs, T, atk, mode, backend, store,
-                  mesh, data_axis, policy=None) -> tuple:
+                  mesh, data_axis, policy=None, faults=None) -> tuple:
     """``backend`` must be the *effective* lowering (post ``resolve_backend``
     and the dynamic-F downgrade), so the key names the traced program."""
     return _cfgs_fingerprint(model, cfgs, atk) + (
         T, mode, backend, store, mesh, data_axis, policy,
+        _fault_fingerprint(faults),
     )
 
 
@@ -651,6 +795,7 @@ def run_byzantine_grid(
     mesh: Mesh | None = None,
     data_axis: str = "data",
     policy: Policy | str | None = None,
+    faults: FaultModel | None = None,
 ) -> ByzantineGridResult:
     """Batched (topology, F) x seed grid as ONE compiled vmapped scan.
 
@@ -673,6 +818,11 @@ def run_byzantine_grid(
     The jitted grid program is cached in ``_BYZ_GRID_COMPILED`` keyed on the
     full config-list fingerprint, so repeated studies neither retrace nor
     re-run the reduced-graph analysis.
+
+    ``faults`` applies one :class:`repro.core.faults.FaultModel` to every
+    scenario (the cache keys on its values, so host-side severity loops
+    stay correct); per-scenario fault axes belong in the social/HPS/push-
+    sum grids, whose fault models ride the vmap axis.
     """
     from repro.kernels.byz_trim import resolve_backend
 
@@ -738,11 +888,12 @@ def run_byzantine_grid(
 
     pol = None if policy is None else resolve_policy(policy)
     cache_key = _byz_grid_key(model, cfgs, T, atk, mode, backend, store,
-                              mesh, data_axis, pol)
+                              mesh, data_axis, pol, faults)
     fn = _BYZ_GRID_COMPILED.get(cache_key)
     if fn is None:
         single = functools.partial(
             _scan_core,
+            faults=faults,
             gossip=functools.partial(
                 _sparse_gossip, attack=atk, mode=mode, backend=backend,
                 accum_dtype=None if pol is None else pol.accum,
@@ -805,6 +956,7 @@ class SocialSweepResult(NamedTuple):
     gamma: jnp.ndarray      # (K,)
     seed: jnp.ndarray       # (K,)
     cfg: jnp.ndarray        # (K,) config index
+    fault: jnp.ndarray | None = None  # (K,) fault-model index, None = no axis
 
     @property
     def K(self) -> int:
@@ -825,38 +977,44 @@ _SOCIAL_RUNTIME_CACHE = _LRUCache(maxsize=16)
 
 
 def _social_sweep_fn(mesh, data_axis, *, truth, M, T, store, backend,
-                     policy=None):
-    key = (mesh, data_axis, truth, M, T, store, backend, policy)
+                     policy=None, has_faults=False):
+    key = (mesh, data_axis, truth, M, T, store, backend, policy, has_faults)
     fn = _SOCIAL_COMPILED.get(key)
     if fn is not None:
         return fn
 
-    def body(keys, rt_batch, log_tables, cdf):
-        def single(k, rt):
+    def body(keys, rt_batch, log_tables, cdf, fault_b=None):
+        def single(k, rt, fault=None):
             # grid runtimes come from make_social_runtime: dst-sorted
             # edge index, e_max pad rows at dst = N - 1 keep it sorted
             _, outs = _social_scan_core(
                 k, k, rt, log_tables, cdf,
                 truth=truth, M=M, T=T, store=store, backend=backend,
-                policy=policy, dst_sorted=True,
+                policy=policy, dst_sorted=True, faults=fault,
             )
             return outs
 
-        return jax.vmap(single, in_axes=(0, 0))(keys, rt_batch)
+        if fault_b is None:
+            return jax.vmap(single, in_axes=(0, 0))(keys, rt_batch)
+        return jax.vmap(single, in_axes=(0, 0, 0))(keys, rt_batch, fault_b)
 
     if mesh is not None:
         from repro.launch import compat
 
         spec = P(data_axis)
+        in_specs = (
+            spec,
+            SocialRuntime(*([spec] * len(SocialRuntime._fields))),
+            P(),
+            P(),
+        )
+        if has_faults:
+            in_specs += (FaultModel(
+                *([spec] * len(FaultModel._fields))),)
         body = compat.shard_map(
             body,
             mesh=mesh,
-            in_specs=(
-                spec,
-                SocialRuntime(*([spec] * len(SocialRuntime._fields))),
-                P(),
-                P(),
-            ),
+            in_specs=in_specs,
             out_specs=(spec, spec),
             axis_names=frozenset({data_axis}),
             check_vma=False,
@@ -891,6 +1049,7 @@ def run_social_grid(
     mesh: Mesh | None = None,
     data_axis: str = "data",
     policy: Policy | str | None = None,
+    faults: "FaultModel | Sequence[FaultModel] | None" = None,
 ) -> SocialSweepResult:
     """Batched (topology, drop_prob, Gamma) x seed grid as ONE compiled
     vmapped scan of the fused Algorithm 3 engine.
@@ -923,6 +1082,12 @@ def run_social_grid(
     (mesh, statics) only — the grid data is all arrays, so repeated studies
     over different models or topologies of the same shapes reuse one
     executable without retracing.
+
+    ``faults`` (one :class:`repro.core.faults.FaultModel` or a sequence,
+    e.g. a churn-rate ladder) crosses a fault-minor scenario axis into the
+    grid — severity is traced per scenario, one executable for the whole
+    fault grid; the result's ``fault`` field indexes into the sequence.
+    ``faults=None`` keeps the pre-fault program bit-identical.
 
     This config-list API is anchored on dense-adjacency
     :class:`~repro.core.hps.HPSConfig` topologies (the fingerprint
@@ -958,6 +1123,7 @@ def run_social_grid(
         np.arange(len(cfgs), dtype=np.int32), seeds_np, indexing="ij"
     )
     gi, sd = gi.ravel(), sd.ravel()
+    (gi, sd), fi, fstack = _expand_fault_axis((gi, sd), faults)
     K = gi.shape[0]
     if mesh is not None:
         pad = (-K) % int(mesh.shape[data_axis])
@@ -965,20 +1131,27 @@ def run_social_grid(
             fill = np.full(pad, K - 1)
             gi = np.concatenate([gi, gi[fill]])
             sd = np.concatenate([sd, sd[fill]])
+            if fi is not None:
+                fi = np.concatenate([fi, fi[fill]])
 
     fn = _social_sweep_fn(
         mesh, data_axis, truth=model.truth, M=M, T=T, store=store,
         backend=resolve_backend(backend),
         policy=None if policy is None else resolve_policy(policy),
+        has_faults=fi is not None,
     )
     keys = jax.vmap(jax.random.PRNGKey)(jnp.asarray(sd))
     rt_batch = jax.tree_util.tree_map(lambda x: x[jnp.asarray(gi)], stacked)
     truth_probs = model.tables[:, model.truth, :].astype(jnp.float32)
-    beliefs, log_ratio = fn(
+    args = (
         keys, rt_batch,
         model.log_tables().astype(jnp.float32),
         jnp.cumsum(truth_probs, axis=-1),
     )
+    if fi is not None:
+        args += (jax.tree_util.tree_map(
+            lambda x: x[jnp.asarray(fi)], fstack),)
+    beliefs, log_ratio = fn(*args)
     drops = np.asarray([c.drop_prob for c in cfgs], np.float32)
     gammas = np.asarray([c.gamma_period for c in cfgs], np.int32)
     return SocialSweepResult(
@@ -986,6 +1159,7 @@ def run_social_grid(
         drop_prob=jnp.asarray(drops[gi[:K]]),
         gamma=jnp.asarray(gammas[gi[:K]]),
         seed=jnp.asarray(sd[:K]), cfg=jnp.asarray(gi[:K]),
+        fault=None if fi is None else jnp.asarray(fi[:K]),
     )
 
 
@@ -1002,6 +1176,7 @@ def run_social_sweep(
     mesh: Mesh | None = None,
     data_axis: str = "data",
     policy: Policy | str | None = None,
+    faults: "FaultModel | Sequence[FaultModel] | None" = None,
 ) -> SocialSweepResult:
     """Cross-product (topology x drop_prob x Gamma x seed) Algorithm 3 sweep.
 
@@ -1012,8 +1187,9 @@ def run_social_sweep(
     jitted vmapped scan via :func:`run_social_grid` — drop_prob and Gamma
     ride the scenario axis as traced scalars, so the entire grid is one
     compiled program. Scenario order: base-major, then drop, then Gamma,
-    then seed (matching the ``cfg``/``drop_prob``/``gamma``/``seed``
-    coordinate arrays of the result).
+    then seed, then fault (matching the ``cfg``/``drop_prob``/``gamma``/
+    ``seed``/``fault`` coordinate arrays of the result); ``faults`` is the
+    optional fault-model axis of :func:`run_social_grid`.
     """
     bases = [cfg] if isinstance(cfg, HPSConfig) else list(cfg)
     expanded = []
@@ -1030,7 +1206,7 @@ def run_social_sweep(
     return run_social_grid(
         model, expanded, T, seeds,
         store=store, backend=backend, mesh=mesh, data_axis=data_axis,
-        policy=policy,
+        policy=policy, faults=faults,
     )
 
 
@@ -1057,6 +1233,7 @@ class HPSSweepResult(NamedTuple):
     M: jnp.ndarray          # (K,) sub-network count of that scenario
     seed: jnp.ndarray       # (K,)
     cfg: jnp.ndarray        # (K,) config index
+    fault: jnp.ndarray | None = None  # (K,) fault-model index, None = no axis
 
     @property
     def K(self) -> int:
@@ -1076,36 +1253,43 @@ _HPS_COMPILED = _LRUCache(maxsize=16)
 _HPS_RUNTIME_CACHE = _LRUCache(maxsize=16)
 
 
-def _hps_sweep_fn(mesh, data_axis, *, T, store, backend, policy=None):
-    key = (mesh, data_axis, T, store, backend, policy)
+def _hps_sweep_fn(mesh, data_axis, *, T, store, backend, policy=None,
+                  has_faults=False):
+    key = (mesh, data_axis, T, store, backend, policy, has_faults)
     fn = _HPS_COMPILED.get(key)
     if fn is not None:
         return fn
 
-    def body(keys, rt_batch, w):
-        def single(k, rt):
+    def body(keys, rt_batch, w, fault_b=None):
+        def single(k, rt, fault=None):
             # grid runtimes come from make_hps_runtime: dst-sorted edge
             # index, e_max pad rows at dst = N - 1 keep it sorted
             _, outs = _hps_scan_core(
                 k, rt, w, T=T, store=store, backend=backend,
-                policy=policy, dst_sorted=True,
+                policy=policy, dst_sorted=True, faults=fault,
             )
             return outs
 
-        return jax.vmap(single, in_axes=(0, 0))(keys, rt_batch)
+        if fault_b is None:
+            return jax.vmap(single, in_axes=(0, 0))(keys, rt_batch)
+        return jax.vmap(single, in_axes=(0, 0, 0))(keys, rt_batch, fault_b)
 
     if mesh is not None:
         from repro.launch import compat
 
         spec = P(data_axis)
+        in_specs = (
+            spec,
+            HPSRuntime(*([spec] * len(HPSRuntime._fields))),
+            P(),
+        )
+        if has_faults:
+            in_specs += (FaultModel(
+                *([spec] * len(FaultModel._fields))),)
         body = compat.shard_map(
             body,
             mesh=mesh,
-            in_specs=(
-                spec,
-                HPSRuntime(*([spec] * len(HPSRuntime._fields))),
-                P(),
-            ),
+            in_specs=in_specs,
             out_specs=(spec, spec),
             axis_names=frozenset({data_axis}),
             check_vma=False,
@@ -1125,6 +1309,7 @@ def run_hps_grid(
     mesh: Mesh | None = None,
     data_axis: str = "data",
     policy: Policy | str | None = None,
+    faults: "FaultModel | Sequence[FaultModel] | None" = None,
 ) -> HPSSweepResult:
     """Batched (topology, M, Gamma, drop) x seed grid as ONE compiled
     vmapped scan of the fused Algorithm 1 engine.
@@ -1156,6 +1341,12 @@ def run_hps_grid(
     The jitted program is cached in ``_HPS_COMPILED`` keyed on
     (mesh, statics) only — the grid data is all arrays, so repeated studies
     over different topologies of the same shapes reuse one executable.
+
+    ``faults`` (one :class:`repro.core.faults.FaultModel` or a sequence)
+    crosses a fault-minor scenario axis into the grid exactly as in
+    :func:`run_social_grid`; the result's ``fault`` field indexes into
+    the sequence, and ``faults=None`` keeps the pre-fault program
+    bit-identical.
     """
     from repro.kernels.pushsum_edge import resolve_backend
 
@@ -1183,6 +1374,7 @@ def run_hps_grid(
         np.arange(len(cfgs), dtype=np.int32), seeds_np, indexing="ij"
     )
     gi, sd = gi.ravel(), sd.ravel()
+    (gi, sd), fi, fstack = _expand_fault_axis((gi, sd), faults)
     K = gi.shape[0]
     if mesh is not None:
         pad = (-K) % int(mesh.shape[data_axis])
@@ -1190,14 +1382,21 @@ def run_hps_grid(
             fill = np.full(pad, K - 1)
             gi = np.concatenate([gi, gi[fill]])
             sd = np.concatenate([sd, sd[fill]])
+            if fi is not None:
+                fi = np.concatenate([fi, fi[fill]])
 
     fn = _hps_sweep_fn(
         mesh, data_axis, T=T, store=store, backend=resolve_backend(backend),
         policy=None if policy is None else resolve_policy(policy),
+        has_faults=fi is not None,
     )
     keys = jax.vmap(jax.random.PRNGKey)(jnp.asarray(sd))
     rt_batch = jax.tree_util.tree_map(lambda x: x[jnp.asarray(gi)], stacked)
-    ratio, gap = fn(keys, rt_batch, w)
+    args = (keys, rt_batch, w)
+    if fi is not None:
+        args += (jax.tree_util.tree_map(
+            lambda x: x[jnp.asarray(fi)], fstack),)
+    ratio, gap = fn(*args)
     drops = np.asarray([c.drop_prob for c in cfgs], np.float32)
     gammas = np.asarray([c.gamma_period for c in cfgs], np.int32)
     Ms = np.asarray([c.topo.M for c in cfgs], np.int32)
@@ -1207,6 +1406,7 @@ def run_hps_grid(
         gamma=jnp.asarray(gammas[gi[:K]]),
         M=jnp.asarray(Ms[gi[:K]]),
         seed=jnp.asarray(sd[:K]), cfg=jnp.asarray(gi[:K]),
+        fault=None if fi is None else jnp.asarray(fi[:K]),
     )
 
 
@@ -1223,6 +1423,7 @@ def run_hps_sweep(
     mesh: Mesh | None = None,
     data_axis: str = "data",
     policy: Policy | str | None = None,
+    faults: "FaultModel | Sequence[FaultModel] | None" = None,
 ) -> HPSSweepResult:
     """Cross-product (topology x M x drop_prob x Gamma x seed) HPS sweep.
 
@@ -1251,7 +1452,7 @@ def run_hps_sweep(
     return run_hps_grid(
         w, expanded, T, seeds,
         store=store, backend=backend, mesh=mesh, data_axis=data_axis,
-        policy=policy,
+        policy=policy, faults=faults,
     )
 
 # ---------------------------------------------------------------------------

@@ -150,6 +150,116 @@ def _byz_fixture():
     return dims, STORES, make
 
 
+def _chaos_model():
+    """One non-degenerate FaultModel shared by all four faulted fixtures:
+    every fault mechanism (burst chain, churn, PS crash) is live so every
+    fault stream is actually drawn in the traced program."""
+    from repro.core.faults import make_fault_model
+
+    return make_fault_model(p_gb=0.2, p_bg=0.5, drop_bad=0.9,
+                            leave_prob=0.05, join_prob=0.5,
+                            ps_crash_prob=0.3)
+
+
+def _pushsum_faults_fixture():
+    import jax
+
+    from repro.core.graphs import edge_list, random_strongly_connected
+    from repro.core.pushsum import run_pushsum_sparse
+
+    rng = np.random.default_rng(0)
+    adj = random_strongly_connected(11, 0.3, rng)
+    el = edge_list(adj)
+    w = rng.normal(size=(11, 2)).astype(np.float32)
+    fm = _chaos_model()
+    dims = {"N": 11, "d": 2, "T": 7, "E": int(el.E)}
+
+    def make(backend, store):
+        # record_every=T: a single ratio frame, so the (T, *) ban can hold
+        # over the whole faulted trace (fault state itself is O(E)+O(N)).
+        return walk.trace(
+            lambda w_, key_: run_pushsum_sparse(
+                w_, el.src, el.dst, T=7, drop_prob=0.1, B=2,
+                key=key_, backend=backend, record_every=7, faults=fm,
+            ),
+            w, jax.random.PRNGKey(0),
+        )
+
+    return dims, (None,), make
+
+
+def _social_faults_fixture():
+    from repro.core.graphs import make_hierarchy
+    from repro.core.hps import HPSConfig
+    from repro.core.signals import make_confused_model
+    from repro.core.social import make_social_runtime, run_social_runtime
+
+    topo = make_hierarchy([6, 6, 6], topology="complete", seed=2)
+    model = make_confused_model(N=topo.N, m=3, truth=1, confusion=0.5,
+                                seed=0)
+    cfg = HPSConfig(topo=topo, gamma_period=4, B=2, drop_prob=0.3)
+    rt = make_social_runtime(cfg)
+    fm = _chaos_model()
+    dims = {"N": 18, "m": 3, "T": 37, "E": int(np.asarray(rt.src).shape[0])}
+
+    def make(backend, store):
+        return walk.trace(
+            lambda rt_: run_social_runtime(
+                model, rt_, M=len(topo.sizes), T=37,
+                backend=backend, store=store, faults=fm,
+            ),
+            rt,
+        )
+
+    # log_ratio is the in-scan-reduced store: the one where (T, *) is a
+    # provable ban rather than the store's own output.
+    return dims, ("log_ratio",), make
+
+
+def _hps_faults_fixture():
+    from repro.core.graphs import make_hierarchy
+    from repro.core.hps import HPSConfig, make_hps_runtime, run_hps
+
+    topo = make_hierarchy([5, 5, 5], topology="complete", seed=0)
+    cfg = HPSConfig(topo=topo, gamma_period=4, B=2, drop_prob=0.2)
+    rt = make_hps_runtime(cfg)
+    w = np.random.default_rng(3).normal(size=(15, 2)).astype(np.float32)
+    fm = _chaos_model()
+    dims = {"N": 15, "d": 2, "T": 31, "E": int(np.asarray(rt.src).shape[0])}
+
+    def make(backend, store):
+        return walk.trace(
+            lambda w_: run_hps(w_, cfg, T=31, seed=0,
+                               backend=backend, store=store, faults=fm),
+            w,
+        )
+
+    return dims, ("gap",), make
+
+
+def _byz_faults_fixture():
+    import jax
+
+    from repro.core import attacks
+    from repro.core.byzantine import ByzantineConfig, make_byzantine_scan
+    from repro.core.graphs import make_hierarchy
+    from repro.core.signals import make_confused_model
+
+    topo = make_hierarchy([8] * 8, topology="complete", seed=0)   # N = 64
+    model = make_confused_model(N=64, m=3, truth=0, confusion=0.0, seed=1)
+    cfg = ByzantineConfig(topo=topo, F=2, byz=(2, 9), gamma_period=4,
+                          attack=attacks.sign_flip())
+    fm = _chaos_model()
+    dims = {"N": 64, "m": 3, "T": 5}
+
+    def make(backend, store):
+        run = make_byzantine_scan(model, cfg, T=5, core="sparse",
+                                  backend=backend, store=store, faults=fm)
+        return walk.trace(run, jax.random.PRNGKey(0))
+
+    return dims, ("final",), make
+
+
 def _pushsum_sharded_fixture():
     from repro.core.graphs import (
         partition_edge_list,
@@ -192,6 +302,10 @@ _FIXTURES = {
     "social": _social_fixture,
     "hps": _hps_fixture,
     "byzantine": _byz_fixture,
+    "pushsum_faults": _pushsum_faults_fixture,
+    "social_faults": _social_faults_fixture,
+    "hps_faults": _hps_faults_fixture,
+    "byzantine_faults": _byz_faults_fixture,
 }
 
 

@@ -1,0 +1,582 @@
+"""Unified fault plane (repro.core.faults) tests.
+
+Covers the tentpole contracts of the fault PR:
+
+* the fault fold-in map is affine, host/traced-consistent, and provably
+  disjoint from every engine's own PRNG streams (same base key);
+* the degenerate FaultModel reproduces today's Bernoulli link draw
+  bit-for-bit, and every engine's ``faults=None`` path is unchanged;
+* churn conserves the push-sum mass invariant through leave/rejoin;
+* PS crash at probability 1 is exactly the never-fuse engine;
+* fault realizations are invariant to the graph-shard count;
+* extreme faults (all edges dropped, all agents dead) keep z/m finite
+  across (drop, topology) seeds — the satellite property tests;
+* the sweep fault axis crosses scenarios fault-minor and degenerate
+  fault rows match the no-fault sweep;
+* the serving-tier retry policy (fake clock) and the bench ``# NEW``
+  announcement — the infrastructure satellites.
+"""
+import random
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import attacks
+from repro.core.byzantine import (
+    ByzantineConfig,
+    make_byzantine_scan,
+    stream_fold as byz_stream_fold,
+)
+from repro.core.faults import (
+    ENGINE_BYZANTINE,
+    ENGINE_HPS,
+    ENGINE_PUSHSUM,
+    ENGINE_SOCIAL,
+    FAULT_CHURN,
+    FAULT_EDGE,
+    FAULT_PS,
+    N_ENGINES,
+    N_FAULT_STREAMS,
+    FaultState,
+    edge_uniforms,
+    fault_stream_fold,
+    faulty_edge_mask,
+    freeze,
+    gilbert_elliott_model,
+    init_fault_state,
+    make_fault_model,
+    step_faults,
+)
+from repro.core.graphs import (
+    edge_list,
+    make_hierarchy,
+    partition_edge_list,
+    random_strongly_connected,
+)
+from repro.core.hps import hps_stream_fold, run_hps
+from repro.core.pushsum import (
+    run_pushsum_sparse,
+    sparse_mass_invariant,
+    sparse_ratios,
+    step_edge_mask,
+)
+from repro.core.signals import make_confused_model
+from repro.core.social import (
+    STREAM_LINK,
+    STREAM_SIGNAL,
+    make_social_runtime,
+    run_social_runtime,
+    social_stream_fold,
+)
+from repro.core.sweeps import run_pushsum_sweep
+from repro.statics.streams import affine_disjoint, fit_affine
+
+HPSConfig = pytest.importorskip("repro.core.hps").HPSConfig
+
+HORIZON = 1 << 20
+
+
+def _chaos(**kw):
+    base = dict(p_gb=0.25, p_bg=0.5, drop_bad=0.9,
+                leave_prob=0.05, join_prob=0.5, ps_crash_prob=0.3)
+    base.update(kw)
+    return make_fault_model(**base)
+
+
+# ---------------------------------------------------------------------------
+# Fold map: affine, host == traced, disjoint from every engine stream
+# ---------------------------------------------------------------------------
+
+class TestFoldMap:
+    def test_host_matches_traced_mod_2_32(self):
+        for e in range(N_ENGINES):
+            for s in range(N_FAULT_STREAMS):
+                host = np.uint32(np.int32(fault_stream_fold(17, e, s)))
+                traced = jax.jit(
+                    lambda t, _e=e, _s=s: fault_stream_fold(t, _e, _s)
+                )(jnp.uint32(17))
+                assert host == np.uint32(np.asarray(traced)), (e, s)
+
+    def test_all_fault_streams_pairwise_disjoint(self):
+        maps = [
+            fit_affine(lambda t, _e=e, _s=s: fault_stream_fold(t, _e, _s),
+                       f"fault[{e},{s}]")
+            for e in range(N_ENGINES) for s in range(N_FAULT_STREAMS)
+        ]
+        for i, m1 in enumerate(maps):
+            for m2 in maps[i + 1:]:
+                ok, wit = affine_disjoint(m1, m2, HORIZON)
+                assert ok, (m1.name, m2.name, wit)
+
+    def test_disjoint_from_every_engine_stream(self):
+        """The whole point of the negative 2^21-offset domain: fault draws
+        never collide with pushsum t, social 2t+s, byzantine 3t+s, or the
+        HPS ~t top-of-domain stream under one shared base key."""
+        engine_maps = [
+            fit_affine(lambda t: t, "pushsum.link"),
+            fit_affine(lambda t: social_stream_fold(t, STREAM_LINK),
+                       "social.link"),
+            fit_affine(lambda t: social_stream_fold(t, STREAM_SIGNAL),
+                       "social.signal"),
+            fit_affine(lambda t: hps_stream_fold(t), "hps.link"),
+        ] + [
+            fit_affine(lambda t, _s=s: byz_stream_fold(t, _s), f"byz[{s}]")
+            for s in range(3)
+        ]
+        fault_maps = [
+            fit_affine(lambda t, _e=e, _s=s: fault_stream_fold(t, _e, _s),
+                       f"fault[{e},{s}]")
+            for e in range(N_ENGINES) for s in range(N_FAULT_STREAMS)
+        ]
+        for fm in fault_maps:
+            for em in engine_maps:
+                ok, wit = affine_disjoint(fm, em, HORIZON)
+                assert ok, (fm.name, em.name, wit)
+
+    def test_gilbert_elliott_parameterization(self):
+        fm = gilbert_elliott_model(4.0, 0.2)
+        assert np.isclose(float(fm.p_bg), 0.25)
+        # stationary bad fraction p_gb / (p_gb + p_bg) == bad_frac
+        p_gb, p_bg = float(fm.p_gb), float(fm.p_bg)
+        assert np.isclose(p_gb / (p_gb + p_bg), 0.2)
+        with pytest.raises(ValueError):
+            gilbert_elliott_model(0.5, 0.2)
+        with pytest.raises(ValueError):
+            gilbert_elliott_model(4.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Degenerate model == today's Bernoulli draw, bit for bit
+# ---------------------------------------------------------------------------
+
+class TestDegenerateMask:
+    def test_mask_bit_identical_to_step_edge_mask(self):
+        key = jax.random.PRNGKey(7)
+        E, N, B = 33, 9, 3
+        rng = np.random.default_rng(0)
+        src = jnp.asarray(rng.integers(0, N, E), jnp.int32)
+        dst = jnp.asarray(rng.integers(0, N, E), jnp.int32)
+        fm0 = make_fault_model()
+        fs0 = init_fault_state(N, E)
+        for t in range(7):
+            ref = step_edge_mask(key, jnp.uint32(t), E, 0.35, B)
+            u = jax.random.uniform(
+                jax.random.fold_in(key, jnp.uint32(t)), (E,))
+            got = faulty_edge_mask(u, jnp.uint32(t), fm0, fs0, src, dst,
+                                   0.35, B)
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+    def test_bad_edges_exempt_from_forced_delivery(self):
+        # a burst IS a B-window violation: at t % B == B-1 good edges are
+        # forced up, bad edges still drop at drop_bad
+        fm = make_fault_model(drop_bad=1.0)
+        fs = FaultState(edge_bad=jnp.array([True, False]),
+                        node_live=jnp.ones((2,), bool))
+        u = jnp.array([0.5, 0.0])   # below any forced threshold
+        src = jnp.array([0, 0], jnp.int32)
+        dst = jnp.array([1, 1], jnp.int32)
+        got = np.asarray(faulty_edge_mask(u, jnp.uint32(1), fm, fs, src,
+                                          dst, 0.9, 2))
+        assert not got[0]      # bad edge down despite the B-window
+        assert got[1]          # good edge forced up
+
+    def test_dead_endpoint_silences_edge(self):
+        fm = make_fault_model()
+        fs = FaultState(edge_bad=jnp.zeros((3,), bool),
+                        node_live=jnp.array([True, False, True]))
+        u = jnp.zeros((3,))
+        src = jnp.array([0, 1, 2], jnp.int32)
+        dst = jnp.array([2, 2, 1], jnp.int32)
+        got = np.asarray(faulty_edge_mask(u, jnp.uint32(1), fm, fs, src,
+                                          dst, 0.0, 2))
+        np.testing.assert_array_equal(got, [True, False, False])
+
+
+# ---------------------------------------------------------------------------
+# Engine equivalences: faults=None untouched; degenerate model ~ no faults;
+# ps_crash_prob=1 == never fuse
+# ---------------------------------------------------------------------------
+
+def _pushsum_setup(n=12, seed=0):
+    rng = np.random.default_rng(seed)
+    adj = random_strongly_connected(n, 0.3, rng)
+    el = edge_list(adj)
+    w = jnp.asarray(rng.normal(size=(n, 3)).astype(np.float32))
+    return el, w
+
+
+class TestEngineDegenerate:
+    def test_pushsum_degenerate_matches_no_faults(self):
+        el, w = _pushsum_setup()
+        kw = dict(T=25, drop_prob=0.3, B=3, key=jax.random.PRNGKey(1))
+        st0, traj0 = run_pushsum_sparse(w, el.src, el.dst, **kw)
+        st1, traj1 = run_pushsum_sparse(w, el.src, el.dst, **kw,
+                                        faults=make_fault_model())
+        np.testing.assert_allclose(np.asarray(traj0), np.asarray(traj1),
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(st0.z), np.asarray(st1.z),
+                                   atol=1e-5)
+
+    def test_social_degenerate_matches_no_faults(self):
+        topo = make_hierarchy([5, 5, 5], topology="ring", seed=1)
+        model = make_confused_model(N=topo.N, m=3, truth=1, confusion=0.4,
+                                    seed=0)
+        cfg = HPSConfig(topo=topo, gamma_period=4, B=2, drop_prob=0.3)
+        rt = make_social_runtime(cfg)
+        r0 = run_social_runtime(model, rt, M=3, T=40, store="log_ratio")
+        r1 = run_social_runtime(model, rt, M=3, T=40, store="log_ratio",
+                                faults=make_fault_model())
+        np.testing.assert_allclose(np.asarray(r0.log_ratio),
+                                   np.asarray(r1.log_ratio), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(r0.beliefs),
+                                   np.asarray(r1.beliefs), atol=1e-5)
+
+    def test_hps_degenerate_matches_no_faults(self):
+        topo = make_hierarchy([5, 5, 5], topology="complete", seed=0)
+        cfg = HPSConfig(topo=topo, gamma_period=4, B=2, drop_prob=0.2)
+        w = np.random.default_rng(3).normal(size=(15, 2)).astype(np.float32)
+        r0 = run_hps(w, cfg, T=30, seed=0, store="gap")
+        r1 = run_hps(w, cfg, T=30, seed=0, store="gap",
+                     faults=make_fault_model())
+        np.testing.assert_allclose(np.asarray(r0.gap), np.asarray(r1.gap),
+                                   atol=1e-5)
+
+    def test_byzantine_degenerate_exact(self):
+        topo = make_hierarchy([7] * 4, topology="complete", seed=0)
+        model = make_confused_model(N=28, m=3, truth=0, confusion=0.3,
+                                    seed=1)
+        cfg = ByzantineConfig(topo=topo, F=1, byz=(2,), gamma_period=4,
+                              attack=attacks.large_value())
+        key = jax.random.PRNGKey(3)
+        r0 = make_byzantine_scan(model, cfg, T=12, store="final")(key)
+        r1 = make_byzantine_scan(model, cfg, T=12, store="final",
+                                 faults=make_fault_model())(key)
+        np.testing.assert_array_equal(np.asarray(r0.r), np.asarray(r1.r))
+        np.testing.assert_array_equal(np.asarray(r0.decisions),
+                                      np.asarray(r1.decisions))
+
+    def test_byzantine_dense_core_rejects_faults(self):
+        topo = make_hierarchy([7] * 4, topology="complete", seed=0)
+        model = make_confused_model(N=28, m=3, truth=0, confusion=0.3,
+                                    seed=1)
+        cfg = ByzantineConfig(topo=topo, F=1, byz=(2,), gamma_period=4,
+                              attack=attacks.large_value())
+        with pytest.raises(ValueError, match="sparse"):
+            make_byzantine_scan(model, cfg, T=4, core="dense",
+                                faults=make_fault_model())
+
+    def test_ps_crash_prob_one_is_never_fuse(self):
+        """A permanently-dead PS degrades the hierarchy to pure local
+        consensus — exactly the gamma_period -> infinity engine."""
+        topo = make_hierarchy([5, 5, 5], topology="complete", seed=2)
+        model = make_confused_model(N=15, m=3, truth=1, confusion=0.4,
+                                    seed=0)
+        crash = make_fault_model(ps_crash_prob=1.0)
+        rt_g4 = make_social_runtime(
+            HPSConfig(topo=topo, gamma_period=4, B=2, drop_prob=0.3))
+        rt_inf = make_social_runtime(
+            HPSConfig(topo=topo, gamma_period=10 ** 6, B=2, drop_prob=0.3))
+        r_crash = run_social_runtime(model, rt_g4, M=3, T=30,
+                                     store="log_ratio", faults=crash)
+        r_nofuse = run_social_runtime(model, rt_inf, M=3, T=30,
+                                      store="log_ratio",
+                                      faults=make_fault_model())
+        np.testing.assert_array_equal(np.asarray(r_crash.log_ratio),
+                                      np.asarray(r_nofuse.log_ratio))
+
+
+# ---------------------------------------------------------------------------
+# Churn: mass invariant through leave / rejoin; frozen state rejoins stale
+# ---------------------------------------------------------------------------
+
+class TestChurnMass:
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_mass_invariant_under_churn(self, seed):
+        el, w = _pushsum_setup(n=14, seed=seed)
+        fm = _chaos(leave_prob=0.15, join_prob=0.4, ps_crash_prob=0.0)
+        st, _ = run_pushsum_sparse(
+            w, el.src, el.dst, T=40, drop_prob=0.2, B=2,
+            key=jax.random.PRNGKey(seed), faults=fm)
+        inv = np.asarray(sparse_mass_invariant(
+            st, el.src, jnp.ones((el.E,), bool)))
+        np.testing.assert_allclose(inv, np.asarray(w).sum(0),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_freeze_helper_shapes(self):
+        live = jnp.array([True, False, True])
+        new = jnp.arange(6.0).reshape(3, 2)
+        old = -jnp.ones((3, 2))
+        out = np.asarray(freeze(live, new, old))
+        np.testing.assert_array_equal(out[1], [-1.0, -1.0])
+        np.testing.assert_array_equal(out[0], [0.0, 1.0])
+        out1 = np.asarray(freeze(live, jnp.arange(3.0), -jnp.ones((3,))))
+        np.testing.assert_array_equal(out1, [0.0, -1.0, 2.0])
+
+    def test_dead_agent_state_frozen_until_rejoin(self):
+        """With leave_prob=1, join_prob=0 every agent dies after round 0;
+        the state must stop evolving from round 1 on (stale, not zeroed)."""
+        el, w = _pushsum_setup(n=10, seed=3)
+        fm = make_fault_model(leave_prob=1.0, join_prob=0.0)
+        kw = dict(drop_prob=0.0, B=1, key=jax.random.PRNGKey(0), faults=fm)
+        st2, _ = run_pushsum_sparse(w, el.src, el.dst, T=2, **kw)
+        st9, _ = run_pushsum_sparse(w, el.src, el.dst, T=9, **kw)
+        np.testing.assert_array_equal(np.asarray(st2.z), np.asarray(st9.z))
+        np.testing.assert_array_equal(np.asarray(st2.m), np.asarray(st9.m))
+
+
+# ---------------------------------------------------------------------------
+# Shard invariance: the fault realization is a function of (key, t) only
+# ---------------------------------------------------------------------------
+
+class TestShardInvariance:
+    def test_edge_uniforms_windows_full_draw(self):
+        key = jax.random.PRNGKey(11)
+        e_shard, K = 16, 4
+        full = np.asarray(edge_uniforms(key, 5, K * e_shard))
+
+        def shard(_):
+            return edge_uniforms(key, 5, e_shard, graph_axis="g",
+                                 n_shards=K)
+
+        windows = np.asarray(
+            jax.vmap(shard, axis_name="g")(jnp.arange(K)))
+        np.testing.assert_array_equal(windows.reshape(-1), full)
+
+    def test_step_faults_shard_invariant(self):
+        key = jax.random.PRNGKey(13)
+        e_shard, K, N = 8, 3, 7
+        fm = _chaos()
+        fs_full = init_fault_state(N, K * e_shard)
+        ref = step_faults(key, jnp.uint32(2), fm, fs_full,
+                          engine=ENGINE_PUSHSUM)
+
+        def shard(_):
+            fs = init_fault_state(N, e_shard)
+            return step_faults(key, jnp.uint32(2), fm, fs,
+                               engine=ENGINE_PUSHSUM,
+                               graph_axis="g", n_shards=K)
+
+        got = jax.vmap(shard, axis_name="g")(jnp.arange(K))
+        np.testing.assert_array_equal(
+            np.asarray(got.edge_bad).reshape(-1), np.asarray(ref.edge_bad))
+        # churn is replicated, never windowed
+        for k in range(K):
+            np.testing.assert_array_equal(np.asarray(got.node_live[k]),
+                                          np.asarray(ref.node_live))
+
+    def test_faulted_sweep_matches_on_padded_layout(self):
+        """End to end: the 2-shard edge-partitioned faulted sweep equals
+        the single-device sweep over the padded edge list exactly."""
+        rng = np.random.default_rng(3)
+        adj = random_strongly_connected(12, 0.3, rng)
+        el = edge_list(adj)
+        w = jnp.asarray(rng.normal(size=(12, 3)).astype(np.float32))
+        fl = [gilbert_elliott_model(3.0, 0.3, leave_prob=0.05,
+                                    join_prob=0.5)]
+        sh = partition_edge_list(el, 2)
+        pel = sh.padded_edge_list()
+        r_plain = run_pushsum_sweep(w, pel, 20, drop_probs=0.2,
+                                    seeds=[0, 1], B=3, faults=fl,
+                                    dst_sorted=True)
+        r_shard = run_pushsum_sweep(w, sh, 20, drop_probs=0.2,
+                                    seeds=[0, 1], B=3, faults=fl)
+        np.testing.assert_array_equal(np.asarray(r_plain.err),
+                                      np.asarray(r_shard.err))
+
+
+# ---------------------------------------------------------------------------
+# Satellite: extreme-fault finiteness across (drop, topology) seeds
+# ---------------------------------------------------------------------------
+
+EXTREME_MODELS = {
+    "all_edges_dropped": make_fault_model(p_gb=1.0, p_bg=0.0,
+                                          drop_bad=1.0),
+    "all_agents_dead": make_fault_model(leave_prob=1.0, join_prob=0.0),
+}
+
+
+class TestExtremeFaultsFinite:
+    @pytest.mark.parametrize("fault_name", sorted(EXTREME_MODELS))
+    @pytest.mark.parametrize("drop,seed", [(0.0, 0), (0.5, 1), (0.9, 2)])
+    def test_pushsum_finite(self, fault_name, drop, seed):
+        el, w = _pushsum_setup(n=11, seed=seed)
+        st, traj = run_pushsum_sparse(
+            w, el.src, el.dst, T=15, drop_prob=drop, B=2,
+            key=jax.random.PRNGKey(seed), faults=EXTREME_MODELS[fault_name])
+        for arr in (st.z, st.m, traj, sparse_ratios(st)):
+            assert np.isfinite(np.asarray(arr)).all(), fault_name
+
+    @pytest.mark.parametrize("fault_name", sorted(EXTREME_MODELS))
+    @pytest.mark.parametrize("topology,seed", [("ring", 0),
+                                               ("complete", 1)])
+    def test_social_finite(self, fault_name, topology, seed):
+        topo = make_hierarchy([5, 5, 5], topology=topology, seed=seed)
+        model = make_confused_model(N=15, m=3, truth=0, confusion=0.5,
+                                    seed=seed)
+        cfg = HPSConfig(topo=topo, gamma_period=3, B=2, drop_prob=0.4)
+        rt = make_social_runtime(cfg)
+        res = run_social_runtime(model, rt, M=3, T=20, store="log_ratio",
+                                 faults=EXTREME_MODELS[fault_name])
+        assert np.isfinite(np.asarray(res.beliefs)).all(), fault_name
+        assert np.isfinite(np.asarray(res.log_ratio)).all(), fault_name
+
+    @pytest.mark.parametrize("fault_name", sorted(EXTREME_MODELS))
+    def test_hps_finite(self, fault_name):
+        topo = make_hierarchy([5, 5, 5], topology="complete", seed=0)
+        cfg = HPSConfig(topo=topo, gamma_period=4, B=2, drop_prob=0.3)
+        w = np.random.default_rng(1).normal(size=(15, 2)).astype(np.float32)
+        res = run_hps(w, cfg, T=20, seed=0, store="gap",
+                      faults=EXTREME_MODELS[fault_name])
+        assert np.isfinite(np.asarray(res.ratio)).all(), fault_name
+        assert np.isfinite(np.asarray(res.gap)).all(), fault_name
+
+    @pytest.mark.parametrize("fault_name", sorted(EXTREME_MODELS))
+    def test_byzantine_finite(self, fault_name):
+        topo = make_hierarchy([7] * 4, topology="complete", seed=0)
+        model = make_confused_model(N=28, m=3, truth=0, confusion=0.3,
+                                    seed=1)
+        cfg = ByzantineConfig(topo=topo, F=1, byz=(2,), gamma_period=4,
+                              attack=attacks.large_value())
+        run = make_byzantine_scan(model, cfg, T=10, store="final",
+                                  faults=EXTREME_MODELS[fault_name])
+        res = run(jax.random.PRNGKey(0))
+        assert np.isfinite(np.asarray(res.r)).all(), fault_name
+
+
+# ---------------------------------------------------------------------------
+# Sweep fault axis
+# ---------------------------------------------------------------------------
+
+class TestSweepFaultAxis:
+    def test_fault_axis_crosses_fault_minor(self):
+        el, w = _pushsum_setup(n=10, seed=5)
+        fl = [make_fault_model(),
+              gilbert_elliott_model(4.0, 0.4, leave_prob=0.1,
+                                    join_prob=0.5)]
+        base = run_pushsum_sweep(w, el, 15, drop_probs=[0.1, 0.5],
+                                 seeds=[0, 1], B=2)
+        res = run_pushsum_sweep(w, el, 15, drop_probs=[0.1, 0.5],
+                                seeds=[0, 1], B=2, faults=fl)
+        k = base.err.shape[0]
+        assert res.err.shape[0] == k * 2
+        np.testing.assert_array_equal(np.asarray(res.fault),
+                                      np.tile([0, 1], k))
+        # fault index 0 is the degenerate model: those rows ~ the base run
+        np.testing.assert_allclose(np.asarray(res.err[0::2]),
+                                   np.asarray(base.err), atol=1e-5)
+        # the bursty model actually changes the outcome somewhere
+        assert not np.allclose(np.asarray(res.err[1::2]),
+                               np.asarray(base.err), atol=1e-6)
+        assert np.isfinite(np.asarray(res.err)).all()
+
+    def test_no_faults_result_has_none_fault_field(self):
+        el, w = _pushsum_setup(n=10, seed=5)
+        res = run_pushsum_sweep(w, el, 8, drop_probs=0.2, seeds=[0], B=2)
+        assert res.fault is None
+
+
+# ---------------------------------------------------------------------------
+# Satellite: serving-tier retry policy under a fake clock
+# ---------------------------------------------------------------------------
+
+class TestRetryPolicy:
+    def _fixture(self):
+        from repro.distributed.server import (
+            RequestTimeout,
+            RetriesExhausted,
+            RetryPolicy,
+            call_with_retry,
+        )
+        return RequestTimeout, RetriesExhausted, RetryPolicy, call_with_retry
+
+    def test_success_first_try_no_sleep(self):
+        *_, call = self._fixture()
+        sleeps = []
+        out = call(lambda: 42, clock=lambda: 0.0, sleep=sleeps.append)
+        assert out == 42 and sleeps == []
+
+    def test_backoff_schedule_jittered_and_bounded(self):
+        _, exhausted, policy_cls, call = self._fixture()
+        pol = policy_cls(max_attempts=4, timeout=None, base_delay=0.1,
+                         backoff=2.0, max_delay=0.3, jitter=0.5)
+        sleeps = []
+        with pytest.raises(exhausted):
+            call(lambda: 1 / 0, pol, clock=lambda: 0.0,
+                 sleep=sleeps.append, rng=random.Random(0))
+        # 3 backoffs for 4 attempts; nominal 0.1, 0.2, min(0.4, cap=0.3)
+        assert len(sleeps) == 3
+        for s, nominal in zip(sleeps, [0.1, 0.2, 0.3]):
+            assert 0.5 * nominal <= s <= 1.5 * nominal
+
+    def test_exhausted_carries_cause(self):
+        _, exhausted, policy_cls, call = self._fixture()
+        with pytest.raises(exhausted) as ei:
+            call(lambda: 1 / 0, policy_cls(max_attempts=2),
+                 clock=lambda: 0.0, sleep=lambda _ : None)
+        assert isinstance(ei.value.__cause__, ZeroDivisionError)
+
+    def test_timeout_counts_as_failure_fake_clock(self):
+        timeout_exc, exhausted, policy_cls, call = self._fixture()
+        t = [0.0]
+
+        def clock():
+            return t[0]
+
+        def slow_then_fast():
+            # attempt 0 burns 5 fake seconds; attempt 1 is instant
+            if not hasattr(slow_then_fast, "done"):
+                slow_then_fast.done = True
+                t[0] += 5.0
+            return "ok"
+
+        retries = []
+        out = call(slow_then_fast,
+                   policy_cls(max_attempts=2, timeout=1.0, base_delay=0.0),
+                   clock=clock, sleep=lambda _: None,
+                   on_retry=lambda a, e: retries.append((a, type(e))))
+        assert out == "ok"
+        assert retries == [(0, timeout_exc)]
+
+    def test_eventually_succeeds(self):
+        _, _, policy_cls, call = self._fixture()
+        calls = []
+
+        def flaky():
+            calls.append(1)
+            if len(calls) < 3:
+                raise OSError("transient")
+            return "done"
+
+        assert call(flaky, policy_cls(max_attempts=3, timeout=None),
+                    clock=lambda: 0.0, sleep=lambda _: None) == "done"
+
+    def test_policy_validation(self):
+        _, _, policy_cls, _ = self._fixture()
+        with pytest.raises(ValueError):
+            policy_cls(max_attempts=0)
+        with pytest.raises(ValueError):
+            policy_cls(jitter=1.5)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: bench --check announces rows with no baseline as # NEW
+# ---------------------------------------------------------------------------
+
+class TestBenchCheckNewRows:
+    def test_new_rows_announced_not_gated(self, capsys):
+        import sys
+        from pathlib import Path
+        root = Path(__file__).resolve().parents[1]
+        if str(root) not in sys.path:
+            sys.path.insert(0, str(root))
+        from benchmarks.run import _check_regressions
+
+        bad = _check_regressions(
+            "b.json", {"old": {"us_per_call": 1.0}},
+            {"old": (1.1, ""), "burst_row": (9e9, "faults=ge")})
+        assert bad == 0
+        out = capsys.readouterr().out
+        assert "# NEW burst_row" in out
+        assert "no baseline row" in out
