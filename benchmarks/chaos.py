@@ -35,6 +35,7 @@ from repro.core.graphs import (
     random_strongly_connected_edge_list,
 )
 from repro.core.hps import HPSConfig
+from repro.core.plan import ExecutionPlan
 from repro.core.pushsum import sparse_mass_invariant
 from repro.core.signals import make_confused_model
 from repro.core.sweeps import (
@@ -73,7 +74,7 @@ def chaos_pushsum(quick):
     el = random_strongly_connected_edge_list(n, 2.0, rng)
     w = rng.normal(size=(n, 3)).astype(np.float32)
     res = run_pushsum_sweep(w, el, t, drop_probs=[0.2, 0.6], seeds=[0, 1],
-                            B=4, faults=fault_grid())
+                            B=4, plan=ExecutionPlan(faults=fault_grid()))
     fails = _finite(f"pushsum  K={res.err.shape[0]}", res.err, res.mass_gap)
     gap = float(np.abs(np.asarray(res.mass_gap)).max())
     if gap > 1e-2:
@@ -93,7 +94,7 @@ def chaos_social(quick):
     cfg = HPSConfig(topo=topo, gamma_period=4, B=4, drop_prob=0.4)
     t = 40 if quick else 150
     res = run_social_sweep(model, cfg, t, seeds=[0, 1],
-                           faults=fault_grid())
+                           plan=ExecutionPlan(faults=fault_grid()))
     return _finite(f"social   K={res.K}", res.beliefs, res.log_ratio)
 
 
@@ -102,7 +103,8 @@ def chaos_hps(quick):
     w = np.random.default_rng(2).normal(size=(18, 3)).astype(np.float32)
     cfg = HPSConfig(topo=topo, gamma_period=4, B=4, drop_prob=0.4)
     t = 40 if quick else 150
-    res = run_hps_sweep(w, cfg, t, seeds=[0, 1], faults=fault_grid())
+    res = run_hps_sweep(w, cfg, t, seeds=[0, 1],
+                        plan=ExecutionPlan(faults=fault_grid()))
     return _finite(f"hps      K={res.gap.shape[0]}", res.ratio, res.gap)
 
 
@@ -117,9 +119,54 @@ def chaos_byzantine(quick):
     # grid explicitly (cache keyed on the fault fingerprint)
     for fm in fault_grid():
         res = run_byzantine_sweep(model, cfg, t, seeds=[0, 1],
-                                  store="final", faults=fm)
+                                  plan=ExecutionPlan(store="final",
+                                                     faults=fm))
         for tag, r in res.items():
             fails += _finite(f"byzantine[{tag}]", r.r)
+    return fails
+
+
+def chaos_async(quick):
+    """async x burst x churn: the event-driven mode composed with the
+    SEVERE fault grid — sparse wake clocks (30%) with deep staleness
+    (8 ticks) riding the async axis while every link burns through long
+    Gilbert-Elliott bursts and agents churn. Contracts: everything
+    finite, and push-sum mass conserved under the triple composition
+    (asleep agents and churn-dead agents both freeze with their mass;
+    the telescoping buffer delivery cannot create or destroy any)."""
+    from repro.core.asyncrony import make_async_model
+
+    asyncs = [make_async_model(1.0, 0), make_async_model(0.3, 8)]
+    fails = 0
+
+    n, t = (64, 40) if quick else (256, 120)
+    rng = np.random.default_rng(0)
+    el = random_strongly_connected_edge_list(n, 2.0, rng)
+    w = rng.normal(size=(n, 3)).astype(np.float32)
+    res = run_pushsum_sweep(
+        w, el, t, drop_probs=[0.4], seeds=[0, 1], B=4,
+        plan=ExecutionPlan(faults=fault_grid(), async_=asyncs))
+    fails += _finite(f"pushsum+async  K={res.err.shape[0]}",
+                     res.err, res.mass_gap)
+    gap = float(np.abs(np.asarray(res.mass_gap)).max())
+    if gap > 1e-2:
+        print(f"FAIL pushsum+async: mass invariant broken under "
+              f"async x burst x churn (gap {gap:.2e})")
+        fails += 1
+    else:
+        print(f"ok   pushsum+async: mass conserved under "
+              f"async x burst x churn (gap {gap:.2e})")
+
+    topo = make_hierarchy([6, 6, 6], topology="complete", seed=0)
+    model = make_confused_model(N=topo.N, m=3, truth=1, confusion=0.5,
+                                seed=0)
+    cfg = HPSConfig(topo=topo, gamma_period=4, B=4, drop_prob=0.4)
+    t = 40 if quick else 150
+    res = run_social_sweep(
+        model, cfg, t, seeds=[0, 1],
+        plan=ExecutionPlan(faults=fault_grid(), async_=asyncs))
+    fails += _finite(f"social+async   K={res.K}",
+                     res.beliefs, res.log_ratio)
     return fails
 
 
@@ -135,6 +182,7 @@ def main(argv=None) -> int:
     fails += chaos_social(quick)
     fails += chaos_hps(quick)
     fails += chaos_byzantine(quick)
+    fails += chaos_async(quick)
     print(f"# chaos lane: {fails} failures in "
           f"{time.perf_counter() - t0:.1f}s")
     return 1 if fails else 0

@@ -63,16 +63,17 @@ def _step_setup(N):
 
 
 def _time_run(model, rt, M, T, backend, policy=None):
+    from repro.core.plan import ExecutionPlan
+
+    plan = ExecutionPlan(backend=backend, store="final", policy=policy)
     t0 = time.perf_counter()
     jax.block_until_ready(run_social_runtime(
-        model, rt, M, T, seed=0, backend=backend, store="final",
-        policy=policy,
+        model, rt, M, T, seed=0, plan=plan,
     ).beliefs)
     compile_wall = time.perf_counter() - t0
     t0 = time.perf_counter()
     jax.block_until_ready(run_social_runtime(
-        model, rt, M, T, seed=0, backend=backend, store="final",
-        policy=policy,
+        model, rt, M, T, seed=0, plan=plan,
     ).beliefs)
     return (time.perf_counter() - t0) / T * 1e6, compile_wall
 
@@ -81,9 +82,11 @@ def _bytes_per_step(model, rt, M, T, backend, policy=None) -> float:
     """Compiled per-step 'bytes accessed' of the fused engine — the number
     the precision policy halves (cost_analysis over an explicit jit of the
     same call; NaN when the backend doesn't report it)."""
+    from repro.core.plan import ExecutionPlan
+
     fn = jax.jit(lambda rt_: run_social_runtime(
-        model, rt_, M, T, seed=0, backend=backend, store="final",
-        policy=policy,
+        model, rt_, M, T, seed=0,
+        plan=ExecutionPlan(backend=backend, store="final", policy=policy),
     ).beliefs)
     try:
         cost = fn.lower(rt).compile().cost_analysis()
@@ -190,7 +193,10 @@ def _churn_row(smoke: bool):
     seeds = list(range(2 if smoke else 4))
 
     def go():
-        res = run_social_sweep(model, cfg, T, seeds=seeds, faults=faults)
+        from repro.core.plan import ExecutionPlan
+
+        res = run_social_sweep(model, cfg, T, seeds=seeds,
+                               plan=ExecutionPlan(faults=faults))
         jax.block_until_ready(res.beliefs)
         return res
 
@@ -213,9 +219,83 @@ def _churn_row(smoke: bool):
     )
 
 
+def _async_row(smoke: bool):
+    """(wake-rate x staleness) grid of the async event-driven mode in ONE
+    compiled program (the async axis rides the vmap scenario axis,
+    minor-most), plus the ROADMAP acceptance comparison. The config
+    removes the paper's forced B-window delivery (B >> T) so the raw
+    delivery rate is what matters; with the confusion=0.5 model a network
+    whose mixing falls behind its innovation accumulation locks into the
+    WRONG hypothesis (log-ratio saturates at the fp32 belief floor,
+    +87.3). At wake 0.6 the async engine keeps converging — asleep agents
+    pause observation too, so the mixing/innovation ratio stays healthy
+    and the stale buffers keep information flowing — while the
+    synchronous engine run at the equivalent same-tick delivery rate
+    (a staleness-0 rendezvous needs sender and receiver awake:
+    ``p_sync = 1 - q*(1-p)*q = 0.676``) stalls. The derived string
+    records the median final log-ratio per (wake, staleness) cell and
+    the stalled sync reference."""
+    from repro.core.asyncrony import make_async_model
+    from repro.core.plan import ExecutionPlan
+
+    topo = make_hierarchy([6, 6, 6], topology="complete", seed=0)
+    model = make_confused_model(N=topo.N, m=3, truth=1, confusion=0.5,
+                                seed=0)
+    p = 0.1
+    no_window = 1_000_000            # B >> T: no forced-delivery round
+    cfg = HPSConfig(topo=topo, gamma_period=8, B=no_window, drop_prob=p)
+    wakes = (1.0, 0.9, 0.6)
+    stales = (0, 2, 8)
+    grid = [(q, s) for q in wakes for s in stales]
+    ams = [make_async_model(q, s) for q, s in grid]
+    T = 80 if smoke else 600
+    seeds = [0, 1] if smoke else [0, 1, 2, 3]
+
+    def go():
+        res = run_social_sweep(
+            model, cfg, T, seeds=seeds,
+            plan=ExecutionPlan(store="log_ratio", async_=ams))
+        jax.block_until_ready(res.log_ratio)
+        return res
+
+    t0 = time.perf_counter()
+    res = go()
+    compile_wall = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res = go()
+    wall = time.perf_counter() - t0
+
+    na = len(ams)
+    lr = np.asarray(res.log_ratio)          # (K, T), async minor-most
+    med = [float(np.median(lr[a::na, -1])) for a in range(na)]
+    tags = ";".join(f"lr_q{q}_s{s}={v:.2f}"
+                    for (q, s), v in zip(grid, med))
+
+    # the stall reference: sync at the q=0.6 cells' equivalent
+    # same-tick delivery rate
+    q = 0.6
+    p_sync = 1.0 - q * (1.0 - p) * q
+    sync = run_social_sweep(
+        model, cfg, T, drop_probs=[p_sync], seeds=seeds,
+        plan=ExecutionPlan(store="log_ratio"))
+    sync_med = float(np.median(np.asarray(sync.log_ratio)[:, -1]))
+    async_med = med[grid.index((0.6, 8))]
+
+    return (
+        f"social_async_wakexstale{res.K}", wall / res.K * 1e6,
+        f"scenarios={res.K};wakes={','.join(map(str, wakes))};"
+        f"stales={','.join(map(str, stales))};drop={p};B=no_window;"
+        f"T={T};single_jit=true;{tags};"
+        f"sync_equiv_drop={p_sync:.3f};lr_sync_equiv={sync_med:.2f};"
+        f"async_beats_stalled_sync={async_med < 0.0 <= sync_med};"
+        f"compile_s={compile_wall:.1f}",
+    )
+
+
 def rows(smoke: bool = False):
     out = [] if smoke else _conv_rows()
     out.extend(_step_rows(smoke))
     out.append(_sweep_row(smoke))
     out.append(_churn_row(smoke))
+    out.append(_async_row(smoke))
     return out

@@ -7,7 +7,21 @@
 - :mod:`repro.core.social`    — Algorithm 3: fault-tolerant non-Bayesian learning
 - :mod:`repro.core.byzantine` — Algorithm 2: Byzantine-resilient learning
 - :mod:`repro.core.attacks`   — adversary strategies
+- :mod:`repro.core.plan`      — the frozen ExecutionPlan every ``run_*``
+  entry point takes as ``plan=`` (backend/policy/faults/mesh/async/...)
+- :mod:`repro.core.asyncrony` — asynchronous wake clocks + bounded stale
+  buffers (the ``async_`` plan field)
 """
+from .plan import ExecutionPlan, resolve_plan
+from .asyncrony import (
+    AsyncBuffer,
+    AsyncModel,
+    async_stream_fold,
+    init_async_buffer,
+    is_degenerate_async,
+    make_async_model,
+    wake_mask,
+)
 from .graphs import (
     HierTopology,
     make_hierarchy,
@@ -117,5 +131,8 @@ __all__ = [
     "run_pushsum_sweep", "run_byzantine_sweep", "run_byzantine_grid",
     "run_hps_sweep", "run_hps_grid",
     "run_social_sweep", "run_social_grid",
+    "ExecutionPlan", "resolve_plan",
+    "AsyncModel", "AsyncBuffer", "make_async_model", "init_async_buffer",
+    "is_degenerate_async", "wake_mask", "async_stream_fold",
     "attacks",
 ]

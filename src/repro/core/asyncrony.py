@@ -1,0 +1,228 @@
+"""Asynchronous event-driven execution plane — wake clocks + stale buffers.
+
+Every engine in the repo steps a synchronous global round. The paper's
+target regime is not synchronous: hierarchical networks with packet
+drops, churn, and a sometimes-down parameter server are event-driven,
+and *Robust Asynchronous and Network-Independent Cooperative Learning*
+(Mojica-Nava et al.) shows non-Bayesian learning still converges when
+agents wake on independent clocks and consume stale messages. This
+module adds that mode while keeping the scan shape fixed:
+
+* **Wake clocks.** Each agent carries an independent Poisson clock,
+  discretized to one Bernoulli wake coin per scan tick
+  (:func:`wake_mask`): a tick is a fixed-width block of concurrent
+  wakeups, not a global round. ``wake_prob`` is the per-tick firing
+  probability of the agent's clock. Asleep agents do nothing — their
+  node state is frozen exactly like churn-dead agents
+  (:func:`repro.core.faults.freeze`), they stage no message and
+  integrate no delivery.
+
+* **Bounded stale buffers.** Per-edge event streams generalize the
+  in-scan Bernoulli link draw the sparse edge-list layout already
+  supports: an awake sender latches its freshly staged cumulative sum
+  into a per-edge single-slot buffer (:class:`AsyncBuffer` — the
+  last-sent snapshot of the ``(E, d)`` ``rho`` relay plane, an O(E·d)
+  extra scan carry pinned by the ``*_async`` statics contracts below).
+  The buffer ages one tick per round; delivery happens when the link is
+  up, the *receiver* is awake, and the snapshot is at most
+  ``staleness`` ticks old — the sender may be asleep, which is the
+  point. Because the receiver always integrates exactly
+  ``rho_new - rho_old`` of the cumulative relay, total push-sum mass is
+  conserved under ANY wake schedule, and the telescoping self-heals
+  expired (dropped) snapshots on the next fresh one.
+
+* **Degenerate = synchronous, bit for bit.** ``make_async_model()``
+  (wake-prob 1, staleness 0) wakes every agent every tick and admits
+  only same-tick rendezvous: the buffer then holds exactly this round's
+  staged value on every delivering edge and every freeze mask is
+  all-True, so one async tick equals one synchronous round op for op
+  (bit-identical per step, regression-tested). At engine level the
+  ``run_*`` entrypoints go one step further: a *concretely* degenerate
+  model is detected at trace time (:func:`is_degenerate_async`) and
+  dispatched to the synchronous program itself — bit-identity by
+  construction, with zero buffer carry — because XLA's fusion choices
+  (FMA contraction) may otherwise differ between the two scan bodies at
+  the ~1 ulp level, exactly as they do for the fault plane's degenerate
+  models. Traced/batched degenerate models (a sweep's async axis) run
+  the real buffered machinery and match the synchronous rows to fault-
+  plane tolerance. Async delivery always lowers through the XLA
+  ``where`` + ``segment_sum`` path — the Pallas ``edge_scatter`` kernel
+  is node-gather-shaped and cannot read a per-edge buffer, so
+  ``backend="pallas"`` keeps its kernels for everything except the
+  delivery gather.
+
+:class:`AsyncModel` is a pytree of scalar arrays, so (wake-rate ×
+staleness-bound) rides the existing vmap scenario axis of the sweep
+engines without retracing — minor-most after the fault axis (fixed
+order: scenario → fault → async). It arrives at every entrypoint as
+the ``async_`` field of :class:`repro.core.plan.ExecutionPlan`, never
+as a loose kwarg.
+
+PRNG discipline: wake coins get their own fold-in domain,
+``async_stream_fold``, the affine map ``t -> -(4t + engine) - 2^25``.
+Over the statics horizon ``t < 2^20`` its image lies in
+``[-(4·(2^20-1) + 3) - 2^25, -2^25]`` — strictly below the fault domain
+``(-2^21 - 12·2^20, -2^21]``, below the HPS ``~t`` domain
+``[-2^20, -1]``, sign-disjoint from every nonnegative engine stream,
+and within int32. The three ``*_async`` contracts register the maps
+with the :mod:`repro.statics.streams` lattice prover (cross-linked via
+``shares_seed_with`` to every contract on the same base key), so a
+future collision is a lint failure, not a silent correlation.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.statics import contracts as _contracts
+
+from .faults import (
+    ENGINE_HPS,
+    ENGINE_PUSHSUM,
+    ENGINE_SOCIAL,
+    N_ENGINES,
+)
+
+__all__ = [
+    "ASYNC_DOMAIN_BASE",
+    "AsyncModel",
+    "AsyncBuffer",
+    "async_stream_fold",
+    "make_async_model",
+    "init_async_buffer",
+    "is_degenerate_async",
+    "wake_mask",
+]
+
+#: Base of the async fold-in domain: images live at or below ``-2^25``,
+#: strictly outside the fault band (which bottoms out above ``-2^24``
+#: over the statics horizon) and every engine stream.
+ASYNC_DOMAIN_BASE = 1 << 25
+
+
+def async_stream_fold(t, engine: int):
+    """Fold-in value for ``engine``'s wake-coin stream at tick ``t``.
+
+    ``t -> -(N_ENGINES * t + engine) - 2^25`` — affine, so the statics
+    lattice prover certifies disjointness exactly (range-disjoint from
+    the fault domain within the horizon, stride-4 congruence between
+    engines). Python ints are pinned to ``np.int32`` (the
+    ``hps_stream_fold`` convention) so host-side probing and the traced
+    int32 scan index agree bit for bit mod 2^32.
+    """
+    e = int(engine)
+    if isinstance(t, (int, np.integer)):
+        return np.int32(-(int(t) * N_ENGINES + e) - ASYNC_DOMAIN_BASE)
+    return -(t * N_ENGINES + e) - ASYNC_DOMAIN_BASE
+
+
+class AsyncModel(NamedTuple):
+    """Scalar async-severity knobs; a pytree that rides the vmap
+    scenario axis (stack models leaf-wise to sweep wake-rate ×
+    staleness without retracing).
+
+    The defaults of :func:`make_async_model` are fully degenerate:
+    every agent wakes every tick and only same-tick rendezvous
+    delivers — bit-identical to the synchronous engines.
+    """
+
+    wake_prob: jnp.ndarray  # () per-tick Bernoulli wake probability
+    staleness: jnp.ndarray  # () int32 max buffer age that still delivers
+
+
+def make_async_model(wake_prob=1.0, staleness=0) -> AsyncModel:
+    return AsyncModel(
+        wake_prob=jnp.asarray(wake_prob, jnp.float32),
+        staleness=jnp.asarray(staleness, jnp.int32),
+    )
+
+
+def is_degenerate_async(am: AsyncModel | None) -> bool:
+    """True iff ``am`` is a *concrete* scalar model with wake-prob 1 and
+    staleness 0. The ``run_*`` entrypoints dispatch such a model to the
+    synchronous program itself, making degenerate-async bit-identity a
+    property of construction rather than of XLA fusion luck. Traced or
+    batched models (a sweep's async axis) return False and run the real
+    buffered machinery."""
+    if am is None:
+        return True
+    try:
+        return (float(am.wake_prob) >= 1.0 and int(am.staleness) == 0)
+    except (TypeError, jax.errors.ConcretizationTypeError,
+            jax.errors.TracerArrayConversionError):
+        return False
+
+
+class AsyncBuffer(NamedTuple):
+    """Per-edge bounded message buffer carried through the scan: the
+    last-sent snapshot of the staged cumulative sums plus its age in
+    ticks. O(E·d) + O(E) — never a ``(T, E)`` schedule; the ``*_async``
+    statics contracts pin this."""
+
+    snap: jnp.ndarray    # (E, d) sender's staged sigma at its last wake
+    snap_m: jnp.ndarray  # (E,)   companion mass snapshot
+    age: jnp.ndarray     # (E,)   int32 ticks since the snapshot
+
+
+def init_async_buffer(n_edges: int, d: int, dtype=jnp.float32) -> AsyncBuffer:
+    """Empty buffer: zero snapshots (the relay's own t=0 value, so a
+    pre-first-wake delivery integrates exactly nothing) at age 0."""
+    return AsyncBuffer(
+        snap=jnp.zeros((n_edges, d), dtype),
+        snap_m=jnp.zeros((n_edges,), dtype),
+        age=jnp.zeros((n_edges,), jnp.int32),
+    )
+
+
+def wake_mask(key, t, n: int, wake_prob, *, engine: int):
+    """(N,) bool — which agents' clocks fire this tick, drawn on the
+    engine's async-wake stream. ``wake_prob == 1.0`` is exactly
+    all-True (``uniform`` samples [0, 1))."""
+    kt = jax.random.fold_in(key, async_stream_fold(t, engine))
+    return jax.random.uniform(kt, (n,)) < wake_prob
+
+
+# ---------------------------------------------------------------------------
+# Statics contracts — one per engine that folds the wake stream into its
+# base key. Same discipline as the *_faults contracts: (a) async state
+# stays O(E·d) per-edge carry, no (N, N) and no (T, *) schedules in an
+# async trace; (b) the wake fold-in map is proven disjoint from every
+# stream on the same base key by the shares_seed_with cross-links.
+# repro.statics.cli maps each name to a concrete async fixture.
+# ---------------------------------------------------------------------------
+
+_ASYNC_FORBIDDEN = {"*": (("N", "N"), ("T", "*"))}
+
+
+def _async_streams(engine: int):
+    return (
+        _contracts.StreamDecl(
+            "async-wake", lambda t, _e=engine: async_stream_fold(t, _e)),
+    )
+
+
+_contracts.register(_contracts.EngineContract(
+    name="pushsum_async",
+    forbidden=_ASYNC_FORBIDDEN,
+    streams=_async_streams(ENGINE_PUSHSUM),
+    shares_seed_with=("pushsum", "pushsum_sharded", "pushsum_faults"),
+))
+
+_contracts.register(_contracts.EngineContract(
+    name="social_async",
+    forbidden=_ASYNC_FORBIDDEN,
+    streams=_async_streams(ENGINE_SOCIAL),
+    shares_seed_with=("social", "hps", "byzantine",
+                      "social_faults", "hps_faults", "hps_async"),
+))
+
+_contracts.register(_contracts.EngineContract(
+    name="hps_async",
+    forbidden=_ASYNC_FORBIDDEN,
+    streams=_async_streams(ENGINE_HPS),
+    shares_seed_with=("hps", "social", "byzantine",
+                      "hps_faults", "social_faults", "social_async"),
+))

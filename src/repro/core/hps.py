@@ -66,6 +66,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .asyncrony import (
+    AsyncModel,
+    init_async_buffer,
+    is_degenerate_async,
+    wake_mask,
+)
 from .faults import (
     ENGINE_HPS,
     FaultModel,
@@ -76,6 +82,7 @@ from .faults import (
     step_faults,
 )
 from .graphs import EdgeList, HierTopology
+from .plan import ExecutionPlan, resolve_plan
 from .precision import Policy, resolve_policy
 from repro.statics.contracts import contract as statics_contract
 from repro.statics.retrace import register_cache as register_statics_cache
@@ -414,6 +421,7 @@ def _hps_scan_core(
     dst_sorted: bool = False,
     halo: str = "psum",
     faults: FaultModel | None = None,
+    async_: AsyncModel | None = None,
 ) -> tuple[SparsePushSumState, tuple[jnp.ndarray, jnp.ndarray]]:
     """Algorithm 1's scan, parameterized over the per-scenario runtime
     arrays (vmappable for batched grids).
@@ -447,7 +455,25 @@ def _hps_scan_core(
     consensus (plus per-rep-link degradation: dead reps drop out of the
     pool via ``hps_fusion(live=)``). ``faults=None`` emits the
     bit-identical pre-fault program.
+
+    ``async_`` (a TRACED :class:`repro.core.asyncrony.AsyncModel` pytree,
+    also riding the vmap scenario axis) switches the consensus half to the
+    event-driven mode: per-tick wake coins on the ``async_stream_fold``
+    HPS domain gate staging and delivery through the per-edge
+    :class:`~repro.core.asyncrony.AsyncBuffer` carried in the scan
+    (O(E·d), pinned by the ``hps_async`` statics contract), and asleep
+    agents' node state is frozen inside :func:`sparse_pushsum_step`. The
+    PS fusion half stays on the global Γ clock — the parameter server
+    polls its representatives on its own schedule regardless of the
+    gossip clocks (it reads whatever frozen state an asleep rep holds).
+    Incompatible with ``graph_axis`` (the buffer is edge-local to the
+    full index); composes freely with ``faults``.
     """
+    if async_ is not None and graph_axis is not None:
+        raise ValueError(
+            "async_ is incompatible with graph_axis (the per-edge stale "
+            "buffer is not partitioned); run async scans unsharded"
+        )
     pol = None if policy is None else resolve_policy(policy)
     accum_name = None if pol is None else pol.accum
     N = w.shape[0]
@@ -462,12 +488,11 @@ def _hps_scan_core(
     target = w.mean(axis=0)
 
     def body(carry, t):
-        if faults is None:
-            state = carry
-            fs = None
-        else:
-            state, fs = carry
-            fs = step_faults(key, t, faults, fs, engine=ENGINE_HPS,
+        # carry layout: (state,) [+ abuf if async] [+ fault_state last]
+        state = carry[0]
+        fs = None
+        if faults is not None:
+            fs = step_faults(key, t, faults, carry[-1], engine=ENGINE_HPS,
                              graph_axis=graph_axis, n_shards=n_shards)
         # --- consensus (Alg. 1 lines 3-12) ---
         if faults is not None:
@@ -488,11 +513,20 @@ def _hps_scan_core(
             mask = step_edge_mask(
                 key, t, E, rt.drop_prob, rt.B, fold_t=hps_stream_fold(t)
             )
-        st = sparse_pushsum_step(
-            state, mask, rt.src, rt.dst, rt.valid, backend, share=share,
-            graph_axis=graph_axis, dst_sorted=dst_sorted, policy=policy,
-            halo=halo, n_shards=n_shards, faults=fs,
-        )
+        if async_ is not None:
+            awake = wake_mask(key, t, N, async_.wake_prob, engine=ENGINE_HPS)
+            st, abuf = sparse_pushsum_step(
+                state, mask, rt.src, rt.dst, rt.valid, backend, share=share,
+                dst_sorted=dst_sorted, policy=policy, faults=fs,
+                awake=awake, abuf=carry[1], staleness=async_.staleness,
+            )
+        else:
+            abuf = None
+            st = sparse_pushsum_step(
+                state, mask, rt.src, rt.dst, rt.valid, backend, share=share,
+                graph_axis=graph_axis, dst_sorted=dst_sorted, policy=policy,
+                halo=halo, n_shards=n_shards, faults=fs,
+            )
         # --- PS fusion every Γ (lines 13-21) ---
         z_f, m_f = hps_fusion(st.z, st.m, rt.rep_mask, rt.M, F,
                               accum_dtype=accum_name,
@@ -514,14 +548,20 @@ def _hps_scan_core(
             ys = jnp.abs(sparse_ratios(new) - target).max()   # () worst err
         else:
             ys = None
-        out = new if faults is None else (new, fs)
+        out = (new,)
+        if async_ is not None:
+            out = out + (abuf,)
+        if faults is not None:
+            out = out + (fs,)
         return out, ys
 
-    carry0 = state0 if faults is None else (
-        state0, init_fault_state(N, E))
-    final, ys = jax.lax.scan(body, carry0, jnp.arange(T, dtype=jnp.int32))
+    carry0 = (state0,)
+    if async_ is not None:
+        carry0 = carry0 + (init_async_buffer(E, w.shape[1], state0.z.dtype),)
     if faults is not None:
-        final = final[0]
+        carry0 = carry0 + (init_fault_state(N, E),)
+    (final, *_), ys = jax.lax.scan(
+        body, carry0, jnp.arange(T, dtype=jnp.int32))
     if store == "trajectory":
         return final, (ys, jnp.abs(ys - target[None, None, :]).max(axis=(1, 2)))
     fr = sparse_ratios(final)
@@ -546,34 +586,42 @@ def run_hps_runtime(
     T: int,
     seed: int = 0,
     *,
-    backend: str = "auto",
-    store: str = "trajectory",
     F: int = 0,
-    policy: Policy | str | None = None,
-    dst_sorted: bool = False,
-    faults: FaultModel | None = None,
+    plan: ExecutionPlan | None = None,
+    **legacy,
 ) -> HPSResult:
     """Run Algorithm 1 on a prebuilt :class:`HPSRuntime`.
 
     The dense-free entry point (see :func:`hps_runtime_from_edge_list`);
     :func:`run_hps` is the :class:`HPSConfig` convenience wrapper. ``seed``
     drives the per-round link-mask stream on the ``hps_stream_fold``
-    domain; ``backend`` selects the consensus delivery lowering; ``store``
-    what the scan materializes (:class:`HPSResult`); ``F > 0`` swaps the PS
-    average for the trimmed-pool resilient rule; ``policy`` the
-    storage/compute/accum dtype split. ``dst_sorted`` defaults to False
-    because a user-built runtime may carry any edge order; the config-
-    driven wrappers pass True. ``faults`` activates the unified fault
-    plane (:mod:`repro.core.faults`): bursty links, churn, and PS
-    crash/recovery; ``None`` keeps the bit-identical pre-fault program.
+    domain; ``F > 0`` swaps the PS average for the trimmed-pool resilient
+    rule (a science knob, so it stays a named parameter).
+
+    Execution knobs ride ``plan=`` (:class:`repro.core.plan.ExecutionPlan`;
+    loose ``backend=``/``store=``/``policy=``/``dst_sorted=``/``faults=``
+    kwargs are deprecated shims folding into a plan bit-identically).
+    ``plan.store=None`` means ``"trajectory"``; ``plan.dst_sorted``
+    defaults to False because a user-built runtime may carry any edge
+    order (the config-driven wrappers pass True). ``plan.faults``
+    activates the unified fault plane; ``plan.async_`` the event-driven
+    mode — a concretely degenerate model dispatches to the synchronous
+    program (bit-identity by construction, :mod:`repro.core.asyncrony`).
     """
+    plan = resolve_plan(
+        plan, _entry="run_hps_runtime",
+        _supports=("backend", "store", "policy", "dst_sorted", "faults",
+                   "async_"),
+        **legacy)
+    store = "trajectory" if plan.store is None else plan.store
     if store not in HPS_STORES:
         raise ValueError(f"store must be one of {HPS_STORES}, got {store!r}")
+    async_ = None if is_degenerate_async(plan.async_) else plan.async_
     final, (ratio, gap) = _hps_compiled(
         jax.random.PRNGKey(seed), rt, jnp.asarray(w),
-        T=T, store=store, backend=backend, F=F,
-        policy=None if policy is None else resolve_policy(policy),
-        dst_sorted=dst_sorted, faults=faults,
+        T=T, store=store, backend=plan.backend, F=F,
+        policy=None if plan.policy is None else resolve_policy(plan.policy),
+        dst_sorted=plan.dst_sorted, faults=plan.faults, async_=async_,
     )
     return HPSResult(ratio=ratio, final_state=final, gap=gap)
 
@@ -584,11 +632,9 @@ def run_hps(
     T: int,
     seed: int = 0,
     *,
-    backend: str = "auto",
-    store: str = "trajectory",
     F: int = 0,
-    policy: Policy | str | None = None,
-    faults: FaultModel | None = None,
+    plan: ExecutionPlan | None = None,
+    **legacy,
 ) -> HPSResult:
     """Run HPS for T iterations (single scenario) on the fused engine.
 
@@ -596,11 +642,16 @@ def run_hps(
     the drop_prob / B semantics of :func:`graphs.link_schedule` (forced
     delivery at ``t % B == B - 1``) on the dedicated ``hps_stream_fold``
     PRNG domain — nothing of size (T, N, N) or (N, N) is ever materialized.
+    Execution knobs ride ``plan=`` (loose kwargs are deprecated shims);
+    see :func:`run_hps_runtime`.
     """
+    plan = resolve_plan(
+        plan, _entry="run_hps",
+        _supports=("backend", "store", "policy", "faults", "async_"),
+        **legacy)
     return run_hps_runtime(
-        w, make_hps_runtime(cfg), T, seed=seed,
-        backend=backend, store=store, F=F, policy=policy, dst_sorted=True,
-        faults=faults,
+        w, make_hps_runtime(cfg), T, seed=seed, F=F,
+        plan=plan.replace(dst_sorted=True),
     )
 
 

@@ -1,0 +1,173 @@
+"""ExecutionPlan — one object for every ``run_*`` entrypoint's execution knobs.
+
+The engine entrypoints used to thread 10-14 loose keyword arguments each
+(``backend=``, ``policy=``, ``faults=``, ``mesh=``, ``data_axis=``,
+``graph_axis=``, ``graph_shards=``, ``store=``, ``halo=``, ``dst_sorted=``)
+with drifting defaults across the four ``run_*_{sweep,grid}`` families.
+:class:`ExecutionPlan` consolidates all of them into one frozen dataclass:
+
+    plan = ExecutionPlan(backend="xla", policy="bf16",
+                         faults=gilbert_elliott_model(8.0, 0.5),
+                         async_=make_async_model(wake_prob=0.5, staleness=4))
+    res = run_social_sweep(model, cfg, T, seeds=seeds, plan=plan)
+
+Every field is an *execution* knob — how the run lowers, shards, stores and
+degrades — never a *science* knob (``drop_probs``, ``gammas``, ``seeds``,
+``T``, ``B``, ``F`` stay loose parameters of each entrypoint). The async
+execution mode (:mod:`repro.core.asyncrony`) arrives exclusively as the
+``async_`` field: it was the forcing function for this consolidation and
+is deliberately NOT accepted as a loose kwarg.
+
+Legacy loose kwargs still work through each entrypoint's ``**legacy``
+catch-all: :func:`resolve_plan` folds them into a plan with identical
+semantics (bit-identical results) and emits a :class:`DeprecationWarning`
+once per entrypoint per process. Passing ``plan=`` together with loose
+kwargs is an error — there is exactly one source of truth per call.
+
+The statics lint (:mod:`repro.statics.signatures`) enforces the contract
+from the other side: no ``run_*`` entrypoint may re-introduce a *named*
+parameter covered by :class:`ExecutionPlan`.
+
+Field defaults and meaning
+--------------------------
+``backend``       ``"auto"`` | ``"xla"`` | ``"pallas"`` — per-round kernel
+                  lowering (``"auto"`` = Pallas on TPU, XLA elsewhere).
+``policy``        precision policy name / :class:`repro.core.precision.Policy`
+                  / ``None`` (dtype-transparent fp32).
+``faults``        :class:`repro.core.faults.FaultModel` or a sequence of
+                  them (grid engines cross a fault-minor scenario axis).
+``mesh``          ``jax.sharding.Mesh`` for shard_map'd sweeps.
+``data_axis``     mesh axis the scenario batch shards over.
+``graph_axis``    mesh axis the edge partition shards over (2-D sweeps).
+``graph_shards``  edge-partition count (push-sum sweep only).
+``store``         what the scan materializes; ``None`` keeps each engine's
+                  own default (``"trajectory"`` / ``"log_ratio"`` /
+                  ``"gap"`` / ``"decisions"``).
+``async_``        :class:`repro.core.asyncrony.AsyncModel` or a sequence of
+                  them (grid engines cross an async-minor scenario axis);
+                  ``None`` = synchronous rounds, the bit-identical
+                  pre-async program.
+``halo``          graph-axis combine variant of the edge-partitioned mode.
+``dst_sorted``    asserts dst-sorted edge indices (segment-sum sort hint).
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any
+
+__all__ = [
+    "ExecutionPlan",
+    "resolve_plan",
+    "PLAN_FIELDS",
+    "LEGACY_PLAN_KWARGS",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """Frozen bundle of execution knobs shared by every ``run_*`` entry."""
+
+    backend: str = "auto"
+    policy: Any = None
+    faults: Any = None
+    mesh: Any = None
+    data_axis: str = "data"
+    graph_axis: str = "graph"
+    graph_shards: int | None = None
+    store: str | None = None
+    async_: Any = None
+    halo: str = "psum"
+    dst_sorted: bool = False
+
+    def replace(self, **kw) -> "ExecutionPlan":
+        return dataclasses.replace(self, **kw)
+
+
+#: Every field name of :class:`ExecutionPlan` — the set the statics
+#: signature linter bans as loose parameters on ``run_*`` entrypoints.
+PLAN_FIELDS = tuple(f.name for f in dataclasses.fields(ExecutionPlan))
+
+#: The loose kwargs the deprecation shim still accepts. ``async_`` is
+#: excluded on purpose: the async mode is new API and only ever arrives
+#: as a plan field, never as loose kwarg number 15.
+LEGACY_PLAN_KWARGS = frozenset(PLAN_FIELDS) - {"async_"}
+
+_DEFAULT = ExecutionPlan()
+
+# Entrypoints that have already emitted their deprecation warning this
+# process; the shim warns once per entry, not once per call. Tests reset
+# this set directly.
+_warned: set[str] = set()
+
+
+def _differs_from_default(name: str, value) -> bool:
+    dflt = getattr(_DEFAULT, name)
+    if dflt is None:
+        # identity, not ==: fault/async models are array pytrees whose
+        # __eq__ would trace elementwise
+        return value is not None
+    return value != dflt
+
+
+def resolve_plan(
+    plan: ExecutionPlan | None = None,
+    *,
+    _entry: str,
+    _supports: tuple[str, ...] | None = None,
+    **legacy,
+) -> ExecutionPlan:
+    """Normalize one entrypoint call's execution knobs into a plan.
+
+    ``legacy`` is the entrypoint's ``**legacy`` catch-all. Recognized keys
+    (:data:`LEGACY_PLAN_KWARGS`) fold into a fresh plan with a one-time
+    :class:`DeprecationWarning` per ``_entry``; unknown keys raise
+    ``TypeError`` exactly like a normal unexpected keyword argument, and
+    combining ``plan=`` with loose kwargs raises — one source of truth.
+
+    ``_supports`` names the plan fields this entrypoint honors; any OTHER
+    field set to a non-default value raises ``ValueError`` instead of
+    being silently ignored (the drifting-defaults failure mode this API
+    replaces).
+    """
+    if legacy:
+        unknown = sorted(set(legacy) - LEGACY_PLAN_KWARGS)
+        if unknown:
+            hint = ""
+            if "async_" in unknown or "async" in unknown:
+                hint = (
+                    " (the async mode is plan-only: pass "
+                    "plan=ExecutionPlan(async_=...))"
+                )
+            raise TypeError(
+                f"{_entry}() got unexpected keyword argument(s) "
+                f"{unknown}{hint}"
+            )
+        if plan is not None:
+            raise TypeError(
+                f"{_entry}(): pass execution options via plan= OR the "
+                f"legacy loose kwargs, not both (got plan= together with "
+                f"{sorted(legacy)})"
+            )
+        if _entry not in _warned:
+            _warned.add(_entry)
+            warnings.warn(
+                f"{_entry}(): loose execution kwargs "
+                f"({', '.join(sorted(legacy))}) are deprecated; pass "
+                f"plan=ExecutionPlan(...) instead (bit-identical results)",
+                DeprecationWarning,
+                stacklevel=3,
+            )
+        plan = ExecutionPlan(**legacy)
+    elif plan is None:
+        plan = _DEFAULT
+    if _supports is not None:
+        for name in PLAN_FIELDS:
+            if name in _supports:
+                continue
+            if _differs_from_default(name, getattr(plan, name)):
+                raise ValueError(
+                    f"{_entry}() does not support the plan field "
+                    f"{name!r} (supported: {sorted(_supports)})"
+                )
+    return plan

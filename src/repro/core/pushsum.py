@@ -62,6 +62,13 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.asyncrony import (
+    AsyncBuffer,
+    AsyncModel,
+    init_async_buffer,
+    is_degenerate_async,
+    wake_mask,
+)
 from repro.core.faults import (
     ENGINE_PUSHSUM,
     FaultModel,
@@ -71,6 +78,7 @@ from repro.core.faults import (
     init_fault_state,
     step_faults,
 )
+from repro.core.plan import ExecutionPlan, resolve_plan
 from repro.core.precision import Policy, resolve_policy
 from repro.statics.contracts import contract as statics_contract
 from repro.statics.retrace import register_cache as register_statics_cache
@@ -253,7 +261,10 @@ def sparse_pushsum_step(
     halo: str = "psum",
     n_shards: int = 1,
     faults: FaultState | None = None,
-) -> SparsePushSumState:
+    awake: jnp.ndarray | None = None,
+    abuf: AsyncBuffer | None = None,
+    staleness: jnp.ndarray | None = None,
+) -> SparsePushSumState | tuple[SparsePushSumState, AsyncBuffer]:
     """One fast-robust-push-sum iteration on edge-list state.
 
     Identical recursion to :func:`pushsum_step`; delivery gathers
@@ -321,6 +332,24 @@ def sparse_pushsum_step(
     :mod:`repro.core.faults`. Per-edge relay state needs no freeze: a
     masked edge never latches. ``faults=None`` (default) emits the
     bit-identical pre-fault program.
+
+    **Async mode** (``awake=`` (N,) bool + ``abuf=`` an
+    :class:`repro.core.asyncrony.AsyncBuffer` + ``staleness=`` () int32,
+    all three together): one tick of the event-driven engine. Awake
+    senders latch this tick's staged cumulative into the per-edge
+    bounded buffer (age reset to 0, stale snapshots age by 1); delivery
+    latches the *buffered* snapshot into ``rho`` when the link is up,
+    the receiver is awake, and the snapshot is at most ``staleness``
+    ticks old — a sleeping sender's last message still delivers, which
+    is the asynchrony. Asleep agents' node state is frozen exactly like
+    churn-dead agents (composes with ``faults=``: effective liveness is
+    ``awake & node_live``). Returns ``(state, new_abuf)`` instead of
+    the bare state. Delivery always lowers through the XLA
+    ``where`` + ``segment_sum`` path (the Pallas edge-scatter kernel
+    gathers node-indexed ``sigma`` and cannot read a per-edge buffer);
+    the degenerate model (wake-prob 1, staleness 0) reproduces the
+    synchronous XLA step bit for bit. Incompatible with
+    ``graph_axis=`` edge partitioning.
     """
     from repro.kernels.pushsum_edge import edge_scatter, resolve_backend
 
@@ -358,7 +387,40 @@ def sparse_pushsum_step(
         # a dead endpoint takes the edge down in both directions
         mask = mask & faults.node_live[src] & faults.node_live[dst]
     live = mask & valid
-    if resolve_backend(backend) == "pallas":
+    abuf_new = None
+    if abuf is not None:
+        if graph_axis is not None:
+            raise ValueError(
+                "async mode does not compose with graph_axis edge "
+                "partitioning (the per-edge buffer would need halo state)"
+            )
+        # async tick: awake (live) senders overwrite their edges' buffer
+        # slot with the freshly staged cumulative; everyone else's
+        # snapshot ages by one tick
+        send = awake[src] & valid
+        if faults is not None:
+            send = send & faults.node_live[src]
+        snap = jnp.where(send[:, None], sigma_p_s[src], abuf.snap)
+        snap_m = jnp.where(send, sigma_m_p_s[src], abuf.snap_m)
+        age = jnp.where(send, 0, abuf.age + 1)
+        abuf_new = AsyncBuffer(snap=snap, snap_m=snap_m, age=age)
+        # delivery consumes the buffer: link up AND receiver awake AND
+        # snapshot within the staleness bound. The receiver integrates
+        # exactly rho_new - rho_old of the cumulative relay, so mass is
+        # conserved under any wake schedule and an expired snapshot is
+        # self-healed by the telescoping on the next fresh one.
+        live = live & awake[dst] & (age <= staleness)
+        rho_new = jnp.where(live[:, None], snap, rho)
+        rho_m_new = jnp.where(live, snap_m, rho_m)
+        recv = jax.ops.segment_sum(
+            rho_new.astype(ac_dt) - rho.astype(ac_dt), dst, num_segments=n,
+            indices_are_sorted=dst_sorted,
+        )
+        recv_m = jax.ops.segment_sum(
+            rho_m_new.astype(ac_dt) - rho_m.astype(ac_dt), dst,
+            num_segments=n, indices_are_sorted=dst_sorted,
+        )
+    elif resolve_backend(backend) == "pallas":
         # value + mass columns in one (·, d+1) pass through the kernel
         sigma_cat = jnp.concatenate([sigma_p_s, sigma_m_p_s[:, None]], axis=1)
         rho_cat = jnp.concatenate([rho, rho_m[:, None]], axis=1)
@@ -416,6 +478,13 @@ def sparse_pushsum_step(
     z_n = (z_pc * share[:, None]).astype(st_dt)
     m_n = (m_pc * share).astype(st_dt)
 
+    if awake is not None:
+        # asleep agents do nothing: same freeze as churn, composing to
+        # an effective liveness of awake & node_live
+        z_n = freeze(awake, z_n, z)
+        m_n = freeze(awake, m_n, m)
+        sigma_n = freeze(awake, sigma_n, sigma)
+        sigma_m_n = freeze(awake, sigma_m_n, sigma_m)
     if faults is not None:
         # freeze dead agents: state carries unchanged through the dead
         # rounds (stale-rejoin semantics) and every term of the global
@@ -427,7 +496,10 @@ def sparse_pushsum_step(
         sigma_n = freeze(ln, sigma_n, sigma)
         sigma_m_n = freeze(ln, sigma_m_n, sigma_m)
 
-    return SparsePushSumState(z_n, m_n, sigma_n, sigma_m_n, rho_new, rho_m_new)
+    new = SparsePushSumState(z_n, m_n, sigma_n, sigma_m_n, rho_new, rho_m_new)
+    if abuf is not None:
+        return new, abuf_new
+    return new
 
 
 _HALF_DTYPES = (jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float16))
@@ -621,10 +693,8 @@ def run_pushsum_sparse(
     valid: jnp.ndarray | None = None,
     masks: jnp.ndarray | None = None,   # optional explicit (T, E) schedule
     record_every: int = 1,
-    backend: str = "auto",
-    policy: Policy | str | None = None,
-    dst_sorted: bool = False,
-    faults: FaultModel | None = None,
+    plan: ExecutionPlan | None = None,
+    **legacy,
 ) -> tuple[SparsePushSumState, jnp.ndarray]:
     """Run T iterations of the edge-list core.
 
@@ -632,12 +702,17 @@ def run_pushsum_sparse(
     (drop_prob / B semantics of :func:`graphs.link_schedule`); pass an
     explicit ``masks`` (T, E) schedule instead to reproduce a dense run
     bit-for-bit (see :func:`graphs.edge_masks`); its length must equal T.
-    ``backend`` selects the per-round delivery lowering (module docstring);
-    ``"pallas"`` expects a dst-sorted edge index. ``policy`` selects the
-    storage dtype of the scan-carried state (:mod:`repro.core.precision`;
-    ``None`` = dtype-transparent fp32 default, bit-identical to the
-    pre-policy engine); ``dst_sorted`` declares the edge index sorted by
-    receiver so the integration scatter gets the sorted-segments hint.
+
+    Execution knobs ride ``plan=`` (:class:`repro.core.plan.ExecutionPlan`;
+    loose ``backend=``/``policy=``/``dst_sorted=``/``faults=`` kwargs are
+    deprecated shims that fold into a plan bit-identically):
+    ``plan.backend`` selects the per-round delivery lowering (module
+    docstring); ``"pallas"`` expects a dst-sorted edge index.
+    ``plan.policy`` selects the storage dtype of the scan-carried state
+    (:mod:`repro.core.precision`; ``None`` = dtype-transparent fp32
+    default, bit-identical to the pre-policy engine); ``plan.dst_sorted``
+    declares the edge index sorted by receiver so the integration scatter
+    gets the sorted-segments hint.
 
     Returns the final state and the ratio trajectory recorded at rounds
     ``record_every - 1, 2*record_every - 1, ...`` — i.e. the *end* of each
@@ -647,8 +722,8 @@ def run_pushsum_sparse(
     T/record_every ratio frames ever exist — at N=1024 this is what keeps
     long-horizon runs O(N d) instead of O(T N d).
 
-    ``faults`` (a :class:`repro.core.faults.FaultModel`) activates the
-    unified fault plane: the Bernoulli link draw generalizes to a
+    ``plan.faults`` (a :class:`repro.core.faults.FaultModel`) activates
+    the unified fault plane: the Bernoulli link draw generalizes to a
     per-edge Gilbert-Elliott burst chain, agents churn on the liveness
     mask (edges down, state frozen, stale rejoin), and the per-round
     realization state — O(E) + O(N), carried in the scan — advances on
@@ -657,7 +732,27 @@ def run_pushsum_sparse(
     degenerate :func:`repro.core.faults.make_fault_model` reproduces the
     same mask values draw-for-draw. Incompatible with an explicit
     ``masks`` schedule.
+
+    ``plan.async_`` (an :class:`repro.core.asyncrony.AsyncModel`)
+    activates the event-driven mode: agents wake on independent
+    Bernoulli-discretized Poisson clocks (their own disjoint PRNG
+    stream), messages ride per-edge bounded stale buffers — an O(E·d)
+    extra scan carry — and each scan tick steps one block of concurrent
+    wakeups. Composes with ``plan.faults``; incompatible with an
+    explicit ``masks`` schedule. The degenerate
+    :func:`repro.core.asyncrony.make_async_model` (wake-prob 1,
+    staleness 0) is bit-identical to the synchronous engine.
     """
+    plan = resolve_plan(
+        plan, _entry="run_pushsum_sparse",
+        _supports=("backend", "policy", "dst_sorted", "faults", "async_"),
+        **legacy)
+    backend, policy = plan.backend, plan.policy
+    dst_sorted, faults, async_ = plan.dst_sorted, plan.faults, plan.async_
+    if async_ is not None and is_degenerate_async(async_):
+        # bit-identity by construction: a concretely degenerate model IS
+        # the synchronous engine (see repro.core.asyncrony)
+        async_ = None
     w = jnp.asarray(w)
     src = jnp.asarray(src, jnp.int32)
     dst = jnp.asarray(dst, jnp.int32)
@@ -673,6 +768,11 @@ def run_pushsum_sparse(
         if faults is not None:
             raise ValueError(
                 "faults= requires key-driven masks; an explicit masks "
+                "schedule already fixes the link realization"
+            )
+        if async_ is not None:
+            raise ValueError(
+                "async_= requires key-driven masks; an explicit masks "
                 "schedule already fixes the link realization"
             )
         masks = jnp.asarray(masks)
@@ -692,41 +792,66 @@ def run_pushsum_sparse(
     if key is None:
         key = jax.random.PRNGKey(0)
 
-    if faults is not None:
-        # fault-plane scan: the carry gains the O(E) + O(N) FaultState;
-        # the link uniform is drawn on the SAME fold as step_edge_mask, so
-        # the degenerate FaultModel reproduces the Bernoulli mask values
-        # draw-for-draw while the GE/churn streams live in their own
-        # disjoint fold-in domain
-        fs0 = init_fault_state(w.shape[0], E)
+    if faults is not None or async_ is not None:
+        # stateful scan: the carry gains the O(E) + O(N) FaultState
+        # and/or the O(E·d) AsyncBuffer. The link uniform is drawn on
+        # the SAME fold as step_edge_mask, so the degenerate FaultModel
+        # reproduces the Bernoulli mask values draw-for-draw, while the
+        # GE/churn and wake streams live in their own disjoint fold-in
+        # domains.
+        n_nodes = w.shape[0]
+        carry0 = (state0,)
+        if async_ is not None:
+            carry0 += (init_async_buffer(E, w.shape[1], state0.z.dtype),)
+        if faults is not None:
+            carry0 += (init_fault_state(n_nodes, E),)
 
-        def fault_round(carry, t):
-            state, fs = carry
-            fs = step_faults(key, t, faults, fs, engine=ENGINE_PUSHSUM)
-            u = jax.random.uniform(jax.random.fold_in(key, t), (E,))
-            mask = faulty_edge_mask(u, t, faults, fs, src, dst, drop_prob, B)
-            new = sparse_pushsum_step(state, mask, src, dst, valid, backend,
-                                      policy=policy, dst_sorted=dst_sorted,
-                                      faults=fs)
-            return (new, fs)
+        def stateful_round(carry, t):
+            state = carry[0]
+            abuf = carry[1] if async_ is not None else None
+            fs = carry[-1] if faults is not None else None
+            if faults is not None:
+                fs = step_faults(key, t, faults, fs, engine=ENGINE_PUSHSUM)
+                u = jax.random.uniform(jax.random.fold_in(key, t), (E,))
+                mask = faulty_edge_mask(u, t, faults, fs, src, dst,
+                                        drop_prob, B)
+            else:
+                mask = step_edge_mask(key, t, E, drop_prob, B)
+            if async_ is not None:
+                awake = wake_mask(key, t, n_nodes, async_.wake_prob,
+                                  engine=ENGINE_PUSHSUM)
+                new, abuf = sparse_pushsum_step(
+                    state, mask, src, dst, valid, backend, policy=policy,
+                    dst_sorted=dst_sorted, faults=fs, awake=awake,
+                    abuf=abuf, staleness=async_.staleness)
+            else:
+                new = sparse_pushsum_step(
+                    state, mask, src, dst, valid, backend, policy=policy,
+                    dst_sorted=dst_sorted, faults=fs)
+            out = (new,)
+            if async_ is not None:
+                out += (abuf,)
+            if faults is not None:
+                out += (fs,)
+            return out
 
         if k > 1 and T % k == 0:
-            def fwindow(carry, t0):
+            def swindow(carry, t0):
                 new = jax.lax.fori_loop(
-                    0, k, lambda i, c: fault_round(c, t0 + jnp.uint32(i)),
+                    0, k, lambda i, c: stateful_round(c, t0 + jnp.uint32(i)),
                     carry)
                 return new, sparse_ratios(new[0])
 
-            (final, _), traj = jax.lax.scan(
-                fwindow, (state0, fs0), jnp.arange(0, T, k, dtype=jnp.uint32))
+            (final, *_), traj = jax.lax.scan(
+                swindow, carry0, jnp.arange(0, T, k, dtype=jnp.uint32))
             return final, traj
 
-        def fbody(carry, t):
-            new = fault_round(carry, t)
+        def sbody(carry, t):
+            new = stateful_round(carry, t)
             return new, sparse_ratios(new[0])
 
-        (final, _), traj = jax.lax.scan(
-            fbody, (state0, fs0), jnp.arange(T, dtype=jnp.uint32))
+        (final, *_), traj = jax.lax.scan(
+            sbody, carry0, jnp.arange(T, dtype=jnp.uint32))
         return final, traj[k - 1 :: k]
 
     if k > 1 and T % k == 0:

@@ -60,6 +60,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .asyncrony import (
+    AsyncModel,
+    init_async_buffer,
+    is_degenerate_async,
+    wake_mask,
+)
 from .faults import (
     ENGINE_SOCIAL,
     FaultModel,
@@ -72,6 +78,7 @@ from .faults import (
 )
 from .graphs import EdgeList
 from .hps import HPSConfig, hps_fusion
+from .plan import ExecutionPlan, resolve_plan
 from .precision import Policy, resolve_policy
 from .pushsum import (
     SparsePushSumState,
@@ -263,6 +270,7 @@ def _social_scan_core(
     dst_sorted: bool = False,
     halo: str = "psum",
     faults: FaultModel | None = None,
+    async_: AsyncModel | None = None,
 ) -> tuple[SparsePushSumState, tuple[jnp.ndarray, jnp.ndarray]]:
     """Algorithm 3's scan, parameterized over the per-scenario runtime
     arrays (vmappable for batched grids).
@@ -293,9 +301,26 @@ def _social_scan_core(
     freeze until rejoin), and PS crash (fusion rounds skipped while the
     coordinator is down). ``faults=None`` emits the bit-identical
     pre-fault program.
+
+    ``async_`` — also a TRACED pytree (:class:`repro.core.asyncrony
+    .AsyncModel`) on the vmap scenario axis — runs the event-driven
+    mode: the consensus half steps blocks of concurrent wakeups with
+    per-edge bounded stale buffers (an O(E·m) extra carry), asleep
+    agents observe no signal (accumulator and belief freeze like the
+    churn path, which is why the final-belief carry is forced on), and
+    the PS fusion stays on the synchronous global Γ clock — the
+    parameter server polls its representatives regardless of their
+    gossip clocks. Wake coins ride the engine's async-wake stream
+    (:func:`repro.core.asyncrony.async_stream_fold`), disjoint from the
+    link/signal/fault folds. Composes with ``faults``; incompatible
+    with ``graph_axis`` edge partitioning.
     """
     from repro.kernels.social_innov import innovation_step
 
+    if async_ is not None and graph_axis is not None:
+        raise ValueError(
+            "async mode does not compose with graph_axis edge partitioning"
+        )
     pol = None if policy is None else resolve_policy(policy)
     st_dt = jnp.float32 if pol is None else pol.storage_dtype
     accum_name = None if pol is None else pol.accum
@@ -313,9 +338,13 @@ def _social_scan_core(
     # the trajectory store emits every belief through ys, so only the other
     # stores need the final mu threaded through the carry (storage dtype —
     # under a bf16 policy no fp32 (N, m) value may persist across rounds).
-    # The fault plane always carries mu: a dead agent's belief freezes to
-    # its last live value, which must therefore survive in the carry.
-    carry_mu = store != "trajectory" or faults is not None
+    # The fault and async planes always carry mu: a dead or asleep agent's
+    # belief freezes to its last live value, which must therefore survive
+    # in the carry.
+    carry_mu = store != "trajectory" or faults is not None \
+        or async_ is not None
+    # carry layout: (state,) [+ mu] [+ abuf] [+ fault_state]
+    abuf_idx = 1 + int(carry_mu)
 
     def body(carry, t):
         state = carry[0]
@@ -343,17 +372,33 @@ def _social_scan_core(
                 mask_key, t, E, rt.drop_prob, rt.B,
                 fold_t=social_stream_fold(t, STREAM_LINK),
             )
-        st = sparse_pushsum_step(
-            state, mask, rt.src, rt.dst, rt.valid, backend, share=share,
-            graph_axis=graph_axis, dst_sorted=dst_sorted, policy=policy,
-            halo=halo, n_shards=n_shards,
-            faults=None if faults is None else fs,
-        )
+        if async_ is not None:
+            awake = wake_mask(mask_key, t, N, async_.wake_prob,
+                              engine=ENGINE_SOCIAL)
+            st, abuf = sparse_pushsum_step(
+                state, mask, rt.src, rt.dst, rt.valid, backend, share=share,
+                dst_sorted=dst_sorted, policy=policy,
+                faults=None if faults is None else fs,
+                awake=awake, abuf=carry[abuf_idx],
+                staleness=async_.staleness,
+            )
+        else:
+            st = sparse_pushsum_step(
+                state, mask, rt.src, rt.dst, rt.valid, backend, share=share,
+                graph_axis=graph_axis, dst_sorted=dst_sorted, policy=policy,
+                halo=halo, n_shards=n_shards,
+                faults=None if faults is None else fs,
+            )
         # --- innovation + belief (lines 13-16), one fused pass ---
         sk = jax.random.fold_in(sig_key, social_stream_fold(t, STREAM_SIGNAL))
         u = jax.random.uniform(sk, (N,))
         z, mu = innovation_step(st.z, st.m, u, cdf, log_tables, backend,
                                 accum_dtype=accum_name)
+        if async_ is not None:
+            # asleep agents observe nothing: accumulator and belief stay
+            # at their frozen values until the next wake
+            z = freeze(awake, z, st.z)
+            mu = freeze(awake, mu, carry[1].astype(mu.dtype))
         if faults is not None:
             # dead agents observe nothing: the accumulator stays at its
             # frozen post-consensus value and the belief stays stale
@@ -382,12 +427,16 @@ def _social_scan_core(
         else:
             ys = None
         out = (new,) + ((mu.astype(st_dt),) if carry_mu else ())
+        if async_ is not None:
+            out = out + (abuf,)
         if faults is not None:
             out = out + (fs,)
         return out, ys
 
     carry0 = (state0,) + (
         (jnp.zeros((N, m), st_dt),) if carry_mu else ())
+    if async_ is not None:
+        carry0 = carry0 + (init_async_buffer(E, m, state0.z.dtype),)
     if faults is not None:
         carry0 = carry0 + (init_fault_state(N, E),)
     (final, *rest), ys = jax.lax.scan(
@@ -423,11 +472,8 @@ def run_social_runtime(
     seed: int = 0,
     signal_seed: int | None = None,
     *,
-    backend: str = "auto",
-    store: str = "trajectory",
-    policy: Policy | str | None = None,
-    dst_sorted: bool = False,
-    faults: FaultModel | None = None,
+    plan: ExecutionPlan | None = None,
+    **legacy,
 ) -> SocialLearningResult:
     """Run Algorithm 3 on a prebuilt :class:`SocialRuntime`.
 
@@ -436,12 +482,27 @@ def run_social_runtime(
     convenience wrapper. ``signal_seed`` defaults to ``seed`` — the two
     streams stay independent either way thanks to the disjoint fold-in
     domains, and the batched sweeps drive both streams from one
-    per-scenario seed. ``dst_sorted`` defaults to False because a
-    user-built runtime may carry any edge order; the config-driven wrappers
-    pass True (``HPSConfig.edge_index()`` is always dst-sorted).
+    per-scenario seed.
+
+    Execution knobs ride ``plan=`` (:class:`repro.core.plan.ExecutionPlan`;
+    loose ``backend=``/``store=``/``policy=``/``dst_sorted=``/``faults=``
+    kwargs are deprecated shims folding into a plan bit-identically).
+    ``plan.store=None`` means ``"trajectory"``. ``plan.dst_sorted``
+    defaults to False because a user-built runtime may carry any edge
+    order; the config-driven wrappers pass True
+    (``HPSConfig.edge_index()`` is always dst-sorted). A concretely
+    degenerate ``plan.async_`` dispatches to the synchronous program
+    (bit-identity by construction — see :mod:`repro.core.asyncrony`).
     """
+    plan = resolve_plan(
+        plan, _entry="run_social_runtime",
+        _supports=("backend", "store", "policy", "dst_sorted", "faults",
+                   "async_"),
+        **legacy)
+    store = "trajectory" if plan.store is None else plan.store
     if store not in SOCIAL_STORES:
         raise ValueError(f"store must be one of {SOCIAL_STORES}, got {store!r}")
+    async_ = None if is_degenerate_async(plan.async_) else plan.async_
     truth_probs = model.tables[:, model.truth, :].astype(jnp.float32)
     final, (beliefs, log_ratio) = _social_compiled(
         jax.random.PRNGKey(seed),
@@ -453,10 +514,11 @@ def run_social_runtime(
         M=M,
         T=T,
         store=store,
-        backend=backend,
-        policy=None if policy is None else resolve_policy(policy),
-        dst_sorted=dst_sorted,
-        faults=faults,
+        backend=plan.backend,
+        policy=None if plan.policy is None else resolve_policy(plan.policy),
+        dst_sorted=plan.dst_sorted,
+        faults=plan.faults,
+        async_=async_,
     )
     return SocialLearningResult(
         beliefs=beliefs, final_state=final, log_ratio=log_ratio
@@ -470,10 +532,8 @@ def run_social_learning(
     seed: int = 0,
     signal_seed: int = 100,
     *,
-    backend: str = "auto",
-    store: str = "trajectory",
-    policy: Policy | str | None = None,
-    faults: FaultModel | None = None,
+    plan: ExecutionPlan | None = None,
+    **legacy,
 ) -> SocialLearningResult:
     """Run Algorithm 3 for T iterations (single scenario).
 
@@ -482,15 +542,23 @@ def run_social_learning(
     :func:`graphs.link_schedule`); ``signal_seed`` drives private signals.
     The two streams use disjoint fold-in domains, so any (seed,
     signal_seed) pair — including equal values — yields independent masks
-    and signals. ``backend`` selects the consensus + innovation lowerings
-    (module docstring); ``store`` what the scan materializes
-    (:class:`SocialLearningResult`); ``policy`` the storage/compute/accum
-    dtype split (:mod:`repro.core.precision`).
+    and signals. Execution knobs ride ``plan=``
+    (:class:`repro.core.plan.ExecutionPlan`; loose kwargs are deprecated
+    shims): ``plan.backend`` selects the consensus + innovation lowerings
+    (module docstring); ``plan.store`` what the scan materializes
+    (:class:`SocialLearningResult`; ``None`` = ``"trajectory"``);
+    ``plan.policy`` the storage/compute/accum dtype split
+    (:mod:`repro.core.precision`); ``plan.faults`` / ``plan.async_`` the
+    fault and event-driven planes.
     """
+    plan = resolve_plan(
+        plan, _entry="run_social_learning",
+        _supports=("backend", "store", "policy", "faults", "async_"),
+        **legacy)
     return run_social_runtime(
         model, make_social_runtime(cfg), cfg.topo.M, T,
-        seed=seed, signal_seed=signal_seed, backend=backend, store=store,
-        policy=policy, dst_sorted=True, faults=faults,
+        seed=seed, signal_seed=signal_seed,
+        plan=plan.replace(dst_sorted=True),
     )
 
 

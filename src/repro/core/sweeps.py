@@ -65,6 +65,12 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from .attacks import Attack
+from .asyncrony import (
+    AsyncModel,
+    init_async_buffer,
+    is_degenerate_async,
+    wake_mask,
+)
 from .faults import (
     ENGINE_PUSHSUM,
     FaultModel,
@@ -83,6 +89,7 @@ from .byzantine import (
     make_byzantine_scan,
 )
 from .graphs import EdgeList, EdgeShards, partition_edge_list
+from .plan import ExecutionPlan, resolve_plan
 from .precision import Policy, resolve_policy
 from .pushsum import (
     _out_degree,
@@ -155,6 +162,62 @@ class _LRUCache(OrderedDict):
             del self[next(iter(self))]
 
 
+# ---------------------------------------------------------------------------
+# The unified index-column convention of every *SweepResult / *GridResult:
+# each result row is one scenario on the flattened leading K axis, and the
+# flattening order is FIXED across all four engines —
+#
+#     scenario coordinates (graph/cfg major, then drop, gamma, ..., seed)
+#       -> fault axis (minor of every scenario coordinate)
+#         -> async axis (minor-most)
+#
+# so e.g. with NF fault models and NA async models, row
+# k = ((s * NF) + f) * NA + a. Every index column is a (K,) array; an
+# ABSENT axis is ``None`` (not a column of zeros), and ``describe()`` —
+# shared by all four result types — names each axis, its level count, and
+# its position in the order. (Pre-PR-10, ``fault`` was a column on three
+# results and missing from ByzantineGridResult entirely.)
+# ---------------------------------------------------------------------------
+
+#: Index-column order of the shared ``describe()``: scenario coordinates
+#: first (engine-specific), then ``fault``, then ``async_`` (minor-most).
+_AXIS_ORDER = ("graph", "cfg", "drop_prob", "gamma", "M", "F", "seed",
+               "fault", "async_")
+
+#: Fields of the result tuples that are payload, not index columns.
+_PAYLOAD_FIELDS = frozenset({
+    "err", "final_ratio", "mass_gap", "beliefs", "log_ratio", "ratio",
+    "gap", "r", "decisions",
+})
+
+
+def _describe_result(res) -> str:
+    """Shared ``describe()``: one line per index column in the fixed
+    scenario -> fault -> async order, naming levels and payload shapes."""
+    lines = [
+        f"{type(res).__name__}: K={res.K} scenarios "
+        "(row order: scenario coords -> fault -> async_, async minor-most)"
+    ]
+    for name in _AXIS_ORDER:
+        if name not in getattr(res, "_fields", ()):
+            continue
+        v = getattr(res, name)
+        if v is None:
+            lines.append(f"  {name:<9} absent (no axis)")
+            continue
+        arr = np.asarray(v)
+        uniq = np.unique(arr)
+        preview = ", ".join(str(x) for x in uniq[:6])
+        if uniq.size > 6:
+            preview += ", ..."
+        lines.append(f"  {name:<9} {uniq.size} level(s): [{preview}]")
+    payload = [f"{n}{tuple(np.asarray(getattr(res, n)).shape)}"
+               for n in res._fields
+               if n in _PAYLOAD_FIELDS and getattr(res, n) is not None]
+    lines.append("  payload: " + ", ".join(payload))
+    return "\n".join(lines)
+
+
 class PushSumSweepResult(NamedTuple):
     err: jnp.ndarray          # (K, T) max-agent consensus error per round
     final_ratio: jnp.ndarray  # (K, N, d) z/m estimates at T
@@ -163,10 +226,14 @@ class PushSumSweepResult(NamedTuple):
     seed: jnp.ndarray         # (K,)
     graph: jnp.ndarray        # (K,) topology-draw index
     fault: jnp.ndarray | None = None  # (K,) fault-model index, None = no axis
+    async_: jnp.ndarray | None = None  # (K,) async-model index, minor-most
 
     @property
     def K(self) -> int:
         return int(self.err.shape[0])
+
+    def describe(self) -> str:
+        return _describe_result(self)
 
 
 def _scenario_grid(n_graphs: int, drop_probs, seeds):
@@ -201,25 +268,50 @@ def _expand_fault_axis(coords, faults):
     return coords, fi, stacked
 
 
-def _sweep_body(w, src_b, dst_b, valid_b, drop_b, seed_b, fault_b=None, *,
+def _expand_async_axis(coords, async_):
+    """Cross an async-model list into flattened scenario coordinates.
+
+    Mirror of :func:`_expand_fault_axis` for the
+    :class:`repro.core.asyncrony.AsyncModel` axis. Applied AFTER the fault
+    expansion (pass ``fi`` inside ``coords``), so the async index is
+    minor-most in the unified row order — see the index-column convention
+    above. Returns ``(coords, ai, stacked)`` or ``(coords, None, None)``
+    when ``async_`` is None (no axis, synchronous program)."""
+    if async_ is None:
+        return coords, None, None
+    al = [async_] if isinstance(async_, AsyncModel) else list(async_)
+    if not al:
+        raise ValueError("async_= needs at least one AsyncModel")
+    na = len(al)
+    k = coords[0].shape[0]
+    coords = tuple(np.repeat(c, na) for c in coords)
+    ai = np.tile(np.arange(na, dtype=np.int32), k)
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *al)
+    return coords, ai, stacked
+
+
+def _sweep_body(w, src_b, dst_b, valid_b, drop_b, seed_b, fault_b=None,
+                async_b=None, *,
                 T, B, backend, policy=None, dst_sorted=False):
     """Vmapped scenario batch: the shared traced program of both the
     single-device and the shard_map-per-device sweep paths.
 
     ``fault_b`` is an optional batched :class:`repro.core.faults.FaultModel`
     (leaves (K,)) riding the scenario axis — fault severity is traced per
-    scenario, same executable for the whole fault grid. ``None`` emits the
-    bit-identical pre-fault program."""
+    scenario, same executable for the whole fault grid. ``async_b`` the
+    optional batched :class:`repro.core.asyncrony.AsyncModel` (leaves (K,))
+    for the event-driven mode, riding the same axis. ``None`` for both
+    emits the bit-identical pre-fault/synchronous program."""
     E = src_b.shape[1]
     n = w.shape[0]
     target = w.mean(axis=0)          # (d,) true average, shared
     w_sum = w.sum(axis=0)
 
-    def single(src, dst, valid, drop, seed, fault=None):
+    def single(src, dst, valid, drop, seed, fault=None, am=None):
         key = jax.random.PRNGKey(seed)
         state0 = init_sparse_state(w, E, policy=policy)
 
-        if fault is None:
+        if fault is None and am is None:
             def body(state, t):
                 mask = step_edge_mask(key, t, E, drop, B)
                 new = sparse_pushsum_step(
@@ -234,27 +326,62 @@ def _sweep_body(w, src_b, dst_b, valid_b, drop_b, seed_b, fault_b=None, *,
             )
         else:
             def body(carry, t):
-                state, fs = carry
-                fs = step_faults(key, t, fault, fs, engine=ENGINE_PUSHSUM)
-                u = jax.random.uniform(jax.random.fold_in(key, t), (E,))
-                mask = faulty_edge_mask(u, t, fault, fs, src, dst, drop, B)
-                new = sparse_pushsum_step(
-                    state, mask, src, dst, valid, backend,
-                    dst_sorted=dst_sorted, policy=policy, faults=fs,
-                )
+                # carry: (state,) [+ abuf if async] [+ fault_state last]
+                state = carry[0]
+                fs = None
+                if fault is not None:
+                    fs = step_faults(key, t, fault, carry[-1],
+                                     engine=ENGINE_PUSHSUM)
+                    u = jax.random.uniform(jax.random.fold_in(key, t), (E,))
+                    mask = faulty_edge_mask(u, t, fault, fs, src, dst,
+                                            drop, B)
+                else:
+                    mask = step_edge_mask(key, t, E, drop, B)
+                if am is not None:
+                    awake = wake_mask(key, t, n, am.wake_prob,
+                                      engine=ENGINE_PUSHSUM)
+                    new, abuf = sparse_pushsum_step(
+                        state, mask, src, dst, valid, backend,
+                        dst_sorted=dst_sorted, policy=policy, faults=fs,
+                        awake=awake, abuf=carry[1], staleness=am.staleness,
+                    )
+                else:
+                    abuf = None
+                    new = sparse_pushsum_step(
+                        state, mask, src, dst, valid, backend,
+                        dst_sorted=dst_sorted, policy=policy, faults=fs,
+                    )
                 err = jnp.abs(sparse_ratios(new) - target).max()
-                return (new, fs), err
+                out = (new,)
+                if am is not None:
+                    out = out + (abuf,)
+                if fault is not None:
+                    out = out + (fs,)
+                return out, err
 
-            (final, _), errs = jax.lax.scan(
-                body, (state0, init_fault_state(n, E)),
-                jnp.arange(T, dtype=jnp.uint32)
+            carry0 = (state0,)
+            if am is not None:
+                carry0 = carry0 + (
+                    init_async_buffer(E, w.shape[1], state0.z.dtype),)
+            if fault is not None:
+                carry0 = carry0 + (init_fault_state(n, E),)
+            (final, *_), errs = jax.lax.scan(
+                body, carry0, jnp.arange(T, dtype=jnp.uint32)
             )
         gap = sparse_mass_invariant(final, src, valid) - w_sum
         return errs, sparse_ratios(final), gap
 
-    if fault_b is None:
+    if fault_b is None and async_b is None:
         return jax.vmap(single)(src_b, dst_b, valid_b, drop_b, seed_b)
-    return jax.vmap(single)(src_b, dst_b, valid_b, drop_b, seed_b, fault_b)
+    if async_b is None:
+        return jax.vmap(single)(src_b, dst_b, valid_b, drop_b, seed_b,
+                                fault_b)
+    if fault_b is None:
+        return jax.vmap(
+            lambda s, d, v, dr, sd, am: single(s, d, v, dr, sd, None, am)
+        )(src_b, dst_b, valid_b, drop_b, seed_b, async_b)
+    return jax.vmap(single)(src_b, dst_b, valid_b, drop_b, seed_b, fault_b,
+                            async_b)
 
 
 # Module-level jit so repeated sweeps with the same shapes/statics hit the
@@ -267,23 +394,33 @@ _sweep_compiled = functools.partial(
 @functools.lru_cache(maxsize=None)
 def _sweep_sharded(mesh: Mesh, data_axis: str, T: int, B: int, backend: str,
                    policy: Policy | None = None, dst_sorted: bool = False,
-                   has_faults: bool = False):
+                   has_faults: bool = False, has_async: bool = False):
     """Jitted shard_map sweep for one (mesh, axis, statics) combo: the
     scenario axis of every batched argument is split over ``data_axis``,
     one contiguous scenario block per device, and each device runs the
     identical vmapped scan on its block. lru_cache keeps one compiled
     executable per combo (Mesh is hashable), mirroring ``_sweep_compiled``'s
-    retrace-free behaviour. ``has_faults`` adds the batched FaultModel
-    argument (sharded over ``data_axis`` like every scenario coordinate)."""
+    retrace-free behaviour. ``has_faults``/``has_async`` add the batched
+    FaultModel / AsyncModel arguments (sharded over ``data_axis`` like
+    every scenario coordinate)."""
     from repro.launch import compat
 
-    body = functools.partial(_sweep_body, T=T, B=B, backend=backend,
+    base = functools.partial(_sweep_body, T=T, B=B, backend=backend,
                              policy=policy, dst_sorted=dst_sorted)
+    if has_async and not has_faults:
+        # shard_map passes positionally; skip the absent fault_b slot
+        def body(w, src, dst, valid, drop, seed, async_b):
+            return base(w, src, dst, valid, drop, seed, None, async_b)
+    else:
+        body = base
     in_specs = (P(), P(data_axis), P(data_axis), P(data_axis),
                 P(data_axis), P(data_axis))
     if has_faults:
         in_specs += (FaultModel(
             *([P(data_axis)] * len(FaultModel._fields))),)
+    if has_async:
+        in_specs += (AsyncModel(
+            *([P(data_axis)] * len(AsyncModel._fields))),)
     sharded = compat.shard_map(
         body,
         mesh=mesh,
@@ -472,15 +609,8 @@ def run_pushsum_sweep(
     drop_probs: Sequence[float] | float = 0.0,
     seeds: Sequence[int] | int = 0,
     B: int = 4,
-    backend: str = "auto",
-    mesh: Mesh | None = None,
-    data_axis: str = "data",
-    graph_axis: str = "graph",
-    graph_shards: int | None = None,
-    policy: Policy | str | None = None,
-    dst_sorted: bool = False,
-    halo: str = "psum",
-    faults: "FaultModel | Sequence[FaultModel] | None" = None,
+    plan: ExecutionPlan | None = None,
+    **legacy,
 ) -> PushSumSweepResult:
     """Run the full scenario grid in ONE jitted, vmapped scan.
 
@@ -535,9 +665,38 @@ def run_pushsum_sweep(
     whole fault grid. The result's ``fault`` field indexes into the
     sequence; ``faults=None`` (default) keeps the pre-fault program
     bit-identical and ``fault=None`` in the result.
+
+    ``plan.async_`` (one :class:`repro.core.asyncrony.AsyncModel` or a
+    sequence) crosses a FIFTH axis, async minor-most: every cell runs
+    once per (wake-rate, staleness) model through the event-driven mode,
+    indexed by the result's ``async_`` column. A single concretely
+    degenerate model dispatches to the synchronous program (no axis,
+    ``async_=None`` in the result — bit-identity by construction).
+    Incompatible with the edge-partitioned mode (``graph_shards``). All
+    execution knobs arrive via ``plan=`` (loose kwargs are deprecated
+    shims; see :mod:`repro.core.plan`).
     """
+    plan = resolve_plan(
+        plan, _entry="run_pushsum_sweep",
+        _supports=("backend", "mesh", "data_axis", "graph_axis",
+                   "graph_shards", "policy", "dst_sorted", "halo",
+                   "faults", "async_"),
+        **legacy)
+    backend, mesh, data_axis = plan.backend, plan.mesh, plan.data_axis
+    graph_axis, graph_shards = plan.graph_axis, plan.graph_shards
+    policy, dst_sorted, halo = plan.policy, plan.dst_sorted, plan.halo
+    faults = plan.faults
+    async_ = plan.async_
+    if isinstance(async_, AsyncModel) and is_degenerate_async(async_):
+        async_ = None
     w = jnp.asarray(w)
     pol = None if policy is None else resolve_policy(policy)
+    if async_ is not None and (graph_shards is not None
+                               or isinstance(el, EdgeShards)):
+        raise ValueError(
+            "async_ is incompatible with the edge-partitioned mode "
+            "(graph_shards): the per-edge stale buffer is not partitioned"
+        )
     if graph_shards is not None or isinstance(el, EdgeShards):
         shards = (el if isinstance(el, EdgeShards)
                   else partition_edge_list(el, graph_shards))
@@ -598,6 +757,11 @@ def run_pushsum_sweep(
     G, E = src.shape
     gi, dp, sd = _scenario_grid(G, drop_probs, seeds)
     (gi, dp, sd), fi, fstack = _expand_fault_axis((gi, dp, sd), faults)
+    if fi is None:
+        (gi, dp, sd), ai, astack = _expand_async_axis((gi, dp, sd), async_)
+    else:
+        (gi, dp, sd, fi), ai, astack = _expand_async_axis(
+            (gi, dp, sd, fi), async_)
     K = gi.shape[0]
 
     if mesh is None:
@@ -612,27 +776,36 @@ def run_pushsum_sweep(
             sd = np.concatenate([sd, sd[fill]])
             if fi is not None:
                 fi = np.concatenate([fi, fi[fill]])
+            if ai is not None:
+                ai = np.concatenate([ai, ai[fill]])
 
     drop_b = jnp.asarray(dp)
     seed_b = jnp.asarray(sd)
     args = (w, jnp.asarray(src[gi]), jnp.asarray(dst[gi]),
             jnp.asarray(valid[gi]), drop_b, seed_b)
-    if fi is not None:
-        args += (jax.tree_util.tree_map(
+    if fi is not None or ai is not None:
+        args += (None if fi is None else jax.tree_util.tree_map(
             lambda x: x[jnp.asarray(fi)], fstack),)
+    if ai is not None:
+        args += (jax.tree_util.tree_map(
+            lambda x: x[jnp.asarray(ai)], astack),)
     if mesh is None:
         errs, finals, gaps = _sweep_compiled(
             *args, T=T, B=B, backend=backend,
             policy=pol, dst_sorted=dst_sorted,
         )
     else:
+        shard_args = args if fi is not None or ai is None else (
+            args[:6] + args[7:])     # drop the None fault_b placeholder
         errs, finals, gaps = _sweep_sharded(
-            mesh, data_axis, T, B, backend, pol, dst_sorted, fi is not None
-        )(*args)
+            mesh, data_axis, T, B, backend, pol, dst_sorted,
+            fi is not None, ai is not None,
+        )(*shard_args)
     return PushSumSweepResult(
         err=errs[:K], final_ratio=finals[:K], mass_gap=gaps[:K],
         drop_prob=drop_b[:K], seed=seed_b[:K], graph=jnp.asarray(gi[:K]),
         fault=None if fi is None else jnp.asarray(fi[:K]),
+        async_=None if ai is None else jnp.asarray(ai[:K]),
     )
 
 
@@ -685,10 +858,8 @@ def run_byzantine_sweep(
     *,
     mode: str = "pairwise",
     core: str = "sparse",
-    backend: str = "auto",
-    store: str = "trajectory",
-    policy: Policy | str | None = None,
-    faults: FaultModel | None = None,
+    plan: ExecutionPlan | None = None,
+    **legacy,
 ) -> dict[str, ByzantineResult]:
     """Algorithm 2 over a seed batch per attack type.
 
@@ -709,11 +880,23 @@ def run_byzantine_sweep(
     and the jitted scan is reused from ``_BYZ_COMPILED`` (``Attack`` is a
     frozen dataclass, so the same attack object keys the same entry).
 
-    ``faults`` layers one :class:`repro.core.faults.FaultModel` over every
-    seed in the batch (the unified fault plane of
+    ``plan.faults`` layers one :class:`repro.core.faults.FaultModel` over
+    every seed in the batch (the unified fault plane of
     :func:`byzantine.make_byzantine_scan`); the compiled cache keys on the
     fault VALUES, so sweeping severities host-side stays correct.
+    Execution knobs arrive via ``plan=`` (loose
+    ``backend=``/``store=``/``policy=``/``faults=`` kwargs are deprecated
+    shims); ``mode``/``core`` are algorithm variants, not execution knobs,
+    so they stay named. The Byzantine engine does NOT support the async
+    mode — its adversarial-message semantics assume synchronized rounds —
+    so a plan carrying ``async_`` raises ``ValueError``.
     """
+    plan = resolve_plan(
+        plan, _entry="run_byzantine_sweep",
+        _supports=("backend", "store", "policy", "faults"),
+        **legacy)
+    backend, policy, faults = plan.backend, plan.policy, plan.faults
+    store = "trajectory" if plan.store is None else plan.store
     pol = None if policy is None else resolve_policy(policy)
     seeds_j = jnp.asarray(np.asarray(seeds, np.uint32))
     keys = jax.vmap(jax.random.PRNGKey)(seeds_j)
@@ -740,7 +923,11 @@ class ByzantineGridResult(NamedTuple):
     :class:`repro.core.byzantine.ByzantineResult` with the extra leading K;
     ``cfg`` indexes into the ``cfgs`` list passed to
     :func:`run_byzantine_grid`, ``F``/``seed`` are the per-scenario
-    coordinates.
+    coordinates. ``fault``/``async_`` follow the unified index-column
+    convention above: the grid applies ONE fault model to every scenario
+    (so ``fault`` is the all-zeros index when faults are on, ``None``
+    otherwise — pre-PR-10 this result had no fault field at all), and the
+    Byzantine engine has no async mode, so ``async_`` is always ``None``.
     """
 
     r: jnp.ndarray
@@ -748,10 +935,15 @@ class ByzantineGridResult(NamedTuple):
     cfg: jnp.ndarray       # (K,) config index
     F: jnp.ndarray         # (K,) trim count of that config
     seed: jnp.ndarray      # (K,)
+    fault: jnp.ndarray | None = None  # (K,) fault index, None = no faults
+    async_: jnp.ndarray | None = None  # always None (no async mode)
 
     @property
     def K(self) -> int:
         return int(self.decisions.shape[0])
+
+    def describe(self) -> str:
+        return _describe_result(self)
 
 
 def _cfgs_fingerprint(model, cfgs, atk) -> tuple:
@@ -790,12 +982,8 @@ def run_byzantine_grid(
     *,
     attack: Attack | None = None,
     mode: str = "pairwise",
-    backend: str = "auto",
-    store: str = "decisions",
-    mesh: Mesh | None = None,
-    data_axis: str = "data",
-    policy: Policy | str | None = None,
-    faults: FaultModel | None = None,
+    plan: ExecutionPlan | None = None,
+    **legacy,
 ) -> ByzantineGridResult:
     """Batched (topology, F) x seed grid as ONE compiled vmapped scan.
 
@@ -819,12 +1007,24 @@ def run_byzantine_grid(
     full config-list fingerprint, so repeated studies neither retrace nor
     re-run the reduced-graph analysis.
 
-    ``faults`` applies one :class:`repro.core.faults.FaultModel` to every
-    scenario (the cache keys on its values, so host-side severity loops
-    stay correct); per-scenario fault axes belong in the social/HPS/push-
-    sum grids, whose fault models ride the vmap axis.
+    ``plan.faults`` applies one :class:`repro.core.faults.FaultModel` to
+    every scenario (the cache keys on its values, so host-side severity
+    loops stay correct); per-scenario fault axes belong in the
+    social/HPS/push-sum grids, whose fault models ride the vmap axis.
+    Execution knobs arrive via ``plan=`` (loose kwargs are deprecated
+    shims; ``plan.store=None`` means ``"decisions"``); a plan carrying
+    ``async_`` raises — the Byzantine engine has no async mode.
     """
     from repro.kernels.byz_trim import resolve_backend
+
+    plan = resolve_plan(
+        plan, _entry="run_byzantine_grid",
+        _supports=("backend", "store", "mesh", "data_axis", "policy",
+                   "faults"),
+        **legacy)
+    backend, mesh, data_axis = plan.backend, plan.mesh, plan.data_axis
+    policy, faults = plan.policy, plan.faults
+    store = "decisions" if plan.store is None else plan.store
 
     cfgs = list(cfgs)
     if not cfgs:
@@ -931,6 +1131,7 @@ def run_byzantine_grid(
         r=res.r[:K], decisions=res.decisions[:K],
         cfg=jnp.asarray(gi[:K]), F=jnp.asarray(Fs[gi[:K]]),
         seed=jnp.asarray(sd[:K]),
+        fault=None if faults is None else jnp.zeros(K, jnp.int32),
     )
 
 
@@ -957,10 +1158,14 @@ class SocialSweepResult(NamedTuple):
     seed: jnp.ndarray       # (K,)
     cfg: jnp.ndarray        # (K,) config index
     fault: jnp.ndarray | None = None  # (K,) fault-model index, None = no axis
+    async_: jnp.ndarray | None = None  # (K,) async-model index, minor-most
 
     @property
     def K(self) -> int:
         return int(self.seed.shape[0])
+
+    def describe(self) -> str:
+        return _describe_result(self)
 
 
 # Jitted social-sweep programs keyed on (mesh, data_axis, statics). The
@@ -977,26 +1182,43 @@ _SOCIAL_RUNTIME_CACHE = _LRUCache(maxsize=16)
 
 
 def _social_sweep_fn(mesh, data_axis, *, truth, M, T, store, backend,
-                     policy=None, has_faults=False):
-    key = (mesh, data_axis, truth, M, T, store, backend, policy, has_faults)
+                     policy=None, has_faults=False, has_async=False):
+    key = (mesh, data_axis, truth, M, T, store, backend, policy, has_faults,
+           has_async)
     fn = _SOCIAL_COMPILED.get(key)
     if fn is not None:
         return fn
 
-    def body(keys, rt_batch, log_tables, cdf, fault_b=None):
-        def single(k, rt, fault=None):
+    def base(keys, rt_batch, log_tables, cdf, fault_b=None, async_b=None):
+        def single(k, rt, fault=None, am=None):
             # grid runtimes come from make_social_runtime: dst-sorted
             # edge index, e_max pad rows at dst = N - 1 keep it sorted
             _, outs = _social_scan_core(
                 k, k, rt, log_tables, cdf,
                 truth=truth, M=M, T=T, store=store, backend=backend,
-                policy=policy, dst_sorted=True, faults=fault,
+                policy=policy, dst_sorted=True, faults=fault, async_=am,
             )
             return outs
 
-        if fault_b is None:
+        if fault_b is None and async_b is None:
             return jax.vmap(single, in_axes=(0, 0))(keys, rt_batch)
-        return jax.vmap(single, in_axes=(0, 0, 0))(keys, rt_batch, fault_b)
+        if async_b is None:
+            return jax.vmap(single, in_axes=(0, 0, 0))(
+                keys, rt_batch, fault_b)
+        if fault_b is None:
+            return jax.vmap(
+                lambda k, rt, am: single(k, rt, None, am),
+                in_axes=(0, 0, 0),
+            )(keys, rt_batch, async_b)
+        return jax.vmap(single, in_axes=(0, 0, 0, 0))(
+            keys, rt_batch, fault_b, async_b)
+
+    if has_async and not has_faults:
+        # shard_map passes positionally; skip the absent fault_b slot
+        def body(keys, rt_batch, log_tables, cdf, async_b):
+            return base(keys, rt_batch, log_tables, cdf, None, async_b)
+    else:
+        body = base
 
     if mesh is not None:
         from repro.launch import compat
@@ -1011,6 +1233,9 @@ def _social_sweep_fn(mesh, data_axis, *, truth, M, T, store, backend,
         if has_faults:
             in_specs += (FaultModel(
                 *([spec] * len(FaultModel._fields))),)
+        if has_async:
+            in_specs += (AsyncModel(
+                *([spec] * len(AsyncModel._fields))),)
         body = compat.shard_map(
             body,
             mesh=mesh,
@@ -1044,12 +1269,8 @@ def run_social_grid(
     T: int,
     seeds: Sequence[int] | int,
     *,
-    store: str = "log_ratio",
-    backend: str = "auto",
-    mesh: Mesh | None = None,
-    data_axis: str = "data",
-    policy: Policy | str | None = None,
-    faults: "FaultModel | Sequence[FaultModel] | None" = None,
+    plan: ExecutionPlan | None = None,
+    **legacy,
 ) -> SocialSweepResult:
     """Batched (topology, drop_prob, Gamma) x seed grid as ONE compiled
     vmapped scan of the fused Algorithm 3 engine.
@@ -1097,9 +1318,28 @@ def run_social_grid(
     :func:`social.social_runtime_from_edge_list`, stacked leaf-wise) and
     ``jax.vmap`` :func:`repro.core.social._social_scan_core` directly — the
     scan core is the shared vmappable contract.
+
+    ``plan.async_`` (one :class:`repro.core.asyncrony.AsyncModel` or a
+    sequence, e.g. a (wake-rate x staleness) grid) crosses an async-minor
+    scenario axis exactly like ``faults`` — the result's ``async_`` column
+    indexes into the sequence, and a single concretely degenerate model
+    dispatches to the synchronous program (no axis). All execution knobs
+    arrive via ``plan=`` (loose kwargs are deprecated shims;
+    ``plan.store=None`` means ``"log_ratio"``).
     """
     from repro.kernels.social_innov import resolve_backend
 
+    plan = resolve_plan(
+        plan, _entry="run_social_grid",
+        _supports=("backend", "store", "mesh", "data_axis", "policy",
+                   "faults", "async_"),
+        **legacy)
+    backend, mesh, data_axis = plan.backend, plan.mesh, plan.data_axis
+    policy, faults = plan.policy, plan.faults
+    store = "log_ratio" if plan.store is None else plan.store
+    async_ = plan.async_
+    if isinstance(async_, AsyncModel) and is_degenerate_async(async_):
+        async_ = None
     cfgs = list(cfgs)
     if not cfgs:
         raise ValueError("need at least one config")
@@ -1124,6 +1364,10 @@ def run_social_grid(
     )
     gi, sd = gi.ravel(), sd.ravel()
     (gi, sd), fi, fstack = _expand_fault_axis((gi, sd), faults)
+    if fi is None:
+        (gi, sd), ai, astack = _expand_async_axis((gi, sd), async_)
+    else:
+        (gi, sd, fi), ai, astack = _expand_async_axis((gi, sd, fi), async_)
     K = gi.shape[0]
     if mesh is not None:
         pad = (-K) % int(mesh.shape[data_axis])
@@ -1133,12 +1377,14 @@ def run_social_grid(
             sd = np.concatenate([sd, sd[fill]])
             if fi is not None:
                 fi = np.concatenate([fi, fi[fill]])
+            if ai is not None:
+                ai = np.concatenate([ai, ai[fill]])
 
     fn = _social_sweep_fn(
         mesh, data_axis, truth=model.truth, M=M, T=T, store=store,
         backend=resolve_backend(backend),
         policy=None if policy is None else resolve_policy(policy),
-        has_faults=fi is not None,
+        has_faults=fi is not None, has_async=ai is not None,
     )
     keys = jax.vmap(jax.random.PRNGKey)(jnp.asarray(sd))
     rt_batch = jax.tree_util.tree_map(lambda x: x[jnp.asarray(gi)], stacked)
@@ -1151,6 +1397,9 @@ def run_social_grid(
     if fi is not None:
         args += (jax.tree_util.tree_map(
             lambda x: x[jnp.asarray(fi)], fstack),)
+    if ai is not None:
+        args += (jax.tree_util.tree_map(
+            lambda x: x[jnp.asarray(ai)], astack),)
     beliefs, log_ratio = fn(*args)
     drops = np.asarray([c.drop_prob for c in cfgs], np.float32)
     gammas = np.asarray([c.gamma_period for c in cfgs], np.int32)
@@ -1160,6 +1409,7 @@ def run_social_grid(
         gamma=jnp.asarray(gammas[gi[:K]]),
         seed=jnp.asarray(sd[:K]), cfg=jnp.asarray(gi[:K]),
         fault=None if fi is None else jnp.asarray(fi[:K]),
+        async_=None if ai is None else jnp.asarray(ai[:K]),
     )
 
 
@@ -1171,12 +1421,8 @@ def run_social_sweep(
     drop_probs: Sequence[float] | float | None = None,
     gammas: Sequence[int] | int | None = None,
     seeds: Sequence[int] | int = 0,
-    store: str = "log_ratio",
-    backend: str = "auto",
-    mesh: Mesh | None = None,
-    data_axis: str = "data",
-    policy: Policy | str | None = None,
-    faults: "FaultModel | Sequence[FaultModel] | None" = None,
+    plan: ExecutionPlan | None = None,
+    **legacy,
 ) -> SocialSweepResult:
     """Cross-product (topology x drop_prob x Gamma x seed) Algorithm 3 sweep.
 
@@ -1188,9 +1434,16 @@ def run_social_sweep(
     ride the scenario axis as traced scalars, so the entire grid is one
     compiled program. Scenario order: base-major, then drop, then Gamma,
     then seed, then fault (matching the ``cfg``/``drop_prob``/``gamma``/
-    ``seed``/``fault`` coordinate arrays of the result); ``faults`` is the
-    optional fault-model axis of :func:`run_social_grid`.
+    ``seed``/``fault``/``async_`` coordinate arrays of the result);
+    ``plan.faults`` / ``plan.async_`` are the optional fault- and
+    async-model axes of :func:`run_social_grid` (execution knobs arrive
+    via ``plan=``; loose kwargs are deprecated shims).
     """
+    plan = resolve_plan(
+        plan, _entry="run_social_sweep",
+        _supports=("backend", "store", "mesh", "data_axis", "policy",
+                   "faults", "async_"),
+        **legacy)
     bases = [cfg] if isinstance(cfg, HPSConfig) else list(cfg)
     expanded = []
     for base in bases:
@@ -1203,11 +1456,7 @@ def run_social_sweep(
                 expanded.append(dataclasses.replace(
                     base, drop_prob=float(dp), gamma_period=int(g)
                 ))
-    return run_social_grid(
-        model, expanded, T, seeds,
-        store=store, backend=backend, mesh=mesh, data_axis=data_axis,
-        policy=policy, faults=faults,
-    )
+    return run_social_grid(model, expanded, T, seeds, plan=plan)
 
 
 # ---------------------------------------------------------------------------
@@ -1234,10 +1483,14 @@ class HPSSweepResult(NamedTuple):
     seed: jnp.ndarray       # (K,)
     cfg: jnp.ndarray        # (K,) config index
     fault: jnp.ndarray | None = None  # (K,) fault-model index, None = no axis
+    async_: jnp.ndarray | None = None  # (K,) async-model index, minor-most
 
     @property
     def K(self) -> int:
         return int(self.seed.shape[0])
+
+    def describe(self) -> str:
+        return _describe_result(self)
 
 
 # Jitted HPS-sweep programs keyed on (mesh, data_axis, statics). The
@@ -1254,25 +1507,41 @@ _HPS_RUNTIME_CACHE = _LRUCache(maxsize=16)
 
 
 def _hps_sweep_fn(mesh, data_axis, *, T, store, backend, policy=None,
-                  has_faults=False):
-    key = (mesh, data_axis, T, store, backend, policy, has_faults)
+                  has_faults=False, has_async=False):
+    key = (mesh, data_axis, T, store, backend, policy, has_faults, has_async)
     fn = _HPS_COMPILED.get(key)
     if fn is not None:
         return fn
 
-    def body(keys, rt_batch, w, fault_b=None):
-        def single(k, rt, fault=None):
+    def base(keys, rt_batch, w, fault_b=None, async_b=None):
+        def single(k, rt, fault=None, am=None):
             # grid runtimes come from make_hps_runtime: dst-sorted edge
             # index, e_max pad rows at dst = N - 1 keep it sorted
             _, outs = _hps_scan_core(
                 k, rt, w, T=T, store=store, backend=backend,
-                policy=policy, dst_sorted=True, faults=fault,
+                policy=policy, dst_sorted=True, faults=fault, async_=am,
             )
             return outs
 
-        if fault_b is None:
+        if fault_b is None and async_b is None:
             return jax.vmap(single, in_axes=(0, 0))(keys, rt_batch)
-        return jax.vmap(single, in_axes=(0, 0, 0))(keys, rt_batch, fault_b)
+        if async_b is None:
+            return jax.vmap(single, in_axes=(0, 0, 0))(
+                keys, rt_batch, fault_b)
+        if fault_b is None:
+            return jax.vmap(
+                lambda k, rt, am: single(k, rt, None, am),
+                in_axes=(0, 0, 0),
+            )(keys, rt_batch, async_b)
+        return jax.vmap(single, in_axes=(0, 0, 0, 0))(
+            keys, rt_batch, fault_b, async_b)
+
+    if has_async and not has_faults:
+        # shard_map passes positionally; skip the absent fault_b slot
+        def body(keys, rt_batch, w, async_b):
+            return base(keys, rt_batch, w, None, async_b)
+    else:
+        body = base
 
     if mesh is not None:
         from repro.launch import compat
@@ -1286,6 +1555,9 @@ def _hps_sweep_fn(mesh, data_axis, *, T, store, backend, policy=None,
         if has_faults:
             in_specs += (FaultModel(
                 *([spec] * len(FaultModel._fields))),)
+        if has_async:
+            in_specs += (AsyncModel(
+                *([spec] * len(AsyncModel._fields))),)
         body = compat.shard_map(
             body,
             mesh=mesh,
@@ -1304,12 +1576,8 @@ def run_hps_grid(
     T: int,
     seeds: Sequence[int] | int,
     *,
-    store: str = "gap",
-    backend: str = "auto",
-    mesh: Mesh | None = None,
-    data_axis: str = "data",
-    policy: Policy | str | None = None,
-    faults: "FaultModel | Sequence[FaultModel] | None" = None,
+    plan: ExecutionPlan | None = None,
+    **legacy,
 ) -> HPSSweepResult:
     """Batched (topology, M, Gamma, drop) x seed grid as ONE compiled
     vmapped scan of the fused Algorithm 1 engine.
@@ -1342,14 +1610,29 @@ def run_hps_grid(
     (mesh, statics) only — the grid data is all arrays, so repeated studies
     over different topologies of the same shapes reuse one executable.
 
-    ``faults`` (one :class:`repro.core.faults.FaultModel` or a sequence)
-    crosses a fault-minor scenario axis into the grid exactly as in
-    :func:`run_social_grid`; the result's ``fault`` field indexes into
+    ``plan.faults`` (one :class:`repro.core.faults.FaultModel` or a
+    sequence) crosses a fault-minor scenario axis into the grid exactly as
+    in :func:`run_social_grid`; the result's ``fault`` field indexes into
     the sequence, and ``faults=None`` keeps the pre-fault program
-    bit-identical.
+    bit-identical. ``plan.async_`` crosses the async-minor axis the same
+    way (a single concretely degenerate model dispatches to the
+    synchronous program, no axis). Execution knobs arrive via ``plan=``
+    (loose kwargs are deprecated shims; ``plan.store=None`` means
+    ``"gap"``).
     """
     from repro.kernels.pushsum_edge import resolve_backend
 
+    plan = resolve_plan(
+        plan, _entry="run_hps_grid",
+        _supports=("backend", "store", "mesh", "data_axis", "policy",
+                   "faults", "async_"),
+        **legacy)
+    backend, mesh, data_axis = plan.backend, plan.mesh, plan.data_axis
+    policy, faults = plan.policy, plan.faults
+    store = "gap" if plan.store is None else plan.store
+    async_ = plan.async_
+    if isinstance(async_, AsyncModel) and is_degenerate_async(async_):
+        async_ = None
     cfgs = list(cfgs)
     if not cfgs:
         raise ValueError("need at least one config")
@@ -1375,6 +1658,10 @@ def run_hps_grid(
     )
     gi, sd = gi.ravel(), sd.ravel()
     (gi, sd), fi, fstack = _expand_fault_axis((gi, sd), faults)
+    if fi is None:
+        (gi, sd), ai, astack = _expand_async_axis((gi, sd), async_)
+    else:
+        (gi, sd, fi), ai, astack = _expand_async_axis((gi, sd, fi), async_)
     K = gi.shape[0]
     if mesh is not None:
         pad = (-K) % int(mesh.shape[data_axis])
@@ -1384,11 +1671,13 @@ def run_hps_grid(
             sd = np.concatenate([sd, sd[fill]])
             if fi is not None:
                 fi = np.concatenate([fi, fi[fill]])
+            if ai is not None:
+                ai = np.concatenate([ai, ai[fill]])
 
     fn = _hps_sweep_fn(
         mesh, data_axis, T=T, store=store, backend=resolve_backend(backend),
         policy=None if policy is None else resolve_policy(policy),
-        has_faults=fi is not None,
+        has_faults=fi is not None, has_async=ai is not None,
     )
     keys = jax.vmap(jax.random.PRNGKey)(jnp.asarray(sd))
     rt_batch = jax.tree_util.tree_map(lambda x: x[jnp.asarray(gi)], stacked)
@@ -1396,6 +1685,9 @@ def run_hps_grid(
     if fi is not None:
         args += (jax.tree_util.tree_map(
             lambda x: x[jnp.asarray(fi)], fstack),)
+    if ai is not None:
+        args += (jax.tree_util.tree_map(
+            lambda x: x[jnp.asarray(ai)], astack),)
     ratio, gap = fn(*args)
     drops = np.asarray([c.drop_prob for c in cfgs], np.float32)
     gammas = np.asarray([c.gamma_period for c in cfgs], np.int32)
@@ -1407,6 +1699,7 @@ def run_hps_grid(
         M=jnp.asarray(Ms[gi[:K]]),
         seed=jnp.asarray(sd[:K]), cfg=jnp.asarray(gi[:K]),
         fault=None if fi is None else jnp.asarray(fi[:K]),
+        async_=None if ai is None else jnp.asarray(ai[:K]),
     )
 
 
@@ -1418,12 +1711,8 @@ def run_hps_sweep(
     drop_probs: Sequence[float] | float | None = None,
     gammas: Sequence[int] | int | None = None,
     seeds: Sequence[int] | int = 0,
-    store: str = "gap",
-    backend: str = "auto",
-    mesh: Mesh | None = None,
-    data_axis: str = "data",
-    policy: Policy | str | None = None,
-    faults: "FaultModel | Sequence[FaultModel] | None" = None,
+    plan: ExecutionPlan | None = None,
+    **legacy,
 ) -> HPSSweepResult:
     """Cross-product (topology x M x drop_prob x Gamma x seed) HPS sweep.
 
@@ -1434,9 +1723,16 @@ def run_hps_sweep(
     runs with every seed as ONE jitted vmapped scan via
     :func:`run_hps_grid` — drop_prob, Gamma and M ride the scenario axis
     as traced scalars, so the entire grid is one compiled program.
-    Scenario order: base-major, then drop, then Gamma, then seed (matching
-    the ``cfg``/``drop_prob``/``gamma``/``seed`` coordinates).
+    Scenario order: base-major, then drop, then Gamma, then seed, then
+    fault, then async (matching the unified index-column convention;
+    execution knobs arrive via ``plan=``, loose kwargs are deprecated
+    shims).
     """
+    plan = resolve_plan(
+        plan, _entry="run_hps_sweep",
+        _supports=("backend", "store", "mesh", "data_axis", "policy",
+                   "faults", "async_"),
+        **legacy)
     bases = [cfg] if isinstance(cfg, HPSConfig) else list(cfg)
     expanded = []
     for base in bases:
@@ -1449,11 +1745,7 @@ def run_hps_sweep(
                 expanded.append(dataclasses.replace(
                     base, drop_prob=float(dp), gamma_period=int(g)
                 ))
-    return run_hps_grid(
-        w, expanded, T, seeds,
-        store=store, backend=backend, mesh=mesh, data_axis=data_axis,
-        policy=policy, faults=faults,
-    )
+    return run_hps_grid(w, expanded, T, seeds, plan=plan)
 
 # ---------------------------------------------------------------------------
 # Cache registry: the one front door to every compiled/runtime cache the

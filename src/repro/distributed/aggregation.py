@@ -73,7 +73,8 @@ class AggregatorConfig:
                                     # repro.kernels.pushsum_edge)
     # byzantine knobs
     F: int = 1                      # trim F from each extreme
-    use_kernel: bool = False        # Pallas trimmed-mean (TPU runtime)
+    trim_backend: str = "xla"       # trimmed-mean lowering ("xla" ref /
+                                    # "pallas" TPU kernel / "auto")
     trim_chunk: int = 1 << 22       # coordinates per all-gather chunk
     comm_dtype: str = "float32"     # wire dtype for gather/a2a payloads
                                     # ("bfloat16" halves collective bytes;
@@ -256,13 +257,10 @@ def agg_pushsum_sparse(
 # coordinate-wise trimmed mean (Algorithm 2's filter over workers)
 # ---------------------------------------------------------------------------
 
-def _trim_matrix(x: jnp.ndarray, F: int, use_kernel: bool) -> jnp.ndarray:
+def _trim_matrix(x: jnp.ndarray, F: int, backend: str) -> jnp.ndarray:
     """x: (W, D) -> (D,)."""
-    if use_kernel:
-        from repro.kernels.trimmed_mean.ops import trimmed_mean
-        return trimmed_mean(x, F)
-    from repro.kernels.trimmed_mean.ref import trimmed_mean_ref
-    return trimmed_mean_ref(x, F)
+    from repro.kernels.trimmed_mean.ops import trimmed_mean
+    return trimmed_mean(x, F, backend=backend)
 
 
 def agg_trimmed(grads: Params, cfg: AggregatorConfig, data_axis, pod_axis, key):
@@ -274,7 +272,7 @@ def agg_trimmed(grads: Params, cfg: AggregatorConfig, data_axis, pod_axis, key):
         gf = g.astype(jnp.float32).reshape(-1)
         gathered = jax.lax.all_gather(gf, axes)          # (P, W, D) or (W, D)
         flat = gathered.reshape(-1, gf.shape[0])
-        return _trim_matrix(flat, cfg.F, cfg.use_kernel).reshape(g.shape).astype(
+        return _trim_matrix(flat, cfg.F, cfg.trim_backend).reshape(g.shape).astype(
             g.dtype
         )
 
@@ -294,12 +292,12 @@ def agg_hierarchical_trim(
     def trim_leaf(g):
         gf = g.astype(jnp.float32).reshape(-1)
         within = jax.lax.all_gather(gf, data_axis)       # (W, D)
-        pod_est = _trim_matrix(within, cfg.F, cfg.use_kernel)
+        pod_est = _trim_matrix(within, cfg.F, cfg.trim_backend)
         if pod_axis is None or n_pods == 1:
             return pod_est.reshape(g.shape).astype(g.dtype)
         across = jax.lax.all_gather(pod_est, pod_axis)   # (P, D)
         f_cross = cfg.F if n_pods >= 2 * cfg.F + 1 else 0
-        out = _trim_matrix(across, f_cross, cfg.use_kernel)
+        out = _trim_matrix(across, f_cross, cfg.trim_backend)
         return out.reshape(g.shape).astype(g.dtype)
 
     return jax.tree_util.tree_map(trim_leaf, grads)
@@ -352,7 +350,7 @@ def agg_trimmed_sharded(
         else:
             recv = jax.lax.all_to_all(recv, data_axis, split_axis=0,
                                       concat_axis=0, tiled=False)
-        mine = _trim_matrix(recv.astype(jnp.float32), cfg.F, cfg.use_kernel)
+        mine = _trim_matrix(recv.astype(jnp.float32), cfg.F, cfg.trim_backend)
         full = jax.lax.all_gather(mine.astype(wire_dt), tuple(axes))
         full = full.reshape(-1)[:D]
         return full.reshape(shape).astype(g.dtype)

@@ -27,12 +27,12 @@ are validated against their pure-jnp ``ref.py`` oracles via
 
 Backend dispatch is shared repo-wide through :mod:`repro.kernels.dispatch`
 (``backend="auto"|"xla"|"pallas"``). The model-stack kernels (``swa``,
-``wkv6``, ``trimmed_mean``) predate the engine kernels and kept their
-``use_kernel`` boolean for the seed-era layers/aggregation callers; they
-now also accept the repo-wide ``backend`` switch (which overrides
-``use_kernel`` when given). They serve the seed model stack only — no
-Algorithm 1-3 engine calls them — pending ROADMAP's model-stack
-integration item.
+``wkv6``, ``trimmed_mean``) predate the engine kernels and carried a
+seed-era ``use_kernel`` boolean for the layers/aggregation callers; that
+alias was removed in PR 10 — ``backend=`` is the one switch everywhere,
+and the ``repro.statics.signatures`` lint keeps retired execution kwargs
+from re-growing. They serve the seed model stack only — no Algorithm 1-3
+engine calls them — pending ROADMAP's model-stack integration item.
 """
 from .trimmed_mean.ops import trimmed_mean, trimmed_mean_pytree
 from .pushsum_edge.ops import edge_scatter

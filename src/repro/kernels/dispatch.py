@@ -11,16 +11,18 @@
 Resolution is host-side and static (the choice changes the traced
 program), so callers thread ``backend`` through ``static_argnames`` when
 jitting. Historically this lived in ``pushsum_edge/ops.py`` and the other
-engine kernels imported it from there; it is now owned here so the
-model-stack kernels (``swa``, ``wkv6``, ``trimmed_mean``) share the same
-vocabulary — their legacy ``use_kernel`` booleans remain supported and are
-bridged through :func:`resolve_use_kernel`.
+engine kernels imported it from there; it is now owned here and the
+model-stack kernels (``swa``, ``wkv6``, ``trimmed_mean``) speak the same
+vocabulary. Their seed-era ``use_kernel`` boolean alias was removed in
+PR 10 (the ExecutionPlan redesign): ``backend=`` is the only dispatch
+switch, and the :mod:`repro.statics.signatures` lint keeps ``use_kernel``
+from coming back.
 """
 from __future__ import annotations
 
 import jax
 
-__all__ = ["BACKENDS", "resolve_backend", "resolve_use_kernel"]
+__all__ = ["BACKENDS", "resolve_backend"]
 
 BACKENDS = ("auto", "xla", "pallas")
 
@@ -34,16 +36,3 @@ def resolve_backend(backend: str) -> str:
             f"backend must be one of {BACKENDS}, got {backend!r}"
         )
     return backend
-
-
-def resolve_use_kernel(backend: str | None, use_kernel: bool) -> bool:
-    """Bridge the repo-wide ``backend`` switch onto a kernel whose internal
-    dispatch is the legacy ``use_kernel`` boolean.
-
-    ``backend=None`` (the default everywhere) preserves the caller's
-    ``use_kernel`` bit exactly; an explicit ``backend`` wins over it, with
-    ``"auto"`` resolving per platform like every other kernel.
-    """
-    if backend is None:
-        return use_kernel
-    return resolve_backend(backend) == "pallas"

@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from ..dispatch import resolve_use_kernel
+from ..dispatch import resolve_backend
 from .ref import attn_decode_ref
 from .swa import attn_decode_pallas
 
@@ -16,17 +16,17 @@ def attn_decode(
     v: jnp.ndarray,
     lengths: jnp.ndarray,
     block_w: int = 512,
-    use_kernel: bool = True,
     *,
-    backend: str | None = None,
+    backend: str = "auto",
 ) -> jnp.ndarray:
     """Single-token GQA attention over a KV cache. (B,H,dh) out.
 
-    ``backend`` (``"auto"|"xla"|"pallas"``) overrides ``use_kernel`` when
-    given; ragged windows still fall back to :func:`attn_decode_ref` — the
-    oracle the Pallas path is tested against."""
+    ``backend`` is the repo-wide ``"auto"|"xla"|"pallas"`` switch (the
+    seed-era ``use_kernel`` alias is gone); ragged windows still fall
+    back to :func:`attn_decode_ref` — the oracle the Pallas path is
+    tested against."""
     Wc = k.shape[2]
-    if resolve_use_kernel(backend, use_kernel) \
+    if resolve_backend(backend) == "pallas" \
             and Wc % block_w == 0 and Wc >= block_w:
         return attn_decode_pallas(q, k, v, lengths, block_w=block_w)
     return attn_decode_ref(q, k, v, lengths)

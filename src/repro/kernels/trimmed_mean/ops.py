@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from ..dispatch import resolve_use_kernel
+from ..dispatch import resolve_backend
 from .ref import trimmed_mean_ref
 from .trimmed_mean import trimmed_mean_pallas
 
@@ -17,22 +17,21 @@ __all__ = ["trimmed_mean", "trimmed_mean_pytree", "trimmed_mean_ref"]
 
 
 def trimmed_mean(
-    x: jnp.ndarray, F: int, use_kernel: bool = True, block_d: int = 2048,
-    *, backend: str | None = None,
+    x: jnp.ndarray, F: int, block_d: int = 2048,
+    *, backend: str = "auto",
 ) -> jnp.ndarray:
     """Coordinate-wise trimmed mean over the leading worker axis.
 
-    ``backend`` is the repo-wide ``"auto"|"xla"|"pallas"`` switch; when
-    given it overrides the legacy ``use_kernel`` boolean (``"xla"`` is the
-    :func:`trimmed_mean_ref` oracle the Pallas path is tested against).
+    ``backend`` is the repo-wide ``"auto"|"xla"|"pallas"`` switch (the
+    seed-era ``use_kernel`` boolean is gone); ``"xla"`` is the
+    :func:`trimmed_mean_ref` oracle the Pallas path is tested against.
     """
-    if not resolve_use_kernel(backend, use_kernel):
+    if resolve_backend(backend) != "pallas":
         return trimmed_mean_ref(x, F)
     return trimmed_mean_pallas(x, F, block_d=block_d)
 
 
-def trimmed_mean_pytree(stacked, F: int, use_kernel: bool = True,
-                        *, backend: str | None = None):
+def trimmed_mean_pytree(stacked, F: int, *, backend: str = "auto"):
     """stacked: pytree whose leaves are (W, ...) per-worker values.
 
     Flattens every leaf to (W, -1), trims coordinate-wise, restores shapes.
@@ -47,7 +46,7 @@ def trimmed_mean_pytree(stacked, F: int, use_kernel: bool = True,
     flat = [l.reshape(W, -1).astype(jnp.float32) for l in leaves]
     sizes = [f.shape[1] for f in flat]
     big = jnp.concatenate(flat, axis=1)
-    out = trimmed_mean(big, F, use_kernel=use_kernel, backend=backend)
+    out = trimmed_mean(big, F, backend=backend)
     outs = []
     off = 0
     for leaf, size in zip(leaves, sizes):

@@ -10,7 +10,7 @@ import jax.numpy as jnp
 
 import functools
 
-from ..dispatch import resolve_use_kernel
+from ..dispatch import resolve_backend
 from .ref import wkv6_ref, wkv6_decode_step, wkv6_chunked_jnp
 from .wkv6 import wkv6_chunked_pallas
 
@@ -49,9 +49,8 @@ def wkv6(
     lw: jnp.ndarray,
     u: jnp.ndarray,
     chunk: int | None = None,
-    use_kernel: bool = True,
     *,
-    backend: str | None = None,
+    backend: str = "auto",
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """(BH, T, K/V) chunked WKV6 -> (y, final_state).
 
@@ -59,11 +58,12 @@ def wkv6(
     off-TPU (same math, python chunk loop so dry-run cost analysis sees
     every chunk — capped at 32 unrolled chunks since WKV FLOPs are dwarfed
     by the r/k/v/g projections); sequential scan oracle for ragged shapes.
-    ``backend`` (``"auto"|"xla"|"pallas"``) overrides ``use_kernel`` when
-    given, mapping ``"xla"`` onto the chunked-jnp oracle path.
+    ``backend`` is the repo-wide ``"auto"|"xla"|"pallas"`` switch (the
+    seed-era ``use_kernel`` alias is gone); ``"xla"`` maps onto the
+    chunked-jnp oracle path.
     """
     T = r.shape[1]
-    if resolve_use_kernel(backend, use_kernel):
+    if resolve_backend(backend) == "pallas":
         c = chunk or 64
         if T % c == 0 and T >= c:
             return _wkv6_kernel_ad(r, k, v, lw, u, c)

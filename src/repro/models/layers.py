@@ -570,7 +570,8 @@ def wkv6_block(
     u = jnp.broadcast_to(p["u"][None], (B, H, hd)).reshape(B * H, hd)
 
     from repro.kernels.wkv6.ops import wkv6 as _wkv
-    y, _ = _wkv(rr, kk, vv, lww, u, use_kernel=cfg.use_pallas)
+    y, _ = _wkv(rr, kk, vv, lww, u,
+                backend="pallas" if cfg.use_pallas else "xla")
     y = y.reshape(B, H, S, hd).transpose(0, 2, 1, 3).reshape(B, S, d)
     y = _wkv_groupnorm(y, p["ln_x"], H)
     y = y * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)

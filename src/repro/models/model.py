@@ -644,7 +644,7 @@ def prefill(
             from repro.kernels.wkv6.ops import wkv6 as _wkv
             u = jnp.broadcast_to(mixp["u"][None], (B, H, hd)).reshape(B * H, hd)
             y, s_fin = _wkv(resh(r), resh(k_), resh(v), resh(lw), u,
-                            use_kernel=cfg.use_pallas)
+                            backend="pallas" if cfg.use_pallas else "xla")
             y = y.reshape(B, H, S, hd).transpose(0, 2, 1, 3).reshape(B, S, d)
             y = L._wkv_groupnorm(y, mixp["ln_x"], H)
             y = y * jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype)

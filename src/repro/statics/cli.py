@@ -3,7 +3,10 @@
 Subcommands:
 
 * ``lint``   — trace every public entry point across backend x store
-  combos and run the full registry of checks: dense-intermediate linter,
+  combos and run the full registry of checks: the ``run_*`` signature
+  linter (no entry point may re-grow a loose execution kwarg covered by
+  ``ExecutionPlan`` — see :mod:`repro.statics.signatures`),
+  dense-intermediate linter,
   subnormal-constant scan, PRNG stream-domain disjointness proofs (within
   each engine and across engines that may share one experiment seed), the
   per-trace PRNG-site lower bound, the retrace sentinel (tiny XLA runs,
@@ -37,7 +40,16 @@ from pathlib import Path
 
 import numpy as np
 
-from . import contracts, dense, memory, precision, retrace, streams, walk
+from . import (
+    contracts,
+    dense,
+    memory,
+    precision,
+    retrace,
+    signatures,
+    streams,
+    walk,
+)
 from .dense import Finding
 
 _REPO_ROOT = Path(__file__).resolve().parents[3]
@@ -55,6 +67,7 @@ def _pushsum_fixture():
     import jax
 
     from repro.core.graphs import edge_list, random_strongly_connected
+    from repro.core.plan import ExecutionPlan
     from repro.core.pushsum import run_pushsum_sparse
 
     rng = np.random.default_rng(0)
@@ -67,7 +80,7 @@ def _pushsum_fixture():
         return walk.trace(
             lambda w_, key_: run_pushsum_sparse(
                 w_, el.src, el.dst, T=7, drop_prob=0.1, B=2,
-                key=key_, backend=backend,
+                key=key_, plan=ExecutionPlan(backend=backend),
             ),
             w, jax.random.PRNGKey(0),
         )
@@ -78,6 +91,7 @@ def _pushsum_fixture():
 def _social_fixture():
     from repro.core.graphs import make_hierarchy
     from repro.core.hps import HPSConfig
+    from repro.core.plan import ExecutionPlan
     from repro.core.signals import make_confused_model
     from repro.core.social import (
         SOCIAL_STORES,
@@ -96,7 +110,7 @@ def _social_fixture():
         return walk.trace(
             lambda rt_: run_social_runtime(
                 model, rt_, M=len(topo.sizes), T=37,
-                backend=backend, store=store,
+                plan=ExecutionPlan(backend=backend, store=store),
             ),
             rt,
         )
@@ -107,6 +121,7 @@ def _social_fixture():
 def _hps_fixture():
     from repro.core.graphs import make_hierarchy
     from repro.core.hps import HPS_STORES, HPSConfig, make_hps_runtime, run_hps
+    from repro.core.plan import ExecutionPlan
 
     topo = make_hierarchy([5, 5, 5], topology="complete", seed=0)
     cfg = HPSConfig(topo=topo, gamma_period=4, B=2, drop_prob=0.2)
@@ -117,7 +132,8 @@ def _hps_fixture():
     def make(backend, store):
         return walk.trace(
             lambda w_: run_hps(w_, cfg, T=31, seed=0,
-                               backend=backend, store=store),
+                               plan=ExecutionPlan(backend=backend,
+                                                  store=store)),
             w,
         )
 
@@ -165,6 +181,7 @@ def _pushsum_faults_fixture():
     import jax
 
     from repro.core.graphs import edge_list, random_strongly_connected
+    from repro.core.plan import ExecutionPlan
     from repro.core.pushsum import run_pushsum_sparse
 
     rng = np.random.default_rng(0)
@@ -180,7 +197,8 @@ def _pushsum_faults_fixture():
         return walk.trace(
             lambda w_, key_: run_pushsum_sparse(
                 w_, el.src, el.dst, T=7, drop_prob=0.1, B=2,
-                key=key_, backend=backend, record_every=7, faults=fm,
+                key=key_, record_every=7,
+                plan=ExecutionPlan(backend=backend, faults=fm),
             ),
             w, jax.random.PRNGKey(0),
         )
@@ -191,6 +209,7 @@ def _pushsum_faults_fixture():
 def _social_faults_fixture():
     from repro.core.graphs import make_hierarchy
     from repro.core.hps import HPSConfig
+    from repro.core.plan import ExecutionPlan
     from repro.core.signals import make_confused_model
     from repro.core.social import make_social_runtime, run_social_runtime
 
@@ -203,11 +222,10 @@ def _social_faults_fixture():
     dims = {"N": 18, "m": 3, "T": 37, "E": int(np.asarray(rt.src).shape[0])}
 
     def make(backend, store):
+        plan = ExecutionPlan(backend=backend, store=store, faults=fm)
         return walk.trace(
             lambda rt_: run_social_runtime(
-                model, rt_, M=len(topo.sizes), T=37,
-                backend=backend, store=store, faults=fm,
-            ),
+                model, rt_, M=len(topo.sizes), T=37, plan=plan),
             rt,
         )
 
@@ -219,6 +237,7 @@ def _social_faults_fixture():
 def _hps_faults_fixture():
     from repro.core.graphs import make_hierarchy
     from repro.core.hps import HPSConfig, make_hps_runtime, run_hps
+    from repro.core.plan import ExecutionPlan
 
     topo = make_hierarchy([5, 5, 5], topology="complete", seed=0)
     cfg = HPSConfig(topo=topo, gamma_period=4, B=2, drop_prob=0.2)
@@ -228,9 +247,9 @@ def _hps_faults_fixture():
     dims = {"N": 15, "d": 2, "T": 31, "E": int(np.asarray(rt.src).shape[0])}
 
     def make(backend, store):
+        plan = ExecutionPlan(backend=backend, store=store, faults=fm)
         return walk.trace(
-            lambda w_: run_hps(w_, cfg, T=31, seed=0,
-                               backend=backend, store=store, faults=fm),
+            lambda w_: run_hps(w_, cfg, T=31, seed=0, plan=plan),
             w,
         )
 
@@ -296,6 +315,96 @@ def _pushsum_sharded_fixture():
     return dims, (None,), make
 
 
+def _async_model():
+    """One non-degenerate AsyncModel shared by the three async fixtures:
+    agents sleep (wake_prob < 1) and stale snapshots deliver
+    (staleness > 0), so the wake stream is actually drawn and the
+    O(E·d) buffer is actually carried in the traced program. A
+    degenerate model would dispatch to the synchronous engine and
+    trace no async machinery at all."""
+    from repro.core.asyncrony import make_async_model
+
+    return make_async_model(wake_prob=0.6, staleness=2)
+
+
+def _pushsum_async_fixture():
+    import jax
+
+    from repro.core.graphs import edge_list, random_strongly_connected
+    from repro.core.plan import ExecutionPlan
+    from repro.core.pushsum import run_pushsum_sparse
+
+    rng = np.random.default_rng(0)
+    adj = random_strongly_connected(11, 0.3, rng)
+    el = edge_list(adj)
+    w = rng.normal(size=(11, 2)).astype(np.float32)
+    plan_of = lambda b: ExecutionPlan(backend=b, async_=_async_model())
+    dims = {"N": 11, "d": 2, "T": 7, "E": int(el.E)}
+
+    def make(backend, store):
+        # record_every=T: a single ratio frame, so the (T, *) ban holds
+        # over the async trace (the buffer itself is O(E*d), not O(T)).
+        return walk.trace(
+            lambda w_, key_: run_pushsum_sparse(
+                w_, el.src, el.dst, T=7, drop_prob=0.1, B=2,
+                key=key_, record_every=7, plan=plan_of(backend),
+            ),
+            w, jax.random.PRNGKey(0),
+        )
+
+    return dims, (None,), make
+
+
+def _social_async_fixture():
+    from repro.core.graphs import make_hierarchy
+    from repro.core.hps import HPSConfig
+    from repro.core.plan import ExecutionPlan
+    from repro.core.signals import make_confused_model
+    from repro.core.social import make_social_runtime, run_social_runtime
+
+    topo = make_hierarchy([6, 6, 6], topology="complete", seed=2)
+    model = make_confused_model(N=topo.N, m=3, truth=1, confusion=0.5,
+                                seed=0)
+    cfg = HPSConfig(topo=topo, gamma_period=4, B=2, drop_prob=0.3)
+    rt = make_social_runtime(cfg)
+    dims = {"N": 18, "m": 3, "T": 37, "E": int(np.asarray(rt.src).shape[0])}
+
+    def make(backend, store):
+        plan = ExecutionPlan(backend=backend, store=store,
+                             async_=_async_model())
+        return walk.trace(
+            lambda rt_: run_social_runtime(
+                model, rt_, M=len(topo.sizes), T=37, plan=plan),
+            rt,
+        )
+
+    # log_ratio is the in-scan-reduced store: the one where (T, *) is a
+    # provable ban rather than the store's own output.
+    return dims, ("log_ratio",), make
+
+
+def _hps_async_fixture():
+    from repro.core.graphs import make_hierarchy
+    from repro.core.hps import HPSConfig, make_hps_runtime, run_hps
+    from repro.core.plan import ExecutionPlan
+
+    topo = make_hierarchy([5, 5, 5], topology="complete", seed=0)
+    cfg = HPSConfig(topo=topo, gamma_period=4, B=2, drop_prob=0.2)
+    rt = make_hps_runtime(cfg)
+    w = np.random.default_rng(3).normal(size=(15, 2)).astype(np.float32)
+    dims = {"N": 15, "d": 2, "T": 31, "E": int(np.asarray(rt.src).shape[0])}
+
+    def make(backend, store):
+        plan = ExecutionPlan(backend=backend, store=store,
+                             async_=_async_model())
+        return walk.trace(
+            lambda w_: run_hps(w_, cfg, T=31, seed=0, plan=plan),
+            w,
+        )
+
+    return dims, ("gap",), make
+
+
 _FIXTURES = {
     "pushsum": _pushsum_fixture,
     "pushsum_sharded": _pushsum_sharded_fixture,
@@ -306,6 +415,9 @@ _FIXTURES = {
     "social_faults": _social_faults_fixture,
     "hps_faults": _hps_faults_fixture,
     "byzantine_faults": _byz_faults_fixture,
+    "pushsum_async": _pushsum_async_fixture,
+    "social_async": _social_async_fixture,
+    "hps_async": _hps_async_fixture,
 }
 
 
@@ -318,6 +430,7 @@ def _retrace_thunks():
     from repro.core.graphs import edge_list, make_hierarchy, \
         random_strongly_connected
     from repro.core.hps import HPSConfig
+    from repro.core.plan import ExecutionPlan
     from repro.core.signals import make_confused_model
     from repro.core.sweeps import (
         run_byzantine_grid,
@@ -344,31 +457,35 @@ def _retrace_thunks():
     hcfgs = [HPSConfig(topo=topo, gamma_period=g, B=2, drop_prob=0.0)
              for g in (2, 4)]
     w15 = rng.normal(size=(15, 2)).astype(np.float32)
+    xla = ExecutionPlan(backend="xla")
 
     return {
         "run_pushsum_sweep": lambda: run_pushsum_sweep(
             w16, el, T=5, drop_probs=[0.0, 0.5], seeds=[0, 1], B=2,
-            backend="xla"),
+            plan=xla),
         "run_pushsum_sweep_sharded": lambda: run_pushsum_sweep(
             w16, el, T=5, drop_probs=[0.0, 0.5], seeds=[0, 1], B=2,
-            backend="xla", graph_shards=2),
+            plan=xla.replace(graph_shards=2)),
+        "run_pushsum_sweep_async": lambda: run_pushsum_sweep(
+            w16, el, T=5, drop_probs=[0.0, 0.5], seeds=[0, 1], B=2,
+            plan=xla.replace(async_=_async_model())),
         "run_byzantine_sweep": lambda: run_byzantine_sweep(
-            model, bcfgs[1], T=3, seeds=[0, 1], backend="xla",
-            store="final"),
+            model, bcfgs[1], T=3, seeds=[0, 1],
+            plan=xla.replace(store="final")),
         "run_byzantine_grid": lambda: run_byzantine_grid(
-            model, bcfgs, T=3, seeds=[0, 1], backend="xla",
-            store="decisions"),
+            model, bcfgs, T=3, seeds=[0, 1],
+            plan=xla.replace(store="decisions")),
         "run_hps_sweep": lambda: run_hps_sweep(
             w15, hcfgs[0], T=4, drop_probs=[0.0, 0.3], seeds=[0],
-            backend="xla", store="gap"),
+            plan=xla.replace(store="gap")),
         "run_hps_grid": lambda: run_hps_grid(
-            w15, hcfgs, T=4, seeds=[0, 1], backend="xla", store="gap"),
+            w15, hcfgs, T=4, seeds=[0, 1], plan=xla.replace(store="gap")),
         "run_social_sweep": lambda: run_social_sweep(
             model, hcfgs[0], T=4, drop_probs=[0.0, 0.3], seeds=[0],
-            backend="xla", store="log_ratio"),
+            plan=xla.replace(store="log_ratio")),
         "run_social_grid": lambda: run_social_grid(
-            model, hcfgs, T=4, seeds=[0, 1], backend="xla",
-            store="log_ratio"),
+            model, hcfgs, T=4, seeds=[0, 1],
+            plan=xla.replace(store="log_ratio")),
     }
 
 
@@ -503,6 +620,7 @@ def _precision_findings() -> list[Finding]:
     from repro.core.graphs import edge_list, make_hierarchy, \
         random_strongly_connected
     from repro.core.hps import HPSConfig, make_hps_runtime, run_hps
+    from repro.core.plan import ExecutionPlan
     from repro.core.signals import make_confused_model
     from repro.core.social import make_social_runtime, run_social_runtime
     from repro.core.sweeps import _sweep_body
@@ -536,7 +654,8 @@ def _precision_findings() -> list[Finding]:
     closed = walk.trace(
         lambda rt_: run_social_runtime(
             model, rt_, M=len(topo.sizes), T=37,
-            backend="xla", store="log_ratio", policy="bf16"),
+            plan=ExecutionPlan(backend="xla", store="log_ratio",
+                               policy="bf16")),
         rt)
     out += precision.find_fp32_scan_state(
         closed,
@@ -548,8 +667,9 @@ def _precision_findings() -> list[Finding]:
     hrt = make_hps_runtime(hcfg)
     w15 = rng.normal(size=(15, 2)).astype(np.float32)
     closed = walk.trace(
-        lambda w_: run_hps(w_, hcfg, T=31, seed=0, backend="xla",
-                           store="gap", policy="bf16"),
+        lambda w_: run_hps(w_, hcfg, T=31, seed=0,
+                           plan=ExecutionPlan(backend="xla", store="gap",
+                                              policy="bf16")),
         w15)
     out += precision.find_fp32_scan_state(
         closed,
@@ -621,6 +741,7 @@ def _cmd_lint(args) -> int:
                     streams.LEGACY_BUGGY_STREAMS[args.inject_legacy_streams]}
 
     findings: list[Finding] = []
+    findings += signatures.check_entrypoints()
     findings += _trace_findings(engines, inject_dense=args.inject_dense)
     findings += _stream_findings(engines, override)
     if not args.skip_exec:

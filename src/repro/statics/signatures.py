@@ -1,0 +1,101 @@
+"""Signature linter — the execution plane stays behind ``plan=``.
+
+PR 10 moved every execution knob (backend, policy, faults, mesh, graph
+sharding, storage, async clocks, ...) out of the ``run_*`` keyword lists
+and into the frozen :class:`repro.core.plan.ExecutionPlan`. The loose
+kwargs survive only as warn-once deprecation shims routed through
+``**legacy`` — they are *not* named parameters anymore, so the execution
+vocabulary cannot silently re-grow one kwarg at a time ("kwarg 15" was
+the failure mode this redesign retired).
+
+This pass freezes that boundary structurally: :func:`check_entrypoints`
+inspects the signature of every public ``run_*`` entry point and fails
+the lint if
+
+* the entry point lacks a ``plan`` parameter, or
+* any *named* parameter (positional or keyword-only) re-introduces a
+  covered execution kwarg — any :data:`repro.core.plan.PLAN_FIELDS`
+  name, the ``async_`` field itself, or the retired seed-era
+  ``use_kernel=`` backend alias.
+
+Science knobs (``drop_probs``, ``seeds``, ``T``, ``B``, ``F``,
+``attacks``, ``mode``, ``core``, ``record_every``, ...) are untouched:
+they parameterize the *experiment*, not the execution substrate, and the
+linter only matches the covered execution names.
+"""
+from __future__ import annotations
+
+import inspect
+
+from .dense import Finding
+
+__all__ = ["ENTRYPOINTS", "check_signature", "check_entrypoints"]
+
+#: module path -> public run_* entry points covered by the plan contract.
+ENTRYPOINTS: tuple[tuple[str, str], ...] = (
+    ("repro.core.pushsum", "run_pushsum_sparse"),
+    ("repro.core.hps", "run_hps_runtime"),
+    ("repro.core.hps", "run_hps"),
+    ("repro.core.social", "run_social_runtime"),
+    ("repro.core.social", "run_social_learning"),
+    ("repro.core.sweeps", "run_pushsum_sweep"),
+    ("repro.core.sweeps", "run_byzantine_sweep"),
+    ("repro.core.sweeps", "run_byzantine_grid"),
+    ("repro.core.sweeps", "run_hps_sweep"),
+    ("repro.core.sweeps", "run_hps_grid"),
+    ("repro.core.sweeps", "run_social_sweep"),
+    ("repro.core.sweeps", "run_social_grid"),
+)
+
+
+def _covered_names() -> frozenset[str]:
+    from repro.core.plan import PLAN_FIELDS
+
+    return frozenset(PLAN_FIELDS) | {"use_kernel"}
+
+
+def check_signature(fn, name: str) -> list[Finding]:
+    """Lint one entry point's signature against the plan contract."""
+    out: list[Finding] = []
+    covered = _covered_names()
+    params = inspect.signature(fn).parameters
+    if "plan" not in params:
+        out.append(Finding(
+            check="plan-signature", where=name,
+            message="entry point has no plan= parameter — execution "
+                    "config must arrive as ExecutionPlan",
+        ))
+    offenders = [
+        p.name for p in params.values()
+        if p.kind not in (p.VAR_KEYWORD, p.VAR_POSITIONAL)
+        and p.name in covered
+    ]
+    if offenders:
+        out.append(Finding(
+            check="plan-signature", where=name,
+            message=(
+                f"named parameter(s) {offenders} re-introduce covered "
+                "execution kwargs — these are ExecutionPlan fields (or "
+                "the retired use_kernel alias) and may only pass through "
+                "**legacy deprecation shims"
+            ),
+        ))
+    return out
+
+
+def check_entrypoints() -> list[Finding]:
+    """Lint every registered ``run_*`` entry point."""
+    import importlib
+
+    out: list[Finding] = []
+    for mod_name, fn_name in ENTRYPOINTS:
+        try:
+            fn = getattr(importlib.import_module(mod_name), fn_name)
+        except (ImportError, AttributeError) as e:
+            out.append(Finding(
+                check="plan-signature", where=f"{mod_name}.{fn_name}",
+                message=f"entry point missing: {type(e).__name__}: {e}",
+            ))
+            continue
+        out.extend(check_signature(fn, f"{mod_name}.{fn_name}"))
+    return out

@@ -1,0 +1,351 @@
+"""Async execution mode (PR 10 tentpole): Poisson wake clocks, bounded
+stale per-edge buffers, degenerate bit-identity with the synchronous
+engines, mass conservation under arbitrary wake schedules, the disjoint
+async PRNG fold-in domain, and the sweep async axis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.asyncrony import (
+    ASYNC_DOMAIN_BASE,
+    AsyncModel,
+    async_stream_fold,
+    init_async_buffer,
+    is_degenerate_async,
+    make_async_model,
+    wake_mask,
+)
+from repro.core.faults import (
+    ENGINE_HPS,
+    ENGINE_PUSHSUM,
+    ENGINE_SOCIAL,
+    N_ENGINES,
+    fault_stream_fold,
+)
+from repro.core.graphs import (
+    edge_list,
+    make_hierarchy,
+    random_strongly_connected,
+)
+from repro.core.hps import HPSConfig, hps_stream_fold, run_hps
+from repro.core.plan import ExecutionPlan
+from repro.core.pushsum import (
+    init_sparse_state,
+    run_pushsum_sparse,
+    sparse_mass_invariant,
+    sparse_pushsum_step,
+)
+from repro.core.signals import make_confused_model
+from repro.core.social import run_social_learning
+from repro.core.sweeps import run_pushsum_sweep, run_social_sweep
+
+RNG = np.random.default_rng(0)
+
+
+def _pushsum_fixture(n=8):
+    el = edge_list(random_strongly_connected(n, 0.3, RNG))
+    w = np.random.default_rng(1).normal(size=(n, 3)).astype(np.float32)
+    return el, w
+
+
+def _hier_fixture():
+    topo = make_hierarchy([4, 4, 4], topology="complete", seed=0)
+    model = make_confused_model(N=topo.N, m=3, truth=0, confusion=0.0,
+                                seed=0)
+    cfg = HPSConfig(topo=topo, gamma_period=4, B=2, drop_prob=0.2)
+    return topo, model, cfg
+
+
+def _trees_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    return all(
+        bool(jnp.array_equal(jnp.asarray(x), jnp.asarray(y)))
+        for x, y in zip(la, lb))
+
+
+class TestStreamDisjointness:
+    """The async wake-coin domain never collides with any other stream."""
+
+    def test_affine_form(self):
+        assert async_stream_fold(0, ENGINE_PUSHSUM) == -ASYNC_DOMAIN_BASE
+        assert (async_stream_fold(5, ENGINE_SOCIAL)
+                == -(5 * N_ENGINES + ENGINE_SOCIAL) - ASYNC_DOMAIN_BASE)
+
+    def test_disjoint_from_fault_and_hps_domains(self):
+        horizon = 1 << 20
+        # async image upper bound (t = 0) and lower bound (t = horizon-1)
+        hi = int(async_stream_fold(0, ENGINE_PUSHSUM))
+        lo = int(async_stream_fold(
+            horizon - 1, max(ENGINE_PUSHSUM, ENGINE_SOCIAL, ENGINE_HPS)))
+        assert lo < hi <= -ASYNC_DOMAIN_BASE
+        # the fault band lives strictly above the async band
+        fault_lo = min(
+            int(fault_stream_fold(horizon - 1, e, s))
+            for e in range(N_ENGINES) for s in range(3))
+        assert hi < fault_lo
+        # hps ~t domain: [-2^20, -1] — above the async band too
+        assert hi < int(hps_stream_fold(horizon - 1))
+        # engine-to-engine: stride-N_ENGINES congruence, never equal
+        a = {int(async_stream_fold(t, ENGINE_PUSHSUM)) for t in range(64)}
+        b = {int(async_stream_fold(t, ENGINE_SOCIAL)) for t in range(64)}
+        assert not (a & b)
+
+    def test_int32_pin(self):
+        v = async_stream_fold(3, ENGINE_HPS)
+        assert isinstance(v, np.int32)
+
+
+class TestDegenerateModel:
+    def test_detection(self):
+        assert is_degenerate_async(None)
+        assert is_degenerate_async(make_async_model())
+        assert is_degenerate_async(make_async_model(1.0, 0))
+        assert not is_degenerate_async(make_async_model(0.7, 0))
+        assert not is_degenerate_async(make_async_model(1.0, 2))
+        # batched / abstract models are never concretely degenerate
+        batched = jax.tree_util.tree_map(
+            lambda x: jnp.stack([x, x]), make_async_model())
+        assert not is_degenerate_async(batched)
+        assert not is_degenerate_async(
+            jax.eval_shape(make_async_model))
+
+        @jax.jit
+        def probe(am):
+            return jnp.asarray(is_degenerate_async(am))
+
+        assert not bool(probe(make_async_model()))
+
+    def test_wake_mask_degenerate_is_all_true(self):
+        key = jax.random.PRNGKey(0)
+        m = wake_mask(key, 0, 64, 1.0, engine=ENGINE_PUSHSUM)
+        assert bool(m.all())
+
+    @pytest.mark.parametrize("engine", ["pushsum", "hps", "social"])
+    def test_entrypoint_bit_identity(self, engine):
+        """A concretely degenerate plan.async_ routes to the synchronous
+        program itself — exact equality, not tolerance."""
+        deg = ExecutionPlan(backend="xla",
+                            async_=make_async_model(1.0, 0))
+        sync = ExecutionPlan(backend="xla")
+        if engine == "pushsum":
+            el, w = _pushsum_fixture()
+            a = run_pushsum_sparse(w, el.src, el.dst, T=6, drop_prob=0.2,
+                                   B=2, plan=deg)
+            b = run_pushsum_sparse(w, el.src, el.dst, T=6, drop_prob=0.2,
+                                   B=2, plan=sync)
+        elif engine == "hps":
+            _, _, cfg = _hier_fixture()
+            w = np.random.default_rng(2).normal(
+                size=(12, 2)).astype(np.float32)
+            a = run_hps(w, cfg, T=6, plan=deg.replace(store="gap"))
+            b = run_hps(w, cfg, T=6, plan=sync.replace(store="gap"))
+        else:
+            _, model, cfg = _hier_fixture()
+            a = run_social_learning(model, cfg, T=6,
+                                    plan=deg.replace(store="log_ratio"))
+            b = run_social_learning(model, cfg, T=6,
+                                    plan=sync.replace(store="log_ratio"))
+        assert _trees_equal(a, b)
+
+    def test_step_machinery_degenerate_matches_sync(self):
+        """Eager single-step check: awake all-True + staleness 0 runs the
+        REAL buffered machinery and still reproduces the synchronous XLA
+        step bit for bit (same-tick rendezvous latches this tick's staged
+        value on every delivering edge)."""
+        el, w = _pushsum_fixture()
+        E, d = el.src.shape[0], w.shape[1]
+        state = init_sparse_state(jnp.asarray(w), E)
+        mask = jnp.asarray(
+            np.random.default_rng(3).random(E) < 0.7)
+        valid = jnp.ones((E,), bool)
+        ref = sparse_pushsum_step(state, mask, el.src, el.dst, valid,
+                                  backend="xla")
+        got, abuf = sparse_pushsum_step(
+            state, mask, el.src, el.dst, valid, backend="xla",
+            awake=jnp.ones((w.shape[0],), bool),
+            abuf=init_async_buffer(E, d),
+            staleness=jnp.asarray(0, jnp.int32))
+        assert _trees_equal(ref, got)
+        # every edge latched fresh this tick
+        assert bool((abuf.age == 0).all())
+
+    def test_graph_axis_plus_abuf_rejected(self):
+        el, w = _pushsum_fixture()
+        E, d = el.src.shape[0], w.shape[1]
+        state = init_sparse_state(jnp.asarray(w), E)
+        with pytest.raises(ValueError, match="graph_axis"):
+            # share= supplied so the check is hit before any psum needs
+            # a bound mesh axis
+            sparse_pushsum_step(
+                state, jnp.ones((E,), bool), el.src, el.dst,
+                jnp.ones((E,), bool), backend="xla", graph_axis="graph",
+                share=jnp.full((w.shape[0],), 0.25, jnp.float32),
+                awake=jnp.ones((w.shape[0],), bool),
+                abuf=init_async_buffer(E, d),
+                staleness=jnp.asarray(1, jnp.int32))
+
+
+class TestMassConservation:
+    """The telescoping rho_new - rho_old integration conserves push-sum
+    mass under ANY wake schedule — the property the buffer design exists
+    to protect."""
+
+    @pytest.mark.parametrize("wake_prob,staleness", [
+        (0.3, 0), (0.5, 2), (0.8, 5),
+    ])
+    def test_invariant_under_random_wakes(self, wake_prob, staleness):
+        el, w = _pushsum_fixture(10)
+        E, d = el.src.shape[0], w.shape[1]
+        n = w.shape[0]
+        state = init_sparse_state(jnp.asarray(w), E)
+        abuf = init_async_buffer(E, d)
+        valid = jnp.ones((E,), bool)
+        key = jax.random.PRNGKey(7)
+        total0 = jnp.asarray(w).sum(axis=0)
+        st = jnp.asarray(staleness, jnp.int32)
+        rng = np.random.default_rng(9)
+        for t in range(12):
+            awake = wake_mask(key, t, n, wake_prob,
+                              engine=ENGINE_PUSHSUM)
+            mask = jnp.asarray(rng.random(E) < 0.6)
+            state, abuf = sparse_pushsum_step(
+                state, mask, el.src, el.dst, valid, backend="xla",
+                awake=awake, abuf=abuf, staleness=st)
+            inv = sparse_mass_invariant(state, el.src, valid)
+            np.testing.assert_allclose(np.asarray(inv),
+                                       np.asarray(total0),
+                                       rtol=1e-5, atol=1e-5)
+
+    def test_invariant_through_entrypoint(self):
+        el, w = _pushsum_fixture(9)
+        state, _ = run_pushsum_sparse(
+            w, el.src, el.dst, T=15, drop_prob=0.3, B=2,
+            plan=ExecutionPlan(backend="xla",
+                               async_=make_async_model(0.5, 3)))
+        inv = sparse_mass_invariant(
+            state, jnp.asarray(el.src, jnp.int32),
+            jnp.ones((el.src.shape[0],), bool))
+        np.testing.assert_allclose(np.asarray(inv),
+                                   np.asarray(w.sum(axis=0)),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestAsyncEngines:
+    def test_pushsum_async_converges(self):
+        """Non-degenerate async still drives the ratio to consensus —
+        the average of w — just more slowly."""
+        el, w = _pushsum_fixture(8)
+        state, traj = run_pushsum_sparse(
+            w, el.src, el.dst, T=400, drop_prob=0.1, B=2,
+            record_every=400,
+            plan=ExecutionPlan(backend="xla",
+                               async_=make_async_model(0.7, 2)))
+        target = w.mean(axis=0)
+        final = np.asarray(traj[-1])
+        err = np.abs(final - target[None, :]).max()
+        assert err < 1e-3
+
+    def test_social_async_finite_and_converging(self):
+        _, model, cfg = _hier_fixture()
+        res = run_social_learning(
+            model, cfg, T=60,
+            plan=ExecutionPlan(backend="xla", store="log_ratio",
+                               async_=make_async_model(0.6, 2)))
+        lr = np.asarray(res.log_ratio)
+        assert np.isfinite(lr).all()
+        # worst-case wrong/true log-ratio should be falling by the end
+        assert lr[-1] < lr[5]
+
+    def test_hps_async_finite(self):
+        _, _, cfg = _hier_fixture()
+        w = np.random.default_rng(5).normal(size=(12, 2)).astype(np.float32)
+        res = run_hps(
+            w, cfg, T=40,
+            plan=ExecutionPlan(backend="xla", store="gap",
+                               async_=make_async_model(0.6, 2)))
+        gap = np.asarray(res.gap)
+        assert np.isfinite(gap).all()
+        assert gap[-1] < gap[0]
+
+    def test_async_composes_with_faults(self):
+        from repro.core.faults import make_fault_model
+        el, w = _pushsum_fixture(8)
+        state, traj = run_pushsum_sparse(
+            w, el.src, el.dst, T=10, drop_prob=0.2, B=2,
+            plan=ExecutionPlan(
+                backend="xla",
+                faults=make_fault_model(p_gb=0.1, p_bg=0.5,
+                                        leave_prob=0.05, join_prob=0.5),
+                async_=make_async_model(0.6, 2)))
+        assert np.isfinite(np.asarray(traj)).all()
+
+
+class TestAsyncErrors:
+    def test_masks_plus_async_rejected(self):
+        el, w = _pushsum_fixture()
+        T, E = 4, el.src.shape[0]
+        masks = np.ones((T, E), bool)
+        with pytest.raises(ValueError, match="async"):
+            run_pushsum_sparse(
+                w, el.src, el.dst, T=T, masks=masks,
+                plan=ExecutionPlan(async_=make_async_model(0.5, 1)))
+
+    def test_sweep_async_plus_graph_shards_rejected(self):
+        el, w = _pushsum_fixture()
+        with pytest.raises(ValueError, match="async"):
+            run_pushsum_sweep(
+                w, el, T=4, drop_probs=[0.0], seeds=[0], B=2,
+                plan=ExecutionPlan(graph_shards=2,
+                                   async_=make_async_model(0.5, 1)))
+
+
+class TestSweepAsyncAxis:
+    def test_async_axis_minor_most(self):
+        el, w = _pushsum_fixture()
+        ams = [make_async_model(1.0, 0), make_async_model(0.6, 2)]
+        res = run_pushsum_sweep(
+            w, el, T=4, drop_probs=[0.0, 0.3], seeds=[0], B=2,
+            plan=ExecutionPlan(backend="xla", async_=ams))
+        assert res.K == 4
+        np.testing.assert_array_equal(np.asarray(res.async_), [0, 1, 0, 1])
+        # drop_prob is the slower axis
+        np.testing.assert_allclose(
+            np.asarray(res.drop_prob), [0.0, 0.0, 0.3, 0.3], atol=1e-7)
+        assert "async_" in res.describe()
+
+    def test_batched_degenerate_matches_sync_rows(self):
+        """Row 0 of the async axis IS the degenerate model, run through
+        the real buffered machinery — it must match the synchronous sweep
+        to fault-plane tolerance."""
+        el, w = _pushsum_fixture()
+        ams = [make_async_model(1.0, 0), make_async_model(0.5, 1)]
+        res = run_pushsum_sweep(
+            w, el, T=5, drop_probs=[0.2], seeds=[0, 1], B=2,
+            plan=ExecutionPlan(backend="xla", async_=ams))
+        ref = run_pushsum_sweep(
+            w, el, T=5, drop_probs=[0.2], seeds=[0, 1], B=2,
+            plan=ExecutionPlan(backend="xla"))
+        np.testing.assert_allclose(
+            np.asarray(res.err[0::2]), np.asarray(ref.err),
+            rtol=1e-5, atol=1e-6)
+
+    def test_single_degenerate_collapses_axis(self):
+        el, w = _pushsum_fixture()
+        res = run_pushsum_sweep(
+            w, el, T=4, drop_probs=[0.0], seeds=[0], B=2,
+            plan=ExecutionPlan(backend="xla",
+                               async_=make_async_model(1.0, 0)))
+        assert res.async_ is None
+
+    def test_social_sweep_async_axis(self):
+        _, model, cfg = _hier_fixture()
+        ams = [make_async_model(1.0, 0), make_async_model(0.6, 2)]
+        res = run_social_sweep(
+            model, cfg, T=4, drop_probs=[0.1], seeds=[0],
+            plan=ExecutionPlan(backend="xla", store="log_ratio",
+                               async_=ams))
+        assert res.K == 2
+        np.testing.assert_array_equal(np.asarray(res.async_), [0, 1])
+        assert np.isfinite(np.asarray(res.log_ratio)).all()

@@ -517,8 +517,8 @@ class TestTrimmedMeanPytreeDtype:
     coordinate-wise over a worker axis) computes in fp32 internally but must
     hand every leaf back in its input dtype."""
 
-    @pytest.mark.parametrize("use_kernel", [True, False])
-    def test_bf16_roundtrip_and_mixed_dtypes(self, use_kernel):
+    @pytest.mark.parametrize("backend", ["pallas", "xla"])
+    def test_bf16_roundtrip_and_mixed_dtypes(self, backend):
         from repro.kernels.trimmed_mean.ops import trimmed_mean_pytree
         from repro.kernels.trimmed_mean.ref import trimmed_mean_ref
 
@@ -528,7 +528,7 @@ class TestTrimmedMeanPytreeDtype:
                                 dtype=jnp.bfloat16),
             "f32": jnp.asarray(rng.normal(size=(8, 9)).astype(np.float32)),
         }
-        out = trimmed_mean_pytree(tree, 2, use_kernel=use_kernel)
+        out = trimmed_mean_pytree(tree, 2, backend=backend)
         assert out["bf16"].dtype == jnp.bfloat16
         assert out["bf16"].shape == (4, 3)
         assert out["f32"].dtype == jnp.float32

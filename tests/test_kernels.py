@@ -32,7 +32,7 @@ class TestTrimmedMean:
     def test_matches_ref(self, W, D, F):
         x = jnp.asarray(RNG.normal(size=(W, D)).astype(np.float32))
         np.testing.assert_allclose(
-            np.asarray(trimmed_mean(x, F)),
+            np.asarray(trimmed_mean(x, F, backend="pallas")),
             np.asarray(trimmed_mean_ref(x, F)),
             rtol=1e-5, atol=1e-6,
         )
@@ -42,7 +42,7 @@ class TestTrimmedMean:
     ])
     def test_dtypes(self, dtype, tol):
         x = jnp.asarray(RNG.normal(size=(16, 777)), dtype=dtype)
-        got = np.asarray(trimmed_mean(x, 4), np.float32)
+        got = np.asarray(trimmed_mean(x, 4, backend="pallas"), np.float32)
         want = np.asarray(trimmed_mean_ref(x, 4), np.float32)
         np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
 
@@ -50,7 +50,7 @@ class TestTrimmedMean:
         x = jnp.asarray(np.round(RNG.normal(size=(16, 512)) * 2) / 2,
                         dtype=jnp.float32)
         np.testing.assert_allclose(
-            np.asarray(trimmed_mean(x, 5)),
+            np.asarray(trimmed_mean(x, 5, backend="pallas")),
             np.asarray(trimmed_mean_ref(x, 5)), rtol=1e-5, atol=1e-6,
         )
 
@@ -64,7 +64,7 @@ class TestTrimmedMean:
             "a": jnp.asarray(RNG.normal(size=(16, 3, 5)).astype(np.float32)),
             "b": jnp.asarray(RNG.normal(size=(16, 7)).astype(np.float32)),
         }
-        out = trimmed_mean_pytree(tree, 2)
+        out = trimmed_mean_pytree(tree, 2, backend="pallas")
         want = trimmed_mean_ref(tree["a"].reshape(16, -1), 2).reshape(3, 5)
         np.testing.assert_allclose(np.asarray(out["a"]), np.asarray(want),
                                    rtol=1e-5, atol=1e-6)
@@ -82,12 +82,12 @@ class TestTrimmedMean:
             return
         rng = np.random.default_rng(seed)
         x = rng.normal(size=(W, D)).astype(np.float32) * 10
-        out = np.asarray(trimmed_mean(jnp.asarray(x), F))
+        out = np.asarray(trimmed_mean(jnp.asarray(x), F, backend="pallas"))
         s = np.sort(x, axis=0)
         kept_lo, kept_hi = s[F], s[W - F - 1]
         assert (out >= kept_lo - 1e-4).all() and (out <= kept_hi + 1e-4).all()
         perm = rng.permutation(W)
-        out_p = np.asarray(trimmed_mean(jnp.asarray(x[perm]), F))
+        out_p = np.asarray(trimmed_mean(jnp.asarray(x[perm]), F, backend="pallas"))
         np.testing.assert_allclose(out, out_p, rtol=1e-5, atol=1e-6)
 
     @settings(max_examples=25, deadline=None)
@@ -108,7 +108,7 @@ class TestTrimmedMean:
         attack = (rng.choice([-1, 1], size=(F, D)) * 1e6).astype(np.float32)
         x = np.concatenate([honest, attack], axis=0)
         rng.shuffle(x, axis=0)
-        out = np.asarray(trimmed_mean(jnp.asarray(x), F))
+        out = np.asarray(trimmed_mean(jnp.asarray(x), F, backend="pallas"))
         assert (out >= honest.min(0) - 1e-3).all()
         assert (out <= honest.max(0) + 1e-3).all()
 

@@ -68,7 +68,7 @@ def test_wkv6_kernel_custom_vjp_matches_jnp_grads():
     u = jnp.asarray(rng.normal(size=(BH, K)).astype(np.float32))
 
     gk = jax.grad(
-        lambda *a: wkv6(*a, chunk=16, use_kernel=True)[0].sum(),
+        lambda *a: wkv6(*a, chunk=16, backend="pallas")[0].sum(),
         argnums=(0, 1, 2, 3, 4),
     )(r, k, v, lw, u)
     gj = jax.grad(

@@ -1,0 +1,322 @@
+"""The ExecutionPlan redesign (PR 10): deprecation shims fold loose kwargs
+into bit-identical plans and warn once per entrypoint; plan= and legacy
+kwargs are mutually exclusive; unsupported plan fields fail loudly; the
+unified result index-column convention has a shared describe(); and the
+repro.statics signature lint keeps the execution vocabulary from
+re-growing loose kwargs (including the retired use_kernel alias)."""
+import re
+import warnings
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import attacks
+from repro.core.asyncrony import make_async_model
+from repro.core.byzantine import ByzantineConfig
+from repro.core.graphs import (
+    edge_list,
+    make_hierarchy,
+    random_strongly_connected,
+)
+from repro.core.hps import HPSConfig, run_hps
+from repro.core.plan import (
+    LEGACY_PLAN_KWARGS,
+    PLAN_FIELDS,
+    ExecutionPlan,
+    _warned,
+)
+from repro.core.pushsum import run_pushsum_sparse
+from repro.core.signals import make_confused_model
+from repro.core.social import run_social_learning
+from repro.core.sweeps import (
+    run_byzantine_grid,
+    run_byzantine_sweep,
+    run_hps_grid,
+    run_hps_sweep,
+    run_pushsum_sweep,
+    run_social_grid,
+    run_social_sweep,
+)
+from repro.statics import signatures
+
+REPO = Path(__file__).resolve().parents[1]
+RNG = np.random.default_rng(0)
+
+
+def _pushsum_fixture():
+    el = edge_list(random_strongly_connected(8, 0.3, RNG))
+    w = np.random.default_rng(1).normal(size=(8, 2)).astype(np.float32)
+    return el, w
+
+
+def _hier_fixture():
+    topo = make_hierarchy([4, 4, 4], topology="complete", seed=0)
+    model = make_confused_model(N=topo.N, m=3, truth=0, confusion=0.0,
+                                seed=0)
+    cfg = HPSConfig(topo=topo, gamma_period=4, B=2, drop_prob=0.2)
+    return topo, model, cfg
+
+
+def _assert_trees_equal(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+import jax  # noqa: E402  (after the tree helper that uses it)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_warn_state():
+    """Each test sees a clean warn-once registry."""
+    saved = set(_warned)
+    _warned.clear()
+    yield
+    _warned.clear()
+    _warned.update(saved)
+
+
+class TestDeprecationShim:
+    def test_warns_exactly_once_per_entrypoint(self):
+        el, w = _pushsum_fixture()
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            run_pushsum_sparse(w, el.src, el.dst, T=3, backend="xla")
+            run_pushsum_sparse(w, el.src, el.dst, T=3, backend="xla")
+        dep = [r for r in rec
+               if issubclass(r.category, DeprecationWarning)
+               and "run_pushsum_sparse" in str(r.message)]
+        assert len(dep) == 1
+        assert "plan=ExecutionPlan" in str(dep[0].message)
+
+    def test_distinct_entrypoints_each_warn(self):
+        el, w = _pushsum_fixture()
+        _, model, cfg = _hier_fixture()
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            run_pushsum_sparse(w, el.src, el.dst, T=3, backend="xla")
+            run_social_learning(model, cfg, T=3, store="log_ratio")
+        dep = [str(r.message) for r in rec
+               if issubclass(r.category, DeprecationWarning)]
+        assert any("run_pushsum_sparse" in m for m in dep)
+        assert any("run_social_learning" in m for m in dep)
+
+    def test_plan_plus_legacy_is_error(self):
+        el, w = _pushsum_fixture()
+        with pytest.raises(TypeError, match="not both"):
+            run_pushsum_sparse(w, el.src, el.dst, T=3,
+                               plan=ExecutionPlan(), backend="xla")
+
+    def test_unknown_kwarg_is_error(self):
+        el, w = _pushsum_fixture()
+        with pytest.raises(TypeError, match="unexpected keyword"):
+            run_pushsum_sparse(w, el.src, el.dst, T=3, bakend="xla")
+
+    def test_async_is_plan_only(self):
+        """async_ is NOT a legacy kwarg — it must never become loose
+        execution kwarg number 15."""
+        assert "async_" not in LEGACY_PLAN_KWARGS
+        assert "async_" in PLAN_FIELDS
+        el, w = _pushsum_fixture()
+        with pytest.raises(TypeError, match="plan-only"):
+            run_pushsum_sparse(w, el.src, el.dst, T=3,
+                               async_=make_async_model(0.5, 1))
+
+    def test_unsupported_plan_field_is_error(self):
+        _, model, cfg = _hier_fixture()
+        w = np.zeros((12, 2), np.float32)
+        with pytest.raises(ValueError, match="graph_shards"):
+            run_hps(w, cfg, T=3, plan=ExecutionPlan(graph_shards=2))
+        with pytest.raises(ValueError, match="async_"):
+            run_byzantine_sweep(
+                model, ByzantineConfig(topo=cfg.topo, F=1, byz=(1,),
+                                       gamma_period=4,
+                                       attack=attacks.large_value()),
+                T=3, seeds=[0],
+                plan=ExecutionPlan(async_=make_async_model(0.5, 1)))
+
+
+class TestPlanEquivalence:
+    """plan= and the legacy loose kwargs produce bit-identical results."""
+
+    def _legacy(self, fn, *args, **legacy):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            return fn(*args, **legacy)
+
+    def test_run_pushsum_sparse(self):
+        el, w = _pushsum_fixture()
+        a = self._legacy(run_pushsum_sparse, w, el.src, el.dst, T=5,
+                         drop_prob=0.2, B=2, backend="xla")
+        b = run_pushsum_sparse(w, el.src, el.dst, T=5, drop_prob=0.2, B=2,
+                               plan=ExecutionPlan(backend="xla"))
+        _assert_trees_equal(a, b)
+
+    def test_run_hps(self):
+        _, _, cfg = _hier_fixture()
+        w = np.random.default_rng(2).normal(size=(12, 2)).astype(np.float32)
+        a = self._legacy(run_hps, w, cfg, T=4, backend="xla", store="gap")
+        b = run_hps(w, cfg, T=4,
+                    plan=ExecutionPlan(backend="xla", store="gap"))
+        _assert_trees_equal(a, b)
+
+    def test_run_social_learning(self):
+        _, model, cfg = _hier_fixture()
+        a = self._legacy(run_social_learning, model, cfg, T=4,
+                         backend="xla", store="log_ratio")
+        b = run_social_learning(model, cfg, T=4,
+                                plan=ExecutionPlan(backend="xla",
+                                                   store="log_ratio"))
+        _assert_trees_equal(a, b)
+
+    def test_run_pushsum_sweep(self):
+        el, w = _pushsum_fixture()
+        a = self._legacy(run_pushsum_sweep, w, el, T=4,
+                         drop_probs=[0.0, 0.3], seeds=[0], B=2,
+                         backend="xla")
+        b = run_pushsum_sweep(w, el, T=4, drop_probs=[0.0, 0.3], seeds=[0],
+                              B=2, plan=ExecutionPlan(backend="xla"))
+        _assert_trees_equal(a, b)
+
+    def test_run_byzantine_sweep_and_grid(self):
+        _, model, cfg = _hier_fixture()
+        bcfg = ByzantineConfig(topo=cfg.topo, F=1, byz=(1,), gamma_period=4,
+                               attack=attacks.large_value())
+        a = self._legacy(run_byzantine_sweep, model, bcfg, T=3, seeds=[0],
+                         backend="xla", store="final")
+        b = run_byzantine_sweep(model, bcfg, T=3, seeds=[0],
+                                plan=ExecutionPlan(backend="xla",
+                                                   store="final"))
+        _assert_trees_equal(a, b)
+        ga = self._legacy(run_byzantine_grid, model, [bcfg], T=3, seeds=[0],
+                          backend="xla", store="decisions")
+        gb = run_byzantine_grid(model, [bcfg], T=3, seeds=[0],
+                                plan=ExecutionPlan(backend="xla",
+                                                   store="decisions"))
+        _assert_trees_equal(ga, gb)
+
+    def test_run_hps_and_social_sweeps(self):
+        _, model, cfg = _hier_fixture()
+        w = np.random.default_rng(3).normal(size=(12, 2)).astype(np.float32)
+        a = self._legacy(run_hps_sweep, w, cfg, T=3,
+                         drop_probs=[0.0, 0.3], seeds=[0], backend="xla",
+                         store="gap")
+        b = run_hps_sweep(w, cfg, T=3, drop_probs=[0.0, 0.3], seeds=[0],
+                          plan=ExecutionPlan(backend="xla", store="gap"))
+        _assert_trees_equal(a, b)
+        sa = self._legacy(run_social_sweep, model, cfg, T=3,
+                          drop_probs=[0.0, 0.3], seeds=[0], backend="xla",
+                          store="log_ratio")
+        sb = run_social_sweep(model, cfg, T=3, drop_probs=[0.0, 0.3],
+                              seeds=[0],
+                              plan=ExecutionPlan(backend="xla",
+                                                 store="log_ratio"))
+        _assert_trees_equal(sa, sb)
+
+    def test_run_hps_and_social_grids(self):
+        _, model, cfg = _hier_fixture()
+        cfgs = [cfg, HPSConfig(topo=cfg.topo, gamma_period=2, B=2,
+                               drop_prob=0.0)]
+        w = np.random.default_rng(4).normal(size=(12, 2)).astype(np.float32)
+        a = self._legacy(run_hps_grid, w, cfgs, T=3, seeds=[0],
+                         backend="xla", store="gap")
+        b = run_hps_grid(w, cfgs, T=3, seeds=[0],
+                         plan=ExecutionPlan(backend="xla", store="gap"))
+        _assert_trees_equal(a, b)
+        sa = self._legacy(run_social_grid, model, cfgs, T=3, seeds=[0],
+                          backend="xla", store="log_ratio")
+        sb = run_social_grid(model, cfgs, T=3, seeds=[0],
+                             plan=ExecutionPlan(backend="xla",
+                                                store="log_ratio"))
+        _assert_trees_equal(sa, sb)
+
+
+class TestResultConvention:
+    """The unified index-column convention: scenario -> fault -> async_
+    fixed row order, absent axes are None (not zeros), and every result
+    family shares describe()."""
+
+    def test_describe_names_axes_and_payload(self):
+        el, w = _pushsum_fixture()
+        res = run_pushsum_sweep(w, el, T=3, drop_probs=[0.0, 0.3],
+                                seeds=[0, 1], B=2,
+                                plan=ExecutionPlan(backend="xla"))
+        txt = res.describe()
+        assert f"K={res.K}" in txt
+        assert "async minor-most" in txt
+        assert "drop_prob" in txt and "seed" in txt
+        assert "fault     absent (no axis)" in txt
+        assert "async_    absent (no axis)" in txt
+        assert "err" in txt and "final_ratio" in txt
+
+    def test_absent_axes_are_none(self):
+        el, w = _pushsum_fixture()
+        res = run_pushsum_sweep(w, el, T=3, drop_probs=0.2, seeds=0, B=2,
+                                plan=ExecutionPlan(backend="xla"))
+        assert res.fault is None and res.async_ is None
+
+    def test_byzantine_grid_has_fault_column(self):
+        """The historical gap this convention fixes: ByzantineGridResult
+        previously had no fault field at all."""
+        _, model, cfg = _hier_fixture()
+        bcfg = ByzantineConfig(topo=cfg.topo, F=1, byz=(1,), gamma_period=4,
+                               attack=attacks.large_value())
+        res = run_byzantine_grid(model, [bcfg], T=3, seeds=[0, 1],
+                                 plan=ExecutionPlan(backend="xla"))
+        assert "fault" in type(res)._fields
+        assert "async_" in type(res)._fields
+        assert res.fault is None          # no fault model applied
+        assert res.async_ is None         # byzantine engine has no async
+        assert f"K={res.K}" in res.describe()
+
+
+class TestSignatureLint:
+    def test_all_entrypoints_pass(self):
+        assert signatures.check_entrypoints() == []
+
+    def test_flags_reintroduced_execution_kwarg(self):
+        def bad_run(w, T, backend="auto", plan=None, **legacy):
+            pass
+
+        findings = signatures.check_signature(bad_run, "bad_run")
+        assert len(findings) == 1
+        assert "backend" in findings[0].message
+
+    def test_flags_missing_plan_and_use_kernel(self):
+        def seed_era_run(w, T, use_kernel=True):
+            pass
+
+        findings = signatures.check_signature(seed_era_run, "seed_era_run")
+        checks = sorted(f.message for f in findings)
+        assert len(findings) == 2
+        assert any("no plan=" in m for m in checks)
+        assert any("use_kernel" in m for m in checks)
+
+    def test_legacy_catchall_is_not_flagged(self):
+        def good_run(w, T, *, plan=None, **legacy):
+            pass
+
+        assert signatures.check_signature(good_run, "good_run") == []
+
+
+class TestNoUseKernelAnywhere:
+    def test_no_source_or_test_passes_use_kernel(self):
+        """The seed-era use_kernel= alias is gone: no .py under src/ or
+        tests/ passes (or declares) it. Prose mentions in docstrings are
+        exempt (matched by the double-backtick convention)."""
+        pat = re.compile(r"use_kernel\s*=")
+        offenders = []
+        this_file = Path(__file__).resolve()
+        for root in ("src", "tests", "benchmarks", "examples"):
+            for p in sorted((REPO / root).rglob("*.py")):
+                if p.resolve() == this_file:
+                    continue  # the linter fixtures above declare it
+                for i, line in enumerate(
+                        p.read_text().splitlines(), start=1):
+                    if pat.search(line) and "``" not in line:
+                        offenders.append(f"{p.relative_to(REPO)}:{i}")
+        assert offenders == [], offenders
